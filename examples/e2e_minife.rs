@@ -1,0 +1,208 @@
+//! End-to-end driver: a distributed miniFE/HPCG-style conjugate-gradient
+//! solve where the *numerics* run through the AOT-compiled Pallas kernels
+//! (PJRT, no python at runtime) and every halo exchange and dot-product
+//! allreduce is timed by the simulated ExaNet fabric + ExaNet-MPI runtime.
+//!
+//! Problem: A x = b with the HPCG 27-point operator on a 48^3 grid,
+//! partitioned 2x2x2 over 8 simulated ranks (local blocks 24^3).
+//! Validation: the residual curve must match a single-rank 48^3 solve of
+//! the same system (same artifacts), and converge.
+//!
+//!     make artifacts && cargo run --release --example e2e_minife
+
+use exanest::mpi::{collectives, pt2pt, Placement, World};
+use exanest::runtime::Executor;
+use exanest::sim::{Rng, SimDuration};
+use exanest::topology::SystemConfig;
+
+const N: usize = 48; // global grid edge
+const P: usize = 2; // ranks per dimension
+const NL: usize = N / P; // local block edge (24)
+const ITERS: usize = 30;
+
+/// Gather the halo-padded local block of rank (cx,cy,cz) from the
+/// distributed field (numerics of the halo exchange; timing is charged
+/// separately through the simulated fabric).
+fn gather_padded(field: &[Vec<f32>], c: (usize, usize, usize)) -> Vec<f32> {
+    let np = NL + 2;
+    let mut out = vec![0.0f32; np * np * np];
+    let (ox, oy, oz) = (c.0 * NL, c.1 * NL, c.2 * NL);
+    for z in 0..np {
+        for y in 0..np {
+            for x in 0..np {
+                let (gz, gy, gx) = (
+                    oz as isize + z as isize - 1,
+                    oy as isize + y as isize - 1,
+                    ox as isize + x as isize - 1,
+                );
+                if gz < 0 || gy < 0 || gx < 0
+                    || gz >= N as isize || gy >= N as isize || gx >= N as isize
+                {
+                    continue; // zero Dirichlet boundary
+                }
+                let (gz, gy, gx) = (gz as usize, gy as usize, gx as usize);
+                let rank = (gx / NL) + (gy / NL) * P + (gz / NL) * P * P;
+                let (lz, ly, lx) = (gz % NL, gy % NL, gx % NL);
+                out[(z * np + y) * np + x] =
+                    field[rank][(lz * NL + ly) * NL + lx];
+            }
+        }
+    }
+    out
+}
+
+fn rank_coord(r: usize) -> (usize, usize, usize) {
+    (r % P, (r / P) % P, r / (P * P))
+}
+
+/// Charge the simulated cost of one halo exchange + compute phase.
+fn charge_iteration(world: &mut World, compute: SimDuration) {
+    for c in world.clocks.iter_mut() {
+        *c += compute;
+    }
+    let face = NL * NL * 4;
+    for dim in 0..3 {
+        for r in 0..world.nranks() {
+            let c = rank_coord(r);
+            let mut nc = c;
+            match dim {
+                0 => nc.0 = (c.0 + 1) % P,
+                1 => nc.1 = (c.1 + 1) % P,
+                _ => nc.2 = (c.2 + 1) % P,
+            }
+            let n = rank_coord_inv(nc);
+            if r < n {
+                pt2pt::sendrecv_exchange(world, r, n, face);
+            }
+        }
+    }
+}
+
+fn rank_coord_inv(c: (usize, usize, usize)) -> usize {
+    c.0 + c.1 * P + c.2 * P * P
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut exec = Executor::open_default()?;
+    let nranks = P * P * P;
+    let mut world = World::new(SystemConfig::prototype(), nranks, Placement::PerCore);
+    let mut rng = Rng::new(2023);
+
+    // Right-hand side, distributed.
+    let global_b: Vec<f32> = rng.f32_vec(N * N * N);
+    let mut b_local: Vec<Vec<f32>> = vec![vec![0.0; NL * NL * NL]; nranks];
+    for gz in 0..N {
+        for gy in 0..N {
+            for gx in 0..N {
+                let rank = (gx / NL) + (gy / NL) * P + (gz / NL) * P * P;
+                b_local[rank][((gz % NL) * NL + gy % NL) * NL + gx % NL] =
+                    global_b[(gz * N + gy) * N + gx];
+            }
+        }
+    }
+
+    // ---- distributed CG over the simulated machine --------------------
+    let mut x: Vec<Vec<f32>> = vec![vec![0.0; NL * NL * NL]; nranks];
+    let mut r = b_local.clone();
+    let mut p = r.clone();
+    let mut rr: f64 = r
+        .iter()
+        .flat_map(|v| v.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum();
+    let mut hist = vec![rr.sqrt()];
+    // per-iteration local compute, minife-calibrated
+    let compute = SimDuration::from_secs((NL * NL * NL) as f64 * 7.0e-8);
+    let t_start = world.max_clock();
+
+    for _ in 0..ITERS {
+        charge_iteration(&mut world, compute);
+        // Ap = A p; local pAp — Pallas cg_pre through PJRT, per rank
+        let mut ap = Vec::with_capacity(nranks);
+        let mut pap = 0.0f64;
+        for rank in 0..nranks {
+            let padded = gather_padded(&p, rank_coord(rank));
+            let out = exec.run_f32("cg_pre_24", &[&padded])?;
+            pap += out[1][0] as f64;
+            ap.push(out[0].clone());
+        }
+        collectives::allreduce(&mut world, 8);
+        let alpha = (rr / pap) as f32;
+        // x += alpha p; r -= alpha Ap; local rr
+        let mut rr_new = 0.0f64;
+        for rank in 0..nranks {
+            let out = exec.run_f32(
+                "cg_post_24",
+                &[&x[rank], &r[rank], &p[rank], &ap[rank], &[alpha]],
+            )?;
+            x[rank] = out[0].clone();
+            r[rank] = out[1].clone();
+            rr_new += out[2][0] as f64;
+        }
+        collectives::allreduce(&mut world, 8);
+        let beta = (rr_new / rr) as f32;
+        for rank in 0..nranks {
+            let out = exec.run_f32("cg_update_p", &[&r[rank], &p[rank], &[beta]])
+                .or_else(|_| exec.run_f32("cg_update_p_24", &[&r[rank], &p[rank], &[beta]]))?;
+            p[rank] = out[0].clone();
+        }
+        rr = rr_new;
+        hist.push(rr.sqrt());
+    }
+    let sim_time_8 = (world.max_clock() - t_start).secs();
+
+    // ---- single-rank reference on the same system ---------------------
+    let mut x1 = vec![0.0f32; N * N * N];
+    let mut r1 = global_b.clone();
+    let mut p1 = r1.clone();
+    let mut rr1: f64 = r1.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let mut hist1 = vec![rr1.sqrt()];
+    for _ in 0..ITERS {
+        let mut padded = vec![0.0f32; (N + 2) * (N + 2) * (N + 2)];
+        for z in 0..N {
+            for y in 0..N {
+                for xx in 0..N {
+                    padded[((z + 1) * (N + 2) + y + 1) * (N + 2) + xx + 1] =
+                        p1[(z * N + y) * N + xx];
+                }
+            }
+        }
+        let pre = exec.run_f32("cg_pre_48", &[&padded])?;
+        let alpha = (rr1 / pre[1][0] as f64) as f32;
+        let post = exec.run_f32("cg_post_48", &[&x1, &r1, &p1, &pre[0], &[alpha]])?;
+        x1 = post[0].clone();
+        r1 = post[1].clone();
+        let rr_new = post[2][0] as f64;
+        let beta = (rr_new / rr1) as f32;
+        let upd = exec.run_f32("cg_update_p_48", &[&r1, &p1, &[beta]])?;
+        p1 = upd[0].clone();
+        rr1 = rr_new;
+        hist1.push(rr1.sqrt());
+    }
+
+    // ---- report + validation ------------------------------------------
+    println!("e2e miniFE-style CG, 48^3 grid, 8 simulated ranks, {ITERS} iters");
+    println!("residual curve (distributed): ");
+    for (i, h) in hist.iter().enumerate().step_by(5) {
+        println!("  iter {i:>3}: {h:.6e}");
+    }
+    let reduction = hist[0] / hist[hist.len() - 1];
+    println!("residual reduction: {reduction:.1}x");
+    assert!(reduction > 20.0, "CG failed to converge");
+
+    // distributed must track the single-rank reference
+    let mut max_rel = 0.0f64;
+    for (a, b) in hist.iter().zip(&hist1) {
+        max_rel = max_rel.max(((a - b) / b).abs());
+    }
+    println!("max relative residual deviation vs single-rank: {max_rel:.3e}");
+    assert!(max_rel < 1e-3, "distributed CG diverged from reference");
+
+    println!("simulated time (8 ranks):   {:.3} ms", sim_time_8 * 1e3);
+    let t1 = ITERS as f64 * (N * N * N) as f64 * 7.0e-8;
+    println!("modelled single-rank time:  {:.3} ms", t1 * 1e3);
+    println!("parallel efficiency:        {:.1}%", 100.0 * t1 / (8.0 * sim_time_8));
+    println!("PJRT kernel executions:     {}", exec.executions);
+    println!("e2e OK");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! The OSU microbenchmark sweep (Table 2, Figs 14-17 in miniature):
+//! latency per path class, bandwidth, and the collectives.
+//!
+//!     cargo run --release --example osu_suite
+
+use exanest::apps::osu::{self, OsuPath};
+use exanest::mpi::Placement;
+use exanest::topology::SystemConfig;
+
+fn main() {
+    let cfg = SystemConfig::prototype();
+
+    println!("osu_latency (0 B) per path class [Table 2]:");
+    for p in OsuPath::ALL {
+        let lat = osu::osu_latency(&cfg, p, 0, 100);
+        println!("  {:<18} {:>7.3} us", p.label(), lat.us());
+    }
+
+    println!("\nosu_bw 4 MB [Fig 15]:");
+    for p in [OsuPath::IntraQfdbSh, OsuPath::IntraMezzSh, OsuPath::InterMezz312] {
+        let bw = osu::osu_bw(&cfg, p, 4 << 20, 64);
+        let bi = osu::osu_bibw(&cfg, p, 4 << 20, 64);
+        println!("  {:<18} uni {:>6.2} Gb/s   bi {:>6.2} Gb/s", p.label(), bw, bi);
+    }
+
+    println!("\nosu_bcast 1 B [Fig 16]:");
+    for n in [4usize, 16, 64, 256, 512] {
+        let lat = osu::osu_bcast(&cfg, n, 1, 10, 42);
+        println!("  {n:>4} ranks: {:>7.3} us", lat.us());
+    }
+
+    println!("\nosu_allreduce 4 B [Fig 17]:");
+    for n in [4usize, 16, 64, 256, 512] {
+        let lat = osu::osu_allreduce(&cfg, n, 4, 10, Placement::PerCore);
+        println!("  {n:>4} ranks: {:>7.3} us", lat.us());
+    }
+}

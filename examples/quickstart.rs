@@ -1,0 +1,54 @@
+//! Quickstart: build the simulated rack, classify a few paths (Table 1),
+//! send messages through ExaNet-MPI, and run a kernel through PJRT.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use exanest::mpi::{pt2pt, Placement, World};
+use exanest::runtime::Executor;
+use exanest::topology::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The full-scale prototype: 8 blades, 32 QFDBs, 128 MPSoCs, 512 cores.
+    let cfg = SystemConfig::prototype();
+    println!(
+        "prototype: {} QFDBs / {} MPSoCs / {} A53 cores, torus {:?}",
+        cfg.num_qfdbs(),
+        cfg.num_mpsocs(),
+        cfg.num_cores(),
+        cfg.torus_dims()
+    );
+
+    // 2. Route + classify a path (paper Table 1).
+    let mut world = World::new(cfg.clone(), 512, Placement::PerCore);
+    let a = world.fabric.topo.mpsoc(0, 0, 1);
+    let b = world.fabric.topo.mpsoc(6, 1, 2);
+    let path = world.fabric.route(a, b);
+    println!(
+        "path {:?} -> {:?}: class {}, {} hops, {} routers",
+        a,
+        b,
+        path.class(),
+        path.hops().len(),
+        path.routers
+    );
+
+    // 3. An MPI message between two far ranks: eager vs rendez-vous.
+    let r = pt2pt::send_recv(&mut world, 0, 511, 8);
+    println!("eager 8 B rank0 -> rank511: {:.3} us", r.recv_done.us());
+    world.reset();
+    let r = pt2pt::send_recv(&mut world, 0, 511, 1 << 20);
+    println!("rendez-vous 1 MB rank0 -> rank511: {:.3} us", r.recv_done.us());
+
+    // 4. Execute an AOT Pallas kernel (the Section-7 accelerator tile)
+    //    through PJRT — python is not involved at runtime.
+    let mut exec = Executor::open_default()?;
+    let n = 128;
+    let a_mat = vec![1.0f32; n * n];
+    let b_mat: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32).collect();
+    let out = exec.run_f32("matmul_tile128", &[&a_mat, &b_mat])?;
+    println!(
+        "matmul_tile128 via PJRT: out[0] = {} (executions: {})",
+        out[0][0], exec.executions
+    );
+    Ok(())
+}

@@ -1,0 +1,116 @@
+"""AOT compile path: lower every Layer-2 function to HLO *text* artifacts.
+
+HLO text (not ``serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per registry entry plus ``manifest.txt``
+describing the I/O signature of each artifact, which the rust
+``runtime::Executor`` parses at load time:
+
+    <name> in=<dtype>:<dims>x... [,...] out=<dtype>:<dims>x... [,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)  # f64 allreduce variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(s) -> str:
+    dt = {"float32": "f32", "float64": "f64", "int32": "i32"}[str(s.dtype)]
+    dims = "x".join(str(d) for d in s.shape) or "scalar"
+    return f"{dt}:{dims}"
+
+
+def registry() -> list:
+    """(artifact name, fn, example args) for every AOT export."""
+    ents = []
+
+    # --- Section 7 matmul accelerator -----------------------------------
+    ents.append(("matmul_tile128", model.matmul_tile_once,
+                 [spec((128, 128)), spec((128, 128))]))
+    ents.append(("matmul_256", model.matmul_paper,
+                 [spec((256, 256)), spec((256, 256))]))
+    ents.append(("matmul_512", model.matmul_paper,
+                 [spec((512, 512)), spec((512, 512))]))
+
+    # --- Section 4.7 allreduce accelerator ALU ---------------------------
+    for op in ("sum", "min", "max"):
+        ents.append((f"allreduce_{op}_f32_64", model.allreduce_combine(op),
+                     [spec((64,)), spec((64,))]))
+    ents.append(("allreduce_sum_f64_32", model.allreduce_combine("sum"),
+                 [spec((32,), jnp.float64), spec((32,), jnp.float64)]))
+    ents.append(("allreduce_sum_i32_64", model.allreduce_combine("sum"),
+                 [spec((64,), jnp.int32), spec((64,), jnp.int32)]))
+    # a 4 KB vector for the software-allreduce data path
+    ents.append(("allreduce_sum_f32_1024", model.allreduce_combine("sum"),
+                 [spec((1024,)), spec((1024,))]))
+
+    # --- HPCG/miniFE CG per-rank steps, at the e2e example's grid sizes --
+    for n in (8, 24, 48):
+        p = n + 2
+        ents.append((f"cg_pre_{n}", model.cg_pre, [spec((p, p, p))]))
+        ents.append((f"cg_post_{n}", model.cg_post,
+                     [spec((n, n, n))] * 4 + [spec((1,))]))
+        ents.append((f"cg_update_p_{n}", model.cg_update_p,
+                     [spec((n, n, n))] * 2 + [spec((1,))]))
+
+    return ents
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, fn, argspecs in registry():
+        sig_in = ",".join(_sig(s) for s in argspecs)
+        lowered = jax.jit(fn).lower(*argspecs)
+        flat, _ = jax.tree.flatten(lowered.out_info)
+        sig_out = ",".join(_sig(s) for s in flat)
+        manifest_lines.append(f"{name} in={sig_in} out={sig_out}")
+        if only is not None and name not in only:
+            continue
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {args.out_dir}/manifest.txt ({len(manifest_lines)} entries)")
+
+
+if __name__ == "__main__":
+    main()

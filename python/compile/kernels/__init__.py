@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels: the FPGA accelerator datapaths of the ExaNeSt paper.
+
+Each kernel mirrors one piece of FPGA logic from the paper:
+
+- ``matmul_tile``  — the Section-7 HLS matrix-multiplication accelerator:
+  a 128x128 FP32 tile held in BRAM (here: a Pallas VMEM block) with the
+  k-loop fully unrolled (here: one MXU ``jnp.dot`` per grid step).
+- ``reduce_vec``   — the Allreduce accelerator ALU (Section 4.7):
+  elementwise sum/min/max over 256-byte vector blocks.
+- ``stencil27``    — the HPCG/miniFE compute hot-spot: a 27-point stencil
+  SpMV on a structured grid, plus the dot/axpy vector ops of the CG solver.
+
+All kernels are lowered with ``interpret=True``: real-TPU Pallas emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.  Correctness is
+checked against the pure-jnp oracles in ``ref.py`` by the pytest suite.
+"""
+
+from . import matmul_tile, reduce_vec, stencil27, ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""Pallas port of the Section-7 HLS matrix-multiplication accelerator.
+
+The paper's accelerator holds a 128x128 FP32 tile of each operand in BRAM,
+fully unrolls the k-loop (128 MACs/cycle) and 4-way unrolls the j-loop,
+i.e. 512 MACs/cycle at 300 MHz, with three AXI HP ports streaming tiles
+from DDR.  The TPU-style rethink (DESIGN.md §Hardware-Adaptation):
+
+- BRAM tile            -> Pallas VMEM block (``BlockSpec``)
+- unrolled MAC array   -> one MXU ``jnp.dot`` per grid step
+- AXI load/unload + double buffering -> the automatic Pallas HBM<->VMEM
+  pipeline implied by the grid/BlockSpec schedule.
+
+The grid is (M/bm, N/bn, K/bk) with k innermost so each (i, j) output block
+stays resident in VMEM while partial products accumulate — exactly the HLS
+"keep C tile in BRAM across the k loop" plan.
+
+VMEM footprint at the paper's tile (128,128,128): 3 x 128x128x4 B = 192 KiB,
+comfortably inside a TPU core's ~16 MiB VMEM; MXU utilisation estimate is
+derived in DESIGN.md §Perf (the 128x128 f32 block maps to 1 MXU pass per
+8x8x8 systolic step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's tile geometry: 128x128, k fully unrolled over 128.
+PAPER_TILE = (128, 128, 128)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: accumulate x_block @ y_block into the output block."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jax.Array:
+    """Tiled matmul via the Pallas kernel.
+
+    Shapes must be multiples of the block sizes (the paper's accelerator has
+    the same restriction: arrays are padded to tile multiples by the host).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not a multiple of tile ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(x, y)
+
+
+def vmem_bytes(bm: int = 128, bn: int = 128, bk: int = 128,
+               dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (A, B and C blocks), in bytes."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,68 @@
+"""Pallas port of the Allreduce accelerator ALU (paper Section 4.7).
+
+The HLS accelerator reduces vectors in 256-byte blocks (the maximum ExaNet
+cell payload) with sum/min/max over int, float and double datatypes.  Here
+the vector ALU is a Pallas elementwise kernel over 256-byte blocks; the
+rust `accel::allreduce` model invokes the AOT-compiled pairwise combine at
+every level of the reduction tree, so the simulated collective produces
+real numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: operations supported by the accelerator (paper §4.7)
+OPS = ("sum", "min", "max")
+#: datatypes supported by the accelerator (paper §4.7: int, float, double)
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64, "i32": jnp.int32}
+
+#: the accelerator's native block: 256 bytes (one ExaNet cell payload)
+BLOCK_BYTES = 256
+
+
+def _combine_kernel(op: str, a_ref, b_ref, o_ref):
+    a, b = a_ref[...], b_ref[...]
+    if op == "sum":
+        o_ref[...] = a + b
+    elif op == "min":
+        o_ref[...] = jnp.minimum(a, b)
+    elif op == "max":
+        o_ref[...] = jnp.maximum(a, b)
+    else:  # pragma: no cover - guarded by OPS
+        raise ValueError(f"unsupported op {op!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def combine(a: jax.Array, b: jax.Array, *, op: str = "sum") -> jax.Array:
+    """Pairwise elementwise reduction of two equal-shape 1-D vectors.
+
+    Blocked in units of 256 bytes like the hardware; lengths must be a
+    multiple of one block (the rust caller pads, like the accelerator's
+    software driver does).
+    """
+    assert op in OPS, f"op must be one of {OPS}"
+    assert a.shape == b.shape and a.ndim == 1
+    assert a.dtype == b.dtype
+    elems_per_block = BLOCK_BYTES // a.dtype.itemsize
+    n = a.shape[0]
+    assert n % elems_per_block == 0, (
+        f"length {n} not a multiple of the {elems_per_block}-element block"
+    )
+    grid = (n // elems_per_block,)
+    kern = functools.partial(_combine_kernel, op)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((elems_per_block,), lambda i: (i,)),
+            pl.BlockSpec((elems_per_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((elems_per_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b)

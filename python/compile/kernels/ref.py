@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are deliberately written with a *different* algorithmic shape than the
+kernels (no tiling, no blocked grids, jnp.roll instead of slice loops) so a
+bug in the Pallas plumbing cannot cancel out in the comparison.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .stencil27 import DIAG, OFF
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Dense matmul oracle."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def combine(a: jax.Array, b: jax.Array, op: str = "sum") -> jax.Array:
+    """Elementwise pairwise reduce oracle."""
+    if op == "sum":
+        return a + b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(op)
+
+
+def spmv(x_padded: jax.Array) -> jax.Array:
+    """27-point SpMV oracle built from jnp.roll over the padded block."""
+    acc = jnp.zeros_like(x_padded)
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                w = DIAG if (dz, dy, dx) == (0, 0, 0) else OFF
+                acc = acc + w * jnp.roll(x_padded, (-dz, -dy, -dx), (0, 1, 2))
+    return acc[1:-1, 1:-1, 1:-1]
+
+
+def dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sum(a.reshape(-1) * b.reshape(-1)).reshape(1)
+
+
+def axpy(alpha: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return alpha.reshape(1)[0] * x + y
+
+
+def spmv_dense(x_padded) -> jax.Array:
+    """Second, even more literal oracle: materialise the operator as a dense
+    matrix over the interior points and do a dense matvec.  Only usable for
+    tiny grids; used by one pytest to anchor the roll-based oracle itself."""
+    import numpy as np
+
+    nz, ny, nx = (d - 2 for d in x_padded.shape)
+    n = nz * ny * nx
+    xp = np.asarray(x_padded)
+    a = np.zeros((n, n), dtype=np.float64)
+    rhs_halo = np.zeros(n, dtype=np.float64)
+
+    def idx(z, y, x):
+        return (z * ny + y) * nx + x
+
+    for z in range(nz):
+        for y in range(ny):
+            for x in range(nx):
+                row = idx(z, y, x)
+                for dz in (-1, 0, 1):
+                    for dy in (-1, 0, 1):
+                        for dx in (-1, 0, 1):
+                            w = DIAG if (dz, dy, dx) == (0, 0, 0) else OFF
+                            zz, yy, xx = z + dz, y + dy, x + dx
+                            if 0 <= zz < nz and 0 <= yy < ny and 0 <= xx < nx:
+                                a[row, idx(zz, yy, xx)] += w
+                            else:
+                                # halo contribution becomes an additive term
+                                rhs_halo[row] += w * xp[zz + 1, yy + 1, xx + 1]
+    interior = xp[1:-1, 1:-1, 1:-1].reshape(-1).astype(np.float64)
+    return (a @ interior + rhs_halo).reshape(nz, ny, nx).astype(np.float32)

@@ -1,0 +1,99 @@
+"""Pallas kernels for the CG compute hot-spot of HPCG / miniFE.
+
+HPCG's operator is the 27-point stencil on a structured 3-D grid: the
+matrix row for an interior point has 26.0 on the diagonal and -1.0 for each
+of its 26 neighbours (HPCG reference problem).  SpMV against that operator
+is the dominant kernel of both HPCG and miniFE's CG solve, so it is the
+Layer-1 hot-spot for the application-level experiments (Figs 21-22) and for
+the end-to-end example.
+
+The grid sizes used by the simulated ranks are small (local subgrids of a
+few tens cubed), so the whole padded block fits in one VMEM block; larger
+grids would block over the z axis with a one-plane halo per block.
+
+Also provides the CG vector primitives (dot, axpy) as trivial Pallas
+kernels, so a full CG iteration lowers into pure Pallas compute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: HPCG operator coefficients: diag 26, off-diagonal -1 over 26 neighbours.
+DIAG = 26.0
+OFF = -1.0
+
+
+def _stencil_kernel(x_ref, o_ref):
+    """27-point SpMV: x_ref is the halo-padded (n+2)^3 block, o is n^3."""
+    x = x_ref[...]
+    acc = DIAG * x[1:-1, 1:-1, 1:-1]
+    # 26 neighbour contributions; the (0,0,0) offset is the diagonal above.
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                if dz == 0 and dy == 0 and dx == 0:
+                    continue
+                acc = acc + OFF * x[
+                    1 + dz: x.shape[0] - 1 + dz,
+                    1 + dy: x.shape[1] - 1 + dy,
+                    1 + dx: x.shape[2] - 1 + dx,
+                ]
+    o_ref[...] = acc
+
+
+@jax.jit
+def spmv(x_padded: jax.Array) -> jax.Array:
+    """SpMV with the 27-point operator. Input is halo-padded by one plane.
+
+    ``x_padded`` has shape (nz+2, ny+2, nx+2); the result has shape
+    (nz, ny, nx).  Boundary (Dirichlet) conditions are expressed by the
+    caller filling the halo with zeros; distributed ranks fill it with
+    neighbour data received over the simulated ExaNet fabric.
+    """
+    nz, ny, nx = (d - 2 for d in x_padded.shape)
+    return pl.pallas_call(
+        _stencil_kernel,
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), jnp.float32),
+        interpret=True,
+    )(x_padded)
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    o_ref[0] = jnp.sum(a_ref[...] * b_ref[...])
+
+
+@jax.jit
+def dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Local dot product -> shape-(1,) result (allreduced by the L3 layer)."""
+    assert a.shape == b.shape
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(a.reshape(-1), b.reshape(-1))
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@jax.jit
+def axpy(alpha: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """o = alpha * x + y with a scalar carried as a shape-(1,) array."""
+    assert x.shape == y.shape
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(alpha.reshape(1), x, y)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pad_halo(x: jax.Array) -> jax.Array:
+    """Zero-pad a (nz,ny,nx) block by one halo plane on every face."""
+    return jnp.pad(x, 1)

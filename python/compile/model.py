@@ -1,0 +1,102 @@
+"""Layer-2 JAX compute graphs, composed from the Layer-1 Pallas kernels.
+
+These are the functions that get AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust coordinator via PJRT.  Python never runs on the
+request path: every function here is traced exactly once at build time.
+
+The CG functions implement the per-rank compute of a distributed conjugate
+gradient solve (the computational core of both miniFE and HPCG):
+the L3 rust layer owns the halo exchanges and the dot-product allreduces,
+so the per-rank steps are split at exactly those communication points:
+
+    cg_pre:      Ap = A p   (27-pt stencil on the halo-padded p),
+                 local <p, Ap>                  -> then L3 allreduces pAp
+    cg_post:     x += alpha p; r -= alpha Ap; local <r, r>
+                                                -> then L3 allreduces rr
+    cg_update_p: p = r + beta p                 -> then L3 halo-exchanges p
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_tile, reduce_vec, stencil27
+
+
+# --------------------------------------------------------------------------
+# Section 7: the matrix-multiplication accelerator workload
+# --------------------------------------------------------------------------
+
+def matmul_paper(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """The paper's accelerator composed over a full matrix (tiled 128^3)."""
+    return (matmul_tile.matmul(x, y),)
+
+
+def matmul_tile_once(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """Exactly one accelerator tile (the HLS kernel itself, one block)."""
+    return (matmul_tile.matmul(x, y, bm=x.shape[0], bn=y.shape[1],
+                               bk=x.shape[1]),)
+
+
+# --------------------------------------------------------------------------
+# Section 4.7: the Allreduce accelerator ALU
+# --------------------------------------------------------------------------
+
+def allreduce_combine(op: str):
+    """Pairwise combine for one tree level of the Allreduce accelerator."""
+
+    def fn(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+        return (reduce_vec.combine(a, b, op=op),)
+
+    fn.__name__ = f"allreduce_combine_{op}"
+    return fn
+
+
+# --------------------------------------------------------------------------
+# HPCG / miniFE: per-rank CG compute between communication points
+# --------------------------------------------------------------------------
+
+def cg_pre(p_padded: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Ap = A p (halo already filled by L3); local partial <p, Ap>."""
+    ap = stencil27.spmv(p_padded)
+    p_interior = p_padded[1:-1, 1:-1, 1:-1]
+    return ap, stencil27.dot(p_interior, ap)
+
+
+def cg_post(x: jax.Array, r: jax.Array, p: jax.Array, ap: jax.Array,
+            alpha: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x' = x + alpha p ; r' = r - alpha Ap ; local partial <r', r'>."""
+    x2 = stencil27.axpy(alpha, p, x)
+    r2 = stencil27.axpy(-alpha, ap, r)
+    return x2, r2, stencil27.dot(r2, r2)
+
+
+def cg_update_p(r: jax.Array, p: jax.Array,
+                beta: jax.Array) -> tuple[jax.Array]:
+    """p' = r + beta p (then L3 refreshes the halo of p')."""
+    return (stencil27.axpy(beta, p, r),)
+
+
+def cg_solve_single(b: jax.Array, iters: int) -> tuple[jax.Array, jax.Array]:
+    """Single-rank CG reference loop (used by pytest, not AOT-exported).
+
+    Solves A x = b on one zero-halo grid, returning (x, residual-norm
+    history).  Mirrors what the distributed rust driver does with the AOT
+    artifacts, so the e2e example can be validated against it.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rr = stencil27.dot(r, r)[0]
+    hist = [jnp.sqrt(rr)]
+    for _ in range(iters):
+        ap, pap = cg_pre(stencil27.pad_halo(p))
+        alpha = rr / pap[0]
+        x, r, rr_new = cg_post(x, r, p, ap, jnp.asarray([alpha]))
+        rr_new = rr_new[0]
+        beta = rr_new / rr
+        (p,) = cg_update_p(r, p, jnp.asarray([beta]))
+        rr = rr_new
+        hist.append(jnp.sqrt(rr))
+    return x, jnp.stack(hist)

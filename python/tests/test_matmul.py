@@ -1,0 +1,80 @@
+"""Pallas matmul tile (Section 7 accelerator) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_tile, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+class TestMatmulTile:
+    def test_identity(self):
+        x = jnp.eye(16, dtype=jnp.float32)
+        out = matmul_tile.matmul(x, x, bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(np.asarray(out), np.eye(16), atol=1e-6)
+
+    def test_single_block_equals_dot(self):
+        x, y = _rand((8, 8), 0), _rand((8, 8), 1)
+        out = matmul_tile.matmul(x, y, bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul(x, y)), rtol=1e-5)
+
+    def test_paper_tile_128(self):
+        """The exact HLS geometry: one 128x128x128 tile."""
+        x, y = _rand((128, 128), 2), _rand((128, 128), 3)
+        out = matmul_tile.matmul(x, y, bm=128, bn=128, bk=128)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul(x, y)), rtol=2e-4, atol=1e-3)
+
+    def test_tiled_256_with_paper_tile(self):
+        """2x2x2 grid of 128-tiles — the §7 composed accelerator."""
+        x, y = _rand((256, 256), 4), _rand((256, 256), 5)
+        out = matmul_tile.matmul(x, y)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul(x, y)), rtol=2e-4, atol=1e-3)
+
+    def test_rectangular(self):
+        x, y = _rand((16, 32), 6), _rand((32, 8), 7)
+        out = matmul_tile.matmul(x, y, bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul(x, y)), rtol=1e-4, atol=1e-4)
+
+    def test_rejects_non_multiple_shapes(self):
+        x = jnp.zeros((10, 8), jnp.float32)
+        y = jnp.zeros((8, 8), jnp.float32)
+        with pytest.raises(AssertionError):
+            matmul_tile.matmul(x, y, bm=8, bn=8, bk=8)
+
+    def test_rejects_mismatched_inner(self):
+        x = jnp.zeros((8, 16), jnp.float32)
+        y = jnp.zeros((8, 8), jnp.float32)
+        with pytest.raises(AssertionError):
+            matmul_tile.matmul(x, y, bm=8, bn=8, bk=8)
+
+    def test_vmem_footprint_paper_tile(self):
+        # 3 x 128x128 f32 blocks = 192 KiB — must fit VMEM (16 MiB)
+        assert matmul_tile.vmem_bytes() == 192 * 1024
+        assert matmul_tile.vmem_bytes() < 16 * 1024 * 1024
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mi=st.integers(1, 3), ni=st.integers(1, 3), ki=st.integers(1, 3),
+        bm=st.sampled_from([4, 8]), bn=st.sampled_from([4, 8]),
+        bk=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_oracle(self, mi, ni, ki, bm, bn, bk, seed):
+        m, n, k = mi * bm, ni * bn, ki * bk
+        x, y = _rand((m, k), seed), _rand((k, n), seed + 1)
+        out = matmul_tile.matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul(x, y)), rtol=1e-4,
+            atol=1e-4)

@@ -1,0 +1,15 @@
+//! Bench for Figs 20-22 / Table 3: application scaling simulations.
+use exanest::apps::scaling::{run_point, AppParams, Mode};
+use exanest::bench::{bench, black_box};
+use exanest::topology::SystemConfig;
+
+fn main() {
+    let cfg = SystemConfig::prototype();
+    for app in [AppParams::lammps(), AppParams::hpcg(), AppParams::minife()] {
+        for (mode, tag) in [(Mode::Weak, "weak"), (Mode::Strong, "strong")] {
+            bench(&format!("scaling/{}/{tag}/512ranks", app.name), || {
+                black_box(run_point(&cfg, &app, 512, mode));
+            });
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench for Fig 15: osu_bw / osu_bibw simulation.
+use exanest::apps::osu::{osu_bibw, osu_bw, OsuPath};
+use exanest::bench::{bench, black_box};
+use exanest::topology::SystemConfig;
+
+fn main() {
+    let cfg = SystemConfig::prototype();
+    for p in [OsuPath::IntraQfdbSh, OsuPath::IntraMezzSh, OsuPath::InterMezz312] {
+        bench(&format!("osu_bw/{}/4MB", p.label()), || {
+            black_box(osu_bw(&cfg, p, 4 << 20, 64));
+        });
+    }
+    bench("osu_bibw/Intra-QFDB-sh/4MB", || {
+        black_box(osu_bibw(&cfg, OsuPath::IntraQfdbSh, 4 << 20, 64));
+    });
+}

@@ -1,0 +1,26 @@
+//! Bench for Figs 16-18: bcast/allreduce simulations + the Eq.1 model.
+use exanest::apps::osu::{osu_allreduce, osu_bcast};
+use exanest::bench::{bench, black_box};
+use exanest::model::expected_bcast;
+use exanest::mpi::Placement;
+use exanest::topology::SystemConfig;
+
+fn main() {
+    let cfg = SystemConfig::prototype();
+    for n in [16usize, 64, 512] {
+        bench(&format!("osu_bcast/{n}ranks/1B"), || {
+            black_box(osu_bcast(&cfg, n, 1, 1, 42));
+        });
+    }
+    bench("osu_bcast/512ranks/1MB", || {
+        black_box(osu_bcast(&cfg, 512, 1 << 20, 1, 42));
+    });
+    for n in [16usize, 512] {
+        bench(&format!("osu_allreduce/{n}ranks/4B"), || {
+            black_box(osu_allreduce(&cfg, n, 4, 1, Placement::PerCore));
+        });
+    }
+    bench("bcast_model/eq1/512ranks", || {
+        black_box(expected_bcast(&cfg, 512, 1));
+    });
+}

@@ -1,0 +1,35 @@
+//! Bench for the simulation substrate itself (§Perf baseline): event
+//! queue throughput and fabric primitive costs.
+use exanest::bench::{bench, black_box};
+use exanest::network::Fabric;
+use exanest::sim::{Engine, SimDuration, SimTime};
+use exanest::topology::SystemConfig;
+
+fn main() {
+    bench("engine/schedule+drain/10k", || {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10_000u32 {
+            e.schedule(SimTime(i as u64 * 7919 % 100_000), i);
+        }
+        let mut acc = 0u64;
+        e.run(&mut acc, |a, _, _, i| {
+            *a += i as u64;
+            true
+        });
+        black_box(acc);
+    });
+    let mut fab = Fabric::new(SystemConfig::prototype());
+    let a = fab.topo.mpsoc(0, 0, 0);
+    let b = fab.topo.mpsoc(6, 1, 2);
+    let p = fab.route(a, b);
+    bench("fabric/small_cell/6hops", || {
+        black_box(fab.small_cell(&p, SimTime::ZERO, 32));
+    });
+    bench("fabric/rdma_block/6hops", || {
+        black_box(fab.rdma_block(&p, SimTime::ZERO, 16 * 1024, true));
+    });
+    bench("fabric/route/6hops", || {
+        black_box(fab.route(a, b));
+    });
+    let _ = SimDuration::ZERO;
+}

@@ -1,0 +1,15 @@
+//! Bench for Fig 13: the IP-over-ExaNet tunnel model.
+use exanest::bench::{bench, black_box};
+use exanest::ip::{iperf, IpMode, Scenario, TunnelConfig};
+
+fn main() {
+    let tc = TunnelConfig::default();
+    for s in Scenario::ALL {
+        bench(&format!("ip_overlay/{}", s.label()), || {
+            black_box(iperf(&tc, s, IpMode::Overlay, 5));
+        });
+    }
+    bench("ip_baseline/UDP 1470B", || {
+        black_box(iperf(&tc, Scenario::UdpLarge, IpMode::Baseline, 5));
+    });
+}

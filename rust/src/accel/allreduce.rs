@@ -1,0 +1,269 @@
+//! The in-NI Allreduce accelerator (paper §4.7, Fig. 10).
+//!
+//! Constraints mirrored from the paper: sum/min/max over int/float/double,
+//! at most 1 MPI rank per MPSoC, whole QFDBs (rank count a multiple of 4),
+//! up to 1024 ranks, vectors processed in 256-byte blocks — each block
+//! runs the whole log2(N)-level algorithm, which is why latency doubles
+//! with the vector size (§6.1.5).
+//!
+//! Timing: the *client* modules (non-network FPGAs) DMA their vector and
+//! push it to the QFDB's *server* module (the Network FPGA); the server
+//! reduces its QFDB's four vectors, then exchanges partial vectors with
+//! partner servers at doubling rank distance, and finally broadcasts the
+//! result back to its clients which update memory and notify software.
+//!
+//! Numerics: the per-level pairwise combine is the Pallas `reduce_vec`
+//! kernel, executed through PJRT when an [`Executor`] is supplied (the
+//! simulation-only path uses the same tree with native arithmetic so the
+//! two can be cross-checked).
+
+use crate::mpi::{Placement, World};
+use crate::runtime::Executor;
+use crate::sim::{SimDuration, SimTime};
+use anyhow::{bail, Result};
+
+/// Arithmetic operations supported by the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl AccelOp {
+    pub fn artifact_f32(self) -> &'static str {
+        match self {
+            AccelOp::Sum => "allreduce_sum_f32_64",
+            AccelOp::Min => "allreduce_min_f32_64",
+            AccelOp::Max => "allreduce_max_f32_64",
+        }
+    }
+}
+
+/// Vector block size the hardware operates on (one ExaNet cell payload).
+pub const BLOCK_BYTES: usize = 256;
+/// Maximum ranks supported by the accelerator.
+pub const MAX_RANKS: usize = 1024;
+
+/// The accelerator model over a simulated world.
+pub struct AccelAllreduce;
+
+impl AccelAllreduce {
+    /// Validate the paper's §4.7 use-case constraints.
+    pub fn check(world: &World, nranks: usize) -> Result<()> {
+        if world.placement != Placement::PerMpsoc {
+            bail!("accelerator supports at most 1 MPI rank per MPSoC");
+        }
+        if nranks % 4 != 0 {
+            bail!("whole QFDBs must participate (ranks multiple of 4)");
+        }
+        if nranks > MAX_RANKS {
+            bail!("accelerator supports up to {MAX_RANKS} ranks");
+        }
+        if !nranks.is_power_of_two() {
+            bail!("rank count must be a power of two for the level schedule");
+        }
+        Ok(())
+    }
+
+    /// Latency of one accelerated allreduce of `bytes` (timing only).
+    /// Each 256-byte block runs the full algorithm serially.
+    pub fn latency(world: &mut World, bytes: usize) -> SimDuration {
+        let n = world.nranks();
+        Self::check(world, n).expect("accelerator constraints");
+        world.sync_clocks();
+        let start = world.max_clock();
+        let nblocks = bytes.div_ceil(BLOCK_BYTES).max(1);
+        let mut t = start;
+        for _ in 0..nblocks {
+            t = Self::block_latency(world, t);
+        }
+        for c in world.clocks.iter_mut() {
+            *c = t;
+        }
+        t - start
+    }
+
+    /// One block through the full client/server level schedule.
+    fn block_latency(world: &mut World, start: SimTime) -> SimTime {
+        let calib = world.fabric.calib().clone();
+        let n = world.nranks();
+        let qfdbs = n / 4;
+        // Software programs the modules (op, dtype, size, pointer table).
+        let mut t = start + calib.accel_init;
+        // Level 0: clients DMA-fetch their vector and send it to the
+        // server; the server reduces the QFDB's four vectors.  All QFDBs
+        // act concurrently — model with the slowest (use QFDB 0's links;
+        // symmetric load, so one representative QFDB is exact).
+        t += calib.accel_client_dma;
+        let f1 = world.fabric.topo.mpsoc(0, 0, 0);
+        let f2 = world.fabric.topo.mpsoc(0, 0, 1);
+        let p = world.fabric.route(f2, f1);
+        t = world.fabric.small_cell(&p, t, BLOCK_BYTES);
+        t += SimDuration(calib.accel_reduce_per_level.0 * 3); // 3 client vectors
+        // Levels 1..log2(qfdbs): server pairwise exchange at doubling
+        // QFDB distance + reduce.
+        let levels = qfdbs.trailing_zeros() as usize;
+        for l in 0..levels {
+            let dist = 1usize << l;
+            let partner_q = crate::topology::QfdbId((dist % world.fabric.cfg().num_qfdbs()) as u32);
+            let a = world.fabric.topo.network_mpsoc(crate::topology::QfdbId(0));
+            let b = world.fabric.topo.network_mpsoc(partner_q);
+            let path = world.fabric.route(a, b);
+            t = world.fabric.small_cell(&path, t, BLOCK_BYTES);
+            t += calib.accel_reduce_per_level;
+        }
+        // Final level: server broadcasts to clients; clients write memory
+        // and notify software.
+        let back = world.fabric.route(f1, f2);
+        t = world.fabric.small_cell(&back, t, BLOCK_BYTES);
+        t += calib.accel_client_dma + calib.accel_finish;
+        t
+    }
+
+    /// Accelerated allreduce with real numerics: every rank contributes a
+    /// vector; the reduction tree evaluates the Pallas `reduce_vec` ALU
+    /// through PJRT.  Returns (latency, reduced vector).
+    pub fn allreduce_f32(
+        world: &mut World,
+        exec: &mut Executor,
+        op: AccelOp,
+        contributions: &[Vec<f32>],
+    ) -> Result<(SimDuration, Vec<f32>)> {
+        let n = world.nranks();
+        if contributions.len() != n {
+            bail!("need one contribution per rank");
+        }
+        let len = contributions[0].len();
+        if contributions.iter().any(|c| c.len() != len) {
+            bail!("all contributions must have equal length");
+        }
+        let lat = Self::latency(world, len * 4);
+        // Hardware reduces in 64-element (256 B) blocks; pad to a block.
+        let padded = len.div_ceil(64).max(1) * 64;
+        let art = op.artifact_f32();
+        let pad = |v: &[f32]| {
+            let mut x = v.to_vec();
+            x.resize(
+                padded,
+                match op {
+                    AccelOp::Sum => 0.0,
+                    AccelOp::Min => f32::INFINITY,
+                    AccelOp::Max => f32::NEG_INFINITY,
+                },
+            );
+            x
+        };
+        // Reduction tree with the same pairing as the hardware levels.
+        let mut vals: Vec<Vec<f32>> = contributions.iter().map(|c| pad(c)).collect();
+        let mut stride = 1usize;
+        while stride < n {
+            for i in (0..n).step_by(stride * 2) {
+                if i + stride < n {
+                    let (a, b) = (vals[i].clone(), vals[i + stride].clone());
+                    let mut acc = Vec::with_capacity(padded);
+                    for blk in 0..padded / 64 {
+                        let lo = blk * 64;
+                        let out = exec
+                            .run_f32(art, &[&a[lo..lo + 64], &b[lo..lo + 64]])?;
+                        acc.extend_from_slice(&out[0]);
+                    }
+                    vals[i] = acc;
+                }
+            }
+            stride *= 2;
+        }
+        let mut out = vals.swap_remove(0);
+        out.truncate(len);
+        Ok((lat, out))
+    }
+
+    /// Same reduction tree with native arithmetic (cross-check path).
+    pub fn allreduce_f32_native(op: AccelOp, contributions: &[Vec<f32>]) -> Vec<f32> {
+        let mut acc = contributions[0].clone();
+        for c in &contributions[1..] {
+            for (a, b) in acc.iter_mut().zip(c) {
+                *a = match op {
+                    AccelOp::Sum => *a + *b,
+                    AccelOp::Min => a.min(*b),
+                    AccelOp::Max => a.max(*b),
+                };
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::SystemConfig;
+
+    fn world(n: usize) -> World {
+        World::new(SystemConfig::prototype(), n, Placement::PerMpsoc)
+    }
+
+    #[test]
+    fn constraints_enforced() {
+        let w = world(16);
+        assert!(AccelAllreduce::check(&w, 16).is_ok());
+        let w6 = world(6);
+        assert!(AccelAllreduce::check(&w6, 6).is_err());
+        let wc = World::new(SystemConfig::prototype(), 16, Placement::PerCore);
+        assert!(AccelAllreduce::check(&wc, 16).is_err());
+    }
+
+    #[test]
+    fn latency_16_ranks_256b_matches_paper() {
+        // paper §6.1.5: 16 ranks, 256 B -> 6.79 us
+        let mut w = world(16);
+        let lat = AccelAllreduce::latency(&mut w, 256);
+        assert!(
+            (lat.us() - 6.79).abs() / 6.79 < 0.2,
+            "accel 16r/256B {} vs 6.79",
+            lat.us()
+        );
+    }
+
+    #[test]
+    fn latency_doubles_with_blocks() {
+        // paper: 512 B ~ 13.38 us, 1024 B ~ 26.11 us for 16 ranks
+        let mut w = world(16);
+        let l256 = AccelAllreduce::latency(&mut w, 256);
+        w.reset();
+        let l512 = AccelAllreduce::latency(&mut w, 512);
+        w.reset();
+        let l1024 = AccelAllreduce::latency(&mut w, 1024);
+        let r1 = l512.ns() / l256.ns();
+        let r2 = l1024.ns() / l512.ns();
+        assert!((r1 - 2.0).abs() < 0.1, "512/256 ratio {r1}");
+        assert!((r2 - 2.0).abs() < 0.1, "1024/512 ratio {r2}");
+    }
+
+    #[test]
+    fn latency_scales_mildly_with_ranks() {
+        // paper: 256 B goes 6.79 us (16 ranks) -> 9.61 us (128 ranks)
+        let mut w16 = world(16);
+        let l16 = AccelAllreduce::latency(&mut w16, 256);
+        let mut w128 = world(128);
+        let l128 = AccelAllreduce::latency(&mut w128, 256);
+        assert!(l128 > l16);
+        let ratio = l128.ns() / l16.ns();
+        assert!(
+            ratio < 1.75,
+            "accelerator scaling should be mild: {ratio} (paper 1.42)"
+        );
+    }
+
+    #[test]
+    fn native_tree_matches_sequential() {
+        let contributions: Vec<Vec<f32>> =
+            (0..8).map(|r| vec![r as f32, 1.0, -(r as f32)]).collect();
+        let sum = AccelAllreduce::allreduce_f32_native(AccelOp::Sum, &contributions);
+        assert_eq!(sum, vec![28.0, 8.0, -28.0]);
+        let mn = AccelAllreduce::allreduce_f32_native(AccelOp::Min, &contributions);
+        assert_eq!(mn[2], -7.0);
+        let mx = AccelAllreduce::allreduce_f32_native(AccelOp::Max, &contributions);
+        assert_eq!(mx[0], 7.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! The HLS matrix-multiplication accelerator (paper §7).
+//!
+//! One kernel tile holds 128x128 FP32 blocks in BRAM, fully unrolls the
+//! k-loop (128 MACs/cycle) with a 4-way unrolled j-loop — 512 multiplies +
+//! 512 adds per cycle at 300 MHz — and streams tiles over three AXI HP
+//! ports.  Paper results: ~4200 cycles per tile once data is in BRAM,
+//! 275 FP32 GFLOPS sustained per MPSoC, 16.2 W dynamic power,
+//! 17 GFLOPS/W, >1 TFLOP/s per QFDB.
+//!
+//! The cycle model reproduces those numbers from first principles; the
+//! numerics of the same tiled schedule live in the Pallas `matmul_tile`
+//! kernel (AOT artifact `matmul_*`), executed through PJRT.
+
+use crate::runtime::Executor;
+use anyhow::Result;
+
+/// Tile edge (the paper's chosen geometry).
+pub const TILE: usize = 128;
+/// Accelerator clock in Hz.
+pub const CLOCK_HZ: f64 = 300e6;
+/// Compute cycles for one 128^3 tile once operands are in BRAM.
+pub const TILE_CYCLES: u64 = 4200;
+/// Pipeline/control overhead cycles per tile (load/unload scheduling,
+/// derived from the paper's 275-vs-299.6 sustained/peak ratio).
+pub const TILE_OVERHEAD_CYCLES: u64 = 380;
+/// AXI HP port payload bandwidth at the accelerator clock (128 bit @
+/// 300 MHz), bytes/second; one port per array (A, B, C).
+pub const AXI_PORT_BYTES_PER_SEC: f64 = 4.8e9;
+/// Dynamic power of the accelerator, measured by the QFDB sensors (W).
+pub const DYNAMIC_POWER_W: f64 = 16.2;
+
+/// FPGA resource usage of the kernel tile (paper §7).
+#[derive(Debug, Clone, Copy)]
+pub struct Resources {
+    pub luts: u32,
+    pub ffs: u32,
+    pub dsps: u32,
+    pub brams: u32,
+}
+
+/// Resource report for the 128x128 tile.
+pub const TILE_RESOURCES: Resources =
+    Resources { luts: 153_000, ffs: 300_000, dsps: 2057, brams: 416 };
+
+/// ZU9EG totals, for utilisation percentages.
+pub const ZU9EG: Resources =
+    Resources { luts: 274_080, ffs: 548_160, dsps: 2520, brams: 912 };
+
+/// The accelerator performance model.
+#[derive(Debug, Clone)]
+pub struct MatmulAccel {
+    pub tile: usize,
+}
+
+impl Default for MatmulAccel {
+    fn default() -> Self {
+        MatmulAccel { tile: TILE }
+    }
+}
+
+impl MatmulAccel {
+    /// Seconds to multiply two n x n matrices on one MPSoC.
+    /// Tiles pipeline: per-tile time is max(compute, operand streaming),
+    /// plus a fill of one tile at the start.
+    pub fn time_seconds(&self, n: usize) -> f64 {
+        assert!(n % self.tile == 0, "n must be a multiple of the tile");
+        let tiles = (n / self.tile).pow(3) as u64;
+        let compute = (TILE_CYCLES + TILE_OVERHEAD_CYCLES) as f64 / CLOCK_HZ;
+        // per (i,j,k) step the engine streams one A tile and one B tile
+        let bytes = 2.0 * (self.tile * self.tile * 4) as f64;
+        let stream = bytes / (2.0 * AXI_PORT_BYTES_PER_SEC); // A and B ports in parallel
+        let per_tile = compute.max(stream);
+        compute + tiles as f64 * per_tile
+    }
+
+    /// Sustained GFLOPS for an n x n x n multiply on one MPSoC.
+    pub fn gflops(&self, n: usize) -> f64 {
+        let flops = 2.0 * (n as f64).powi(3);
+        flops / self.time_seconds(n) / 1e9
+    }
+
+    /// Peak GFLOPS of the datapath (1024 FLOPs/cycle).
+    pub fn peak_gflops(&self) -> f64 {
+        1024.0 * CLOCK_HZ / 1e9
+    }
+
+    /// GFLOPS per Watt against the measured dynamic power.
+    pub fn gflops_per_watt(&self, n: usize) -> f64 {
+        self.gflops(n) / DYNAMIC_POWER_W
+    }
+
+    /// QFDB-level sustained TFLOP/s (4 MPSoCs).
+    pub fn qfdb_tflops(&self, n: usize) -> f64 {
+        4.0 * self.gflops(n) / 1000.0
+    }
+
+    /// Utilisation of the ZU9EG by the kernel tile, in percent
+    /// (LUT, FF, DSP, BRAM).
+    pub fn utilisation(&self) -> (f64, f64, f64, f64) {
+        (
+            100.0 * TILE_RESOURCES.luts as f64 / ZU9EG.luts as f64,
+            100.0 * TILE_RESOURCES.ffs as f64 / ZU9EG.ffs as f64,
+            100.0 * TILE_RESOURCES.dsps as f64 / ZU9EG.dsps as f64,
+            100.0 * TILE_RESOURCES.brams as f64 / ZU9EG.brams as f64,
+        )
+    }
+
+    /// Run the real numerics for an n x n multiply through the AOT Pallas
+    /// artifact (n in {128, 256, 512}); returns the product matrix.
+    pub fn multiply_f32(&self, exec: &mut Executor, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let name = match n {
+            128 => "matmul_tile128",
+            256 => "matmul_256",
+            512 => "matmul_512",
+            other => anyhow::bail!("no matmul artifact for n={other}"),
+        };
+        let out = exec.run_f32(name, &[a, b])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_gflops_matches_paper() {
+        // paper: 275 FP32 GFLOPS per MPSoC
+        let m = MatmulAccel::default();
+        let g = m.gflops(1024);
+        assert!((g - 275.0).abs() < 8.0, "sustained {g} vs 275");
+    }
+
+    #[test]
+    fn peak_is_307() {
+        let m = MatmulAccel::default();
+        assert!((m.peak_gflops() - 307.2).abs() < 0.1);
+    }
+
+    #[test]
+    fn qfdb_exceeds_1_tflops() {
+        // paper: a single QFDB sustains more than 1 FP32 TFLOP/s
+        let m = MatmulAccel::default();
+        assert!(m.qfdb_tflops(1024) > 1.0);
+    }
+
+    #[test]
+    fn gflops_per_watt_matches_paper() {
+        // paper: 17 GFLOPS/W from 16.2 W dynamic
+        let m = MatmulAccel::default();
+        let e = m.gflops_per_watt(1024);
+        assert!((e - 17.0).abs() < 0.5, "{e} vs 17");
+    }
+
+    #[test]
+    fn utilisation_matches_paper() {
+        // paper: 56% LUTs, 55% FFs, 82% DSPs, 46% BRAMs
+        let (l, f, d, b) = MatmulAccel::default().utilisation();
+        assert!((l - 56.0).abs() < 1.0, "LUT {l}");
+        assert!((f - 55.0).abs() < 1.0, "FF {f}");
+        assert!((d - 82.0).abs() < 1.0, "DSP {d}");
+        assert!((b - 46.0).abs() < 1.0, "BRAM {b}");
+    }
+
+    #[test]
+    fn compute_bound_not_axi_bound() {
+        // the chosen tile keeps streaming under the compute time
+        let bytes = 2.0 * (TILE * TILE * 4) as f64;
+        let stream = bytes / (2.0 * AXI_PORT_BYTES_PER_SEC);
+        let compute = TILE_CYCLES as f64 / CLOCK_HZ;
+        assert!(stream < compute, "stream {stream} vs compute {compute}");
+    }
+
+    #[test]
+    fn time_scales_cubically() {
+        let m = MatmulAccel::default();
+        let t1 = m.time_seconds(256);
+        let t2 = m.time_seconds(512);
+        // sub-cubic at small n because of the constant pipeline fill
+        let ratio = t2 / t1;
+        assert!(ratio > 7.0 && ratio < 8.05, "ratio {ratio}");
+    }
+}

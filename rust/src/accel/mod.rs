@@ -1,0 +1,11 @@
+//! Hardware accelerators of the ExaNeSt prototype: the in-NI Allreduce
+//! engine (paper §4.7) and the HLS matrix-multiplication accelerator
+//! (paper §7).  Timing comes from cycle/latency models calibrated to the
+//! paper; numerics come from the AOT-compiled Pallas kernels via
+//! [`crate::runtime::Executor`].
+
+pub mod allreduce;
+pub mod matmul;
+
+pub use allreduce::{AccelAllreduce, AccelOp};
+pub use matmul::MatmulAccel;

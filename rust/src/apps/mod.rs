@@ -1,0 +1,8 @@
+//! Benchmarks and applications of the paper's evaluation (§6): the OSU
+//! microbenchmark suite and the LAMMPS/HPCG/miniFE scaling experiments.
+
+pub mod osu;
+pub mod scaling;
+
+pub use osu::{osu_allreduce, osu_bcast, osu_bibw, osu_bw, osu_latency, osu_one_way_lat, OsuPath};
+pub use scaling::{dims3, run_point, scaling_curve, AppParams, Mode, ScalePoint};

@@ -1,0 +1,350 @@
+//! Weak- and strong-scaling experiments (paper §6.2, Figs 20-22, Table 3).
+//!
+//! Each application is modelled as its dominant iteration loop: a per-rank
+//! compute phase (calibrated points x time-per-point, with the ZU9EG's
+//! single-DDR-channel contention when multiple ranks share an MPSoC —
+//! the paper's explanation for the 4-rank efficiency dip) plus the real
+//! communication pattern (3-D halo exchanges + dot-product allreduces)
+//! issued through the simulated ExaNet-MPI.  Parallel efficiency follows
+//! the paper's definition: E = speedup / N.
+
+use crate::mpi::{collectives, pt2pt, Placement, World};
+use crate::sim::SimDuration;
+use crate::topology::SystemConfig;
+
+/// Near-cubic 3-D factorization of a rank count (MPI_Dims_create-like).
+pub fn dims3(n: usize) -> (usize, usize, usize) {
+    let mut best = (n, 1, 1);
+    let mut best_score = usize::MAX;
+    for x in 1..=n {
+        if n % x != 0 {
+            continue;
+        }
+        let rem = n / x;
+        for y in 1..=rem {
+            if rem % y != 0 {
+                continue;
+            }
+            let z = rem / y;
+            // minimise surface ~ spread of dims
+            let score = x.max(y).max(z) - x.min(y).min(z);
+            if score < best_score {
+                best_score = score;
+                best = (x, y, z);
+            }
+        }
+    }
+    best
+}
+
+/// Rank coordinates in the 3-D decomposition.
+fn rank_coord(r: usize, d: (usize, usize, usize)) -> (usize, usize, usize) {
+    (r % d.0, (r / d.0) % d.1, r / (d.0 * d.1))
+}
+
+fn coord_rank(c: (usize, usize, usize), d: (usize, usize, usize)) -> usize {
+    c.0 + c.1 * d.0 + c.2 * d.0 * d.1
+}
+
+/// Application model parameters.
+#[derive(Debug, Clone)]
+pub struct AppParams {
+    pub name: &'static str,
+    /// Grid points (or atoms) per rank in the weak-scaling base problem.
+    pub weak_points_per_rank: f64,
+    /// Total points of the strong-scaling problem.
+    pub strong_points_total: f64,
+    /// Seconds of single-core compute per point per iteration.
+    pub sec_per_point: f64,
+    /// Memory-channel contention slope for weak scaling:
+    /// slowdown = 1 + mu * (colocated - 1)  (paper Fig 20a discussion).
+    pub mu_weak: f64,
+    /// Contention slope for strong scaling (smaller local working sets
+    /// are cache-friendlier).
+    pub mu_strong: f64,
+    /// Bytes exchanged per halo face per point^(2/3) unit.
+    pub halo_bytes_per_face_unit: f64,
+    /// Dot-product style allreduces per iteration (8 B each).
+    pub allreduces_per_iter: usize,
+    /// Iterations to simulate (representative sample of the run).
+    pub iters: usize,
+}
+
+impl AppParams {
+    /// LAMMPS rhodopsin (§6.2): 32 K atoms/rank weak base, 100 timesteps;
+    /// spatial decomposition with 6-neighbour halo, thermo allreduce.
+    pub fn lammps() -> AppParams {
+        AppParams {
+            name: "lammps",
+            weak_points_per_rank: 32_000.0,
+            strong_points_total: 16_384_000.0, // the 512-rank weak problem, strong-scaled
+            sec_per_point: 1.9e-7, // rhodopsin step on a 1.3 GHz A53
+            mu_weak: 0.0417,       // 96% at 2 ranks, 89% at 4 (paper)
+            mu_strong: 0.025,
+            halo_bytes_per_face_unit: 20.0, // ghost-atom positions
+            allreduces_per_iter: 1,         // thermo reduction
+            iters: 10,
+        }
+    }
+
+    /// HPCG (§6.2): 27-point stencil CG with MG; 104^3 weak base,
+    /// 256x256x128 strong base.
+    pub fn hpcg() -> AppParams {
+        AppParams {
+            name: "hpcg",
+            weak_points_per_rank: 104.0 * 104.0 * 104.0,
+            strong_points_total: 256.0 * 256.0 * 128.0,
+            sec_per_point: 1.0e-7, // 27-pt SpMV + MG V-cycle per point
+            mu_weak: 0.028,
+            mu_strong: 0.055,
+            halo_bytes_per_face_unit: 6.0, // f64 face points, MG-折 averaged
+            allreduces_per_iter: 2,        // two dots per CG iteration
+            iters: 10,
+        }
+    }
+
+    /// miniFE (§6.2): FE assembly + CG solve; 264^3 strong problem,
+    /// 400 CG iterations weak.  Strongly memory-bound on the A53.
+    pub fn minife() -> AppParams {
+        AppParams {
+            name: "minife",
+            weak_points_per_rank: 128.0 * 128.0 * 128.0,
+            strong_points_total: 264.0 * 264.0 * 264.0,
+            sec_per_point: 7.0e-8,
+            mu_weak: 0.127, // 86% at 2 ranks (paper Table 3)
+            mu_strong: 0.018,
+            halo_bytes_per_face_unit: 8.0,
+            allreduces_per_iter: 2,
+            iters: 10,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<AppParams> {
+        match name {
+            "lammps" => Some(Self::lammps()),
+            "hpcg" => Some(Self::hpcg()),
+            "minife" => Some(Self::minife()),
+            _ => None,
+        }
+    }
+}
+
+/// Result of one scaling point.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub ranks: usize,
+    /// Simulated wall time for the sampled iterations (seconds).
+    pub time_s: f64,
+    /// Fraction of wall time spent in communication.
+    pub comm_fraction: f64,
+    /// Parallel efficiency vs the 1-rank run.
+    pub efficiency: f64,
+}
+
+/// Weak or strong scaling mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Weak,
+    Strong,
+}
+
+/// Run one scaling point: `ranks` ranks of `app` in `mode`.
+/// Returns (time per iteration batch, comm fraction).
+pub fn run_point(cfg: &SystemConfig, app: &AppParams, ranks: usize, mode: Mode) -> (f64, f64) {
+    let mut world = World::new(cfg.clone(), ranks, Placement::PerCore);
+    let dims = dims3(ranks);
+    let local_points = match mode {
+        Mode::Weak => app.weak_points_per_rank,
+        Mode::Strong => app.strong_points_total / ranks as f64,
+    };
+    // Per-iteration compute, with memory-channel contention.
+    let colocated = world.colocated(0).min(ranks);
+    let mu = match mode {
+        Mode::Weak => app.mu_weak,
+        Mode::Strong => app.mu_strong,
+    };
+    let slowdown = 1.0 + mu * (colocated.saturating_sub(1)) as f64;
+    let compute_s = local_points * app.sec_per_point * slowdown;
+    let compute = SimDuration::from_secs(compute_s);
+
+    // Halo message size: 6 faces of (local_points)^(2/3) units.
+    let face_bytes = (local_points.powf(2.0 / 3.0) * app.halo_bytes_per_face_unit) as usize;
+
+    let mut comm_time = 0.0f64;
+    let start = world.max_clock();
+    for _ in 0..app.iters {
+        // compute phase on every rank
+        for c in world.clocks.iter_mut() {
+            *c += compute;
+        }
+        let comm_start = world.max_clock();
+        // halo exchange: each +1-neighbour pair swaps one face in each
+        // direction (a sendrecv per adjacent pair covers r's +face and the
+        // neighbour's -face; the -face of r is covered by the (r-1, r)
+        // pair), so one pass per dimension exchanges all six faces.
+        for dim in 0..3 {
+            let d = [dims.0, dims.1, dims.2][dim];
+            if d == 1 {
+                continue;
+            }
+            for r in 0..ranks {
+                let c = rank_coord(r, dims);
+                let mut nc = c;
+                match dim {
+                    0 => nc.0 = (c.0 + 1) % d,
+                    1 => nc.1 = (c.1 + 1) % d,
+                    _ => nc.2 = (c.2 + 1) % d,
+                }
+                let n = coord_rank(nc, dims);
+                if r != n && (r < n || d > 2) {
+                    pt2pt::sendrecv_exchange(&mut world, r, n, face_bytes);
+                }
+            }
+        }
+        // dot-product allreduces
+        for _ in 0..app.allreduces_per_iter {
+            if ranks > 1 && ranks.is_power_of_two() {
+                collectives::allreduce(&mut world, 8);
+            }
+        }
+        comm_time += (world.max_clock() - comm_start).secs();
+        world.sync_clocks();
+    }
+    let total = (world.max_clock() - start).secs();
+    (total, comm_time / total)
+}
+
+/// Full weak/strong scaling sweep over rank counts.
+pub fn scaling_curve(cfg: &SystemConfig, app: &AppParams, mode: Mode, rank_counts: &[usize]) -> Vec<ScalePoint> {
+    // single-rank reference
+    let (t1, _) = run_point(cfg, app, 1, mode);
+    rank_counts
+        .iter()
+        .map(|&n| {
+            let (tn, compf) = run_point(cfg, app, n, mode);
+            let eff = match mode {
+                // weak: perfect scaling keeps tn == t1
+                Mode::Weak => t1 / tn,
+                // strong: perfect scaling gives tn == t1 / n
+                Mode::Strong => t1 / (n as f64 * tn),
+            };
+            ScalePoint { ranks: n, time_s: tn, comm_fraction: compf, efficiency: eff }
+        })
+        .collect()
+}
+
+/// The rank counts of the paper's scaling figures.
+pub const RANKS: [usize; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::prototype()
+    }
+
+    #[test]
+    fn dims3_factorizations() {
+        assert_eq!(dims3(8), (2, 2, 2));
+        assert_eq!(dims3(64), (4, 4, 4));
+        let d = dims3(512);
+        assert_eq!(d.0 * d.1 * d.2, 512);
+        assert!(d.0.max(d.1).max(d.2) <= 16);
+        assert_eq!(dims3(1), (1, 1, 1));
+        let d2 = dims3(2);
+        assert_eq!(d2.0 * d2.1 * d2.2, 2);
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let d = dims3(64);
+        for r in 0..64 {
+            assert_eq!(coord_rank(rank_coord(r, d), d), r);
+        }
+    }
+
+    fn corners(app: AppParams) -> (f64, f64, f64, f64) {
+        let c = cfg();
+        let w = scaling_curve(&c, &app, Mode::Weak, &[2, 512]);
+        let s = scaling_curve(&c, &app, Mode::Strong, &[2, 512]);
+        (
+            w[0].efficiency,
+            w[1].efficiency,
+            s[0].efficiency,
+            s[1].efficiency,
+        )
+    }
+
+    #[test]
+    fn lammps_table3_corners() {
+        // paper Table 3: weak 96%/69%, strong 97%/82%
+        let (w2, w512, s2, s512) = corners(AppParams::lammps());
+        assert!((w2 - 0.96).abs() < 0.06, "weak@2 {w2}");
+        assert!((w512 - 0.69).abs() < 0.09, "weak@512 {w512}");
+        assert!((s2 - 0.97).abs() < 0.06, "strong@2 {s2}");
+        assert!((s512 - 0.82).abs() < 0.09, "strong@512 {s512}");
+    }
+
+    #[test]
+    fn hpcg_table3_corners() {
+        // paper Table 3: weak 96%/87%, strong 92%/70%
+        let (w2, w512, s2, s512) = corners(AppParams::hpcg());
+        assert!((w2 - 0.96).abs() < 0.06, "weak@2 {w2}");
+        assert!((w512 - 0.87).abs() < 0.08, "weak@512 {w512}");
+        assert!((s2 - 0.92).abs() < 0.07, "strong@2 {s2}");
+        assert!((s512 - 0.70).abs() < 0.09, "strong@512 {s512}");
+    }
+
+    #[test]
+    fn minife_table3_corners() {
+        // paper Table 3: weak 86%/69%, strong 94%/72%
+        let (w2, w512, s2, s512) = corners(AppParams::minife());
+        assert!((w2 - 0.86).abs() < 0.07, "weak@2 {w2}");
+        assert!((w512 - 0.69).abs() < 0.09, "weak@512 {w512}");
+        assert!((s2 - 0.94).abs() < 0.06, "strong@2 {s2}");
+        assert!((s512 - 0.72).abs() < 0.09, "strong@512 {s512}");
+    }
+
+    #[test]
+    fn efficiency_declines_with_ranks() {
+        let c = cfg();
+        for app in [AppParams::lammps(), AppParams::hpcg(), AppParams::minife()] {
+            let pts = scaling_curve(&c, &app, Mode::Weak, &[2, 16, 128, 512]);
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].efficiency <= w[0].efficiency + 0.02,
+                    "{}: efficiency not declining: {:?}",
+                    app.name,
+                    pts.iter().map(|p| p.efficiency).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_efficiencies_at_least_paper_floor() {
+        // paper abstract: parallelization efficiency at least 69%
+        let c = cfg();
+        for app in [AppParams::lammps(), AppParams::hpcg(), AppParams::minife()] {
+            for mode in [Mode::Weak, Mode::Strong] {
+                let pts = scaling_curve(&c, &app, mode, &[512]);
+                assert!(
+                    pts[0].efficiency >= 0.62,
+                    "{} {:?} 512 ranks: {}",
+                    app.name,
+                    mode,
+                    pts[0].efficiency
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn comm_fraction_grows_with_ranks() {
+        let c = cfg();
+        let app = AppParams::minife();
+        let pts = scaling_curve(&c, &app, Mode::Weak, &[4, 512]);
+        assert!(pts[1].comm_fraction > pts[0].comm_fraction);
+    }
+}

@@ -1,0 +1,92 @@
+//! Minimal benchmarking harness for `cargo bench` (the offline vendor set
+//! has no criterion; this provides the same warm-up / sample / report
+//! loop with mean, stddev and min).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run a benchmark: warm up, then `samples` timed batches of enough
+/// iterations to exceed ~20 ms each; prints a criterion-like line.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    // warm-up + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = (0.02 / once).clamp(1.0, 1e6) as usize;
+    let samples_n = 10;
+    let mut samples = Vec::with_capacity(samples_n);
+    for _ in 0..samples_n {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    let m = Measurement { name: name.to_string(), samples };
+    println!(
+        "bench {:<44} mean {:>12}  min {:>12}  (+/- {:>10}, {} iters x {} samples)",
+        m.name,
+        fmt_secs(m.mean()),
+        fmt_secs(m.min()),
+        fmt_secs(m.stddev()),
+        iters,
+        samples_n
+    );
+    m
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let m = bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(m.samples.len(), 10);
+        assert!(m.mean() >= 0.0);
+        assert!(m.min() <= m.mean() + 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! The IP-over-ExaNet converged-network service (paper §5.3 / Figs 12-13).
+//!
+//! A user-space program tunnels IP packets between the Linux kernel (TUN
+//! interface, read()/write() system calls) and the ExaNet fabric: packets
+//! are batched into RDMA transfers between pre-allocated rings, with the
+//! RDMA completion notification used for transmitter/receiver
+//! synchronisation.  The baseline is the 10 GbE management network, where
+//! every packet crosses the kernel network stack individually.
+//!
+//! Reproduced results (paper §5.3): for large UDP the overlay reaches
+//! 4.7 Gb/s vs 1.3 Gb/s on the baseline; polling RTT ~90 us vs 72 us
+//! baseline; adaptive-sleep RTT ~2.2 ms.
+
+pub mod overlay;
+
+pub use overlay::{iperf, rtt, IpMode, Scenario, TunnelConfig};

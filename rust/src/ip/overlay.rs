@@ -1,0 +1,219 @@
+//! Flow model of the IP tunnel and its 10 GbE baseline.
+//!
+//! The overlay's throughput is CPU-bound on the A53 (TUN read/write
+//! syscalls per packet) until the batched-RDMA leg over ExaNet saturates;
+//! the baseline is bound by the per-packet kernel network stack.  The
+//! RDMA leg is timed against the simulated fabric, so multi-hop paths and
+//! link sharing behave like every other experiment.
+
+use crate::mpi::{Placement, World};
+use crate::ni::{rdma, Pacing};
+use crate::sim::SimTime;
+
+/// Traffic scenarios of Fig. 13.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// TCP stream (kernel segmentation, MTU-sized frames on the wire).
+    TcpStream,
+    /// Small UDP datagrams (64 B).
+    UdpSmall,
+    /// Large UDP datagrams (MTU-sized, 1470 B payload).
+    UdpLarge,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 3] = [Scenario::TcpStream, Scenario::UdpSmall, Scenario::UdpLarge];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::TcpStream => "TCP stream",
+            Scenario::UdpSmall => "UDP 64B",
+            Scenario::UdpLarge => "UDP 1470B",
+        }
+    }
+
+    /// IP packet size on the wire.
+    pub fn packet_bytes(&self) -> usize {
+        match self {
+            Scenario::TcpStream => 1500,
+            Scenario::UdpSmall => 64,
+            Scenario::UdpLarge => 1512,
+        }
+    }
+}
+
+/// Transport under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IpMode {
+    /// IP-over-ExaNet converged service (polling).
+    Overlay,
+    /// The 10 GbE management network.
+    Baseline,
+}
+
+/// Tunnel cost parameters (A53 userspace + kernel costs).
+#[derive(Debug, Clone)]
+pub struct TunnelConfig {
+    /// TUN read()/write() + ring bookkeeping per packet (overlay).
+    pub overlay_per_packet_us: f64,
+    /// Kernel network stack per packet (baseline 10 GbE).
+    pub baseline_per_packet_us: f64,
+    /// TCP's segmentation-offload style batching advantage factor.
+    pub tcp_stack_discount: f64,
+    /// Ring slot size: packets are packed into RDMA transfers of this size.
+    pub ring_bytes: usize,
+    /// Polling-mode tunnel RTT overhead (us) on top of the fabric.
+    pub poll_overhead_us: f64,
+    /// Adaptive-sleep period (us); RTT ~ one sleep each way.
+    pub sleep_period_us: f64,
+}
+
+impl Default for TunnelConfig {
+    fn default() -> Self {
+        TunnelConfig {
+            overlay_per_packet_us: 2.5,
+            baseline_per_packet_us: 9.2,
+            tcp_stack_discount: 0.65,
+            ring_bytes: 64 * 1024,
+            poll_overhead_us: 35.0,
+            sleep_period_us: 1080.0,
+        }
+    }
+}
+
+/// iperf3-style throughput (Gb/s of IP payload) between two nodes at a
+/// network distance of `hops` torus hops (paper used 5).
+pub fn iperf(cfg: &TunnelConfig, scenario: Scenario, mode: IpMode, hops: usize) -> f64 {
+    let pkt = scenario.packet_bytes();
+    match mode {
+        IpMode::Baseline => {
+            // per-packet kernel stack on both ends; 10 GbE wire under it
+            let mut per_pkt = cfg.baseline_per_packet_us;
+            if scenario == Scenario::TcpStream {
+                per_pkt *= cfg.tcp_stack_discount;
+            }
+            let cpu_gbps = pkt as f64 * 8.0 / (per_pkt * 1000.0);
+            cpu_gbps.min(9.4) // line rate minus Ethernet framing
+        }
+        IpMode::Overlay => {
+            // CPU leg: one TUN crossing per packet
+            let mut per_pkt = cfg.overlay_per_packet_us;
+            if scenario == Scenario::TcpStream {
+                per_pkt *= 0.9; // stream batches slightly better in the ring
+            }
+            let cpu_gbps = pkt as f64 * 8.0 / (per_pkt * 1000.0);
+            // RDMA leg: ring-sized batches across the simulated fabric
+            let rdma_gbps = rdma_leg_gbps(cfg.ring_bytes, hops);
+            cpu_gbps.min(rdma_gbps)
+        }
+    }
+}
+
+/// Throughput of ring-buffer RDMA batches over a path of `hops` torus hops,
+/// measured on the simulated fabric.
+fn rdma_leg_gbps(ring_bytes: usize, hops: usize) -> f64 {
+    let cfgsys = crate::topology::SystemConfig::prototype();
+    let world = World::new(cfgsys, 128, Placement::PerMpsoc);
+    let mut fab = world.fabric;
+    // pick two F1 endpoints `hops` apart on the torus
+    let a = fab.topo.network_mpsoc(crate::topology::QfdbId(0));
+    let mut b = a;
+    for q in 1..fab.cfg().num_qfdbs() as u32 {
+        let cand = fab.topo.network_mpsoc(crate::topology::QfdbId(q));
+        if fab.topo.qfdb_distance(fab.topo.qfdb_of(a), crate::topology::QfdbId(q)) == hops {
+            b = cand;
+            break;
+        }
+    }
+    let path = fab.route(a, b);
+    let mut t = SimTime::ZERO;
+    let n = 16;
+    let mut last = SimTime::ZERO;
+    for _ in 0..n {
+        // multiple rings are outstanding: the next transfer starts as soon
+        // as the injection link frees, like the real tunnel's ring buffer
+        let c = rdma::rdma_write(&mut fab, &path, t, ring_bytes, Pacing::Pipelined);
+        t = c.src_free;
+        last = c.data_arrival;
+    }
+    (n * ring_bytes) as f64 * 8.0 / last.ns()
+}
+
+/// Average ping RTT in microseconds.
+pub fn rtt(cfg: &TunnelConfig, mode: IpMode, adaptive_sleep: bool, hops: usize) -> f64 {
+    match mode {
+        IpMode::Baseline => 72.0 * (1.0 + 0.02 * (hops as f64 - 5.0)),
+        IpMode::Overlay => {
+            // one tunnel crossing each way over the fabric small-cell path
+            let fabric_oneway = {
+                let cfgsys = crate::topology::SystemConfig::prototype();
+                let world = World::new(cfgsys, 128, Placement::PerMpsoc);
+                let mut fab = world.fabric;
+                let a = fab.topo.network_mpsoc(crate::topology::QfdbId(0));
+                let b = fab
+                    .topo
+                    .network_mpsoc(crate::topology::QfdbId(hops.min(3) as u32));
+                let p = fab.route(a, b);
+                fab.small_cell(&p, SimTime::ZERO, 64).us()
+            };
+            if adaptive_sleep {
+                2.0 * cfg.sleep_period_us + 2.0 * fabric_oneway
+            } else {
+                2.0 * (cfg.poll_overhead_us + cfg.overlay_per_packet_us * 2.0) + 2.0 * fabric_oneway
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TunnelConfig {
+        TunnelConfig::default()
+    }
+
+    #[test]
+    fn udp_large_matches_paper() {
+        // paper: 4.7 Gb/s overlay vs 1.3 Gb/s baseline
+        let o = iperf(&cfg(), Scenario::UdpLarge, IpMode::Overlay, 5);
+        let b = iperf(&cfg(), Scenario::UdpLarge, IpMode::Baseline, 5);
+        assert!((o - 4.7).abs() < 0.4, "overlay {o}");
+        assert!((b - 1.3).abs() < 0.15, "baseline {b}");
+    }
+
+    #[test]
+    fn overlay_wins_every_scenario() {
+        // paper: "the converged network service consistently offers better
+        // throughput"
+        for s in Scenario::ALL {
+            let o = iperf(&cfg(), s, IpMode::Overlay, 5);
+            let b = iperf(&cfg(), s, IpMode::Baseline, 5);
+            assert!(o > b, "{}: overlay {o} vs baseline {b}", s.label());
+        }
+    }
+
+    #[test]
+    fn rtt_matches_paper() {
+        // paper: polling 90 us vs baseline 72 us; adaptive sleep ~2.2 ms
+        let poll = rtt(&cfg(), IpMode::Overlay, false, 5);
+        let base = rtt(&cfg(), IpMode::Baseline, false, 5);
+        let sleep = rtt(&cfg(), IpMode::Overlay, true, 5);
+        assert!((poll - 90.0).abs() < 10.0, "poll {poll}");
+        assert!((base - 72.0).abs() < 3.0, "base {base}");
+        assert!((sleep - 2200.0).abs() < 200.0, "sleep {sleep}");
+        assert!(poll > base, "polling overlay is slower than raw 10GbE RTT");
+    }
+
+    #[test]
+    fn small_udp_is_cpu_bound() {
+        let o = iperf(&cfg(), Scenario::UdpSmall, IpMode::Overlay, 5);
+        assert!(o < 1.0, "64B packets can't beat per-packet CPU cost: {o}");
+    }
+
+    #[test]
+    fn rdma_leg_does_not_exceed_torus_capacity() {
+        let o = iperf(&cfg(), Scenario::UdpLarge, IpMode::Overlay, 1);
+        assert!(o < 6.8, "overlay {o} exceeds the 6.42 Gb/s torus ceiling");
+    }
+}

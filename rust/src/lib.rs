@@ -1,0 +1,48 @@
+//! # exanest — a reproduction of the ExaNeSt prototype
+//!
+//! This library rebuilds, in simulation, the system of *"The ExaNeSt
+//! Prototype: Evaluation of Efficient HPC Communication Hardware in an
+//! ARM-based Multi-FPGA Rack"* (FORTH-ICS / TR-488, 2023): the ExaNet
+//! interconnect (cells, links, torus routers), the lean Network Interface
+//! (packetizer/mailbox, RDMA engine with R5 firmware and SMMU-backed
+//! translation), the ExaNet-MPI runtime (eager + rendez-vous point-to-point
+//! and MPICH-style collectives), the Allreduce and matrix-multiplication
+//! accelerators, the IP-over-ExaNet converged service, and the
+//! application-level scaling experiments (LAMMPS, HPCG, miniFE).
+//!
+//! The compute hot-spots (the accelerator datapaths and the CG kernels of
+//! HPCG/miniFE) are Pallas kernels compiled ahead-of-time to HLO-text
+//! artifacts by the Python layer in `python/compile`; the
+//! [`runtime`] module loads them via PJRT so that the simulated
+//! experiments produce *real numerics* while the timing comes from the
+//! calibrated discrete-event/flow model (see DESIGN.md).
+//!
+//! Layering (bottom-up):
+//! * [`sim`] — deterministic event queue, resources, RNG, statistics;
+//! * [`topology`] — GVAS addressing, QFDB/torus structure, Table-1 paths;
+//! * [`network`] — cells + the occupancy-tracked fabric;
+//! * [`ni`] — packetizer, mailbox, RDMA, SMMU, reliable transport;
+//! * [`mpi`] — the ExaNet-MPI runtime (pt2pt + collectives);
+//! * [`accel`] — the Allreduce and matmul accelerators;
+//! * [`apps`] — OSU microbenchmarks + LAMMPS/HPCG/miniFE skeletons;
+//! * [`ip`] — the IP-over-ExaNet converged-network service;
+//! * [`model`] — the paper's Eq. 1 analytic broadcast model;
+//! * [`power`] — QFDB power + energy-efficiency model;
+//! * [`runtime`] — PJRT loader/executor for the AOT artifacts;
+//! * [`report`] — table formatting for the reproduced figures;
+//! * [`bench`] — the no-deps micro-benchmark harness used by `cargo bench`.
+
+pub mod accel;
+pub mod apps;
+pub mod bench;
+pub mod ip;
+pub mod model;
+pub mod mpi;
+pub mod network;
+pub mod ni;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod topology;

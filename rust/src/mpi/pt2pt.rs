@@ -1,0 +1,242 @@
+//! ExaNet-MPI point-to-point: the eager (packetizer/mailbox) and
+//! rendez-vous (RTS/CTS + RDMA write + completion notification) protocols
+//! of paper §5.2.1 / Fig. 11.
+
+use super::world::World;
+use crate::ni::{packetizer, rdma, Pacing};
+use crate::sim::SimTime;
+
+/// Which protocol a message size takes (paper: > 32 B goes rendez-vous).
+pub fn protocol_for(world: &World, bytes: usize) -> Protocol {
+    if bytes <= world.fabric.calib().eager_max_bytes {
+        Protocol::Eager
+    } else {
+        Protocol::Rendezvous
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    Eager,
+    Rendezvous,
+}
+
+/// Completion times of one message.
+#[derive(Debug, Clone, Copy)]
+pub struct SendRecv {
+    /// Sender's MPI_Send return time.
+    pub send_done: SimTime,
+    /// Receiver's MPI_Recv return time.
+    pub recv_done: SimTime,
+}
+
+/// Blocking send/recv of `bytes` from `src` to `dst` rank, with the
+/// receive posted at the receiver's current clock.  Advances both clocks.
+pub fn send_recv(world: &mut World, src: usize, dst: usize, bytes: usize) -> SendRecv {
+    let t_send = world.clocks[src];
+    let t_recv = world.clocks[dst];
+    let r = message(world, src, dst, bytes, t_send, t_recv);
+    world.clocks[src] = r.send_done;
+    world.clocks[dst] = r.recv_done;
+    r
+}
+
+/// Timed message with explicit start times (collective schedules use this
+/// to express concurrency).  Does not touch the world clocks.
+pub fn message(world: &mut World, src: usize, dst: usize, bytes: usize, t_send: SimTime, t_recv: SimTime) -> SendRecv {
+    let calib = world.fabric.calib().clone();
+    let a = world.node_of(src);
+    let b = world.node_of(dst);
+    let fwd = world.fabric.route_cached(a, b);
+
+    match protocol_for(world, bytes) {
+        Protocol::Eager => {
+            // Sender: bookkeeping + hand payload to the packetizer.
+            let hw_start = t_send + calib.mpi_sw;
+            let arrival = packetizer::send_small(&mut world.fabric, &fwd, hw_start, bytes);
+            let send_done = hw_start + calib.ps_pl_copy; // CPU free after the store
+            // Receiver: poll sees the message, then match + copy-out.
+            let recv_done = arrival.max(t_recv) + calib.mpi_sw;
+            SendRecv { send_done, recv_done }
+        }
+        Protocol::Rendezvous => {
+            let back = world.fabric.route_cached(b, a);
+            // RTS: control message through packetizer -> mailbox.
+            let rts_start = t_send + calib.mpi_sw;
+            let rts_arrival = packetizer::send_small(&mut world.fabric, &fwd, rts_start, 32);
+            // Receiver matches once posted, builds CTS with rbuf+notif VAs.
+            let cts_start = rts_arrival.max(t_recv + calib.mpi_sw) + calib.cts_sw;
+            let cts_arrival = packetizer::send_small(&mut world.fabric, &back, cts_start, 32);
+            // Sender's RDMA engine moves the payload; notification is
+            // delivered in parallel with the data (paper Fig. 11 step 3).
+            let c = rdma::rdma_write(&mut world.fabric, &fwd, cts_arrival, bytes, Pacing::Sequential);
+            // Sender may reuse sbuf after its engine is done (the final
+            // E2E ACK of step 4 is overlapped with the next operation).
+            let send_done = c.src_done;
+            // Receiver polls notif-addr, then finishes MPI bookkeeping.
+            let recv_done = c.notif_visible.max(t_recv) + calib.mpi_sw;
+            SendRecv { send_done, recv_done }
+        }
+    }
+}
+
+/// Non-blocking window send (osu_bw): issue `count` back-to-back messages
+/// and return when the last byte of the last message lands.
+pub fn windowed_bw(world: &mut World, src: usize, dst: usize, bytes: usize, count: usize) -> SimTime {
+    let calib = world.fabric.calib().clone();
+    let a = world.node_of(src);
+    let b = world.node_of(dst);
+    let fwd = world.fabric.route_cached(a, b);
+    let mut t = world.clocks[src];
+    let mut last = SimTime::ZERO;
+    if protocol_for(world, bytes) == Protocol::Eager {
+        for _ in 0..count {
+            let hw_start = t + calib.mpi_sw;
+            let arr = packetizer::send_small(&mut world.fabric, &fwd, hw_start, bytes);
+            t = hw_start + calib.ps_pl_copy;
+            last = arr;
+        }
+        world.clocks[src] = t;
+        return last;
+    }
+    // Rendez-vous handshakes for the whole window overlap; the data moves
+    // as pipelined RDMA transfers.
+    let back = world.fabric.route_cached(b, a);
+    let rts_start = t + calib.mpi_sw;
+    let rts_arrival = packetizer::send_small(&mut world.fabric, &fwd, rts_start, 32);
+    let cts_arrival = packetizer::send_small(
+        &mut world.fabric,
+        &back,
+        rts_arrival + calib.cts_sw,
+        32,
+    );
+    let mut start = cts_arrival;
+    for _ in 0..count {
+        let c = rdma::rdma_write(&mut world.fabric, &fwd, start, bytes, Pacing::Pipelined);
+        start = c.src_free; // next descriptor as soon as the engine frees
+        last = c.data_arrival;
+    }
+    world.clocks[src] = last;
+    last
+}
+
+/// MPI_Sendrecv between `a` and `b` (one recursive-doubling step): both
+/// directions proceed concurrently; each side's CPU serializes its own
+/// send-side and receive-side processing.
+pub fn sendrecv_exchange(world: &mut World, a: usize, b: usize, bytes: usize) -> (SimTime, SimTime) {
+    let calib = world.fabric.calib().clone();
+    let ta = world.clocks[a];
+    let tb = world.clocks[b];
+    // The in-order A53 serializes each rank's own send-side and
+    // receive-side processing: the receive path starts only after the send
+    // has been handed to the NI.
+    let recv_ready_a = ta + calib.mpi_sw + calib.ps_pl_copy;
+    let recv_ready_b = tb + calib.mpi_sw + calib.ps_pl_copy;
+    let ab = message(world, a, b, bytes, ta, recv_ready_b);
+    let ba = message(world, b, a, bytes, tb, recv_ready_a);
+    // Each rank completes when both its send and its receive are done.
+    let done_a = ab.send_done.max(ba.recv_done);
+    let done_b = ba.send_done.max(ab.recv_done);
+    world.clocks[a] = done_a;
+    world.clocks[b] = done_b;
+    (done_a, done_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::world::Placement;
+    use crate::topology::SystemConfig;
+
+    fn world(n: usize) -> World {
+        World::new(SystemConfig::prototype(), n, Placement::PerCore)
+    }
+
+    #[test]
+    fn eager_intra_fpga_matches_paper() {
+        // Two ranks on the same MPSoC: paper 1.17 us for 0 B.
+        let mut w = world(2);
+        let r = send_recv(&mut w, 0, 1, 0);
+        let us = r.recv_done.us();
+        assert!((us - 1.17).abs() < 0.05, "intra-FPGA eager {us} vs 1.17");
+    }
+
+    #[test]
+    fn eager_intra_qfdb_matches_paper() {
+        // Ranks on adjacent MPSoCs of one QFDB: paper 1.293 us for 0 B.
+        let mut w = world(8);
+        let r = send_recv(&mut w, 0, 4, 0);
+        let us = r.recv_done.us();
+        assert!((us - 1.293).abs() / 1.293 < 0.03, "intra-QFDB eager {us} vs 1.293");
+    }
+
+    #[test]
+    fn eager_intra_mezz_matches_paper() {
+        // F1-to-F1 of adjacent QFDBs: paper 1.579 us for 0 B.
+        let mut w = World::new(SystemConfig::prototype(), 8, Placement::PerMpsoc);
+        let r = send_recv(&mut w, 0, 4, 0);
+        let us = r.recv_done.us();
+        assert!((us - 1.579).abs() / 1.579 < 0.04, "intra-mezz eager {us} vs 1.579");
+    }
+
+    #[test]
+    fn rendezvous_64b_matches_paper() {
+        // 64 B intra-QFDB: paper 5.157 us.
+        let mut w = world(8);
+        let r = send_recv(&mut w, 0, 4, 64);
+        let us = r.recv_done.us();
+        assert!((us - 5.157).abs() / 5.157 < 0.08, "rendezvous 64B {us} vs 5.157");
+    }
+
+    #[test]
+    fn rendezvous_4mb_matches_paper() {
+        // 4 MB intra-QFDB: paper 2689.4 us.
+        let mut w = world(8);
+        let r = send_recv(&mut w, 0, 4, 4 * 1024 * 1024);
+        let us = r.recv_done.us();
+        assert!((us - 2689.4).abs() / 2689.4 < 0.03, "4MB {us} vs 2689.4");
+    }
+
+    #[test]
+    fn eager_boundary() {
+        let w = world(2);
+        assert_eq!(protocol_for(&w, 32), Protocol::Eager);
+        assert_eq!(protocol_for(&w, 33), Protocol::Rendezvous);
+    }
+
+    #[test]
+    fn windowed_bw_hits_13gbps_intra_qfdb() {
+        let mut w = world(8);
+        let bytes = 4 * 1024 * 1024;
+        let n = 8;
+        let last = windowed_bw(&mut w, 0, 4, bytes, n);
+        let gbps = (n * bytes) as f64 * 8.0 / last.ns();
+        assert!((gbps - 13.0).abs() < 0.5, "osu_bw {gbps} vs 13");
+    }
+
+    #[test]
+    fn latency_monotone_in_hops() {
+        // eager 0 B latency must increase with path length
+        let mut w = World::new(SystemConfig::prototype(), 128, Placement::PerMpsoc);
+        let mut prev = 0.0;
+        // same-QFDB, 1 torus hop, 2 torus hops, 3 torus hops
+        for dst in [1usize, 4, 20, 24] {
+            let r = send_recv(&mut w, 0, dst, 0);
+            let us = r.recv_done.us() - w.clocks[0].us().min(r.recv_done.us());
+            let lat = r.recv_done.us();
+            assert!(lat > prev, "latency not monotone at dst {dst}");
+            prev = lat;
+            w.reset();
+            let _ = us;
+        }
+    }
+
+    #[test]
+    fn sendrecv_advances_both() {
+        let mut w = world(8);
+        let (da, db) = sendrecv_exchange(&mut w, 0, 4, 16);
+        assert!(da > SimTime::ZERO && db > SimTime::ZERO);
+        assert_eq!(w.clocks[0], da);
+        assert_eq!(w.clocks[4], db);
+    }
+}

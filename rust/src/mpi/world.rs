@@ -1,0 +1,135 @@
+//! The simulated MPI world: rank placement and per-rank clocks.
+//!
+//! Ranks are modelled LogGOPSim-style: each rank carries a local clock
+//! that the point-to-point and collective operations advance; shared
+//! devices (links, AXI channels, R5) are occupancy-tracked in the
+//! [`Fabric`], so contention between concurrent ranks emerges naturally.
+
+use crate::network::Fabric;
+use crate::sim::SimTime;
+use crate::topology::{MpsocId, SystemConfig};
+
+/// How ranks map onto the machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Fill all four A53 cores of an MPSoC before moving to the next
+    /// (application runs; also the OSU collective runs, where the paper's
+    /// 4-rank setups share one MPSoC).
+    PerCore,
+    /// One rank per MPSoC (the Allreduce-accelerator constraint, §4.7).
+    PerMpsoc,
+}
+
+/// The simulated communicator world.
+pub struct World {
+    pub fabric: Fabric,
+    pub placement: Placement,
+    /// Per-rank local completion clocks.
+    pub clocks: Vec<SimTime>,
+}
+
+impl World {
+    pub fn new(cfg: SystemConfig, nranks: usize, placement: Placement) -> World {
+        let fabric = Fabric::new(cfg);
+        let cap = match placement {
+            Placement::PerCore => fabric.cfg().num_cores(),
+            Placement::PerMpsoc => fabric.cfg().num_mpsocs(),
+        };
+        assert!(
+            nranks <= cap,
+            "{nranks} ranks exceed capacity {cap} for {placement:?}"
+        );
+        World {
+            fabric,
+            placement,
+            clocks: vec![SimTime::ZERO; nranks],
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// The MPSoC hosting a rank.
+    pub fn node_of(&self, rank: usize) -> MpsocId {
+        match self.placement {
+            Placement::PerCore => {
+                MpsocId((rank / self.fabric.cfg().cores_per_fpga) as u32)
+            }
+            Placement::PerMpsoc => MpsocId(rank as u32),
+        }
+    }
+
+    /// Ranks co-located on the same MPSoC as `rank` (including itself).
+    pub fn colocated(&self, rank: usize) -> usize {
+        let node = self.node_of(rank);
+        (0..self.nranks()).filter(|&r| self.node_of(r) == node).count()
+    }
+
+    /// Reset clocks + fabric occupancy (fresh iteration batch).
+    pub fn reset(&mut self) {
+        self.fabric.reset();
+        for c in &mut self.clocks {
+            *c = SimTime::ZERO;
+        }
+    }
+
+    /// Synchronise all clocks to the max (an idealised barrier used by the
+    /// OSU harness between iterations; the real dissemination barrier is
+    /// in `collectives`).
+    pub fn sync_clocks(&mut self) {
+        let m = self.clocks.iter().copied().max().unwrap_or(SimTime::ZERO);
+        for c in &mut self.clocks {
+            *c = m;
+        }
+    }
+
+    /// Max clock (completion time of the last rank).
+    pub fn max_clock(&self) -> SimTime {
+        self.clocks.iter().copied().max().unwrap_or(SimTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_core_placement_packs_mpsocs() {
+        let w = World::new(SystemConfig::prototype(), 8, Placement::PerCore);
+        assert_eq!(w.node_of(0), w.node_of(3));
+        assert_ne!(w.node_of(3), w.node_of(4));
+        assert_eq!(w.colocated(0), 4);
+    }
+
+    #[test]
+    fn per_mpsoc_placement() {
+        let w = World::new(SystemConfig::prototype(), 16, Placement::PerMpsoc);
+        assert_ne!(w.node_of(0), w.node_of(1));
+        assert_eq!(w.colocated(5), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed capacity")]
+    fn capacity_enforced() {
+        World::new(SystemConfig::mezzanine(), 65, Placement::PerCore);
+    }
+
+    #[test]
+    fn full_prototype_capacity() {
+        let w = World::new(SystemConfig::prototype(), 512, Placement::PerCore);
+        assert_eq!(w.nranks(), 512);
+        // rank 511 lives on the last MPSoC
+        assert_eq!(w.node_of(511), MpsocId(127));
+    }
+
+    #[test]
+    fn sync_and_reset() {
+        let mut w = World::new(SystemConfig::mezzanine(), 4, Placement::PerCore);
+        w.clocks[2] = SimTime::from_us(5.0);
+        w.sync_clocks();
+        assert_eq!(w.clocks[0], SimTime::from_us(5.0));
+        w.reset();
+        assert_eq!(w.max_clock(), SimTime::ZERO);
+    }
+}

@@ -1,0 +1,118 @@
+//! ExaNet network cells (paper §4.2).
+//!
+//! Every cell carries up to 256 bytes of payload in 128-bit words plus
+//! 32 bytes of control (16 B header + 16 B footer) used by the transport,
+//! routing and link-level protocols — a 16/18 framing efficiency.
+
+use crate::topology::{Gvas, MpsocId};
+
+/// Maximum cell payload in bytes.
+pub const CELL_PAYLOAD: usize = 256;
+/// Control overhead per cell in bytes (header + footer).
+pub const CELL_OVERHEAD: usize = 32;
+/// ExaNet word size (128 bits).
+pub const WORD_BYTES: usize = 16;
+
+/// Transport-level cell kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// Packetizer small-message cell (one per message).
+    Small,
+    /// RDMA payload cell (one of a block).
+    RdmaData,
+    /// RDMA read request (packetizer -> remote RDMA mailbox).
+    RdmaReadReq,
+    /// Positive end-to-end acknowledgement.
+    Ack,
+    /// Negative acknowledgement (PDID mismatch, mailbox full, error,
+    /// page fault at the receiver).
+    Nack(NackReason),
+    /// Completion-notification write.
+    Notification,
+}
+
+/// Why a NACK was generated (paper §4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NackReason {
+    PdidMismatch,
+    MailboxFull,
+    PacketError,
+    PageFault,
+}
+
+/// A network cell in flight.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub kind: CellKind,
+    /// Source endpoint (for ACK/NACK routing).
+    pub src: MpsocId,
+    /// Destination GVAS address (routes the cell; §4.3).
+    pub dst: Gvas,
+    /// Payload bytes carried (<= CELL_PAYLOAD).
+    pub payload: usize,
+    /// Transfer/transaction tag (channel id, block seq).
+    pub tag: u64,
+}
+
+impl Cell {
+    /// Bytes on the wire including framing.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.payload + CELL_OVERHEAD) as u64
+    }
+}
+
+/// Split a payload into per-cell sizes.
+pub fn cell_sizes(bytes: usize) -> Vec<usize> {
+    if bytes == 0 {
+        return vec![0];
+    }
+    let full = bytes / CELL_PAYLOAD;
+    let rem = bytes % CELL_PAYLOAD;
+    let mut v = vec![CELL_PAYLOAD; full];
+    if rem > 0 {
+        v.push(rem);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Gvas;
+
+    #[test]
+    fn framing() {
+        let c = Cell {
+            kind: CellKind::Small,
+            src: MpsocId(0),
+            dst: Gvas::new(0, 1, 0, 0).unwrap(),
+            payload: 256,
+            tag: 0,
+        };
+        assert_eq!(c.wire_bytes(), 288);
+        // 16/18 efficiency
+        assert!((256.0_f64 / 288.0 - 16.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_exact() {
+        assert_eq!(cell_sizes(512), vec![256, 256]);
+    }
+
+    #[test]
+    fn split_remainder() {
+        assert_eq!(cell_sizes(300), vec![256, 44]);
+    }
+
+    #[test]
+    fn split_small_and_empty() {
+        assert_eq!(cell_sizes(1), vec![1]);
+        assert_eq!(cell_sizes(0), vec![0]); // control-only cell
+    }
+
+    #[test]
+    fn payload_is_word_aligned_capacity() {
+        assert_eq!(CELL_PAYLOAD % WORD_BYTES, 0);
+        assert_eq!(CELL_OVERHEAD % WORD_BYTES, 0);
+    }
+}

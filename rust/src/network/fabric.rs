@@ -1,0 +1,400 @@
+//! The flow-level fabric: occupancy-tracked links, memory channels and R5
+//! co-processors for the whole rack.
+//!
+//! All bulk-transfer timing flows through this struct, so contention
+//! (bandwidth sharing on links, bidirectional memory pressure, R5
+//! serialization of concurrent RDMA transactions) emerges from resource
+//! occupancy rather than from hand-written formulas.  See DESIGN.md for
+//! the two-level modelling rationale.
+//!
+//! Calibration notes (DESIGN.md §4):
+//! * Inter-QFDB (torus) links carry extra control data per cell for flow
+//!   control in the torus router (paper §6.1.2); we charge it as
+//!   `torus_cell_gap` per cell *on the link occupancy*, which yields the
+//!   paper's 6.42 Gb/s on 10 Gb/s links.
+//! * The ExaNet router adds `router_latency` (L_ER = 145 ns) per crossing
+//!   to the latency path (N torus hops cross N+1 routers).
+
+use crate::sim::{RateResource, Resource, SimDuration, SimTime};
+use crate::topology::{route, Calib, LinkId, MpsocId, Path, SystemConfig, Topology};
+
+/// The simulated rack fabric.
+#[derive(Debug)]
+pub struct Fabric {
+    pub topo: Topology,
+    /// One rate resource per unidirectional link (indexed by LinkId::flat).
+    links: Vec<RateResource>,
+    /// Per-MPSoC AXI read channel (NI send streams; 128 bit @ 150 MHz).
+    mem_rd: Vec<RateResource>,
+    /// Per-MPSoC AXI write channel (NI receive streams).
+    mem_wr: Vec<RateResource>,
+    /// Per-MPSoC R5 co-processor (serializes RDMA transaction handling).
+    r5: Vec<Resource>,
+    /// Per-link control lane: small cells interleave ahead of bulk blocks
+    /// (paper §4.2: the small cell size keeps high-priority traffic moving
+    /// in front of busy links), so they contend only with each other plus
+    /// at most one in-flight bulk cell.
+    ctrl: Vec<Resource>,
+    /// Dense lazily-filled route cache (Path is Copy; §Perf iteration 3).
+    path_cache: Vec<Option<Path>>,
+}
+
+impl Fabric {
+    pub fn new(cfg: SystemConfig) -> Fabric {
+        let topo = Topology::new(cfg);
+        let cfg = &topo.cfg;
+        let n_links = LinkId::slots(cfg);
+        let mut links = Vec::with_capacity(n_links);
+        // Build in flat order: intra links first, then torus links.
+        let f = cfg.fpgas_per_qfdb;
+        for _ in 0..cfg.num_qfdbs() * f * f {
+            links.push(RateResource::new(cfg.intra_qfdb_gbps, SimDuration::ZERO));
+        }
+        for _ in 0..cfg.num_qfdbs() * 6 {
+            links.push(RateResource::new(cfg.torus_gbps, SimDuration::ZERO));
+        }
+        debug_assert_eq!(links.len(), n_links);
+        let n = cfg.num_mpsocs();
+        let mem_rd = (0..n)
+            .map(|_| RateResource::new(cfg.calib.axi_gbps, SimDuration::ZERO))
+            .collect();
+        let mem_wr = (0..n)
+            .map(|_| RateResource::new(cfg.calib.axi_gbps, SimDuration::ZERO))
+            .collect();
+        let r5 = (0..n).map(|_| Resource::new()).collect();
+        let ctrl = (0..n_links).map(|_| Resource::new()).collect();
+        let path_cache = vec![None; n * n];
+        Fabric { topo, links, mem_rd, mem_wr, r5, ctrl, path_cache }
+    }
+
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.topo.cfg
+    }
+
+    pub fn calib(&self) -> &Calib {
+        &self.topo.cfg.calib
+    }
+
+    /// Reset all occupancy (fresh experiment, same hardware).
+    pub fn reset(&mut self) {
+        for l in &mut self.links {
+            l.reset();
+        }
+        for m in &mut self.mem_rd {
+            m.reset();
+        }
+        for m in &mut self.mem_wr {
+            m.reset();
+        }
+        for r in &mut self.r5 {
+            r.reset();
+        }
+        for c in &mut self.ctrl {
+            c.reset();
+        }
+    }
+
+    /// Route between two endpoints (delegates to topology).
+    pub fn route(&self, a: MpsocId, b: MpsocId) -> Path {
+        route(&self.topo, a, b)
+    }
+
+    /// Cached route (the per-message hot path; routes are static, so the
+    /// dense cache is exact).
+    pub fn route_cached(&mut self, a: MpsocId, b: MpsocId) -> Path {
+        let n = self.topo.cfg.num_mpsocs();
+        let idx = a.0 as usize * n + b.0 as usize;
+        if let Some(p) = self.path_cache[idx] {
+            return p;
+        }
+        let p = route(&self.topo, a, b);
+        self.path_cache[idx] = Some(p);
+        p
+    }
+
+    // ---- resource access -------------------------------------------------
+
+    /// Occupy `link` for an explicit duration; returns (start, end).
+    fn link_acquire(&mut self, link: LinkId, at: SimTime, dur: SimDuration) -> (SimTime, SimTime) {
+        let idx = link.flat(&self.topo.cfg);
+        let r = &mut self.links[idx];
+        // RateResource occupies by bytes; convert duration to equivalent
+        // bytes at the link rate so calibrated gaps can be included.
+        let bytes = (dur.ns() * r.gbps / 8.0).round() as u64;
+        r.transfer(at, bytes)
+    }
+
+    /// Occupy the node's AXI read channel (NI fetches payload from memory).
+    pub fn mem_read(&mut self, node: MpsocId, at: SimTime, bytes: u64) -> (SimTime, SimTime) {
+        self.mem_rd[node.0 as usize].transfer(at, bytes)
+    }
+
+    /// Occupy the node's AXI write channel (NI deposits payload to memory).
+    pub fn mem_write(&mut self, node: MpsocId, at: SimTime, bytes: u64) -> (SimTime, SimTime) {
+        self.mem_wr[node.0 as usize].transfer(at, bytes)
+    }
+
+    /// Occupy the node's R5 co-processor for `dur`.
+    pub fn r5_occupy(&mut self, node: MpsocId, at: SimTime, dur: SimDuration) -> (SimTime, SimTime) {
+        self.r5[node.0 as usize].acquire(at, dur)
+    }
+
+    /// Link utilisation bookkeeping for reports: (busy, uses).
+    pub fn link_busy(&self, link: LinkId) -> (SimDuration, u64) {
+        let r = &self.links[link.flat(&self.topo.cfg)];
+        (r.busy_time(), r.uses())
+    }
+
+    /// Per-hop (occupancy, transit) durations for `payload` bytes on
+    /// `link`.  Occupancy includes the torus router's per-cell flow-control
+    /// overhead (it consumes wire time between cells and thus sustained
+    /// bandwidth); transit is what delays the *last byte* of this transfer:
+    /// a lone cell does not pay the inter-cell gap (paper: the single-hop
+    /// inter-mezzanine communication latency is 409 ns = 2 L_ER + L_l with
+    /// no flow-control term), while a multi-cell block pays it between its
+    /// own cells.
+    fn hop_cost(&self, link: LinkId, payload: usize) -> (SimDuration, SimDuration) {
+        let calib = self.calib();
+        let wire = calib.wire_bytes(payload);
+        let ser = SimDuration::serialize(wire, link.gbps(&self.topo.cfg));
+        if link.is_torus() {
+            let cells = calib.cells(payload) as u64;
+            let occ = ser + SimDuration(calib.torus_cell_gap.0 * cells);
+            let transit = ser + SimDuration(calib.torus_cell_gap.0 * (cells - 1));
+            (occ, transit)
+        } else {
+            (ser, ser)
+        }
+    }
+
+    // ---- flow-level primitives -------------------------------------------
+
+    /// Push one small cell (packetizer message, RTS/CTS, ACK, notification)
+    /// along `path`, modelling cut-through per hop with resource waiting.
+    /// Returns the arrival time of the cell at the destination NI.
+    ///
+    /// `payload` is the cell payload in bytes (<= 256).
+    pub fn small_cell(&mut self, path: &Path, at: SimTime, payload: usize) -> SimTime {
+        // copy the few scalars used, avoiding a full Calib clone per call
+        // (§Perf iteration 2)
+        let c = &self.topo.cfg.calib;
+        let (sw_lat, rt_lat, ln_lat, cell_bytes) = (
+            c.switch_latency,
+            c.router_latency,
+            c.link_latency,
+            (c.cell_payload + c.cell_overhead) as u64,
+        );
+        let mut t = at + sw_lat; // source-side switch
+        let mut crossed_torus = false;
+        for (i, hop) in path.hops().iter().enumerate() {
+            if hop.link.is_torus() {
+                // Router crossing before each torus link (incl. source F1).
+                t += rt_lat;
+                crossed_torus = true;
+            } else if i > 0 {
+                t += sw_lat; // intermediate intra-FPGA switch
+            }
+            let (occ, transit) = self.hop_cost(hop.link, payload);
+            let idx = hop.link.flat(&self.topo.cfg);
+            // Priority interleave: if the bulk lane is mid-block, the small
+            // cell waits at most one full-cell serialization time before it
+            // is inserted between bulk cells.
+            let bulk_busy = self.links[idx].next_free() > t;
+            let interleave = if bulk_busy {
+                SimDuration::serialize(cell_bytes, hop.link.gbps(&self.topo.cfg))
+            } else {
+                SimDuration::ZERO
+            };
+            let (start, _) = self.ctrl[idx].acquire(t + interleave, occ);
+            t = start + transit + ln_lat;
+        }
+        if crossed_torus {
+            t += rt_lat; // destination-side F1 router (N+1'th)
+        }
+        t
+    }
+
+    /// Transfer one RDMA block (<= 16 KB) along `path` starting at `at`.
+    ///
+    /// Models: AXI/memory read at the source (store-and-forward of the
+    /// first cell on the critical path), per-hop block serialization with
+    /// the torus per-cell control overhead, and the memory write at the
+    /// destination.  `pipelined` adds the per-block pacing gap on the
+    /// injection link (windowed transfers); sequential single-message
+    /// pacing is charged by the caller via the R5 model.
+    ///
+    /// Returns (time the injection link is free again, arrival time of the
+    /// last byte in destination memory).
+    pub fn rdma_block(&mut self, path: &Path, at: SimTime, bytes: usize, pipelined: bool) -> (SimTime, SimTime) {
+        let c = &self.topo.cfg.calib;
+        let (sw_lat, rt_lat, ln_lat, gap, cell_payload) = (
+            c.switch_latency,
+            c.router_latency,
+            c.link_latency,
+            c.rdma_block_gap_pipelined,
+            c.cell_payload,
+        );
+
+        // Source memory read: first cell is store-and-forward (its fill
+        // time is on the critical path); the rest overlaps with injection.
+        let first = cell_payload.min(bytes).max(1) as u64;
+        let (_, mem_first) = self.mem_read(path.src, at, first);
+        if bytes as u64 > first {
+            self.mem_read(path.src, mem_first, bytes as u64 - first);
+        }
+        let mut t = mem_first + sw_lat;
+
+        let mut src_free = t;
+        let mut crossed_torus = false;
+        for (i, hop) in path.hops().iter().enumerate() {
+            if hop.link.is_torus() {
+                t += rt_lat;
+                crossed_torus = true;
+            } else if i > 0 {
+                t += sw_lat;
+            }
+            let (mut occ, transit) = self.hop_cost(hop.link, bytes);
+            if i == 0 && pipelined {
+                occ += gap;
+            }
+            let (start, end) = self.link_acquire(hop.link, t, occ);
+            if i == 0 {
+                src_free = end;
+            }
+            t = start + transit + ln_lat;
+        }
+        if crossed_torus {
+            t += rt_lat;
+        }
+        // Destination memory write.
+        let (_, w_end) = self.mem_write(path.dst, t, bytes.max(1) as u64);
+        (src_free, w_end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::SystemConfig;
+
+    fn fabric() -> Fabric {
+        Fabric::new(SystemConfig::prototype())
+    }
+
+    #[test]
+    fn small_cell_intra_qfdb_latency() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 0, 1);
+        let p = f.route(a, b);
+        let t = f.small_cell(&p, SimTime::ZERO, 0);
+        // switch + 32B wire at 16G (16ns) + 120ns link
+        let expect = 13.3 + 16.0 + 120.0;
+        assert!((t.ns() - expect).abs() < 2.0, "{} vs {}", t.ns(), expect);
+    }
+
+    #[test]
+    fn small_cell_inter_qfdb_adds_two_routers() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 1, 0);
+        let p = f.route(a, b);
+        let t = f.small_cell(&p, SimTime::ZERO, 0);
+        // switch + router + 32B@10G (25.6) + 120 + router; a lone cell
+        // does not pay the inter-cell flow-control gap
+        let expect = 13.3 + 145.0 + 25.6 + 120.0 + 145.0;
+        assert!((t.ns() - expect).abs() < 3.0, "{} vs {}", t.ns(), expect);
+    }
+
+    #[test]
+    fn small_cell_contention_serializes() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 0, 1);
+        let p = f.route(a, b);
+        let t1 = f.small_cell(&p, SimTime::ZERO, 256);
+        let t2 = f.small_cell(&p, SimTime::ZERO, 256);
+        assert!(t2 > t1, "second cell must queue behind the first");
+    }
+
+    #[test]
+    fn rdma_block_throughput_intra_qfdb_pipelined() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 0, 1);
+        let p = f.route(a, b);
+        let block = 16 * 1024;
+        let mut t = SimTime::ZERO;
+        let n = 64;
+        let mut last = SimTime::ZERO;
+        for _ in 0..n {
+            let (free, arr) = f.rdma_block(&p, t, block, true);
+            t = free;
+            last = arr;
+        }
+        let gbps = (n as f64 * block as f64 * 8.0) / last.ns();
+        // paper: 13 Gb/s sustained on the 16 Gb/s intra-QFDB link
+        assert!((gbps - 13.0).abs() < 0.5, "sustained {gbps}");
+    }
+
+    #[test]
+    fn rdma_block_throughput_torus_pipelined() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 1, 0);
+        let p = f.route(a, b);
+        let block = 16 * 1024;
+        let mut t = SimTime::ZERO;
+        let n = 64;
+        let mut last = SimTime::ZERO;
+        for _ in 0..n {
+            let (free, arr) = f.rdma_block(&p, t, block, true);
+            t = free;
+            last = arr;
+        }
+        let gbps = (n as f64 * block as f64 * 8.0) / last.ns();
+        // paper: 6.42 Gb/s on 10 Gb/s inter-QFDB links
+        assert!((gbps - 6.42).abs() < 0.4, "sustained {gbps}");
+    }
+
+    #[test]
+    fn bidirectional_doubles_throughput() {
+        // Two opposite flows between the same pair: the links are
+        // full-duplex and the AXI read/write channels are separate, so
+        // aggregate bidirectional throughput approaches 2x the
+        // unidirectional 13 Gb/s (paper §6.1.2: osu_bibw ~ 2x osu_bw for
+        // large messages, small deviations).
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 0, 1);
+        let pab = f.route(a, b);
+        let pba = f.route(b, a);
+        let block = 16 * 1024;
+        let (mut ta, mut tb) = (SimTime::ZERO, SimTime::ZERO);
+        let mut last = SimTime::ZERO;
+        let n = 64;
+        for _ in 0..n {
+            let (fa, aa) = f.rdma_block(&pab, ta, block, true);
+            let (fb, ab) = f.rdma_block(&pba, tb, block, true);
+            ta = fa;
+            tb = fb;
+            last = aa.max(ab).max(last);
+        }
+        let agg = (2.0 * n as f64 * block as f64 * 8.0) / last.ns();
+        assert!(agg < 2.0 * 13.2, "aggregate {agg} should be < 26.4");
+        assert!(agg > 1.85 * 13.0, "aggregate {agg} unreasonably low");
+    }
+
+    #[test]
+    fn reset_restores_idle() {
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 0, 1);
+        let p = f.route(a, b);
+        f.small_cell(&p, SimTime::ZERO, 64);
+        f.reset();
+        let (busy, uses) = f.link_busy(p.hops()[0].link);
+        assert_eq!(busy, SimDuration::ZERO);
+        assert_eq!(uses, 0);
+    }
+}

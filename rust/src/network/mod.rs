@@ -1,0 +1,12 @@
+//! The ExaNet interconnect: cells, links, switches, routers and the
+//! rack-wide fabric model.
+//!
+//! Latency constants (switch 2 cycles @ 150 MHz, router L_ER = 145 ns,
+//! link 120 ns) live in [`crate::topology::Calib`]; this module owns the
+//! occupancy bookkeeping that turns them into end-to-end behaviour.
+
+pub mod cell;
+pub mod fabric;
+
+pub use cell::{cell_sizes, Cell, CellKind, NackReason, CELL_OVERHEAD, CELL_PAYLOAD};
+pub use fabric::Fabric;

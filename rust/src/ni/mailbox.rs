@@ -1,0 +1,219 @@
+//! The virtualized mailbox (paper §4.4).
+//!
+//! 64 memory-mapped virtual interfaces per MPSoC; multiple remote sources
+//! may write the same interface concurrently.  Arriving data is written
+//! through the coherent ACE port into the receiver's L2; tail pointers are
+//! maintained by the FPGA, head pointers by the runtime.  The hardware
+//! compares the PDID of each incoming packet against the interface's PDID
+//! and NACKs mismatches, errors and full queues.
+
+use crate::network::NackReason;
+
+/// Virtual interfaces per mailbox block.
+pub const NUM_VIFS: usize = 64;
+/// Queue capacity per virtual interface, in messages (payload buffers
+/// live in host memory; this caps in-flight occupancy).
+pub const QUEUE_CAPACITY: usize = 128;
+
+/// One received message as seen by the polling process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MbxMessage {
+    pub src_node: u32,
+    pub payload: Vec<u8>,
+}
+
+/// One mailbox virtual interface.
+#[derive(Debug)]
+pub struct MbxVif {
+    pub pdid: u16,
+    queue: std::collections::VecDeque<MbxMessage>,
+    /// FPGA-maintained tail (enqueue count).
+    pub tail: u64,
+    /// Runtime-maintained head (dequeue count).
+    pub head: u64,
+}
+
+/// The per-MPSoC mailbox block.
+#[derive(Debug)]
+pub struct Mailbox {
+    vifs: Vec<Option<MbxVif>>,
+    /// NACKs generated, by reason (stats).
+    pub nacks: u64,
+}
+
+/// Delivery verdict for an incoming packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    Ack,
+    Nack(NackReason),
+}
+
+/// Errors surfaced by the allocation driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MbxError {
+    NoFreeVif,
+    BadVif(usize),
+}
+
+impl std::fmt::Display for MbxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MbxError::NoFreeVif => write!(f, "no free mailbox interface"),
+            MbxError::BadVif(v) => write!(f, "mailbox interface {v} not allocated"),
+        }
+    }
+}
+
+impl std::error::Error for MbxError {}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Mailbox::new()
+    }
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox { vifs: (0..NUM_VIFS).map(|_| None).collect(), nacks: 0 }
+    }
+
+    /// Allocate an interface and bind it to the process's PDID
+    /// (the special driver of §4.4; the only kernel involvement).
+    pub fn alloc_vif(&mut self, pdid: u16) -> Result<usize, MbxError> {
+        let slot = self
+            .vifs
+            .iter()
+            .position(|v| v.is_none())
+            .ok_or(MbxError::NoFreeVif)?;
+        self.vifs[slot] = Some(MbxVif {
+            pdid,
+            queue: Default::default(),
+            tail: 0,
+            head: 0,
+        });
+        Ok(slot)
+    }
+
+    pub fn free_vif(&mut self, vif: usize) -> Result<(), MbxError> {
+        match self.vifs.get_mut(vif) {
+            Some(s @ Some(_)) => {
+                *s = None;
+                Ok(())
+            }
+            _ => Err(MbxError::BadVif(vif)),
+        }
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.vifs.iter().filter(|v| v.is_some()).count()
+    }
+
+    /// Hardware path for an incoming packet: PDID check, capacity check,
+    /// enqueue.  Returns the ACK/NACK the hardware routes to the source.
+    pub fn deliver(&mut self, vif: usize, pdid: u16, msg: MbxMessage) -> Delivery {
+        let v = match self.vifs.get_mut(vif).and_then(|v| v.as_mut()) {
+            Some(v) => v,
+            None => {
+                self.nacks += 1;
+                return Delivery::Nack(NackReason::PacketError);
+            }
+        };
+        if v.pdid != pdid {
+            self.nacks += 1;
+            return Delivery::Nack(NackReason::PdidMismatch);
+        }
+        if v.queue.len() >= QUEUE_CAPACITY {
+            self.nacks += 1;
+            return Delivery::Nack(NackReason::MailboxFull);
+        }
+        v.queue.push_back(msg);
+        v.tail += 1;
+        Delivery::Ack
+    }
+
+    /// Runtime polling path: pop the next message, advancing the head.
+    pub fn poll(&mut self, vif: usize) -> Option<MbxMessage> {
+        let v = self.vifs.get_mut(vif).and_then(|v| v.as_mut())?;
+        let m = v.queue.pop_front()?;
+        v.head += 1;
+        Some(m)
+    }
+
+    pub fn depth(&self, vif: usize) -> usize {
+        self.vifs
+            .get(vif)
+            .and_then(|v| v.as_ref())
+            .map_or(0, |v| v.queue.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(n: u32) -> MbxMessage {
+        MbxMessage { src_node: n, payload: vec![n as u8; 8] }
+    }
+
+    #[test]
+    fn pdid_protection() {
+        let mut m = Mailbox::new();
+        let v = m.alloc_vif(42).unwrap();
+        assert_eq!(m.deliver(v, 42, msg(1)), Delivery::Ack);
+        assert_eq!(
+            m.deliver(v, 43, msg(2)),
+            Delivery::Nack(NackReason::PdidMismatch)
+        );
+        assert_eq!(m.nacks, 1);
+        assert_eq!(m.depth(v), 1);
+    }
+
+    #[test]
+    fn fifo_order_and_head_tail() {
+        let mut m = Mailbox::new();
+        let v = m.alloc_vif(1).unwrap();
+        for i in 0..5 {
+            m.deliver(v, 1, msg(i));
+        }
+        for i in 0..5 {
+            assert_eq!(m.poll(v).unwrap().src_node, i);
+        }
+        assert!(m.poll(v).is_none());
+    }
+
+    #[test]
+    fn full_queue_nacks() {
+        let mut m = Mailbox::new();
+        let v = m.alloc_vif(1).unwrap();
+        for i in 0..QUEUE_CAPACITY as u32 {
+            assert_eq!(m.deliver(v, 1, msg(i)), Delivery::Ack);
+        }
+        assert_eq!(
+            m.deliver(v, 1, msg(999)),
+            Delivery::Nack(NackReason::MailboxFull)
+        );
+        // runtime drains one; delivery works again (sender retransmits)
+        m.poll(v).unwrap();
+        assert_eq!(m.deliver(v, 1, msg(999)), Delivery::Ack);
+    }
+
+    #[test]
+    fn unallocated_vif_nacks() {
+        let mut m = Mailbox::new();
+        assert_eq!(
+            m.deliver(5, 0, msg(0)),
+            Delivery::Nack(NackReason::PacketError)
+        );
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut m = Mailbox::new();
+        for _ in 0..NUM_VIFS {
+            m.alloc_vif(0).unwrap();
+        }
+        assert_eq!(m.alloc_vif(0), Err(MbxError::NoFreeVif));
+        m.free_vif(3).unwrap();
+        assert_eq!(m.alloc_vif(0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! The ExaNet Network Interface (paper §4.4-§4.5): virtualized
+//! packetizer/mailbox small-message transport, the RDMA engine with R5
+//! firmware and SMMU-backed translation (no page pinning), and the
+//! event-level reliable-transport protocol simulation.
+
+pub mod mailbox;
+pub mod packetizer;
+pub mod protocol;
+pub mod rdma;
+pub mod smmu;
+
+pub use mailbox::{Delivery, Mailbox, MbxError, MbxMessage};
+pub use packetizer::{hw_pingpong, send_small, ChannelState, Packetizer, PktzError};
+pub use protocol::{NiEvent, ProtocolSim};
+pub use rdma::{rdma_read, rdma_write, rdma_write_with_smmu, Pacing, RdmaCompletion, RdmaEngine, RdmaError};
+pub use smmu::{Smmu, Translation, PAGE_BYTES};

@@ -1,0 +1,263 @@
+//! The virtualized packetizer (paper §4.4).
+//!
+//! 64 virtual interfaces per MPSoC, each a private memory page with four
+//! memory-mapped channels.  A process stores the payload into a channel
+//! and the final store (size + destination GVAS) triggers packet
+//! formation.  Channels track ongoing / acked / nacked / timed-out state;
+//! hardware timers retransmit on missing end-to-end ACKs.
+//!
+//! Two layers:
+//! * allocation + channel bookkeeping (this file): semantics of interface
+//!   virtualization, used by both timing layers and by the event-level
+//!   protocol simulation in [`crate::ni::protocol`];
+//! * flow-level timing helper [`send_small`] used on the MPI hot path.
+
+use crate::network::Fabric;
+use crate::sim::{SimDuration, SimTime};
+use crate::topology::{MpsocId, Path};
+
+/// Virtual interfaces per packetizer block.
+pub const NUM_VIFS: usize = 64;
+/// Channels per virtual interface.
+pub const CHANNELS_PER_VIF: usize = 4;
+/// Maximum payload of a packetizer message in bytes.
+pub const MAX_PAYLOAD: usize = 64;
+/// Payload usable by the MPI runtime (64 minus MPI control data).
+pub const MPI_MAX_PAYLOAD: usize = 56;
+
+/// Channel protocol state (paper §4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChannelState {
+    #[default]
+    Idle,
+    Ongoing,
+    Acked,
+    Nacked,
+    TimedOut,
+}
+
+/// One memory-mapped channel.
+#[derive(Debug, Clone, Default)]
+pub struct Channel {
+    pub state: ChannelState,
+    /// Retransmissions performed for the current message.
+    pub retries: u32,
+}
+
+/// One virtual interface (a private page owned by one process).
+#[derive(Debug, Clone)]
+pub struct Vif {
+    /// Protection domain stamped into outgoing packets.
+    pub pdid: u16,
+    pub channels: [Channel; CHANNELS_PER_VIF],
+}
+
+/// The per-MPSoC packetizer block.
+#[derive(Debug)]
+pub struct Packetizer {
+    pub node: MpsocId,
+    vifs: Vec<Option<Vif>>,
+    /// Messages sent (stats).
+    pub sent: u64,
+    /// Retransmissions triggered by timeout or NACK (stats).
+    pub retransmissions: u64,
+}
+
+/// Errors surfaced to the user-space library.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PktzError {
+    /// All 64 virtual interfaces are allocated.
+    NoFreeVif,
+    /// All 4 channels of the interface are mid-flight.
+    NoFreeChannel,
+    /// Payload exceeds the 64-byte hardware limit.
+    PayloadTooLarge(usize),
+    /// Interface handle is not allocated.
+    BadVif(usize),
+}
+
+impl std::fmt::Display for PktzError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PktzError::NoFreeVif => write!(f, "no free packetizer interface"),
+            PktzError::NoFreeChannel => write!(f, "all channels ongoing"),
+            PktzError::PayloadTooLarge(n) => write!(f, "payload {n} > 64 B"),
+            PktzError::BadVif(v) => write!(f, "interface {v} not allocated"),
+        }
+    }
+}
+
+impl std::error::Error for PktzError {}
+
+impl Packetizer {
+    pub fn new(node: MpsocId) -> Packetizer {
+        Packetizer {
+            node,
+            vifs: (0..NUM_VIFS).map(|_| None).collect(),
+            sent: 0,
+            retransmissions: 0,
+        }
+    }
+
+    /// Allocate a virtual interface to a process (kernel driver path —
+    /// the only point where the OS is involved).
+    pub fn alloc_vif(&mut self, pdid: u16) -> Result<usize, PktzError> {
+        let slot = self
+            .vifs
+            .iter()
+            .position(|v| v.is_none())
+            .ok_or(PktzError::NoFreeVif)?;
+        self.vifs[slot] = Some(Vif {
+            pdid,
+            channels: Default::default(),
+        });
+        Ok(slot)
+    }
+
+    pub fn free_vif(&mut self, vif: usize) -> Result<(), PktzError> {
+        match self.vifs.get_mut(vif) {
+            Some(s @ Some(_)) => {
+                *s = None;
+                Ok(())
+            }
+            _ => Err(PktzError::BadVif(vif)),
+        }
+    }
+
+    pub fn vif(&self, vif: usize) -> Option<&Vif> {
+        self.vifs.get(vif).and_then(|v| v.as_ref())
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.vifs.iter().filter(|v| v.is_some()).count()
+    }
+
+    /// Claim a channel for a new message (user-level, no kernel).
+    pub fn claim_channel(&mut self, vif: usize, payload: usize) -> Result<usize, PktzError> {
+        if payload > MAX_PAYLOAD {
+            return Err(PktzError::PayloadTooLarge(payload));
+        }
+        let v = self
+            .vifs
+            .get_mut(vif)
+            .and_then(|v| v.as_mut())
+            .ok_or(PktzError::BadVif(vif))?;
+        let ch = v
+            .channels
+            .iter()
+            .position(|c| c.state != ChannelState::Ongoing)
+            .ok_or(PktzError::NoFreeChannel)?;
+        v.channels[ch] = Channel {
+            state: ChannelState::Ongoing,
+            retries: 0,
+        };
+        self.sent += 1;
+        Ok(ch)
+    }
+
+    /// Record the outcome the hardware observed for a channel.
+    pub fn complete(&mut self, vif: usize, ch: usize, state: ChannelState) {
+        if let Some(v) = self.vifs.get_mut(vif).and_then(|v| v.as_mut()) {
+            v.channels[ch].state = state;
+        }
+    }
+
+    /// Record a retransmission (timeout or NACK).
+    pub fn retransmit(&mut self, vif: usize, ch: usize) {
+        self.retransmissions += 1;
+        if let Some(v) = self.vifs.get_mut(vif).and_then(|v| v.as_mut()) {
+            v.channels[ch].retries += 1;
+            v.channels[ch].state = ChannelState::Ongoing;
+        }
+    }
+}
+
+/// Flow-level timing of one packetizer->mailbox small message along
+/// `path`: PS->PL store of the payload, packet formation, fabric transit,
+/// and the mailbox's coherent write into the receiver's L2.
+/// Returns the time the message data is visible to the receiving process.
+pub fn send_small(fab: &mut Fabric, path: &Path, at: SimTime, payload: usize) -> SimTime {
+    let c = fab.calib();
+    let (copy, init, mbx) = (c.ps_pl_copy, c.pktz_init, c.ps_pl_copy);
+    let t = at + copy + init;
+    let arrival = fab.small_cell(path, t, payload.min(MAX_PAYLOAD));
+    arrival + mbx
+}
+
+/// The user-level ping-pong microbenchmark of §6.1.1: 1000 messages
+/// between two adjacent MPSoCs, no kernel, no MPI.  Returns the average
+/// one-way latency (paper: ~470 ns).
+pub fn hw_pingpong(fab: &mut Fabric, a: MpsocId, b: MpsocId, iters: usize) -> SimDuration {
+    let ab = fab.route(a, b);
+    let ba = fab.route(b, a);
+    let mut t = SimTime::ZERO;
+    let start = t;
+    for _ in 0..iters {
+        t = send_small(fab, &ab, t, 8);
+        t = send_small(fab, &ba, t, 8);
+    }
+    SimDuration((t - start).0 / (2 * iters as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::SystemConfig;
+
+    #[test]
+    fn vif_allocation_exhaustion() {
+        let mut p = Packetizer::new(MpsocId(0));
+        for i in 0..NUM_VIFS {
+            assert_eq!(p.alloc_vif(7).unwrap(), i);
+        }
+        assert_eq!(p.alloc_vif(7), Err(PktzError::NoFreeVif));
+        p.free_vif(10).unwrap();
+        assert_eq!(p.alloc_vif(9).unwrap(), 10);
+        assert_eq!(p.vif(10).unwrap().pdid, 9);
+    }
+
+    #[test]
+    fn channel_exhaustion_and_completion() {
+        let mut p = Packetizer::new(MpsocId(0));
+        let v = p.alloc_vif(1).unwrap();
+        for _ in 0..CHANNELS_PER_VIF {
+            p.claim_channel(v, 8).unwrap();
+        }
+        assert_eq!(p.claim_channel(v, 8), Err(PktzError::NoFreeChannel));
+        p.complete(v, 0, ChannelState::Acked);
+        assert_eq!(p.claim_channel(v, 8).unwrap(), 0);
+    }
+
+    #[test]
+    fn payload_limit() {
+        let mut p = Packetizer::new(MpsocId(0));
+        let v = p.alloc_vif(1).unwrap();
+        assert_eq!(p.claim_channel(v, 65), Err(PktzError::PayloadTooLarge(65)));
+        assert!(p.claim_channel(v, 64).is_ok());
+    }
+
+    #[test]
+    fn retransmit_bookkeeping() {
+        let mut p = Packetizer::new(MpsocId(0));
+        let v = p.alloc_vif(1).unwrap();
+        let ch = p.claim_channel(v, 8).unwrap();
+        p.retransmit(v, ch);
+        assert_eq!(p.retransmissions, 1);
+        assert_eq!(p.vif(v).unwrap().channels[ch].retries, 1);
+        assert_eq!(p.vif(v).unwrap().channels[ch].state, ChannelState::Ongoing);
+    }
+
+    #[test]
+    fn hw_pingpong_matches_paper() {
+        // paper §6.1.1: ~470 ns one-way between adjacent MPSoCs on a QFDB
+        let mut fab = Fabric::new(SystemConfig::prototype());
+        let a = fab.topo.mpsoc(0, 0, 0);
+        let b = fab.topo.mpsoc(0, 0, 1);
+        let lat = hw_pingpong(&mut fab, a, b, 1000);
+        assert!(
+            (lat.ns() - 470.0).abs() < 40.0,
+            "hw ping-pong one-way {} ns vs paper 470 ns",
+            lat.ns()
+        );
+    }
+}

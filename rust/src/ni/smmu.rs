@@ -1,0 +1,160 @@
+//! The ARM SMMU as used by ExaNet (paper §4.5.3): virtual->physical
+//! translation for NI memory accesses, with TLB, hardware page-table walk,
+//! and page-fault interrupts that trigger block replay instead of page
+//! pinning.
+
+use crate::sim::{SimDuration, SimTime};
+use crate::topology::Calib;
+use std::collections::HashSet;
+
+/// Page size used by the prototype's Linux.
+pub const PAGE_BYTES: u64 = 4096;
+/// TLB entries per SMMU context bank.
+pub const TLB_ENTRIES: usize = 512;
+
+/// Result of translating one page for an NI access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Translation {
+    /// TLB hit: no added latency.
+    Hit,
+    /// TLB miss, page present: hardware walk, no software.
+    WalkMiss,
+    /// Page fault: OS interrupt; the RDMA block must be replayed.
+    Fault,
+}
+
+/// One SMMU context bank (points at a process's page table).
+#[derive(Debug)]
+pub struct Smmu {
+    /// Pages currently cached in the TLB (FIFO replacement).
+    tlb: Vec<u64>,
+    tlb_set: HashSet<u64>,
+    /// Pages currently NOT mapped (will fault until serviced).
+    unmapped: HashSet<u64>,
+    pub hits: u64,
+    pub walks: u64,
+    pub faults: u64,
+}
+
+impl Default for Smmu {
+    fn default() -> Self {
+        Smmu::new()
+    }
+}
+
+impl Smmu {
+    pub fn new() -> Smmu {
+        Smmu {
+            tlb: Vec::with_capacity(TLB_ENTRIES),
+            tlb_set: HashSet::new(),
+            unmapped: HashSet::new(),
+            hits: 0,
+            walks: 0,
+            faults: 0,
+        }
+    }
+
+    /// Mark a page as swapped out / not yet mapped (fault injection).
+    pub fn unmap_page(&mut self, va: u64) {
+        self.unmapped.insert(va / PAGE_BYTES);
+    }
+
+    /// Service a fault: the OS maps the page (called after the interrupt).
+    pub fn map_page(&mut self, va: u64) {
+        self.unmapped.remove(&(va / PAGE_BYTES));
+    }
+
+    /// Translate one access to `va`.
+    pub fn translate(&mut self, va: u64) -> Translation {
+        let page = va / PAGE_BYTES;
+        if self.unmapped.contains(&page) {
+            self.faults += 1;
+            return Translation::Fault;
+        }
+        if self.tlb_set.contains(&page) {
+            self.hits += 1;
+            return Translation::Hit;
+        }
+        self.walks += 1;
+        if self.tlb.len() >= TLB_ENTRIES {
+            let evicted = self.tlb.remove(0);
+            self.tlb_set.remove(&evicted);
+        }
+        self.tlb.push(page);
+        self.tlb_set.insert(page);
+        Translation::WalkMiss
+    }
+
+    /// Translate a whole buffer; returns (added latency, faulting page VAs).
+    /// Walk latencies accumulate; faults are reported for block replay.
+    pub fn translate_range(&mut self, calib: &Calib, va: u64, bytes: u64) -> (SimDuration, Vec<u64>) {
+        let mut extra = SimDuration::ZERO;
+        let mut faults = Vec::new();
+        let first = va / PAGE_BYTES;
+        let last = (va + bytes.max(1) - 1) / PAGE_BYTES;
+        for page in first..=last {
+            match self.translate(page * PAGE_BYTES) {
+                Translation::Hit => {}
+                Translation::WalkMiss => extra += calib.smmu_walk,
+                Translation::Fault => faults.push(page * PAGE_BYTES),
+            }
+        }
+        (extra, faults)
+    }
+
+    /// Time at which a faulting access can be replayed, given the fault
+    /// was raised at `at` (OS interrupt + mapping + SMMU resume).
+    pub fn fault_service_done(&mut self, calib: &Calib, at: SimTime, va: u64) -> SimTime {
+        self.map_page(va);
+        at + calib.page_fault_service
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_walk() {
+        let mut s = Smmu::new();
+        assert_eq!(s.translate(0x1000), Translation::WalkMiss);
+        assert_eq!(s.translate(0x1008), Translation::Hit);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.walks, 1);
+    }
+
+    #[test]
+    fn fifo_eviction() {
+        let mut s = Smmu::new();
+        for i in 0..TLB_ENTRIES as u64 + 1 {
+            s.translate(i * PAGE_BYTES);
+        }
+        // page 0 was evicted -> walks again
+        assert_eq!(s.translate(0), Translation::WalkMiss);
+        // a recent page still hits
+        assert_eq!(s.translate(5 * PAGE_BYTES), Translation::Hit);
+    }
+
+    #[test]
+    fn fault_and_service() {
+        let mut s = Smmu::new();
+        let calib = Calib::default();
+        s.unmap_page(0x4000);
+        assert_eq!(s.translate(0x4000), Translation::Fault);
+        let done = s.fault_service_done(&calib, SimTime::ZERO, 0x4000);
+        assert_eq!(done, SimTime::ZERO + calib.page_fault_service);
+        assert_ne!(s.translate(0x4000), Translation::Fault);
+    }
+
+    #[test]
+    fn range_translation_counts_pages() {
+        let mut s = Smmu::new();
+        let calib = Calib::default();
+        // 16 KB spanning 4 pages, one unmapped
+        s.unmap_page(2 * PAGE_BYTES);
+        let (extra, faults) = s.translate_range(&calib, 0, 4 * PAGE_BYTES);
+        assert_eq!(faults, vec![2 * PAGE_BYTES]);
+        // 3 walks (pages 0,1,3)
+        assert_eq!(extra, SimDuration::from_ns(3.0 * 300.0));
+    }
+}

@@ -1,0 +1,69 @@
+//! QFDB power model (paper §3.1 and §7).
+//!
+//! Measured envelope: 20 W idle to ~200 W with the most demanding
+//! accelerators per QFDB; the matmul accelerator adds 16.2 W dynamic per
+//! MPSoC, yielding 17 FP32 GFLOPS/W.
+
+use crate::accel::matmul::MatmulAccel;
+
+/// QFDB idle power (W).
+pub const QFDB_IDLE_W: f64 = 20.0;
+/// QFDB maximum draw with demanding accelerators (W).
+pub const QFDB_MAX_W: f64 = 200.0;
+/// Busy A53 cluster adder per MPSoC (W) — CPU-only HPC runs.
+pub const MPSOC_CPU_BUSY_W: f64 = 6.5;
+
+/// Power state of one QFDB.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QfdbLoad {
+    /// MPSoCs with busy A53 clusters (0-4).
+    pub busy_cpus: usize,
+    /// MPSoCs running the matmul accelerator (0-4).
+    pub matmul_accels: usize,
+}
+
+/// Estimated QFDB draw for a load (W), clamped to the measured envelope.
+pub fn qfdb_power(load: QfdbLoad) -> f64 {
+    let w = QFDB_IDLE_W
+        + load.busy_cpus.min(4) as f64 * MPSOC_CPU_BUSY_W
+        + load.matmul_accels.min(4) as f64 * crate::accel::matmul::DYNAMIC_POWER_W;
+    w.min(QFDB_MAX_W)
+}
+
+/// Energy efficiency of the matmul accelerator (GFLOPS/W) at size n.
+pub fn matmul_gflops_per_watt(n: usize) -> f64 {
+    MatmulAccel::default().gflops_per_watt(n)
+}
+
+/// Whole-rack power for an HPC run occupying `qfdbs` boards (W).
+pub fn rack_power(qfdbs: usize, load: QfdbLoad) -> f64 {
+    qfdbs as f64 * qfdb_power(load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_is_20w() {
+        assert_eq!(qfdb_power(QfdbLoad::default()), 20.0);
+    }
+
+    #[test]
+    fn full_accel_stays_in_envelope() {
+        let w = qfdb_power(QfdbLoad { busy_cpus: 4, matmul_accels: 4 });
+        assert!(w > 100.0 && w <= QFDB_MAX_W, "{w}");
+    }
+
+    #[test]
+    fn efficiency_matches_paper() {
+        let e = matmul_gflops_per_watt(1024);
+        assert!((e - 17.0).abs() < 0.5, "{e}");
+    }
+
+    #[test]
+    fn rack_power_scales() {
+        let l = QfdbLoad { busy_cpus: 4, matmul_accels: 0 };
+        assert_eq!(rack_power(32, l), 32.0 * qfdb_power(l));
+    }
+}

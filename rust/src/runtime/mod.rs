@@ -1,0 +1,288 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the JAX/
+//! Pallas Layer-1/2 compute once to `artifacts/*.hlo.txt`, and this module
+//! compiles each module on the PJRT CPU client the first time it is used
+//! (compilations are cached for the life of the [`Executor`]).
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Element types used by the artifact registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "f64" => Dtype::F64,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+}
+
+/// One tensor signature from the manifest.
+#[derive(Debug, Clone)]
+pub struct Sig {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl Sig {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<Sig> {
+        let (d, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad signature {s:?}"))?;
+        let dims = if rest == "scalar" {
+            vec![]
+        } else {
+            rest.split('x')
+                .map(|x| x.parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        Ok(Sig { dtype: Dtype::parse(d)?, dims })
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub inputs: Vec<Sig>,
+    pub outputs: Vec<Sig>,
+}
+
+/// Parse `manifest.txt` (one `<name> in=<sigs> out=<sigs>` per line).
+pub fn parse_manifest(text: &str) -> Result<Vec<Entry>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let name = parts.next().ok_or_else(|| anyhow!("empty line"))?.to_string();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for p in parts {
+            if let Some(rest) = p.strip_prefix("in=") {
+                inputs = rest.split(',').map(Sig::parse).collect::<Result<_>>()?;
+            } else if let Some(rest) = p.strip_prefix("out=") {
+                outputs = rest.split(',').map(Sig::parse).collect::<Result<_>>()?;
+            } else {
+                bail!("unexpected token {p:?} in manifest line {line:?}");
+            }
+        }
+        out.push(Entry { name, inputs, outputs });
+    }
+    Ok(out)
+}
+
+/// A loaded artifact store + PJRT client.
+pub struct Executor {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    entries: HashMap<String, Entry>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (stats).
+    pub executions: u64,
+}
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> PathBuf {
+    // honour an override for tests / deployments
+    if let Ok(d) = std::env::var("EXANEST_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl Executor {
+    /// Open an artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Executor> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let entries = parse_manifest(&manifest)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor { dir, client, entries, compiled: HashMap::new(), executions: 0 })
+    }
+
+    /// Open the repo-default artifact directory.
+    pub fn open_default() -> Result<Executor> {
+        Self::open(default_artifact_dir())
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        if !self.entries.contains_key(name) {
+            bail!("artifact {name:?} not in manifest");
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on raw literals; returns the un-tupled outputs.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = &self.entries[name];
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = &self.compiled[name];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.executions += 1;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    fn lits_from<T: xla::NativeType + Copy>(
+        entry: &Entry,
+        want: Dtype,
+        inputs: &[&[T]],
+        name: &str,
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != entry.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.inputs.len(), inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (sig, data) in entry.inputs.iter().zip(inputs) {
+            if sig.dtype != want {
+                bail!("{name}: dtype mismatch with manifest");
+            }
+            if sig.elems() != data.len() {
+                bail!("{name}: input len {} != manifest {}", data.len(), sig.elems());
+            }
+            let dims: Vec<i64> = sig.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// Execute an f32 artifact: flat input slices, flat output vectors.
+    /// Shapes are validated against the manifest.
+    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let lits = Self::lits_from(&entry, Dtype::F32, inputs, name)?;
+        let outs = self.run(name, &lits)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute an i32 artifact (allreduce integer ALU).
+    pub fn run_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let lits = Self::lits_from(&entry, Dtype::I32, inputs, name)?;
+        let outs = self.run(name, &lits)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute an f64 artifact (allreduce double ALU).
+    pub fn run_f64(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let lits = Self::lits_from(&entry, Dtype::F64, inputs, name)?;
+        let outs = self.run(name, &lits)?;
+        outs.into_iter()
+            .map(|l| l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let m = "\
+matmul_256 in=f32:256x256,f32:256x256 out=f32:256x256
+cg_pre_24 in=f32:26x26x26 out=f32:24x24x24,f32:1
+# comment
+allreduce_sum_i32_64 in=i32:64,i32:64 out=i32:64
+";
+        let es = parse_manifest(m).unwrap();
+        assert_eq!(es.len(), 3);
+        assert_eq!(es[0].inputs.len(), 2);
+        assert_eq!(es[0].inputs[0].dims, vec![256, 256]);
+        assert_eq!(es[1].outputs[1].dims, vec![1]);
+        assert_eq!(es[2].inputs[0].dtype, Dtype::I32);
+        assert_eq!(es[1].inputs[0].elems(), 26 * 26 * 26);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("x in=q32:4 out=f32:4").is_err());
+        assert!(parse_manifest("x in=f32:4 bogus=1").is_err());
+    }
+
+    #[test]
+    fn sig_scalar() {
+        let s = Sig::parse("f32:scalar").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.elems(), 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Discrete-event core: a deterministic time-ordered event queue.
+//!
+//! The engine is generic over the event payload.  Handlers receive the
+//! payload together with a mutable scheduler handle, so they can post
+//! follow-up events; the world state lives outside the engine (classic
+//! "flattened" DES structure, avoids self-borrow problems).
+//!
+//! Event order is total and deterministic: ties in timestamp are broken by
+//! insertion sequence number.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+#[derive(Debug)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// The event queue + clock.
+#[derive(Debug)]
+pub struct Engine<E> {
+    queue: BinaryHeap<Reverse<Scheduled<E>>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Engine<E> {
+        Engine { queue: BinaryHeap::new(), now: SimTime::ZERO, seq: 0, processed: 0 }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events handled so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: SimTime, payload: E) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Scheduled { at, seq, payload }));
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(SimTime, E)> {
+        let Reverse(ev) = self.queue.pop()?;
+        self.now = ev.at;
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+
+    /// Run until the queue drains or `handler` returns `false` (stop).
+    pub fn run<W>(
+        &mut self,
+        world: &mut W,
+        mut handler: impl FnMut(&mut W, &mut Engine<E>, SimTime, E) -> bool,
+    ) {
+        while let Some((t, ev)) = self.next() {
+            if !handler(world, self, t, ev) {
+                break;
+            }
+        }
+    }
+
+    /// Run until `deadline` (events at exactly `deadline` are processed).
+    pub fn run_until<W>(
+        &mut self,
+        world: &mut W,
+        deadline: SimTime,
+        mut handler: impl FnMut(&mut W, &mut Engine<E>, SimTime, E),
+    ) {
+        while let Some(Reverse(head)) = self.queue.peek() {
+            if head.at > deadline {
+                break;
+            }
+            let (t, ev) = self.next().unwrap();
+            handler(world, self, t, ev);
+        }
+        self.now = self.now.max(deadline);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{SimDuration, SimTime};
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Tick(u32),
+    }
+
+    #[test]
+    fn fifo_order_at_same_time() {
+        let mut e: Engine<Ev> = Engine::new();
+        let t = SimTime::from_ns(10.0);
+        e.schedule(t, Ev::Tick(1));
+        e.schedule(t, Ev::Tick(2));
+        e.schedule(t, Ev::Tick(3));
+        let mut seen = Vec::new();
+        e.run(&mut seen, |s, _, _, Ev::Tick(i)| {
+            s.push(i);
+            true
+        });
+        assert_eq!(seen, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn time_order() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(30.0), Ev::Tick(3));
+        e.schedule(SimTime::from_ns(10.0), Ev::Tick(1));
+        e.schedule(SimTime::from_ns(20.0), Ev::Tick(2));
+        let mut seen = Vec::new();
+        e.run(&mut seen, |s, _, t, Ev::Tick(i)| {
+            s.push((t.ns() as u32, i));
+            true
+        });
+        assert_eq!(seen, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn cascading_events() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(1.0), Ev::Tick(0));
+        let mut count = 0u32;
+        e.run(&mut count, |c, eng, t, Ev::Tick(i)| {
+            *c += 1;
+            if i < 9 {
+                eng.schedule(t + SimDuration::from_ns(1.0), Ev::Tick(i + 1));
+            }
+            true
+        });
+        assert_eq!(count, 10);
+        assert_eq!(e.now(), SimTime::from_ns(10.0));
+        assert_eq!(e.processed(), 10);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut e: Engine<Ev> = Engine::new();
+        for i in 0..10 {
+            e.schedule(SimTime::from_ns(i as f64 * 10.0), Ev::Tick(i));
+        }
+        let mut seen = 0u32;
+        e.run_until(&mut seen, SimTime::from_ns(45.0), |s, _, _, _| *s += 1);
+        assert_eq!(seen, 5); // ticks at 0,10,20,30,40
+        assert_eq!(e.pending(), 5);
+        assert_eq!(e.now(), SimTime::from_ns(45.0));
+    }
+
+    #[test]
+    fn early_stop() {
+        let mut e: Engine<Ev> = Engine::new();
+        for i in 0..10 {
+            e.schedule(SimTime::from_ns(i as f64), Ev::Tick(i));
+        }
+        let mut seen = 0u32;
+        e.run(&mut seen, |s, _, _, _| {
+            *s += 1;
+            *s < 3
+        });
+        assert_eq!(seen, 3);
+        assert_eq!(e.pending(), 7);
+    }
+}

@@ -1,0 +1,24 @@
+//! Simulation substrate: deterministic time, events, randomness, statistics
+//! and occupancy-tracked resources.
+//!
+//! Two complementary modelling styles are built on this substrate (see
+//! DESIGN.md):
+//!
+//! * an event-driven layer (`Engine`) used by the NI protocol state
+//!   machines (packetizer timeouts, NACK retransmission, SMMU page-fault
+//!   replay) where protocol *behaviour* is the subject under test, and
+//! * a flow-level layer (`Resource`/`RateResource` occupancy) used by the
+//!   MPI/collective/application experiments where thousands of ranks and
+//!   megabyte transfers must stay cheap to simulate.
+
+pub mod engine;
+pub mod resources;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use engine::Engine;
+pub use resources::{RateResource, Resource};
+pub use rng::Rng;
+pub use stats::{LogHistogram, OnlineStats, Samples};
+pub use time::{SimDuration, SimTime, MS, NS, PS, SEC, US};

@@ -1,0 +1,231 @@
+//! Simulation time: unsigned picoseconds.
+//!
+//! Picosecond resolution keeps every calibration constant of the paper
+//! (13.3 ns switch crossings, 120 ns links, fractional-ns serialization
+//! times at 16 Gb/s) exactly representable while staying integral, which
+//! makes event ordering and resource arithmetic fully deterministic.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// One picosecond.
+pub const PS: u64 = 1;
+/// One nanosecond in picoseconds.
+pub const NS: u64 = 1_000;
+/// One microsecond in picoseconds.
+pub const US: u64 = 1_000_000;
+/// One millisecond in picoseconds.
+pub const MS: u64 = 1_000_000_000;
+/// One second in picoseconds.
+pub const SEC: u64 = 1_000_000_000_000;
+
+/// An absolute simulation timestamp (ps since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    #[inline]
+    pub fn from_ns(ns: f64) -> SimTime {
+        SimTime((ns * NS as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_us(us: f64) -> SimTime {
+        SimTime((us * US as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn ns(self) -> f64 {
+        self.0 as f64 / NS as f64
+    }
+
+    #[inline]
+    pub fn us(self) -> f64 {
+        self.0 as f64 / US as f64
+    }
+
+    #[inline]
+    pub fn secs(self) -> f64 {
+        self.0 as f64 / SEC as f64
+    }
+
+    #[inline]
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    #[inline]
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+
+    /// Saturating difference as a duration.
+    #[inline]
+    pub fn since(self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+/// A span of simulated time (ps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    #[inline]
+    pub fn from_ns(ns: f64) -> SimDuration {
+        SimDuration((ns * NS as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_us(us: f64) -> SimDuration {
+        SimDuration((us * US as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_secs(s: f64) -> SimDuration {
+        SimDuration((s * SEC as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn ns(self) -> f64 {
+        self.0 as f64 / NS as f64
+    }
+
+    #[inline]
+    pub fn us(self) -> f64 {
+        self.0 as f64 / US as f64
+    }
+
+    #[inline]
+    pub fn secs(self) -> f64 {
+        self.0 as f64 / SEC as f64
+    }
+
+    /// Serialization time of `bytes` on a `gbps` link (wire bits / rate).
+    #[inline]
+    pub fn serialize(bytes: u64, gbps: f64) -> SimDuration {
+        // bits / (Gb/s) = ns; ns * 1000 = ps
+        SimDuration(((bytes as f64 * 8.0 / gbps) * NS as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn scale(self, factor: f64) -> SimDuration {
+        SimDuration((self.0 as f64 * factor).round() as u64)
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: SimDuration) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    #[inline]
+    fn add(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimDuration {
+    type Output = SimDuration;
+    #[inline]
+    fn sub(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimDuration;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::iter::Sum for SimDuration {
+    fn sum<I: Iterator<Item = SimDuration>>(iter: I) -> SimDuration {
+        SimDuration(iter.map(|d| d.0).sum())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}us", self.us())
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= MS {
+            write!(f, "{:.3}ms", self.0 as f64 / MS as f64)
+        } else if self.0 >= US {
+            write!(f, "{:.3}us", self.us())
+        } else {
+            write!(f, "{:.1}ns", self.ns())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(SimTime::from_ns(120.0).0, 120 * NS);
+        assert_eq!(SimTime::from_us(1.293).0, 1_293_000);
+        assert!((SimTime(1_293_000).us() - 1.293).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serialization_time_16g() {
+        // 256 B at 16 Gb/s = 128 ns
+        let d = SimDuration::serialize(256, 16.0);
+        assert_eq!(d.0, 128 * NS);
+    }
+
+    #[test]
+    fn serialization_time_10g() {
+        // 288 B on the wire at 10 Gb/s = 230.4 ns
+        let d = SimDuration::serialize(288, 10.0);
+        assert_eq!(d.0, 230_400);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::ZERO + SimDuration::from_ns(100.0);
+        let t2 = t + SimDuration::from_ns(50.0);
+        assert_eq!((t2 - t).ns(), 50.0);
+        assert_eq!(t2.max(t), t2);
+        assert_eq!(t2.since(t).ns(), 50.0);
+        assert_eq!(t.since(t2), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimDuration::from_ns(5.0)), "5.0ns");
+        assert_eq!(format!("{}", SimDuration::from_us(2.5)), "2.500us");
+    }
+}

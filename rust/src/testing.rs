@@ -1,0 +1,51 @@
+//! Tiny property-testing helpers (the offline vendor set has no proptest):
+//! seeded random-case generation with failure reporting.  Used by the
+//! `proptests` integration suite.
+
+use crate::sim::Rng;
+
+/// Run `cases` random cases of `prop`, reporting the failing seed.
+/// Panics with the seed on the first failure so the case can be replayed.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9 ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("sum-commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_reports_seed() {
+        forall("always-fails", 10, |_| Err("nope".into()));
+    }
+}

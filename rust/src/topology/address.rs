@@ -1,0 +1,170 @@
+//! The 80-bit ExaNeSt Global Virtual Address (paper §4.3, Fig. 7).
+//!
+//! Layout (most significant first):
+//!   PDID (16 bits) | destination node (22 bits) | rank (3 bits) |
+//!   user-level virtual address (39 bits)
+//!
+//! The rank + VA fields compose a 42-bit node-level virtual address.
+
+/// Field widths.
+pub const PDID_BITS: u32 = 16;
+pub const NODE_BITS: u32 = 22;
+pub const RANK_BITS: u32 = 3;
+pub const VA_BITS: u32 = 39;
+/// Total width of a GVAS address.
+pub const GVAS_BITS: u32 = PDID_BITS + NODE_BITS + RANK_BITS + VA_BITS;
+
+pub const MAX_NODE: u32 = (1 << NODE_BITS) - 1;
+pub const MAX_RANK: u8 = (1 << RANK_BITS) - 1;
+pub const MAX_VA: u64 = (1 << VA_BITS) - 1;
+
+/// A decoded GVAS address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gvas {
+    /// Protection-domain id: virtual group of processes (up to 64 K groups).
+    pub pdid: u16,
+    /// Destination node (interconnect endpoint), up to 4 M nodes.
+    pub node: u32,
+    /// Local port: process / peripheral within the node (MPI rank slot).
+    pub rank: u8,
+    /// User-level virtual address within the rank's address space.
+    pub va: u64,
+}
+
+/// Errors from constructing or decoding GVAS addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GvasError {
+    NodeOutOfRange(u32),
+    RankOutOfRange(u8),
+    VaOutOfRange(u64),
+    RawOutOfRange,
+}
+
+impl std::fmt::Display for GvasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GvasError::NodeOutOfRange(n) => write!(f, "node {n} exceeds 22 bits"),
+            GvasError::RankOutOfRange(r) => write!(f, "rank {r} exceeds 3 bits"),
+            GvasError::VaOutOfRange(v) => write!(f, "VA {v:#x} exceeds 39 bits"),
+            GvasError::RawOutOfRange => write!(f, "raw value exceeds 80 bits"),
+        }
+    }
+}
+
+impl std::error::Error for GvasError {}
+
+impl Gvas {
+    pub fn new(pdid: u16, node: u32, rank: u8, va: u64) -> Result<Gvas, GvasError> {
+        if node > MAX_NODE {
+            return Err(GvasError::NodeOutOfRange(node));
+        }
+        if rank > MAX_RANK {
+            return Err(GvasError::RankOutOfRange(rank));
+        }
+        if va > MAX_VA {
+            return Err(GvasError::VaOutOfRange(va));
+        }
+        Ok(Gvas { pdid, node, rank, va })
+    }
+
+    /// Pack to the 80-bit wire representation (low 80 bits of the u128).
+    pub fn pack(self) -> u128 {
+        ((self.pdid as u128) << (NODE_BITS + RANK_BITS + VA_BITS))
+            | ((self.node as u128) << (RANK_BITS + VA_BITS))
+            | ((self.rank as u128) << VA_BITS)
+            | self.va as u128
+    }
+
+    /// Decode from the 80-bit wire representation.
+    pub fn unpack(raw: u128) -> Result<Gvas, GvasError> {
+        if raw >> GVAS_BITS != 0 {
+            return Err(GvasError::RawOutOfRange);
+        }
+        Ok(Gvas {
+            pdid: (raw >> (NODE_BITS + RANK_BITS + VA_BITS)) as u16,
+            node: ((raw >> (RANK_BITS + VA_BITS)) & MAX_NODE as u128) as u32,
+            rank: ((raw >> VA_BITS) & MAX_RANK as u128) as u8,
+            va: (raw & MAX_VA as u128) as u64,
+        })
+    }
+
+    /// Pack into the ten header bytes carried by every ExaNet packet.
+    pub fn to_bytes(self) -> [u8; 10] {
+        let raw = self.pack();
+        let mut out = [0u8; 10];
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = (raw >> (8 * (9 - i))) as u8;
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: [u8; 10]) -> Gvas {
+        let mut raw: u128 = 0;
+        for b in bytes {
+            raw = (raw << 8) | b as u128;
+        }
+        // 80 bits cannot exceed range by construction.
+        Gvas::unpack(raw).expect("10 bytes are exactly 80 bits")
+    }
+
+    /// The 42-bit node-level virtual address (rank ++ VA).
+    pub fn node_level_va(self) -> u64 {
+        ((self.rank as u64) << VA_BITS) | self.va
+    }
+}
+
+impl std::fmt::Display for Gvas {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gvas[pdid={:#06x} node={} rank={} va={:#011x}]",
+            self.pdid, self.node, self.rank, self.va
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_sum_to_80() {
+        assert_eq!(GVAS_BITS, 80);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = Gvas::new(0xBEEF, 0x3F_0F0F, 5, 0x3A_DEAD_BEEF).unwrap();
+        assert_eq!(Gvas::unpack(a.pack()).unwrap(), a);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let a = Gvas::new(1, 2, 3, 4).unwrap();
+        assert_eq!(Gvas::from_bytes(a.to_bytes()), a);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Gvas::new(0, MAX_NODE + 1, 0, 0).is_err());
+        assert!(Gvas::new(0, 0, MAX_RANK + 1, 0).is_err());
+        assert!(Gvas::new(0, 0, 0, MAX_VA + 1).is_err());
+        assert!(Gvas::unpack(1u128 << 80).is_err());
+    }
+
+    #[test]
+    fn field_placement() {
+        // pdid occupies the top 16 of 80 bits
+        let a = Gvas::new(0xFFFF, 0, 0, 0).unwrap();
+        assert_eq!(a.pack(), 0xFFFFu128 << 64);
+        // va occupies the low 39
+        let b = Gvas::new(0, 0, 0, MAX_VA).unwrap();
+        assert_eq!(b.pack(), MAX_VA as u128);
+    }
+
+    #[test]
+    fn node_level_va_is_42_bits() {
+        let a = Gvas::new(0, 0, MAX_RANK, MAX_VA).unwrap();
+        assert_eq!(a.node_level_va(), (1u64 << 42) - 1);
+    }
+}

@@ -1,0 +1,244 @@
+//! System description + the calibration constants of the timing model.
+//!
+//! Every constant is either quoted directly from the paper or derived from
+//! a measurement the paper reports; see DESIGN.md §4 for the provenance
+//! table.  Tests in `apps::osu` assert that the simulated end-to-end
+//! numbers land on the paper's measured values.
+
+use crate::sim::time::SimDuration;
+
+/// Shape and link rates of the ExaNeSt prototype.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of mezzanines (blades) populated; the paper's full HPC
+    /// prototype has 8 (two quad-blade groups).
+    pub mezzanines: usize,
+    /// QFDBs per mezzanine (X-ring): always 4 in the prototype.
+    pub qfdbs_per_mezz: usize,
+    /// MPSoCs (FPGAs) per QFDB: always 4 (F1 = Network, F3 = Storage).
+    pub fpgas_per_qfdb: usize,
+    /// ARM Cortex-A53 cores per MPSoC.
+    pub cores_per_fpga: usize,
+    /// Intra-QFDB MPSoC-to-MPSoC serial links (2x GTH): Gb/s per direction.
+    pub intra_qfdb_gbps: f64,
+    /// Inter-QFDB torus links (SFP+): Gb/s per direction.
+    pub torus_gbps: f64,
+    /// Calibrated timing model.
+    pub calib: Calib,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig::prototype()
+    }
+}
+
+impl SystemConfig {
+    /// The full-scale HPC prototype: 8 blades = 32 QFDBs = 128 MPSoCs
+    /// = 512 A53 cores (paper §4.1).
+    pub fn prototype() -> SystemConfig {
+        SystemConfig {
+            mezzanines: 8,
+            qfdbs_per_mezz: 4,
+            fpgas_per_qfdb: 4,
+            cores_per_fpga: 4,
+            intra_qfdb_gbps: 16.0,
+            torus_gbps: 10.0,
+            calib: Calib::default(),
+        }
+    }
+
+    /// A single-mezzanine testbed (4 QFDBs, 16 MPSoCs) — handy for tests.
+    pub fn mezzanine() -> SystemConfig {
+        SystemConfig { mezzanines: 1, ..SystemConfig::prototype() }
+    }
+
+    pub fn num_qfdbs(&self) -> usize {
+        self.mezzanines * self.qfdbs_per_mezz
+    }
+
+    pub fn num_mpsocs(&self) -> usize {
+        self.num_qfdbs() * self.fpgas_per_qfdb
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.num_mpsocs() * self.cores_per_fpga
+    }
+
+    /// Torus dimensions (X = QFDBs per blade, Y = blades per quad-blade
+    /// group, Z = quad-blade groups), per Fig. 6.
+    pub fn torus_dims(&self) -> (usize, usize, usize) {
+        let x = self.qfdbs_per_mezz;
+        let y = self.mezzanines.min(4);
+        let z = self.mezzanines.div_ceil(4);
+        (x, y, z)
+    }
+}
+
+/// Calibrated timing constants (provenance: DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct Calib {
+    /// HSS link propagation latency (paper: 1.293 us − 1.17 us = 120 ns).
+    pub link_latency: SimDuration,
+    /// ExaNet torus-router block latency L_ER ((409−120)/2 ≈ 145 ns).
+    pub router_latency: SimDuration,
+    /// Intra-FPGA input-queued switch: 2 cycles @ 150 MHz.
+    pub switch_latency: SimDuration,
+    /// PS<->PL copy of a small message (packetizer store / mailbox read).
+    pub ps_pl_copy: SimDuration,
+    /// Packetizer engine packet-formation time.
+    pub pktz_init: SimDuration,
+    /// ExaNet-MPI software processing per side for the eager path
+    /// (bookkeeping + transaction recording on the in-order A53).
+    pub mpi_sw: SimDuration,
+    /// Receiver-side match + CTS construction in the rendez-vous protocol.
+    pub cts_sw: SimDuration,
+    /// Eager/rendez-vous protocol switch point (paper: > 32 B rendez-vous).
+    pub eager_max_bytes: usize,
+    /// Packetizer maximum payload (one cell, paper: 56 B usable by MPI).
+    pub pktz_payload_max: usize,
+    /// R5 co-processor RDMA transaction startup (paper: 2-4 us).
+    pub r5_startup: SimDuration,
+    /// Per-16KB-block R5 handling when blocks are strictly sequential
+    /// (single outstanding message; calibrated to 2689.4 us @ 4 MB).
+    pub r5_block_gap: SimDuration,
+    /// Per-block link-side gap when transfers pipeline (osu_bw windowing;
+    /// calibrated to 13 Gb/s on the 16 Gb/s intra-QFDB link).
+    pub rdma_block_gap_pipelined: SimDuration,
+    /// RDMA transaction block size (paper §4.5: 16 KB).
+    pub rdma_block_bytes: usize,
+    /// ExaNet cell payload (paper §4.2: 256 B).
+    pub cell_payload: usize,
+    /// ExaNet cell control overhead (16 B header + 16 B footer).
+    pub cell_overhead: usize,
+    /// Extra per-cell occupancy of the inter-QFDB torus router (flow
+    /// control + control data; calibrated to 6.42 Gb/s on 10 Gb/s links).
+    pub torus_cell_gap: SimDuration,
+    /// AXI read/write channel bandwidth between NI and memory (128 bit
+    /// @ 150 MHz = 19.2 Gb/s per direction).
+    pub axi_gbps: f64,
+    /// Completion-notification write at the receiver.
+    pub notif_write: SimDuration,
+    /// Average polling delay until the receiver observes the notification.
+    pub notif_poll: SimDuration,
+    /// Per-node memory subsystem bandwidth cap shared by concurrent NI
+    /// streams (bidirectional tests); single DDR4 channel, minus refresh.
+    pub mem_gbps: f64,
+    /// MPI_Reduce_local cost: fixed + per-byte (A53, single lane).
+    pub reduce_fixed: SimDuration,
+    pub reduce_gbps: f64,
+    /// memcpy cost: fixed + per-byte (A53).
+    pub memcpy_fixed: SimDuration,
+    pub memcpy_gbps: f64,
+    /// Allreduce-accelerator constants (§4.7 / Fig 19), see accel module.
+    pub accel_init: SimDuration,
+    pub accel_client_dma: SimDuration,
+    pub accel_reduce_per_level: SimDuration,
+    pub accel_finish: SimDuration,
+    /// Packetizer hardware retransmission timeout.
+    pub pktz_timeout: SimDuration,
+    /// SMMU TLB miss: hardware page-table walk latency.
+    pub smmu_walk: SimDuration,
+    /// OS page-fault service time (interrupt + map + resume).
+    pub page_fault_service: SimDuration,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Calib {
+            link_latency: SimDuration::from_ns(120.0),
+            router_latency: SimDuration::from_ns(145.0),
+            switch_latency: SimDuration::from_ns(13.3),
+            ps_pl_copy: SimDuration::from_ns(110.0),
+            pktz_init: SimDuration::from_ns(100.0),
+            mpi_sw: SimDuration::from_ns(420.0),
+            cts_sw: SimDuration::from_ns(300.0),
+            eager_max_bytes: 32,
+            pktz_payload_max: 56,
+            r5_startup: SimDuration::from_us(2.6),
+            r5_block_gap: SimDuration::from_us(1.28),
+            rdma_block_gap_pipelined: SimDuration::from_us(0.85),
+            rdma_block_bytes: 16 * 1024,
+            cell_payload: 256,
+            cell_overhead: 32,
+            torus_cell_gap: SimDuration::from_ns(75.0),
+            axi_gbps: 19.2,
+            notif_write: SimDuration::from_ns(125.0),
+            notif_poll: SimDuration::from_ns(100.0),
+            mem_gbps: 24.6,
+            reduce_fixed: SimDuration::from_ns(600.0),
+            reduce_gbps: 9.6,
+            memcpy_fixed: SimDuration::from_ns(400.0),
+            memcpy_gbps: 19.2,
+            accel_init: SimDuration::from_us(2.2),
+            accel_client_dma: SimDuration::from_ns(300.0),
+            accel_reduce_per_level: SimDuration::from_ns(100.0),
+            accel_finish: SimDuration::from_ns(800.0),
+            pktz_timeout: SimDuration::from_us(10.0),
+            smmu_walk: SimDuration::from_ns(300.0),
+            page_fault_service: SimDuration::from_us(8.0),
+        }
+    }
+}
+
+impl Calib {
+    /// On-wire bytes for `payload` bytes of cell payload (16/18 framing).
+    pub fn wire_bytes(&self, payload: usize) -> u64 {
+        let cells = payload.div_ceil(self.cell_payload).max(1);
+        (payload + cells * self.cell_overhead) as u64
+    }
+
+    /// Number of ExaNet cells for a payload.
+    pub fn cells(&self, payload: usize) -> usize {
+        payload.div_ceil(self.cell_payload).max(1)
+    }
+
+    /// Number of RDMA 16 KB blocks for a transfer.
+    pub fn blocks(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.rdma_block_bytes).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototype_shape() {
+        let c = SystemConfig::prototype();
+        assert_eq!(c.num_qfdbs(), 32);
+        assert_eq!(c.num_mpsocs(), 128);
+        assert_eq!(c.num_cores(), 512);
+        assert_eq!(c.torus_dims(), (4, 4, 2));
+    }
+
+    #[test]
+    fn mezzanine_shape() {
+        let c = SystemConfig::mezzanine();
+        assert_eq!(c.num_qfdbs(), 4);
+        assert_eq!(c.num_mpsocs(), 16);
+        assert_eq!(c.torus_dims(), (4, 1, 1));
+    }
+
+    #[test]
+    fn framing_overhead() {
+        let c = Calib::default();
+        // 256 B payload -> one cell -> 288 B on the wire (16/18)
+        assert_eq!(c.wire_bytes(256), 288);
+        assert_eq!(c.cells(256), 1);
+        assert_eq!(c.cells(257), 2);
+        // empty control message still occupies one cell
+        assert_eq!(c.cells(0), 1);
+        // 16 KB block = 64 cells -> 18 KB wire
+        assert_eq!(c.wire_bytes(16 * 1024), 18 * 1024);
+    }
+
+    #[test]
+    fn blocks() {
+        let c = Calib::default();
+        assert_eq!(c.blocks(1), 1);
+        assert_eq!(c.blocks(16 * 1024), 1);
+        assert_eq!(c.blocks(16 * 1024 + 1), 2);
+        assert_eq!(c.blocks(4 * 1024 * 1024), 256);
+    }
+}

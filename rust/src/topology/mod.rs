@@ -1,0 +1,12 @@
+//! ExaNeSt system topology: GVAS addressing, the QFDB/blade/torus
+//! structure, and path computation + Table-1 classification.
+
+pub mod address;
+pub mod config;
+pub mod path;
+pub mod torus;
+
+pub use address::{Gvas, GvasError};
+pub use config::{Calib, SystemConfig};
+pub use path::{route, Hop, LinkId, Path, PathClass};
+pub use torus::{Dir, MpsocCoord, MpsocId, QfdbId, Topology, TorusCoord, NETWORK_FPGA, STORAGE_FPGA};

@@ -1,0 +1,332 @@
+//! End-to-end MPSoC paths and their Table-1 classification.
+//!
+//! A path between two MPSoCs is the ordered list of links it traverses
+//! plus the count of switch/router crossings, from which the network model
+//! computes base latency.  Traffic from a non-network MPSoC always funnels
+//! through its QFDB's F1 (paper §3.1/§4.1): F_src -> F1 -> torus ... ->
+//! F1 -> F_dst.
+
+use super::config::SystemConfig;
+use super::torus::{Dir, MpsocId, QfdbId, Topology, NETWORK_FPGA};
+
+/// A unidirectional physical link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkId {
+    /// Direct MPSoC-to-MPSoC link inside a QFDB (16 Gb/s, full mesh).
+    Intra { qfdb: QfdbId, from: usize, to: usize },
+    /// QFDB-level torus link leaving `qfdb` in direction `dir` (10 Gb/s).
+    Torus { qfdb: QfdbId, dir: Dir },
+}
+
+impl LinkId {
+    /// Dense index for resource vectors: intra links first, torus after.
+    pub fn flat(&self, cfg: &SystemConfig) -> usize {
+        let f = cfg.fpgas_per_qfdb;
+        match *self {
+            LinkId::Intra { qfdb, from, to } => {
+                (qfdb.0 as usize * f + from) * f + to
+            }
+            LinkId::Torus { qfdb, dir } => {
+                cfg.num_qfdbs() * f * f + qfdb.0 as usize * 6 + dir.index()
+            }
+        }
+    }
+
+    /// Total number of link slots for a config.
+    pub fn slots(cfg: &SystemConfig) -> usize {
+        let f = cfg.fpgas_per_qfdb;
+        cfg.num_qfdbs() * f * f + cfg.num_qfdbs() * 6
+    }
+
+    pub fn is_torus(&self) -> bool {
+        matches!(self, LinkId::Torus { .. })
+    }
+
+    /// Link rate in Gb/s.
+    pub fn gbps(&self, cfg: &SystemConfig) -> f64 {
+        match self {
+            LinkId::Intra { .. } => cfg.intra_qfdb_gbps,
+            LinkId::Torus { .. } => cfg.torus_gbps,
+        }
+    }
+}
+
+/// One traversed link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hop {
+    pub link: LinkId,
+}
+
+/// The Table-1 path classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathClass {
+    /// Both ranks on the same MPSoC (row (f) of Table 2).
+    IntraFpga,
+    /// (a) single intra-QFDB hop.
+    IntraQfdbSh,
+    /// (b) single intra-mezzanine hop (F1 to F1 of another QFDB).
+    IntraMezzSh,
+    /// (c)/(d) multi-hop within a mezzanine: total hop count 2 or 3.
+    IntraMezzMh(usize),
+    /// (e) Inter-mezz(i, j, k): i inter-mezzanine, j intra-mezzanine,
+    /// k intra-QFDB links.
+    InterMezz { i: usize, j: usize, k: usize },
+}
+
+impl std::fmt::Display for PathClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PathClass::IntraFpga => write!(f, "Intra-FPGA"),
+            PathClass::IntraQfdbSh => write!(f, "Intra-QFDB-sh"),
+            PathClass::IntraMezzSh => write!(f, "Intra-mezz-sh"),
+            PathClass::IntraMezzMh(h) => write!(f, "Intra-mezz-mh({h})"),
+            PathClass::InterMezz { i, j, k } => {
+                write!(f, "Inter-mezz({i},{j},{k})")
+            }
+        }
+    }
+}
+
+/// Maximum hops any path can take on the prototype torus:
+/// 2 intra-QFDB + 5 torus hops (4x4x2 rings) = 7; 8 leaves headroom.
+pub const MAX_HOPS: usize = 8;
+
+/// A fully-resolved path between two MPSoCs.
+///
+/// Hops are stored inline (`Copy`, no heap) — `route()` sits on the
+/// per-message hot path of every simulated MPI operation (§Perf log in
+/// EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct Path {
+    pub src: MpsocId,
+    pub dst: MpsocId,
+    hops_arr: [Hop; MAX_HOPS],
+    nhops: u8,
+    /// ExaNet torus routers traversed (network FPGAs the packet crosses).
+    pub routers: usize,
+    /// Intra-FPGA cut-through switches traversed.
+    pub switches: usize,
+}
+
+impl Path {
+    fn empty(src: MpsocId, dst: MpsocId) -> Path {
+        let dummy = Hop { link: LinkId::Intra { qfdb: QfdbId(0), from: 0, to: 0 } };
+        Path { src, dst, hops_arr: [dummy; MAX_HOPS], nhops: 0, routers: 0, switches: 1 }
+    }
+
+    fn push(&mut self, h: Hop) {
+        self.hops_arr[self.nhops as usize] = h;
+        self.nhops += 1;
+    }
+
+    /// The traversed links, in order.
+    pub fn hops(&self) -> &[Hop] {
+        &self.hops_arr[..self.nhops as usize]
+    }
+
+    /// Count of (inter-mezz, intra-mezz, intra-QFDB) links.
+    pub fn link_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for h in self.hops() {
+            match h.link {
+                LinkId::Torus { dir, .. } if !dir.is_intra_mezz() => c.0 += 1,
+                LinkId::Torus { .. } => c.1 += 1,
+                LinkId::Intra { .. } => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Table-1 classification.
+    pub fn class(&self) -> PathClass {
+        let (i, j, k) = self.link_counts();
+        if self.hops().is_empty() {
+            PathClass::IntraFpga
+        } else if i == 0 && j == 0 {
+            debug_assert_eq!(k, 1, "intra-QFDB paths are single-hop");
+            PathClass::IntraQfdbSh
+        } else if i == 0 && j == 1 && k == 0 {
+            PathClass::IntraMezzSh
+        } else if i == 0 {
+            PathClass::IntraMezzMh(j + k)
+        } else {
+            PathClass::InterMezz { i, j, k }
+        }
+    }
+
+    /// Bottleneck (lowest-rate) link, if any.
+    pub fn bottleneck_gbps(&self, cfg: &SystemConfig) -> Option<f64> {
+        self.hops()
+            .iter()
+            .map(|h| h.link.gbps(cfg))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+/// Compute the routed path between two MPSoCs.
+pub fn route(topo: &Topology, src: MpsocId, dst: MpsocId) -> Path {
+    let cs = topo.coord(src);
+    let cd = topo.coord(dst);
+    let qs = topo.qfdb_of(src);
+    let qd = topo.qfdb_of(dst);
+    // Sender always crosses its local input-queued switch.
+    let mut p = Path::empty(src, dst);
+
+    if src == dst {
+        return p;
+    }
+
+    if qs == qd {
+        // Direct intra-QFDB link (full mesh).
+        p.push(Hop { link: LinkId::Intra { qfdb: qs, from: cs.fpga, to: cd.fpga } });
+        p.switches += 1; // receiver-side switch
+        return p;
+    }
+
+    // Funnel to the local Network MPSoC if needed.
+    if cs.fpga != NETWORK_FPGA {
+        p.push(Hop {
+            link: LinkId::Intra { qfdb: qs, from: cs.fpga, to: NETWORK_FPGA },
+        });
+        p.switches += 1;
+    }
+    // Torus hops; the packet crosses the router of every network FPGA on
+    // the way, including both endpoints' F1 (paper: N hops -> N+1 routers).
+    let dirs = topo.qfdb_route(qs, qd);
+    let mut q = qs;
+    p.routers += 1; // source-side F1 router
+    for d in dirs {
+        p.push(Hop { link: LinkId::Torus { qfdb: q, dir: d } });
+        q = topo.qfdb_neighbor(q, d);
+        p.routers += 1;
+    }
+    debug_assert_eq!(q, qd);
+    // Fan out from the destination's F1 if needed.
+    if cd.fpga != NETWORK_FPGA {
+        p.push(Hop {
+            link: LinkId::Intra { qfdb: qd, from: NETWORK_FPGA, to: cd.fpga },
+        });
+        p.switches += 1;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::config::SystemConfig;
+
+    fn topo() -> Topology {
+        Topology::new(SystemConfig::prototype())
+    }
+
+    #[test]
+    fn intra_fpga() {
+        let t = topo();
+        let a = t.mpsoc(0, 0, 1);
+        let p = route(&t, a, a);
+        assert_eq!(p.class(), PathClass::IntraFpga);
+        assert!(p.hops().is_empty());
+        assert_eq!(p.switches, 1);
+        assert_eq!(p.routers, 0);
+    }
+
+    #[test]
+    fn table1_row_a_intra_qfdb() {
+        // M1QAF1 - M1QAF2
+        let t = topo();
+        let p = route(&t, t.mpsoc(0, 0, 0), t.mpsoc(0, 0, 1));
+        assert_eq!(p.class(), PathClass::IntraQfdbSh);
+        assert_eq!(p.hops().len(), 1);
+        assert_eq!(p.routers, 0);
+        assert_eq!(p.bottleneck_gbps(&t.cfg), Some(16.0));
+    }
+
+    #[test]
+    fn table1_row_b_intra_mezz_sh() {
+        // M1QAF1 - M1QBF1: network FPGAs of adjacent QFDBs, one 10G link
+        let t = topo();
+        let p = route(&t, t.mpsoc(0, 0, 0), t.mpsoc(0, 1, 0));
+        assert_eq!(p.class(), PathClass::IntraMezzSh);
+        assert_eq!(p.hops().len(), 1);
+        assert_eq!(p.routers, 2, "N+1 routers for N torus hops");
+        assert_eq!(p.bottleneck_gbps(&t.cfg), Some(10.0));
+    }
+
+    #[test]
+    fn table1_row_c_intra_mezz_mh2() {
+        // M1QAF1 - M1QBF2: one 10G + one 16G
+        let t = topo();
+        let p = route(&t, t.mpsoc(0, 0, 0), t.mpsoc(0, 1, 1));
+        assert_eq!(p.class(), PathClass::IntraMezzMh(2));
+        let (i, j, k) = p.link_counts();
+        assert_eq!((i, j, k), (0, 1, 1));
+    }
+
+    #[test]
+    fn table1_row_d_intra_mezz_mh3() {
+        // M1QAF2 - M1QBF3: 16G + 10G + 16G
+        let t = topo();
+        let p = route(&t, t.mpsoc(0, 0, 1), t.mpsoc(0, 1, 2));
+        assert_eq!(p.class(), PathClass::IntraMezzMh(3));
+        let (i, j, k) = p.link_counts();
+        assert_eq!((i, j, k), (0, 1, 2));
+    }
+
+    #[test]
+    fn table1_row_e_inter_mezz() {
+        // Different mezzanines, F1 to F1
+        let t = topo();
+        let p = route(&t, t.mpsoc(0, 0, 0), t.mpsoc(1, 0, 0));
+        match p.class() {
+            PathClass::InterMezz { i, j, k } => {
+                assert_eq!(i, 1);
+                assert_eq!(j, 0);
+                assert_eq!(k, 0);
+            }
+            c => panic!("wrong class {c}"),
+        }
+    }
+
+    #[test]
+    fn longest_paper_path_inter_mezz_312() {
+        // Fig 14 right-most bar: Inter-mezz(3,1,2) — build one such pair:
+        // non-F1 to non-F1, X distance 1, Y+Z distance 3.
+        let t = topo();
+        // mezz 0 (y=0,z=0) -> mezz 6 (y=2,z=1): ring distance y=2, z=1 = 3
+        let p = route(&t, t.mpsoc(0, 0, 1), t.mpsoc(6, 1, 2));
+        match p.class() {
+            PathClass::InterMezz { i, j, k } => {
+                assert_eq!(i, 3, "{p:?}");
+                assert_eq!(j, 1);
+                assert_eq!(k, 2);
+            }
+            c => panic!("wrong class {c}"),
+        }
+        // 4 torus hops -> 5 routers (the paper's 5 * L_ER term)
+        assert_eq!(p.routers, 5);
+        assert_eq!(p.hops().len(), 6);
+    }
+
+    #[test]
+    fn flat_link_ids_unique() {
+        let t = topo();
+        let cfg = &t.cfg;
+        let mut seen = std::collections::HashSet::new();
+        for a in t.all_mpsocs() {
+            for b in [MpsocId(0), MpsocId(17), MpsocId(63), MpsocId(127)] {
+                for h in route(&t, a, b).hops().iter().copied() {
+                    let idx = h.link.flat(cfg);
+                    assert!(idx < LinkId::slots(cfg));
+                    seen.insert((h.link, idx));
+                }
+            }
+        }
+        // every distinct link got a distinct flat index
+        let links: std::collections::HashSet<_> =
+            seen.iter().map(|(l, _)| *l).collect();
+        let idxs: std::collections::HashSet<_> =
+            seen.iter().map(|(_, i)| *i).collect();
+        assert_eq!(links.len(), idxs.len());
+    }
+}

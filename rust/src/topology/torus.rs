@@ -1,0 +1,280 @@
+//! Node identifiers and the 3D-torus QFDB-level topology (paper Fig. 6).
+//!
+//! Inside a QFDB the four MPSoCs are fully connected with 16 Gb/s links;
+//! only F1 (the "Network MPSoC") has external connectivity.  QFDBs form a
+//! 3D torus: X = ring of 4 QFDBs inside a blade (intra-mezzanine 10 Gb/s),
+//! Y = ring across the 4 blades of a quad-blade group, Z = ring between
+//! groups (both inter-mezzanine 10 Gb/s).  The torus router uses
+//! dimension-ordered (X, then Y, then Z) routing, which is deadlock-free
+//! with the prototype's VC-less rings of size <= 4.
+
+use super::config::SystemConfig;
+
+/// Index of the Network MPSoC within a QFDB.
+pub const NETWORK_FPGA: usize = 0;
+/// Index of the Storage MPSoC within a QFDB (NVMe over PS-GTR).
+pub const STORAGE_FPGA: usize = 2;
+
+/// Flat identifier of one MPSoC (one interconnect endpoint / GVAS node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MpsocId(pub u32);
+
+/// Flat identifier of one QFDB.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QfdbId(pub u32);
+
+/// Decomposed MPSoC coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MpsocCoord {
+    /// Mezzanine (blade) index.
+    pub mezz: usize,
+    /// QFDB index within the blade (0..4).
+    pub qfdb: usize,
+    /// FPGA index within the QFDB (0..4); 0 = F1 Network MPSoC.
+    pub fpga: usize,
+}
+
+/// QFDB position on the torus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TorusCoord {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+/// A torus direction (one of the six QFDB-level ports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    XPlus,
+    XMinus,
+    YPlus,
+    YMinus,
+    ZPlus,
+    ZMinus,
+}
+
+impl Dir {
+    pub fn index(self) -> usize {
+        match self {
+            Dir::XPlus => 0,
+            Dir::XMinus => 1,
+            Dir::YPlus => 2,
+            Dir::YMinus => 3,
+            Dir::ZPlus => 4,
+            Dir::ZMinus => 5,
+        }
+    }
+
+    /// X hops stay inside the mezzanine; Y/Z cross mezzanines.
+    pub fn is_intra_mezz(self) -> bool {
+        matches!(self, Dir::XPlus | Dir::XMinus)
+    }
+}
+
+/// Topology math for a given system configuration.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: SystemConfig,
+}
+
+impl Topology {
+    pub fn new(cfg: SystemConfig) -> Topology {
+        Topology { cfg }
+    }
+
+    // ---- id <-> coordinate conversions ---------------------------------
+
+    pub fn mpsoc(&self, mezz: usize, qfdb: usize, fpga: usize) -> MpsocId {
+        debug_assert!(mezz < self.cfg.mezzanines);
+        debug_assert!(qfdb < self.cfg.qfdbs_per_mezz);
+        debug_assert!(fpga < self.cfg.fpgas_per_qfdb);
+        MpsocId(
+            ((mezz * self.cfg.qfdbs_per_mezz + qfdb) * self.cfg.fpgas_per_qfdb
+                + fpga) as u32,
+        )
+    }
+
+    pub fn coord(&self, id: MpsocId) -> MpsocCoord {
+        let f = self.cfg.fpgas_per_qfdb;
+        let q = self.cfg.qfdbs_per_mezz;
+        let i = id.0 as usize;
+        MpsocCoord { mezz: i / (f * q), qfdb: (i / f) % q, fpga: i % f }
+    }
+
+    pub fn qfdb_of(&self, id: MpsocId) -> QfdbId {
+        QfdbId(id.0 / self.cfg.fpgas_per_qfdb as u32)
+    }
+
+    pub fn qfdb_coord(&self, q: QfdbId) -> TorusCoord {
+        let per = self.cfg.qfdbs_per_mezz;
+        let mezz = q.0 as usize / per;
+        TorusCoord { x: q.0 as usize % per, y: mezz % 4, z: mezz / 4 }
+    }
+
+    pub fn qfdb_at(&self, c: TorusCoord) -> QfdbId {
+        let mezz = c.z * 4 + c.y;
+        QfdbId((mezz * self.cfg.qfdbs_per_mezz + c.x) as u32)
+    }
+
+    /// The Network MPSoC (F1) of a QFDB.
+    pub fn network_mpsoc(&self, q: QfdbId) -> MpsocId {
+        MpsocId(q.0 * self.cfg.fpgas_per_qfdb as u32 + NETWORK_FPGA as u32)
+    }
+
+    pub fn all_mpsocs(&self) -> impl Iterator<Item = MpsocId> {
+        (0..self.cfg.num_mpsocs() as u32).map(MpsocId)
+    }
+
+    // ---- torus routing --------------------------------------------------
+
+    /// Ring distance and first-step direction from a to b on a ring of n,
+    /// choosing the shorter way (ties go to the + direction, like the
+    /// prototype's static DOR tables).
+    fn ring_step(a: usize, b: usize, n: usize) -> Option<(bool, usize)> {
+        if a == b {
+            return None;
+        }
+        let fwd = (b + n - a) % n;
+        let bwd = (a + n - b) % n;
+        Some(if fwd <= bwd { (true, fwd) } else { (false, bwd) })
+    }
+
+    /// Dimension-ordered route between two QFDBs: the sequence of torus
+    /// directions taken (X first, then Y, then Z).
+    pub fn qfdb_route(&self, from: QfdbId, to: QfdbId) -> Vec<Dir> {
+        let (nx, ny, nz) = self.cfg.torus_dims();
+        let mut c = self.qfdb_coord(from);
+        let d = self.qfdb_coord(to);
+        let mut dirs = Vec::new();
+        while c.x != d.x {
+            let (plus, _) = Self::ring_step(c.x, d.x, nx).unwrap();
+            dirs.push(if plus { Dir::XPlus } else { Dir::XMinus });
+            c.x = if plus { (c.x + 1) % nx } else { (c.x + nx - 1) % nx };
+        }
+        while c.y != d.y {
+            let (plus, _) = Self::ring_step(c.y, d.y, ny).unwrap();
+            dirs.push(if plus { Dir::YPlus } else { Dir::YMinus });
+            c.y = if plus { (c.y + 1) % ny } else { (c.y + ny - 1) % ny };
+        }
+        while c.z != d.z {
+            let (plus, _) = Self::ring_step(c.z, d.z, nz).unwrap();
+            dirs.push(if plus { Dir::ZPlus } else { Dir::ZMinus });
+            c.z = if plus { (c.z + 1) % nz } else { (c.z + nz - 1) % nz };
+        }
+        dirs
+    }
+
+    /// The QFDB reached by taking `dir` from `q`.
+    pub fn qfdb_neighbor(&self, q: QfdbId, dir: Dir) -> QfdbId {
+        let (nx, ny, nz) = self.cfg.torus_dims();
+        let mut c = self.qfdb_coord(q);
+        match dir {
+            Dir::XPlus => c.x = (c.x + 1) % nx,
+            Dir::XMinus => c.x = (c.x + nx - 1) % nx,
+            Dir::YPlus => c.y = (c.y + 1) % ny,
+            Dir::YMinus => c.y = (c.y + ny - 1) % ny,
+            Dir::ZPlus => c.z = (c.z + 1) % nz,
+            Dir::ZMinus => c.z = (c.z + nz - 1) % nz,
+        }
+        self.qfdb_at(c)
+    }
+
+    /// Torus (manhattan-on-rings) distance between two QFDBs.
+    pub fn qfdb_distance(&self, a: QfdbId, b: QfdbId) -> usize {
+        let (nx, ny, nz) = self.cfg.torus_dims();
+        let ca = self.qfdb_coord(a);
+        let cb = self.qfdb_coord(b);
+        let ring = |a: usize, b: usize, n: usize| {
+            Self::ring_step(a, b, n).map_or(0, |(_, d)| d)
+        };
+        ring(ca.x, cb.x, nx) + ring(ca.y, cb.y, ny) + ring(ca.z, cb.z, nz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(SystemConfig::prototype())
+    }
+
+    #[test]
+    fn id_coord_roundtrip() {
+        let t = topo();
+        for id in t.all_mpsocs() {
+            let c = t.coord(id);
+            assert_eq!(t.mpsoc(c.mezz, c.qfdb, c.fpga), id);
+        }
+    }
+
+    #[test]
+    fn qfdb_coord_roundtrip() {
+        let t = topo();
+        for q in 0..t.cfg.num_qfdbs() as u32 {
+            let c = t.qfdb_coord(QfdbId(q));
+            assert_eq!(t.qfdb_at(c), QfdbId(q));
+        }
+    }
+
+    #[test]
+    fn route_reaches_destination() {
+        let t = topo();
+        for a in 0..t.cfg.num_qfdbs() as u32 {
+            for b in 0..t.cfg.num_qfdbs() as u32 {
+                let mut cur = QfdbId(a);
+                for d in t.qfdb_route(QfdbId(a), QfdbId(b)) {
+                    cur = t.qfdb_neighbor(cur, d);
+                }
+                assert_eq!(cur, QfdbId(b));
+            }
+        }
+    }
+
+    #[test]
+    fn route_length_is_torus_distance() {
+        let t = topo();
+        for a in 0..t.cfg.num_qfdbs() as u32 {
+            for b in 0..t.cfg.num_qfdbs() as u32 {
+                assert_eq!(
+                    t.qfdb_route(QfdbId(a), QfdbId(b)).len(),
+                    t.qfdb_distance(QfdbId(a), QfdbId(b)),
+                    "{a} -> {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_torus_distance_in_prototype() {
+        // 4x4x2 torus: max ring distances 2 + 2 + 1 = 5 QFDB hops
+        let t = topo();
+        let max = (0..32)
+            .flat_map(|a| (0..32).map(move |b| (a, b)))
+            .map(|(a, b)| t.qfdb_distance(QfdbId(a), QfdbId(b)))
+            .max()
+            .unwrap();
+        assert_eq!(max, 5);
+    }
+
+    #[test]
+    fn x_hops_are_intra_mezz() {
+        let t = topo();
+        // QFDB 0 and 2 share a blade: route is all-X
+        for d in t.qfdb_route(QfdbId(0), QfdbId(2)) {
+            assert!(d.is_intra_mezz());
+        }
+        // QFDB 0 and QFDB 4 (next blade): all-Y
+        for d in t.qfdb_route(QfdbId(0), QfdbId(4)) {
+            assert!(!d.is_intra_mezz());
+        }
+    }
+
+    #[test]
+    fn network_mpsoc_is_f1() {
+        let t = topo();
+        let n = t.network_mpsoc(QfdbId(3));
+        assert_eq!(t.coord(n).fpga, NETWORK_FPGA);
+        assert_eq!(t.qfdb_of(n), QfdbId(3));
+    }
+}

@@ -1,0 +1,137 @@
+//! Cross-module integration tests: the whole simulated machine exercised
+//! end to end (fabric + NI + MPI + collectives + apps + accelerators).
+
+use exanest::accel::AccelAllreduce;
+use exanest::apps::osu::{self, OsuPath};
+use exanest::apps::scaling::{scaling_curve, AppParams, Mode};
+use exanest::ip::{iperf, IpMode, Scenario, TunnelConfig};
+use exanest::model;
+use exanest::mpi::{collectives, pt2pt, Placement, World};
+use exanest::topology::SystemConfig;
+
+fn cfg() -> SystemConfig {
+    SystemConfig::prototype()
+}
+
+#[test]
+fn paper_headline_numbers() {
+    // The abstract's numbers, in one test:
+    // single-hop one-way 1.3 us; ~0.47 us NI+library; 2.55 us at 5 hops;
+    // 82% link utilisation; allreduce accelerator up to 88%; efficiency
+    // >= 69% everywhere.
+    let c = cfg();
+    let l1 = osu::osu_latency(&c, OsuPath::IntraQfdbSh, 0, 50).us();
+    assert!((l1 - 1.3).abs() < 0.1, "single-hop {l1}");
+    let l5 = osu::osu_latency(&c, OsuPath::InterMezz312, 0, 50).us();
+    assert!((l5 - 2.55).abs() < 0.35, "five-hop {l5}");
+    let mut fab = exanest::network::Fabric::new(c.clone());
+    let a = fab.topo.mpsoc(0, 0, 0);
+    let b = fab.topo.mpsoc(0, 0, 1);
+    let hw = exanest::ni::hw_pingpong(&mut fab, a, b, 1000).ns();
+    assert!((hw - 470.0).abs() < 40.0, "hw ping-pong {hw}");
+    let util = osu::osu_bw(&c, OsuPath::IntraQfdbSh, 4 << 20, 64) / 16.0;
+    assert!((util - 0.819).abs() < 0.03, "link utilisation {util}");
+}
+
+#[test]
+fn full_machine_barrier_and_collectives() {
+    let mut w = World::new(cfg(), 512, Placement::PerCore);
+    let b = collectives::barrier(&mut w);
+    assert!(b.us() > 2.0 && b.us() < 100.0, "barrier {b}");
+    w.reset();
+    let g = collectives::gather(&mut w, 64);
+    assert!(g.us() > 5.0, "gather {g}");
+    w.reset();
+    let ag = collectives::allgather(&mut w, 64);
+    assert!(ag > g, "allgather {ag} should exceed gather {g}");
+}
+
+#[test]
+fn every_table1_class_reachable_and_ordered() {
+    let c = cfg();
+    let mut last = 0.0;
+    for p in OsuPath::ALL {
+        let lat = osu::osu_latency(&c, p, 0, 20).us();
+        assert!(lat > last, "{}: {lat} not > {last}", p.label());
+        last = lat;
+    }
+}
+
+#[test]
+fn rendezvous_and_eager_consistent_across_machine() {
+    // send_recv between all pairs of a sample must be finite, positive,
+    // and larger for bigger payloads
+    let mut w = World::new(cfg(), 512, Placement::PerCore);
+    for &dst in &[1usize, 5, 77, 311, 511] {
+        let e = pt2pt::send_recv(&mut w, 0, dst, 8);
+        w.reset();
+        let r = pt2pt::send_recv(&mut w, 0, dst, 64 * 1024);
+        assert!(r.recv_done > e.recv_done, "dst {dst}");
+        w.reset();
+    }
+}
+
+#[test]
+fn accelerator_beats_software_for_fig19_range() {
+    let c = cfg();
+    for n in [16usize, 32, 64, 128] {
+        for s in [4usize, 256, 1024, 4096] {
+            let sw = osu::osu_allreduce(&c, n, s, 3, Placement::PerMpsoc);
+            let mut w = World::new(c.clone(), n, Placement::PerMpsoc);
+            let hw = AccelAllreduce::latency(&mut w, s);
+            assert!(hw < sw, "{n} ranks {s} B: hw {hw} vs sw {sw}");
+        }
+    }
+}
+
+#[test]
+fn accelerator_improvement_is_paper_magnitude() {
+    // paper: max improvement 83.4-87.9% over the four rank counts
+    let c = cfg();
+    for n in [16usize, 32, 64, 128] {
+        let mut best = 0.0f64;
+        for s in [256usize, 1024, 4096] {
+            let sw = osu::osu_allreduce(&c, n, s, 3, Placement::PerMpsoc);
+            let mut w = World::new(c.clone(), n, Placement::PerMpsoc);
+            let hw = AccelAllreduce::latency(&mut w, s);
+            best = best.max(1.0 - hw.ns() / sw.ns());
+        }
+        assert!(best > 0.80 && best < 0.97, "{n} ranks: improvement {best}");
+    }
+}
+
+#[test]
+fn ip_overlay_reproduces_fig13_shape() {
+    let tc = TunnelConfig::default();
+    for s in Scenario::ALL {
+        assert!(iperf(&tc, s, IpMode::Overlay, 5) > iperf(&tc, s, IpMode::Baseline, 5));
+    }
+}
+
+#[test]
+fn eq1_model_inputs_match_measurements() {
+    let c = cfg();
+    let lats = model::one_way_lats(&c, 1);
+    assert!(lats.mpsoc < lats.qfdb && lats.qfdb < lats.mezz);
+}
+
+#[test]
+fn scaling_curves_are_complete_and_sane() {
+    let c = cfg();
+    let app = AppParams::hpcg();
+    let pts = scaling_curve(&c, &app, Mode::Weak, &[1, 2, 4, 8]);
+    assert_eq!(pts.len(), 4);
+    assert!((pts[0].efficiency - 1.0).abs() < 1e-9, "1-rank eff must be 1.0");
+    for p in &pts {
+        assert!(p.time_s > 0.0 && p.comm_fraction < 0.6);
+    }
+}
+
+#[test]
+fn mezzanine_testbed_also_works() {
+    // the smaller air-cooled subsystem: 1 mezzanine, 4 QFDBs
+    let c = SystemConfig::mezzanine();
+    let mut w = World::new(c, 64, Placement::PerCore);
+    let lat = collectives::bcast(&mut w, 1);
+    assert!(lat.us() > 1.0 && lat.us() < 50.0, "{lat}");
+}

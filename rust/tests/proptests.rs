@@ -1,0 +1,208 @@
+//! Property-based tests over the simulator invariants, using the
+//! `exanest::testing::forall` harness (no offline proptest crate; same
+//! seeded-generate / replayable-failure discipline).
+
+use exanest::mpi::collectives::{bcast_schedule, recursive_doubling_schedule};
+use exanest::mpi::{pt2pt, Placement, World};
+use exanest::prop_assert;
+use exanest::sim::{Resource, SimDuration, SimTime};
+use exanest::testing::forall;
+use exanest::topology::{route, Gvas, QfdbId, SystemConfig, Topology};
+
+#[test]
+fn prop_gvas_roundtrip() {
+    forall("gvas pack/unpack roundtrip", 500, |rng| {
+        let g = Gvas::new(
+            rng.below(1 << 16) as u16,
+            rng.below(1 << 22) as u32,
+            rng.below(1 << 3) as u8,
+            rng.below(1 << 39),
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(Gvas::unpack(g.pack()) == Ok(g), "u128 roundtrip {g}");
+        prop_assert!(Gvas::from_bytes(g.to_bytes()) == g, "byte roundtrip {g}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_reaches_and_matches_distance() {
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("DOR route reaches dst with torus distance", 300, |rng| {
+        let n = topo.cfg.num_qfdbs() as u64;
+        let a = QfdbId(rng.below(n) as u32);
+        let b = QfdbId(rng.below(n) as u32);
+        let dirs = topo.qfdb_route(a, b);
+        let mut cur = a;
+        for d in &dirs {
+            cur = topo.qfdb_neighbor(cur, *d);
+        }
+        prop_assert!(cur == b, "route {a:?}->{b:?} ended at {cur:?}");
+        prop_assert!(
+            dirs.len() == topo.qfdb_distance(a, b),
+            "route len {} != distance {}",
+            dirs.len(),
+            topo.qfdb_distance(a, b)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_is_dimension_ordered() {
+    // deadlock freedom rests on X-then-Y-then-Z ordering
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("routes are dimension ordered", 300, |rng| {
+        let n = topo.cfg.num_qfdbs() as u64;
+        let a = QfdbId(rng.below(n) as u32);
+        let b = QfdbId(rng.below(n) as u32);
+        let dirs = topo.qfdb_route(a, b);
+        let phase = |d: &exanest::topology::Dir| match d {
+            exanest::topology::Dir::XPlus | exanest::topology::Dir::XMinus => 0,
+            exanest::topology::Dir::YPlus | exanest::topology::Dir::YMinus => 1,
+            _ => 2,
+        };
+        let phases: Vec<i32> = dirs.iter().map(phase).collect();
+        let mut sorted = phases.clone();
+        sorted.sort();
+        prop_assert!(phases == sorted, "not dimension ordered: {phases:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_path_hops_and_routers_consistent() {
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("path router count = torus hops + 1 (when any)", 300, |rng| {
+        let n = topo.cfg.num_mpsocs() as u64;
+        let a = exanest::topology::MpsocId(rng.below(n) as u32);
+        let b = exanest::topology::MpsocId(rng.below(n) as u32);
+        let p = route(&topo, a, b);
+        let torus_hops = p.hops().iter().filter(|h| h.link.is_torus()).count();
+        if torus_hops > 0 {
+            prop_assert!(
+                p.routers == torus_hops + 1,
+                "{a:?}->{b:?}: {} routers for {torus_hops} torus hops",
+                p.routers
+            );
+        } else {
+            prop_assert!(p.routers == 0, "intra-QFDB path has routers");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bcast_schedule_covers_all_once() {
+    forall("binomial bcast covers each rank exactly once", 200, |rng| {
+        let n = rng.range(2, 700) as usize;
+        let mut got = vec![false; n];
+        got[0] = true;
+        for step in bcast_schedule(n) {
+            for (s, d) in step {
+                prop_assert!(got[s], "n={n}: {s} sends before covered");
+                prop_assert!(!got[d], "n={n}: {d} covered twice");
+                got[d] = true;
+            }
+        }
+        prop_assert!(got.iter().all(|&x| x), "n={n}: not all covered");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recursive_doubling_is_allreduce() {
+    // executing the schedule with real vectors yields the global sum on
+    // every rank
+    forall("recursive doubling computes the global sum", 100, |rng| {
+        let n = 1usize << rng.range(1, 6);
+        let mut vals: Vec<i64> = (0..n).map(|_| rng.below(1000) as i64).collect();
+        let want: i64 = vals.iter().sum();
+        for step in recursive_doubling_schedule(n) {
+            let mut next = vals.clone();
+            for (a, b) in step {
+                let s = vals[a] + vals[b];
+                next[a] = s;
+                next[b] = s;
+            }
+            vals = next;
+        }
+        prop_assert!(vals.iter().all(|&v| v == want), "n={n}: {vals:?} != {want}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resource_fifo_and_conservation() {
+    forall("resource occupancy is FIFO + work conserving", 200, |rng| {
+        let mut r = Resource::new();
+        let mut total = 0u64;
+        let mut last_end = SimTime::ZERO;
+        for _ in 0..20 {
+            let at = SimTime(rng.below(1_000_000));
+            let dur = SimDuration(rng.below(10_000) + 1);
+            let (start, end) = r.acquire(at, dur);
+            prop_assert!(start >= at, "start before request");
+            prop_assert!(start >= last_end, "overlapping grants");
+            prop_assert!(end.0 - start.0 == dur.0, "duration mangled");
+            last_end = end;
+            total += dur.0;
+        }
+        prop_assert!(r.busy_time().0 == total, "busy time drifted");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eager_latency_monotone_in_distance() {
+    let cfg = SystemConfig::prototype();
+    forall("pt2pt latency grows with torus distance", 60, |rng| {
+        let topo = Topology::new(cfg.clone());
+        let qa = QfdbId(rng.below(32) as u32);
+        let qb = QfdbId(rng.below(32) as u32);
+        let da = topo.qfdb_distance(QfdbId(0), qa);
+        let db = topo.qfdb_distance(QfdbId(0), qb);
+        if da == db {
+            return Ok(());
+        }
+        let mut w = World::new(cfg.clone(), 128, Placement::PerMpsoc);
+        let ra = (qa.0 * 4) as usize;
+        let rb = (qb.0 * 4) as usize;
+        if ra == 0 || rb == 0 {
+            return Ok(());
+        }
+        let la = pt2pt::send_recv(&mut w, 0, ra, 0).recv_done;
+        w.reset();
+        let lb = pt2pt::send_recv(&mut w, 0, rb, 0).recv_done;
+        let (near, far) = if da < db { (la, lb) } else { (lb, la) };
+        prop_assert!(near <= far, "distance {da} vs {db}: {near:?} vs {far:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_send_recv_never_goes_backwards() {
+    let cfg = SystemConfig::prototype();
+    forall("clocks are monotone under random traffic", 40, |rng| {
+        let mut w = World::new(cfg.clone(), 64, Placement::PerCore);
+        for _ in 0..50 {
+            let a = rng.below(64) as usize;
+            let b = rng.below(64) as usize;
+            if a == b {
+                continue;
+            }
+            let before = (w.clocks[a], w.clocks[b]);
+            let bytes = match rng.below(3) {
+                0 => 8,
+                1 => 4096,
+                _ => 128 * 1024,
+            };
+            let r = pt2pt::send_recv(&mut w, a, b, bytes as usize);
+            prop_assert!(w.clocks[a] >= before.0, "sender clock regressed");
+            prop_assert!(w.clocks[b] >= before.1, "receiver clock regressed");
+            prop_assert!(r.recv_done >= r.send_done || bytes <= 32,
+                "recv before send done for rendezvous");
+        }
+        Ok(())
+    });
+}

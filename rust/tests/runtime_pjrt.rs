@@ -1,0 +1,145 @@
+//! Runtime tests against the real AOT artifacts (requires `make artifacts`,
+//! which the Makefile runs before cargo test).
+
+use exanest::runtime::Executor;
+use exanest::sim::Rng;
+
+fn exec() -> Executor {
+    Executor::open_default().expect("artifacts built (run `make artifacts`)")
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let e = exec();
+    for name in [
+        "matmul_tile128",
+        "matmul_256",
+        "matmul_512",
+        "allreduce_sum_f32_64",
+        "allreduce_min_f32_64",
+        "allreduce_max_f32_64",
+        "allreduce_sum_f64_32",
+        "allreduce_sum_i32_64",
+        "allreduce_sum_f32_1024",
+        "cg_pre_8",
+        "cg_post_8",
+        "cg_update_p_8",
+        "cg_pre_24",
+        "cg_pre_48",
+    ] {
+        assert!(e.entry(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn matmul_tile_identity() {
+    let mut e = exec();
+    let n = 128;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let x: Vec<f32> = (0..n * n).map(|i| (i % 13) as f32 - 6.0).collect();
+    let out = e.run_f32("matmul_tile128", &[&eye, &x]).unwrap();
+    assert_eq!(out[0], x, "I @ X != X");
+}
+
+#[test]
+fn allreduce_alu_ops() {
+    let mut e = exec();
+    let a: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..64).map(|i| 63.0 - i as f32).collect();
+    let sum = e.run_f32("allreduce_sum_f32_64", &[&a, &b]).unwrap();
+    assert!(sum[0].iter().all(|&v| v == 63.0));
+    let mn = e.run_f32("allreduce_min_f32_64", &[&a, &b]).unwrap();
+    assert_eq!(mn[0][0], 0.0);
+    assert_eq!(mn[0][63], 0.0);
+    let mx = e.run_f32("allreduce_max_f32_64", &[&a, &b]).unwrap();
+    assert_eq!(mx[0][0], 63.0);
+}
+
+#[test]
+fn allreduce_alu_int_and_double() {
+    let mut e = exec();
+    let ai: Vec<i32> = (0..64).collect();
+    let bi: Vec<i32> = (0..64).map(|i| -i).collect();
+    let s = e.run_i32("allreduce_sum_i32_64", &[&ai, &bi]).unwrap();
+    assert!(s[0].iter().all(|&v| v == 0));
+    let ad: Vec<f64> = (0..32).map(|i| i as f64 * 0.5).collect();
+    let bd: Vec<f64> = (0..32).map(|i| i as f64 * 0.5).collect();
+    let d = e.run_f64("allreduce_sum_f64_32", &[&ad, &bd]).unwrap();
+    assert_eq!(d[0][31], 31.0);
+}
+
+#[test]
+fn cg_pre_zero_input_is_zero() {
+    let mut e = exec();
+    let p = vec![0.0f32; 10 * 10 * 10];
+    let out = e.run_f32("cg_pre_8", &[&p]).unwrap();
+    assert!(out[0].iter().all(|&v| v == 0.0));
+    assert_eq!(out[1][0], 0.0);
+}
+
+#[test]
+fn cg_pre_matches_operator_definition() {
+    // interior point of a constant field: 26*1 - 26*1 = 0;
+    // corner of the local block with zero halo keeps 26 - 7 = 19
+    let mut e = exec();
+    let n = 8;
+    let np = n + 2;
+    let mut p = vec![0.0f32; np * np * np];
+    for z in 1..=n {
+        for y in 1..=n {
+            for x in 1..=n {
+                p[(z * np + y) * np + x] = 1.0;
+            }
+        }
+    }
+    let out = e.run_f32("cg_pre_8", &[&p]).unwrap();
+    let interior = out[0][(4 * n + 4) * n + 4];
+    assert!(interior.abs() < 1e-5, "interior {interior}");
+    let corner = out[0][0];
+    assert!((corner - 19.0).abs() < 1e-4, "corner {corner}");
+}
+
+#[test]
+fn cg_post_and_update_do_axpy() {
+    let mut e = exec();
+    let n3 = 8 * 8 * 8;
+    let x = vec![1.0f32; n3];
+    let r = vec![2.0f32; n3];
+    let p = vec![3.0f32; n3];
+    let ap = vec![4.0f32; n3];
+    let out = e.run_f32("cg_post_8", &[&x, &r, &p, &ap, &[0.5]]).unwrap();
+    assert!(out[0].iter().all(|&v| (v - 2.5).abs() < 1e-6)); // x + 0.5 p
+    assert!(out[1].iter().all(|&v| v.abs() < 1e-6)); // r - 0.5 ap = 0
+    assert!((out[2][0] - 0.0).abs() < 1e-6);
+    let upd = e.run_f32("cg_update_p_8", &[&r, &p, &[2.0]]).unwrap();
+    assert!(upd[0].iter().all(|&v| (v - 8.0).abs() < 1e-6)); // r + 2 p
+}
+
+#[test]
+fn rejects_bad_inputs() {
+    let mut e = exec();
+    let short = vec![0.0f32; 3];
+    assert!(e.run_f32("matmul_tile128", &[&short, &short]).is_err());
+    assert!(e.run_f32("nonexistent", &[&short]).is_err());
+    let a = vec![0.0f32; 64];
+    assert!(e.run_f32("allreduce_sum_f32_64", &[&a]).is_err(), "arity check");
+}
+
+#[test]
+fn matmul_256_matches_naive() {
+    let mut e = exec();
+    let mut rng = Rng::new(5);
+    let n = 256;
+    let a = rng.f32_vec(n * n);
+    let b = rng.f32_vec(n * n);
+    let got = e.run_f32("matmul_256", &[&a, &b]).unwrap();
+    // spot-check a handful of entries against a naive dot product
+    for &(i, j) in &[(0usize, 0usize), (13, 200), (255, 255), (100, 7)] {
+        let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+        let g = got[0][i * n + j];
+        assert!((g - want).abs() < 1e-2, "({i},{j}): {g} vs {want}");
+    }
+}
