@@ -13,7 +13,7 @@ use exanest::runtime::Executor;
 use exanest::sim::Rng;
 use exanest::topology::SystemConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exanest::errors::Result<()> {
     let cfg = SystemConfig::prototype();
     let mut exec = Executor::open_default()?;
     let mut rng = Rng::new(7);

@@ -82,7 +82,7 @@ fn rank_coord_inv(c: (usize, usize, usize)) -> usize {
     c.0 + c.1 * P + c.2 * P * P
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exanest::errors::Result<()> {
     let mut exec = Executor::open_default()?;
     let nranks = P * P * P;
     let mut world = World::new(SystemConfig::prototype(), nranks, Placement::PerCore);

@@ -20,7 +20,7 @@ fn naive_matmul(n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     c
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exanest::errors::Result<()> {
     let mut exec = Executor::open_default()?;
     let accel = MatmulAccel::default();
     let mut rng = Rng::new(11);

@@ -1,19 +1,21 @@
 //! Bench for Fig 19: the NI Allreduce accelerator vs the software path.
 use exanest::accel::AccelAllreduce;
 use exanest::apps::osu::osu_allreduce;
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::mpi::{Placement, World};
 use exanest::topology::SystemConfig;
 
 fn main() {
+    let mut s = Suite::new("allreduce_accel");
     let cfg = SystemConfig::prototype();
     for n in [16usize, 128] {
-        bench(&format!("allreduce_accel/{n}ranks/256B"), || {
+        s.bench(&format!("allreduce_accel/{n}ranks/256B"), || {
             let mut w = World::new(cfg.clone(), n, Placement::PerMpsoc);
             black_box(AccelAllreduce::latency(&mut w, 256));
         });
-        bench(&format!("allreduce_sw/{n}ranks/256B"), || {
+        s.bench(&format!("allreduce_sw/{n}ranks/256B"), || {
             black_box(osu_allreduce(&cfg, n, 256, 1, Placement::PerMpsoc));
         });
     }
+    s.write_json().expect("write BENCH_allreduce_accel.json");
 }

@@ -1,15 +1,17 @@
 //! Bench for Figs 20-22 / Table 3: application scaling simulations.
 use exanest::apps::scaling::{run_point, AppParams, Mode};
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::topology::SystemConfig;
 
 fn main() {
+    let mut s = Suite::new("apps");
     let cfg = SystemConfig::prototype();
     for app in [AppParams::lammps(), AppParams::hpcg(), AppParams::minife()] {
         for (mode, tag) in [(Mode::Weak, "weak"), (Mode::Strong, "strong")] {
-            bench(&format!("scaling/{}/{tag}/512ranks", app.name), || {
+            s.bench(&format!("scaling/{}/{tag}/512ranks", app.name), || {
                 black_box(run_point(&cfg, &app, 512, mode));
             });
         }
     }
+    s.write_json().expect("write BENCH_apps.json");
 }

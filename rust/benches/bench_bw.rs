@@ -1,16 +1,24 @@
-//! Bench for Fig 15: osu_bw / osu_bibw simulation.
-use exanest::apps::osu::{osu_bibw, osu_bw, OsuPath};
-use exanest::bench::{bench, black_box};
-use exanest::topology::SystemConfig;
+//! Bench for Fig 15: osu_bw / osu_bibw simulation, plus the multi-pair
+//! osu_mbw_mr congestion scenario on the nonblocking runtime.
+use exanest::apps::osu::{osu_bibw, osu_bw, osu_mbw_mr, shared_link_pairs, OsuPath};
+use exanest::bench::{black_box, Suite};
+use exanest::topology::{SystemConfig, Topology};
 
 fn main() {
+    let mut s = Suite::new("bw");
     let cfg = SystemConfig::prototype();
     for p in [OsuPath::IntraQfdbSh, OsuPath::IntraMezzSh, OsuPath::InterMezz312] {
-        bench(&format!("osu_bw/{}/4MB", p.label()), || {
+        s.bench(&format!("osu_bw/{}/4MB", p.label()), || {
             black_box(osu_bw(&cfg, p, 4 << 20, 64));
         });
     }
-    bench("osu_bibw/Intra-QFDB-sh/4MB", || {
+    s.bench("osu_bibw/Intra-QFDB-sh/4MB", || {
         black_box(osu_bibw(&cfg, OsuPath::IntraQfdbSh, 4 << 20, 64));
     });
+    let topo = Topology::new(cfg.clone());
+    let pairs = shared_link_pairs(&topo, 4);
+    s.bench("osu_mbw_mr/4pairs-shared-link/1MBx4", || {
+        black_box(osu_mbw_mr(&cfg, &pairs, 1 << 20, 4));
+    });
+    s.write_json().expect("write BENCH_bw.json");
 }

@@ -1,26 +1,37 @@
-//! Bench for Figs 16-18: bcast/allreduce simulations + the Eq.1 model.
+//! Bench for Figs 16-18: bcast/allreduce simulations + the Eq.1 model,
+//! plus the new scatter/alltoall schedules.
 use exanest::apps::osu::{osu_allreduce, osu_bcast};
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::model::expected_bcast;
-use exanest::mpi::Placement;
+use exanest::mpi::{collectives, Placement, World};
 use exanest::topology::SystemConfig;
 
 fn main() {
+    let mut s = Suite::new("collectives");
     let cfg = SystemConfig::prototype();
     for n in [16usize, 64, 512] {
-        bench(&format!("osu_bcast/{n}ranks/1B"), || {
+        s.bench(&format!("osu_bcast/{n}ranks/1B"), || {
             black_box(osu_bcast(&cfg, n, 1, 1, 42));
         });
     }
-    bench("osu_bcast/512ranks/1MB", || {
+    s.bench("osu_bcast/512ranks/1MB", || {
         black_box(osu_bcast(&cfg, 512, 1 << 20, 1, 42));
     });
     for n in [16usize, 512] {
-        bench(&format!("osu_allreduce/{n}ranks/4B"), || {
+        s.bench(&format!("osu_allreduce/{n}ranks/4B"), || {
             black_box(osu_allreduce(&cfg, n, 4, 1, Placement::PerCore));
         });
     }
-    bench("bcast_model/eq1/512ranks", || {
+    s.bench("alltoall/64ranks/1KB", || {
+        let mut w = World::new(cfg.clone(), 64, Placement::PerCore);
+        black_box(collectives::alltoall(&mut w, 1024));
+    });
+    s.bench("scatter/512ranks/1KB", || {
+        let mut w = World::new(cfg.clone(), 512, Placement::PerCore);
+        black_box(collectives::scatter(&mut w, 1024));
+    });
+    s.bench("bcast_model/eq1/512ranks", || {
         black_box(expected_bcast(&cfg, 512, 1));
     });
+    s.write_json().expect("write BENCH_collectives.json");
 }

@@ -1,12 +1,14 @@
 //! Bench for the simulation substrate itself (§Perf baseline): event
-//! queue throughput and fabric primitive costs.
-use exanest::bench::{bench, black_box};
+//! queue throughput, fabric primitive costs, and the MPI progress engine.
+use exanest::bench::{black_box, Suite};
+use exanest::mpi::{progress, Placement, World};
 use exanest::network::Fabric;
-use exanest::sim::{Engine, SimDuration, SimTime};
+use exanest::sim::{Engine, SimTime};
 use exanest::topology::SystemConfig;
 
 fn main() {
-    bench("engine/schedule+drain/10k", || {
+    let mut s = Suite::new("engine");
+    s.bench("engine/schedule+drain/10k", || {
         let mut e: Engine<u32> = Engine::new();
         for i in 0..10_000u32 {
             e.schedule(SimTime(i as u64 * 7919 % 100_000), i);
@@ -22,14 +24,25 @@ fn main() {
     let a = fab.topo.mpsoc(0, 0, 0);
     let b = fab.topo.mpsoc(6, 1, 2);
     let p = fab.route(a, b);
-    bench("fabric/small_cell/6hops", || {
+    s.bench("fabric/small_cell/6hops", || {
         black_box(fab.small_cell(&p, SimTime::ZERO, 32));
     });
-    bench("fabric/rdma_block/6hops", || {
+    s.bench("fabric/rdma_block/6hops", || {
         black_box(fab.rdma_block(&p, SimTime::ZERO, 16 * 1024, true));
     });
-    bench("fabric/route/6hops", || {
+    s.bench("fabric/route/6hops", || {
         black_box(fab.route(a, b));
     });
-    let _ = SimDuration::ZERO;
+    // the nonblocking runtime's post + event-chain + match overhead
+    // (world hoisted out so the number tracks the progress engine, not
+    // topology construction; recycle keeps the request table flat)
+    let cfg = SystemConfig::prototype();
+    let mut w = World::new(cfg, 8, Placement::PerCore);
+    s.bench("progress/isend+irecv+wait/eager", || {
+        let sr = progress::isend(&mut w, 0, 4, 8);
+        let rr = progress::irecv(&mut w, 4, 0, 8);
+        black_box(progress::wait_all(&mut w, &[sr, rr]));
+        w.progress.recycle();
+    });
+    s.write_json().expect("write BENCH_engine.json");
 }

@@ -1,15 +1,17 @@
 //! Bench for Fig 13: the IP-over-ExaNet tunnel model.
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::ip::{iperf, IpMode, Scenario, TunnelConfig};
 
 fn main() {
+    let mut s = Suite::new("ip");
     let tc = TunnelConfig::default();
-    for s in Scenario::ALL {
-        bench(&format!("ip_overlay/{}", s.label()), || {
-            black_box(iperf(&tc, s, IpMode::Overlay, 5));
+    for sc in Scenario::ALL {
+        s.bench(&format!("ip_overlay/{}", sc.label()), || {
+            black_box(iperf(&tc, sc, IpMode::Overlay, 5));
         });
     }
-    bench("ip_baseline/UDP 1470B", || {
+    s.bench("ip_baseline/UDP 1470B", || {
         black_box(iperf(&tc, Scenario::UdpLarge, IpMode::Baseline, 5));
     });
+    s.write_json().expect("write BENCH_ip.json");
 }

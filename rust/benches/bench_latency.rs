@@ -1,16 +1,18 @@
 //! Bench for Table 2 / Fig 14: osu_latency simulation across path classes.
 use exanest::apps::osu::{osu_latency, OsuPath};
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::topology::SystemConfig;
 
 fn main() {
+    let mut s = Suite::new("latency");
     let cfg = SystemConfig::prototype();
     for p in OsuPath::ALL {
-        bench(&format!("osu_latency/{}/0B", p.label()), || {
+        s.bench(&format!("osu_latency/{}/0B", p.label()), || {
             black_box(osu_latency(&cfg, p, 0, 10));
         });
     }
-    bench("osu_latency/Intra-QFDB-sh/4MB", || {
+    s.bench("osu_latency/Intra-QFDB-sh/4MB", || {
         black_box(osu_latency(&cfg, OsuPath::IntraQfdbSh, 4 << 20, 2));
     });
+    s.write_json().expect("write BENCH_latency.json");
 }

@@ -1,26 +1,28 @@
 //! Bench for §7: the matmul accelerator — cycle model + PJRT numerics.
 use exanest::accel::MatmulAccel;
-use exanest::bench::{bench, black_box};
+use exanest::bench::{black_box, Suite};
 use exanest::runtime::Executor;
 
 fn main() {
+    let mut s = Suite::new("matmul");
     let m = MatmulAccel::default();
-    bench("matmul_accel/model/n=2048", || {
+    s.bench("matmul_accel/model/n=2048", || {
         black_box(m.gflops(2048));
     });
     // PJRT execution benches (the real hot path the coordinator drives)
     if let Ok(mut exec) = Executor::open_default() {
         let a = vec![1.0f32; 128 * 128];
         let b = vec![0.5f32; 128 * 128];
-        bench("matmul_accel/pjrt/tile128", || {
+        s.bench("matmul_accel/pjrt/tile128", || {
             black_box(exec.run_f32("matmul_tile128", &[&a, &b]).unwrap());
         });
         let a2 = vec![1.0f32; 256 * 256];
         let b2 = vec![0.5f32; 256 * 256];
-        bench("matmul_accel/pjrt/256", || {
+        s.bench("matmul_accel/pjrt/256", || {
             black_box(exec.run_f32("matmul_256", &[&a2, &b2]).unwrap());
         });
     } else {
         eprintln!("artifacts not built; skipping PJRT benches");
     }
+    s.write_json().expect("write BENCH_matmul.json");
 }

@@ -17,10 +17,11 @@
 //! simulation-only path uses the same tree with native arithmetic so the
 //! two can be cross-checked).
 
+use crate::bail;
+use crate::errors::Result;
 use crate::mpi::{Placement, World};
 use crate::runtime::Executor;
 use crate::sim::{SimDuration, SimTime};
-use anyhow::{bail, Result};
 
 /// Arithmetic operations supported by the accelerator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

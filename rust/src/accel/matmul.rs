@@ -11,8 +11,8 @@
 //! numerics of the same tiled schedule live in the Pallas `matmul_tile`
 //! kernel (AOT artifact `matmul_*`), executed through PJRT.
 
+use crate::errors::Result;
 use crate::runtime::Executor;
-use anyhow::Result;
 
 /// Tile edge (the paper's chosen geometry).
 pub const TILE: usize = 128;
@@ -112,7 +112,7 @@ impl MatmulAccel {
             128 => "matmul_tile128",
             256 => "matmul_256",
             512 => "matmul_512",
-            other => anyhow::bail!("no matmul artifact for n={other}"),
+            other => crate::bail!("no matmul artifact for n={other}"),
         };
         let out = exec.run_f32(name, &[a, b])?;
         Ok(out.into_iter().next().unwrap())

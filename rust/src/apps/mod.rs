@@ -4,5 +4,8 @@
 pub mod osu;
 pub mod scaling;
 
-pub use osu::{osu_allreduce, osu_bcast, osu_bibw, osu_bw, osu_latency, osu_one_way_lat, OsuPath};
+pub use osu::{
+    disjoint_link_pairs, osu_allreduce, osu_bcast, osu_bibw, osu_bw, osu_incast, osu_latency,
+    osu_mbw_mr, osu_one_way_lat, osu_overlap, shared_link_pairs, MbwResult, OsuPath,
+};
 pub use scaling::{dims3, run_point, scaling_curve, AppParams, Mode, ScalePoint};

@@ -1,10 +1,13 @@
 //! The OSU microbenchmark suite (paper §6.1), run against the simulated
 //! ExaNet-MPI: osu_latency, osu_one_way_lat, osu_bw, osu_bibw,
-//! osu_bcast and osu_allreduce, over the Table-1 path classes.
+//! osu_bcast and osu_allreduce over the Table-1 path classes — plus the
+//! congestion scenarios the nonblocking runtime makes expressible:
+//! multi-pair bandwidth ([`osu_mbw_mr`]), fan-in incast ([`osu_incast`])
+//! and communication/computation overlap ([`osu_overlap`]).
 
-use crate::mpi::{collectives, pt2pt, Placement, World};
-use crate::sim::{Rng, SimDuration};
-use crate::topology::{MpsocId, SystemConfig};
+use crate::mpi::{collectives, progress, pt2pt, Placement, World};
+use crate::sim::{Rng, SimDuration, SimTime};
+use crate::topology::{MpsocId, QfdbId, SystemConfig, Topology};
 
 /// The evaluated path classes of Table 1 (+ the intra-FPGA row of
 /// Table 2), with representative endpoint pairs.
@@ -181,6 +184,132 @@ pub fn osu_allreduce(cfg: &SystemConfig, nranks: usize, bytes: usize, execs: usi
     SimDuration::from_ns(acc / execs as f64)
 }
 
+// ---- congestion scenarios (nonblocking runtime) -------------------------
+
+/// Endpoint pairs that all cross the *same* torus link: `npairs` (<= 4)
+/// senders on QFDB (0,0) each target their counterpart MPSoC on the
+/// X-adjacent QFDB (0,1), so every flow funnels through the single
+/// 10 Gb/s X+ link between the two QFDBs.
+pub fn shared_link_pairs(topo: &Topology, npairs: usize) -> Vec<(MpsocId, MpsocId)> {
+    assert!((1..=4).contains(&npairs), "a QFDB has 4 MPSoCs");
+    (0..npairs)
+        .map(|k| (topo.mpsoc(0, 0, k), topo.mpsoc(0, 1, k)))
+        .collect()
+}
+
+/// Control pair set: each pair crosses a *different* torus link (the F1s
+/// of QFDB pairs 0->1 and 2->3 on successive blades), so aggregate
+/// bandwidth should scale with the pair count.
+pub fn disjoint_link_pairs(topo: &Topology, npairs: usize) -> Vec<(MpsocId, MpsocId)> {
+    assert!(
+        npairs <= 2 * topo.cfg.mezzanines,
+        "at most two disjoint X-links per blade"
+    );
+    (0..npairs)
+        .map(|k| {
+            let mezz = k / 2;
+            let q = (k % 2) * 2;
+            (topo.mpsoc(mezz, q, 0), topo.mpsoc(mezz, q + 1, 0))
+        })
+        .collect()
+}
+
+/// Result of a multi-pair bandwidth run.
+#[derive(Debug, Clone)]
+pub struct MbwResult {
+    /// Total payload moved over the whole run, Gb/s.
+    pub aggregate_gbps: f64,
+    /// Per-pair payload bandwidth (same order as the input pairs).
+    pub per_pair_gbps: Vec<f64>,
+}
+
+/// osu_mbw_mr: `window` messages of `bytes` outstanding per pair, all
+/// pairs concurrent on one progress engine.  Link contention — or its
+/// absence — emerges from fabric occupancy: a shared torus link caps the
+/// aggregate near the calibrated 6.42 Gb/s goodput no matter how many
+/// pairs pile on, while disjoint links scale linearly.
+pub fn osu_mbw_mr(
+    cfg: &SystemConfig,
+    pairs: &[(MpsocId, MpsocId)],
+    bytes: usize,
+    window: usize,
+) -> MbwResult {
+    assert!(!pairs.is_empty() && window > 0);
+    let max_node = pairs.iter().map(|&(a, b)| a.0.max(b.0)).max().unwrap() as usize;
+    let mut world = World::new(cfg.clone(), max_node + 1, Placement::PerMpsoc);
+    let npairs = pairs.len();
+    let mut sends: Vec<Vec<progress::Request>> = vec![Vec::new(); npairs];
+    let mut recvs: Vec<Vec<progress::Request>> = vec![Vec::new(); npairs];
+    for _ in 0..window {
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (s, d) = (a.0 as usize, b.0 as usize);
+            sends[i].push(progress::isend(&mut world, s, d, bytes));
+            recvs[i].push(progress::irecv(&mut world, d, s, bytes));
+        }
+    }
+    let mut per_pair_gbps = Vec::with_capacity(npairs);
+    let mut overall = SimTime::ZERO;
+    for i in 0..npairs {
+        let last = progress::wait_all(&mut world, &recvs[i]);
+        progress::wait_all(&mut world, &sends[i]);
+        overall = overall.max(last);
+        per_pair_gbps.push((window * bytes) as f64 * 8.0 / last.ns());
+    }
+    MbwResult {
+        aggregate_gbps: (npairs * window * bytes) as f64 * 8.0 / overall.ns(),
+        per_pair_gbps,
+    }
+}
+
+/// osu_incast: `nsenders` ranks (the F1s of QFDBs 1..=nsenders) each send
+/// `bytes` to rank 0 concurrently.  Returns (completion time, aggregate
+/// goodput in Gb/s).  The fan-in torus links into QFDB 0 and the
+/// receiver's AXI write channel are the emergent bottleneck.
+pub fn osu_incast(cfg: &SystemConfig, nsenders: usize, bytes: usize) -> (SimDuration, f64) {
+    assert!(nsenders >= 1 && nsenders < cfg.num_qfdbs());
+    let topo = Topology::new(cfg.clone());
+    let max_node = topo.network_mpsoc(QfdbId(nsenders as u32)).0 as usize;
+    let mut world = World::new(cfg.clone(), max_node + 1, Placement::PerMpsoc);
+    let mut reqs = Vec::with_capacity(nsenders * 2);
+    for q in 1..=nsenders {
+        let s = topo.network_mpsoc(QfdbId(q as u32)).0 as usize;
+        reqs.push(progress::isend(&mut world, s, 0, bytes));
+        reqs.push(progress::irecv(&mut world, 0, s, bytes));
+    }
+    let done = progress::wait_all(&mut world, &reqs);
+    let total = done - SimTime::ZERO;
+    (total, (nsenders * bytes) as f64 * 8.0 / total.ns())
+}
+
+/// Communication/computation overlap — the point of the nonblocking API.
+/// Returns (blocking_total, nonblocking_total) on the sender's timeline
+/// for one `bytes` transfer plus `compute` of local work: blocking pays
+/// `send_done + compute`, nonblocking pays `max(send_done, compute)`.
+pub fn osu_overlap(
+    cfg: &SystemConfig,
+    path: OsuPath,
+    bytes: usize,
+    compute: SimDuration,
+) -> (SimDuration, SimDuration) {
+    let w0 = World::new(cfg.clone(), 2, Placement::PerCore);
+    let (a, b) = path.endpoints(&w0);
+    // blocking: the send completes, then the compute runs
+    let mut pw = pair_world(cfg.clone(), a, b);
+    let (r0, r1) = pw.ranks;
+    let r = pt2pt::send_recv(&mut pw.world, r0, r1, bytes);
+    let blocking = (r.send_done - SimTime::ZERO) + compute;
+    // nonblocking: isend, compute while the NI works, then wait
+    let mut pw2 = pair_world(cfg.clone(), a, b);
+    let (r0, r1) = pw2.ranks;
+    let w = &mut pw2.world;
+    let s = progress::isend(w, r0, r1, bytes);
+    let _ = progress::irecv(w, r1, r0, bytes);
+    w.clocks[r0] += compute;
+    progress::wait(w, s);
+    let nonblocking = w.clocks[r0] - SimTime::ZERO;
+    (blocking, nonblocking)
+}
+
 /// The zero-byte osu_latency column of Table 2, for all path classes.
 pub fn table2(cfg: &SystemConfig) -> Vec<(&'static str, f64)> {
     OsuPath::ALL
@@ -268,6 +397,74 @@ mod tests {
             assert!(lat >= prev, "size {s}: {lat} < {prev}");
             prev = lat;
         }
+    }
+
+    #[test]
+    fn mbw_mr_shared_torus_link_saturates() {
+        // Acceptance: aggregate bandwidth on a shared torus link saturates
+        // near the calibrated 6.42 Gb/s goodput instead of scaling
+        // linearly with the pair count.
+        let c = cfg();
+        let topo = Topology::new(c.clone());
+        let bytes = 1 << 20;
+        let one = osu_mbw_mr(&c, &shared_link_pairs(&topo, 1), bytes, 4);
+        let four = osu_mbw_mr(&c, &shared_link_pairs(&topo, 4), bytes, 4);
+        assert!(
+            (four.aggregate_gbps - 6.42).abs() < 0.5,
+            "shared-link aggregate {} vs calibrated 6.42",
+            four.aggregate_gbps
+        );
+        assert!(
+            four.aggregate_gbps < 1.25 * one.aggregate_gbps,
+            "shared link must not scale: 1 pair {} vs 4 pairs {}",
+            one.aggregate_gbps,
+            four.aggregate_gbps
+        );
+        // the link is shared roughly fairly between the pairs
+        let min = four.per_pair_gbps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = four.per_pair_gbps.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min < 2.0, "per-pair spread {min:.2}..{max:.2} Gb/s");
+    }
+
+    #[test]
+    fn mbw_mr_disjoint_links_scale_linearly() {
+        let c = cfg();
+        let topo = Topology::new(c.clone());
+        let bytes = 1 << 20;
+        let one = osu_mbw_mr(&c, &disjoint_link_pairs(&topo, 1), bytes, 4);
+        let four = osu_mbw_mr(&c, &disjoint_link_pairs(&topo, 4), bytes, 4);
+        let ratio = four.aggregate_gbps / one.aggregate_gbps;
+        assert!(
+            ratio > 3.5 && ratio < 4.3,
+            "disjoint links should scale ~linearly: {ratio}"
+        );
+    }
+
+    #[test]
+    fn incast_congests_fan_in() {
+        let c = cfg();
+        let (t1, g1) = osu_incast(&c, 1, 1 << 20);
+        let (t3, g3) = osu_incast(&c, 3, 1 << 20);
+        assert!(t3 > t1, "3-sender incast must take longer than 1: {t3} vs {t1}");
+        // at most two torus links feed QFDB 0's X-ring: the aggregate
+        // cannot reach 3x a single flow
+        assert!(g3 < 14.0, "incast goodput {g3} should be fan-in limited");
+        assert!(g3 > 0.9 * g1, "aggregate {g3} should still beat one flow {g1}");
+    }
+
+    #[test]
+    fn nonblocking_overlaps_comm_with_compute() {
+        let c = cfg();
+        // ~337 us of rendez-vous transfer; 250 us of compute hides fully
+        let compute = SimDuration::from_us(250.0);
+        let (blocking, nonblocking) =
+            osu_overlap(&c, OsuPath::IntraMezzSh, 256 * 1024, compute);
+        assert!(
+            nonblocking < blocking,
+            "overlap must shorten the sender timeline: {nonblocking} vs {blocking}"
+        );
+        // compute shorter than the transfer is hidden completely
+        assert_eq!(blocking - nonblocking, compute);
     }
 
     #[test]

@@ -1,7 +1,14 @@
 //! Minimal benchmarking harness for `cargo bench` (the offline vendor set
 //! has no criterion; this provides the same warm-up / sample / report
 //! loop with mean, stddev and min).
+//!
+//! Bench binaries collect their measurements in a [`Suite`], which writes
+//! a machine-readable `BENCH_<suite>.json` (median / p99 / mean / min, in
+//! nanoseconds per iteration) so the perf trajectory can be tracked
+//! across commits.  Set `BENCH_JSON_DIR` to redirect the output
+//! directory (default: the current working directory).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One benchmark measurement.
@@ -25,6 +32,96 @@ impl Measurement {
 
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median seconds per iteration.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th-percentile seconds per iteration (nearest-rank; with the
+    /// default 10 samples this is the maximum).
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of an empty measurement");
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1]
+    }
+
+    /// One JSON object, times in nanoseconds per iteration.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"median_ns\":{:.1},\"p99_ns\":{:.1},\"mean_ns\":{:.1},\"min_ns\":{:.1},\"samples\":{}}}",
+            json_escape(&self.name),
+            self.median() * 1e9,
+            self.p99() * 1e9,
+            self.mean() * 1e9,
+            self.min() * 1e9,
+            self.samples.len()
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A named collection of measurements that lands in `BENCH_<name>.json`.
+pub struct Suite {
+    name: String,
+    measurements: Vec<Measurement>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Suite {
+        Suite { name: name.to_string(), measurements: Vec::new() }
+    }
+
+    /// Run + record one benchmark (same reporting as the free [`bench`]).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        let m = bench(name, f);
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Write `BENCH_<suite>.json` into `$BENCH_JSON_DIR` (default: the
+    /// current working directory) and return its path.
+    pub fn write_json(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_json_to(dir)
+    }
+
+    /// Write `BENCH_<suite>.json` (one measurement object per line inside
+    /// a top-level array) into `dir` and return the file's path.
+    pub fn write_json_to(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<PathBuf> {
+        let path = dir.as_ref().join(format!("BENCH_{}.json", self.name));
+        let body: Vec<String> =
+            self.measurements.iter().map(|m| format!("  {}", m.to_json())).collect();
+        let text = format!(
+            "{{\"suite\":\"{}\",\"unit\":\"ns/iter\",\"benchmarks\":[\n{}\n]}}\n",
+            json_escape(&self.name),
+            body.join(",\n")
+        );
+        std::fs::write(&path, text)?;
+        println!("wrote {}", path.display());
+        Ok(path)
     }
 }
 
@@ -88,5 +185,32 @@ mod tests {
         assert_eq!(m.samples.len(), 10);
         assert!(m.mean() >= 0.0);
         assert!(m.min() <= m.mean() + 1e-12);
+        assert!(m.median() >= m.min() && m.median() <= m.p99());
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let m = Measurement {
+            name: "p".into(),
+            samples: vec![5.0, 1.0, 3.0, 2.0, 4.0],
+        };
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.p99(), 5.0);
+    }
+
+    #[test]
+    fn suite_writes_json() {
+        let dir = std::env::temp_dir().join("exanest_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Suite::new("selftest");
+        s.bench("noop/\"quoted\"", || {
+            black_box(1 + 1);
+        });
+        let path = s.write_json_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"suite\":\"selftest\""));
+        assert!(text.contains("median_ns"));
+        assert!(text.contains("noop/\\\"quoted\\\""));
+        std::fs::remove_file(path).unwrap();
     }
 }

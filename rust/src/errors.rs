@@ -1,0 +1,104 @@
+//! Minimal `anyhow`-compatible error handling for the offline build.
+//!
+//! The vendor set this repo builds against has no `anyhow`; this module
+//! provides the small subset the crate uses — a string-backed [`Error`],
+//! the [`Result`] alias, a [`Context`] extension trait, and the
+//! [`crate::anyhow!`]/[`crate::bail!`] macros — so the runtime and
+//! accelerator layers keep their familiar error style without an external
+//! dependency.
+
+use std::fmt;
+
+/// A string-backed error with optional context frames.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+
+    /// Prepend a context frame (anyhow-style `{context}: {cause}`).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `anyhow::Result` lookalike.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` lookalike for results and options.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+/// `anyhow::anyhow!` lookalike: format an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `anyhow::bail!` lookalike: early-return an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke with code {}", 7);
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+        let r: Result<u32> = "x".parse::<u32>().context("parsing x");
+        assert!(r.unwrap_err().to_string().starts_with("parsing x: "));
+        let o: Result<u32> = None.with_context(|| "missing".to_string());
+        assert_eq!(o.unwrap_err().to_string(), "missing");
+        let ok: Result<u32> = Some(3).context("present");
+        assert_eq!(ok.unwrap(), 3);
+    }
+}

@@ -22,19 +22,27 @@
 //! * [`topology`] — GVAS addressing, QFDB/torus structure, Table-1 paths;
 //! * [`network`] — cells + the occupancy-tracked fabric;
 //! * [`ni`] — packetizer, mailbox, RDMA, SMMU, reliable transport;
-//! * [`mpi`] — the ExaNet-MPI runtime (pt2pt + collectives);
+//! * [`mpi`] — the ExaNet-MPI runtime: the nonblocking progress engine
+//!   ([`mpi::progress`]: `isend`/`irecv`/`wait` as event chains on the
+//!   [`sim::Engine`] core) plus the blocking pt2pt/collective wrappers
+//!   layered on top of it;
 //! * [`accel`] — the Allreduce and matmul accelerators;
-//! * [`apps`] — OSU microbenchmarks + LAMMPS/HPCG/miniFE skeletons;
+//! * [`apps`] — OSU microbenchmarks (including the multi-pair/incast/
+//!   overlap congestion scenarios) + LAMMPS/HPCG/miniFE skeletons;
 //! * [`ip`] — the IP-over-ExaNet converged-network service;
 //! * [`model`] — the paper's Eq. 1 analytic broadcast model;
 //! * [`power`] — QFDB power + energy-efficiency model;
 //! * [`runtime`] — PJRT loader/executor for the AOT artifacts;
 //! * [`report`] — table formatting for the reproduced figures;
-//! * [`bench`] — the no-deps micro-benchmark harness used by `cargo bench`.
+//! * [`bench`] — the no-deps micro-benchmark harness used by `cargo bench`
+//!   (emits `BENCH_*.json` for perf tracking);
+//! * [`errors`] / [`xla`] — offline shims for the `anyhow` and PJRT
+//!   surfaces, so the default build has zero external dependencies.
 
 pub mod accel;
 pub mod apps;
 pub mod bench;
+pub mod errors;
 pub mod ip;
 pub mod model;
 pub mod mpi;
@@ -46,3 +54,4 @@ pub mod runtime;
 pub mod sim;
 pub mod testing;
 pub mod topology;
+pub mod xla;

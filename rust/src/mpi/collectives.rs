@@ -1,11 +1,18 @@
 //! ExaNet-MPI collectives, using the same algorithms as MPICH 3.2.1
 //! (paper §5.2.1): binomial-tree broadcast, recursive-doubling allreduce,
-//! binomial reduce, dissemination barrier and recursive-doubling
-//! allgather, all built on the point-to-point primitives.
+//! binomial reduce/gather/scatter, dissemination barrier,
+//! recursive-doubling allgather and pairwise-exchange alltoall.
+//!
+//! Every schedule step posts its operations nonblocking through
+//! [`super::progress`] and then waits for the whole step: concurrency
+//! within a step — and the resulting link/AXI/R5 contention — emerges
+//! from fabric occupancy in the discrete-event core instead of from
+//! hand-threaded `t_send`/`t_recv` timestamps.
 
+use super::progress;
 use super::pt2pt;
 use super::world::World;
-use crate::sim::{SimDuration, SimTime};
+use crate::sim::SimDuration;
 
 /// One communication step of a schedule: concurrent (src, dst) pairs.
 pub type Step = Vec<(usize, usize)>;
@@ -53,6 +60,30 @@ pub fn recursive_doubling_schedule(nranks: usize) -> Vec<Vec<(usize, usize)>> {
 pub const BCAST_LONG_MSG: usize = 12 * 1024;
 pub const BCAST_VERY_LONG_MSG: usize = 128 * 1024;
 
+/// Post one schedule step of one-way messages (payload chosen per pair)
+/// nonblocking, then wait for all of them.
+fn run_pair_step(world: &mut World, step: &Step, bytes_of: impl Fn(usize, usize) -> usize) {
+    let mut reqs = Vec::with_capacity(step.len() * 2);
+    for &(src, dst) in step {
+        let b = bytes_of(src, dst);
+        reqs.push(progress::isend(world, src, dst, b));
+        reqs.push(progress::irecv(world, dst, src, b));
+    }
+    progress::wait_all(world, &reqs);
+    world.progress.recycle();
+}
+
+/// Post one schedule step of bidirectional exchanges nonblocking, then
+/// wait for all of them.
+fn run_exchange_step(world: &mut World, step: &[(usize, usize)], bytes: usize) {
+    let mut reqs = Vec::with_capacity(step.len() * 4);
+    for &(a, b) in step {
+        reqs.extend(pt2pt::post_exchange(world, a, b, bytes));
+    }
+    progress::wait_all(world, &reqs);
+    world.progress.recycle();
+}
+
 /// MPI_Bcast of `bytes` from rank 0; returns the osu-style latency
 /// (max completion over ranks, clocks synced before the call).
 ///
@@ -67,43 +98,31 @@ pub fn bcast(world: &mut World, bytes: usize) -> SimDuration {
     let n = world.nranks();
     if bytes <= BCAST_LONG_MSG || n < 8 || !n.is_power_of_two() {
         for step in bcast_schedule(n) {
-            for (src, dst) in step {
-                pt2pt::send_recv(world, src, dst, bytes);
-            }
+            run_pair_step(world, &step, |_, _| bytes);
         }
         return world.max_clock() - start;
     }
     // ---- scatter (binomial, halving sizes) -----------------------------
     let chunk = bytes / n;
-    let mut steps = bcast_schedule(n);
-    for step in steps.drain(..) {
-        for (src, dst) in step {
-            // dst receives the part of the buffer its subtree will own
-            let subtree = subtree_size(dst, n);
-            pt2pt::send_recv(world, src, dst, chunk * subtree);
-        }
+    for step in bcast_schedule(n) {
+        // dst receives the part of the buffer its subtree will own
+        run_pair_step(world, &step, |_, dst| chunk * subtree_size(dst, n));
     }
     if bytes <= BCAST_VERY_LONG_MSG {
         // ---- recursive-doubling allgather (doubling sizes) -------------
         let mut sz = chunk;
         for step in recursive_doubling_schedule(n) {
-            for (a, b) in step {
-                pt2pt::sendrecv_exchange(world, a, b, sz);
-            }
+            run_exchange_step(world, &step, sz);
             sz *= 2;
         }
     } else {
         // ---- ring allgather: n-1 nearest-neighbour steps ----------------
+        // Receives are pre-posted (MPI_Irecv before the send, the MPICH
+        // ring idiom), so unlike the Sendrecv-based schedules no
+        // recv_turnaround applies — matching the seed calibration.
         for _ in 0..n - 1 {
-            let snapshot = world.clocks.clone();
-            let mut next = snapshot.clone();
-            for r in 0..n {
-                let dst = (r + 1) % n;
-                let m = pt2pt::message(world, r, dst, chunk, snapshot[r], snapshot[dst]);
-                next[r] = next[r].max(m.send_done);
-                next[dst] = next[dst].max(m.recv_done);
-            }
-            world.clocks = next;
+            let ring: Step = (0..n).map(|r| (r, (r + 1) % n)).collect();
+            run_pair_step(world, &ring, |_, _| chunk);
         }
     }
     world.max_clock() - start
@@ -135,8 +154,8 @@ pub fn allreduce(world: &mut World, bytes: usize) -> SimDuration {
         *c += memcpy;
     }
     for step in recursive_doubling_schedule(world.nranks()) {
-        for (a, b) in step {
-            pt2pt::sendrecv_exchange(world, a, b, bytes);
+        run_exchange_step(world, &step, bytes);
+        for &(a, b) in &step {
             world.clocks[a] += reduce;
             world.clocks[b] += reduce;
         }
@@ -157,9 +176,10 @@ pub fn reduce(world: &mut World, bytes: usize) -> SimDuration {
     let mut steps = bcast_schedule(world.nranks());
     steps.reverse();
     for step in steps {
-        for (parent, child) in step {
-            // child sends its partial to parent, parent reduces locally
-            pt2pt::send_recv(world, child, parent, bytes);
+        // child sends its partial to parent, parent reduces locally
+        let flipped: Step = step.iter().map(|&(parent, child)| (child, parent)).collect();
+        run_pair_step(world, &flipped, |_, _| bytes);
+        for &(parent, _) in &step {
             world.clocks[parent] += red;
         }
     }
@@ -167,6 +187,7 @@ pub fn reduce(world: &mut World, bytes: usize) -> SimDuration {
 }
 
 /// MPI_Barrier: dissemination algorithm (works for any rank count).
+/// Every rank's send and receive of a round are in flight together.
 pub fn barrier(world: &mut World) -> SimDuration {
     world.sync_clocks();
     let start = world.max_clock();
@@ -174,16 +195,11 @@ pub fn barrier(world: &mut World) -> SimDuration {
     let mut mask = 1usize;
     while mask < n {
         // every rank sends to (r + mask) % n and receives from
-        // (r - mask) % n; express as n one-way messages.
-        let snapshot: Vec<SimTime> = world.clocks.clone();
-        let mut new_clocks = snapshot.clone();
-        for r in 0..n {
-            let dst = (r + mask) % n;
-            let m = pt2pt::message(world, r, dst, 0, snapshot[r], snapshot[dst]);
-            new_clocks[r] = new_clocks[r].max(m.send_done);
-            new_clocks[dst] = new_clocks[dst].max(m.recv_done);
-        }
-        world.clocks = new_clocks;
+        // (r - mask) % n.  Dissemination implementations pre-post the
+        // round's receive before sending, so the receive path carries no
+        // recv_turnaround (unlike MPI_Sendrecv-based schedules).
+        let ring: Step = (0..n).map(|r| (r, (r + mask) % n)).collect();
+        run_pair_step(world, &ring, |_, _| 0);
         mask <<= 1;
     }
     world.max_clock() - start
@@ -195,9 +211,7 @@ pub fn allgather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
     let start = world.max_clock();
     let mut chunk = bytes_per_rank;
     for step in recursive_doubling_schedule(world.nranks()) {
-        for (a, b) in step {
-            pt2pt::sendrecv_exchange(world, a, b, chunk);
-        }
+        run_exchange_step(world, &step, chunk);
         chunk *= 2;
     }
     world.max_clock() - start
@@ -212,12 +226,49 @@ pub fn gather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
     steps.reverse();
     let mut mask = 1usize << steps.len().saturating_sub(1);
     for step in steps {
-        for (parent, child) in step {
-            // child forwards its aggregated subtree
-            let subtree = mask.min(n - child);
-            pt2pt::send_recv(world, child, parent, bytes_per_rank * subtree);
-        }
+        // child forwards its aggregated subtree
+        let flipped: Step = step.iter().map(|&(parent, child)| (child, parent)).collect();
+        run_pair_step(world, &flipped, |child, _| bytes_per_rank * mask.min(n - child));
         mask >>= 1;
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Scatter from rank 0 (binomial tree with halving payloads — the
+/// mirror of [`gather`]; also the first phase of the long-message bcast).
+pub fn scatter(world: &mut World, bytes_per_rank: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let n = world.nranks();
+    for step in bcast_schedule(n) {
+        run_pair_step(world, &step, |_, dst| bytes_per_rank * subtree_size(dst, n));
+    }
+    world.max_clock() - start
+}
+
+/// MPI_Alltoall via the pairwise-exchange algorithm: n-1 rounds, in round
+/// k every rank sends `bytes_per_rank` to rank+k and receives from rank-k.
+/// Each round floods many disjoint paths at once — expressible only
+/// because the operations are posted nonblocking and progressed by fabric
+/// occupancy.  MPICH implements each round with MPI_Sendrecv, so the
+/// receive path carries the [`pt2pt::recv_turnaround`] serialization
+/// (unlike the irecv-first barrier/ring schedules).
+pub fn alltoall(world: &mut World, bytes_per_rank: usize) -> SimDuration {
+    world.sync_clocks();
+    let start = world.max_clock();
+    let n = world.nranks();
+    let turnaround = pt2pt::recv_turnaround(world);
+    for k in 1..n {
+        let mut reqs = Vec::with_capacity(n * 2);
+        for r in 0..n {
+            let dst = (r + k) % n;
+            let src = (r + n - k) % n;
+            let tr = world.clocks[r];
+            reqs.push(progress::isend_at(world, r, dst, bytes_per_rank, tr));
+            reqs.push(progress::irecv_at(world, r, src, bytes_per_rank, tr + turnaround));
+        }
+        progress::wait_all(world, &reqs);
+        world.progress.recycle();
     }
     world.max_clock() - start
 }
@@ -356,5 +407,43 @@ mod tests {
         w.reset();
         let rd = reduce(&mut w, 1024);
         assert!(rd < ar, "reduce {rd} should undercut allreduce {ar}");
+    }
+
+    #[test]
+    fn scatter_cheaper_than_long_bcast() {
+        // scatter is the first phase of the long-message bcast, so it must
+        // strictly undercut the whole thing
+        let mut w = world(16);
+        let b = bcast(&mut w, 16 * 4096);
+        w.reset();
+        let s = scatter(&mut w, 4096);
+        assert!(s < b, "scatter {s} should undercut bcast {b}");
+    }
+
+    #[test]
+    fn scatter_scales_with_ranks() {
+        let mut w = world(8);
+        let a = scatter(&mut w, 1024);
+        let mut w2 = world(64);
+        let b = scatter(&mut w2, 1024);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn alltoall_exceeds_allgather_at_same_chunk() {
+        // same per-rank chunk, but alltoall moves distinct data to every
+        // peer in n-1 rounds vs log2(n) doubling rounds
+        let mut w = world(8);
+        let ag = allgather(&mut w, 2048);
+        w.reset();
+        let at = alltoall(&mut w, 2048);
+        assert!(at > ag, "alltoall {at} vs allgather {ag}");
+    }
+
+    #[test]
+    fn alltoall_works_for_non_power_of_two() {
+        let mut w = world(6);
+        let d = alltoall(&mut w, 256);
+        assert!(d > SimDuration::ZERO);
     }
 }

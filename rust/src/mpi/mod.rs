@@ -1,10 +1,20 @@
 //! The ExaNet-MPI runtime (paper §5.2.1): rank placement, the eager and
 //! rendez-vous point-to-point protocols, and MPICH-3.2.1-style collectives
 //! — all timed against the simulated ExaNet fabric and NI.
+//!
+//! Since the event-driven refactor the runtime is nonblocking at its core:
+//! [`progress`] posts `isend`/`irecv` request chains onto the
+//! discrete-event engine, and the blocking API ([`send_recv`], the
+//! collectives) is a layer of post-then-wait wrappers on top.
 
 pub mod collectives;
+pub mod progress;
 pub mod pt2pt;
 pub mod world;
 
-pub use pt2pt::{message, protocol_for, send_recv, sendrecv_exchange, windowed_bw, Protocol, SendRecv};
+pub use progress::{irecv, irecv_at, isend, isend_at, test, wait, wait_all, Progress, Request};
+pub use pt2pt::{
+    message, post_exchange, protocol_for, send_recv, sendrecv_exchange, windowed_bw, Protocol,
+    SendRecv,
+};
 pub use world::{Placement, World};

@@ -1,0 +1,546 @@
+//! The nonblocking ExaNet-MPI progress engine: `isend`/`irecv`/`wait` on
+//! top of the [`crate::sim::Engine`] discrete-event core.
+//!
+//! Every point-to-point operation becomes a chain of scheduled events
+//! instead of a nest of function returns:
+//!
+//! * eager:       `SendStart` → `EagerArrive`;
+//! * rendez-vous: `SendStart` → `RtsArrive` → `CtsSend` → `CtsArrive`
+//!   (RDMA write) → `DataDelivered`  (paper Fig. 11).
+//!
+//! Handlers invoke the same flow-level NI primitives as the blocking
+//! closed-form path ([`crate::ni::packetizer::eager_send`],
+//! [`crate::ni::rdma::rdma_write`]), but the *order* in which concurrent
+//! operations acquire links, AXI channels and R5 engines is now the global
+//! event-time order — so congestion between overlapping operations emerges
+//! from fabric occupancy instead of from call-site sequencing.  For a
+//! single message the event chain reproduces the closed-form
+//! [`crate::mpi::pt2pt::message`] timing to the picosecond (property-tested
+//! in `tests/proptests.rs`).
+//!
+//! Requests are posted at *rank-local* times, which may trail the global
+//! event clock; the engine's [`Engine::post`] admits that (see the
+//! `sim::engine` module docs).  Matching is per (src, dst) pair, FIFO in
+//! posting order, as MPI requires.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::pt2pt::{protocol_for, Protocol};
+use super::world::World;
+use crate::network::Fabric;
+use crate::ni::{packetizer, rdma, Pacing};
+use crate::sim::{Engine, SimDuration, SimTime};
+use crate::topology::Path;
+
+/// Handle to a posted nonblocking operation.  Carries the progress
+/// engine's generation, so a handle that survives a [`Progress::recycle`]
+/// or [`Progress::reset`] fails loudly instead of aliasing a newer
+/// request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    id: usize,
+    gen: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DirKind {
+    Send,
+    Recv,
+}
+
+/// Protocol stages of one operation, driven by the event queue.
+#[derive(Debug, Clone, Copy)]
+enum MpiEvent {
+    /// The sender's MPI layer starts processing (charges `mpi_sw`, then
+    /// injects the eager payload or the RTS control cell).
+    SendStart(usize),
+    /// The eager payload is visible in the receiver's mailbox.
+    EagerArrive(usize),
+    /// The RTS landed at the receiver's NI.
+    RtsArrive(usize),
+    /// Receiver matched the RTS against a posted receive; builds the CTS.
+    CtsSend(usize),
+    /// The CTS landed back at the sender; the RDMA engine takes over.
+    CtsArrive(usize),
+    /// The completion notification is visible to the polling receiver.
+    DataDelivered(usize),
+}
+
+#[derive(Debug)]
+struct ReqState {
+    /// Owning rank (sender for sends, receiver for receives).
+    rank: usize,
+    peer: usize,
+    bytes: usize,
+    dir: DirKind,
+    /// Meaningful for sends (the sender picks the protocol).
+    protocol: Protocol,
+    posted_at: SimTime,
+    /// Sender-side routes; `None` for receives.
+    fwd: Option<Path>,
+    back: Option<Path>,
+    /// Matched peer request, once both sides are posted.
+    partner: Option<usize>,
+    /// RTS landed before the matching receive was posted (send side).
+    rts_arrival: Option<SimTime>,
+    /// Eager payload landed before the matching receive was posted.
+    eager_arrival: Option<SimTime>,
+    done: Option<SimTime>,
+    /// The owner observed the completion via `wait`/`test`.  Requests a
+    /// caller still holds un-waited are never recycled, so handles stay
+    /// valid across interleaved blocking calls.
+    consumed: bool,
+}
+
+/// The per-world progress engine: event queue + request table + per-pair
+/// FIFO matching queues.
+#[derive(Debug, Default)]
+pub struct Progress {
+    engine: Engine<MpiEvent>,
+    reqs: Vec<ReqState>,
+    unmatched_sends: HashMap<(usize, usize), VecDeque<usize>>,
+    unmatched_recvs: HashMap<(usize, usize), VecDeque<usize>>,
+    /// Bumped on every [`Progress::recycle`]/[`Progress::reset`];
+    /// stamped into each [`Request`] to detect stale handles.
+    gen: u64,
+}
+
+fn pop_front(
+    map: &mut HashMap<(usize, usize), VecDeque<usize>>,
+    key: (usize, usize),
+) -> Option<usize> {
+    let q = map.get_mut(&key)?;
+    let id = q.pop_front();
+    if q.is_empty() {
+        map.remove(&key);
+    }
+    id
+}
+
+impl Progress {
+    pub fn new() -> Progress {
+        Progress::default()
+    }
+
+    /// Drop all requests and pending events (fresh experiment).
+    pub fn reset(&mut self) {
+        let gen = self.gen + 1;
+        *self = Progress::default();
+        self.gen = gen;
+    }
+
+    /// Requests posted but not yet completed.
+    pub fn outstanding(&self) -> usize {
+        self.reqs.iter().filter(|r| r.done.is_none()).count()
+    }
+
+    /// Drop the request table when nothing is in flight: no pending
+    /// events, and every request is complete *and* was observed by its
+    /// owner through `wait`/`test`.  Cheap GC between schedule phases —
+    /// large collectives would otherwise retain every completed request
+    /// until `World::reset`.  A request a caller posted but has not
+    /// waited on yet blocks the reclaim, so handles held across
+    /// interleaved blocking calls stay valid; a handle that survives an
+    /// actual reclaim panics with a clear message (generation check)
+    /// instead of aliasing a newer request.
+    pub fn recycle(&mut self) {
+        if self.engine.pending() == 0
+            && self.reqs.iter().all(|r| r.done.is_some() && r.consumed)
+        {
+            self.reqs.clear();
+            self.unmatched_sends.clear();
+            self.unmatched_recvs.clear();
+            self.gen += 1;
+        }
+    }
+
+    fn state(&self, req: Request) -> &ReqState {
+        assert_eq!(
+            req.gen, self.gen,
+            "stale MPI Request handle: posted before a Progress::recycle()/reset()"
+        );
+        &self.reqs[req.id]
+    }
+
+    fn rank_of(&self, req: Request) -> usize {
+        self.state(req).rank
+    }
+
+    fn mark_consumed(&mut self, req: Request) {
+        debug_assert_eq!(req.gen, self.gen);
+        self.reqs[req.id].consumed = true;
+    }
+
+    fn done_time(&self, req: Request) -> Option<SimTime> {
+        self.state(req).done
+    }
+
+    fn post_send(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        protocol: Protocol,
+        at: SimTime,
+        fwd: Path,
+        back: Path,
+    ) -> Request {
+        let id = self.reqs.len();
+        self.reqs.push(ReqState {
+            rank: src,
+            peer: dst,
+            bytes,
+            dir: DirKind::Send,
+            protocol,
+            posted_at: at,
+            fwd: Some(fwd),
+            back: Some(back),
+            partner: None,
+            rts_arrival: None,
+            eager_arrival: None,
+            done: None,
+            consumed: false,
+        });
+        if let Some(rid) = pop_front(&mut self.unmatched_recvs, (src, dst)) {
+            self.reqs[id].partner = Some(rid);
+            self.reqs[rid].partner = Some(id);
+        } else {
+            self.unmatched_sends.entry((src, dst)).or_default().push_back(id);
+        }
+        self.engine.post(at, MpiEvent::SendStart(id));
+        Request { id, gen: self.gen }
+    }
+
+    fn post_recv(
+        &mut self,
+        dst: usize,
+        src: usize,
+        bytes: usize,
+        at: SimTime,
+        mpi_sw: SimDuration,
+    ) -> Request {
+        let id = self.reqs.len();
+        self.reqs.push(ReqState {
+            rank: dst,
+            peer: src,
+            bytes,
+            dir: DirKind::Recv,
+            protocol: Protocol::Eager, // unused on the receive side
+            posted_at: at,
+            fwd: None,
+            back: None,
+            partner: None,
+            rts_arrival: None,
+            eager_arrival: None,
+            done: None,
+            consumed: false,
+        });
+        if let Some(sid) = pop_front(&mut self.unmatched_sends, (src, dst)) {
+            self.reqs[id].partner = Some(sid);
+            self.reqs[sid].partner = Some(id);
+            // The send may already have progressed past the point where it
+            // needed this receive: complete or resume it now.
+            if let Some(arr) = self.reqs[sid].eager_arrival {
+                self.reqs[id].done = Some(arr.max(at) + mpi_sw);
+            } else if let Some(rts) = self.reqs[sid].rts_arrival {
+                self.engine.post(rts.max(at + mpi_sw), MpiEvent::CtsSend(sid));
+            }
+        } else {
+            self.unmatched_recvs.entry((src, dst)).or_default().push_back(id);
+        }
+        Request { id, gen: self.gen }
+    }
+
+    /// Process events until `req` completes; panics on a guaranteed
+    /// deadlock (event queue drained with the request still pending).
+    fn drive(&mut self, fab: &mut Fabric, req: Request) -> SimTime {
+        while self.state(req).done.is_none() {
+            let Some((t, ev)) = self.engine.next() else {
+                let r = self.state(req);
+                panic!(
+                    "MPI progress deadlock: rank {} waits on a {:?} of {} B \
+                     (peer rank {}) that can never complete — peer \
+                     operation not posted?",
+                    r.rank, r.dir, r.bytes, r.peer
+                );
+            };
+            self.handle(fab, t, ev);
+        }
+        self.state(req).done.unwrap()
+    }
+
+    /// Process all events timestamped at or before `horizon`.
+    fn drive_until(&mut self, fab: &mut Fabric, horizon: SimTime) {
+        while let Some(t) = self.engine.peek_time() {
+            if t > horizon {
+                break;
+            }
+            let (t, ev) = self.engine.next().unwrap();
+            self.handle(fab, t, ev);
+        }
+    }
+
+    fn handle(&mut self, fab: &mut Fabric, t: SimTime, ev: MpiEvent) {
+        match ev {
+            MpiEvent::SendStart(id) => {
+                let (fwd, bytes, protocol) = {
+                    let r = &self.reqs[id];
+                    (r.fwd.expect("send has a route"), r.bytes, r.protocol)
+                };
+                let mpi_sw = fab.calib().mpi_sw;
+                match protocol {
+                    Protocol::Eager => {
+                        let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
+                        self.reqs[id].done = Some(e.cpu_free);
+                        self.engine.post(e.visible, MpiEvent::EagerArrive(id));
+                    }
+                    Protocol::Rendezvous => {
+                        let arr = packetizer::send_small(
+                            fab,
+                            &fwd,
+                            t + mpi_sw,
+                            rdma::HANDSHAKE_BYTES,
+                        );
+                        self.engine.post(arr, MpiEvent::RtsArrive(id));
+                    }
+                }
+            }
+            MpiEvent::EagerArrive(id) => {
+                let mpi_sw = fab.calib().mpi_sw;
+                match self.reqs[id].partner {
+                    Some(rid) => {
+                        let tr = self.reqs[rid].posted_at;
+                        self.reqs[rid].done = Some(t.max(tr) + mpi_sw);
+                    }
+                    None => self.reqs[id].eager_arrival = Some(t),
+                }
+            }
+            MpiEvent::RtsArrive(id) => {
+                let mpi_sw = fab.calib().mpi_sw;
+                match self.reqs[id].partner {
+                    Some(rid) => {
+                        let tr = self.reqs[rid].posted_at;
+                        self.engine.post(t.max(tr + mpi_sw), MpiEvent::CtsSend(id));
+                    }
+                    None => self.reqs[id].rts_arrival = Some(t),
+                }
+            }
+            MpiEvent::CtsSend(id) => {
+                let cts_sw = fab.calib().cts_sw;
+                let back = self.reqs[id].back.expect("send has a return route");
+                let arr =
+                    packetizer::send_small(fab, &back, t + cts_sw, rdma::HANDSHAKE_BYTES);
+                self.engine.post(arr, MpiEvent::CtsArrive(id));
+            }
+            MpiEvent::CtsArrive(id) => {
+                let fwd = self.reqs[id].fwd.expect("send has a route");
+                let bytes = self.reqs[id].bytes;
+                let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
+                // Sender may reuse sbuf once its engine is done (the final
+                // E2E ACK overlaps with the next operation).
+                self.reqs[id].done = Some(c.src_done);
+                self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+            }
+            MpiEvent::DataDelivered(id) => {
+                let mpi_sw = fab.calib().mpi_sw;
+                let rid = self.reqs[id]
+                    .partner
+                    .expect("rendez-vous data delivered without a matched receive");
+                let tr = self.reqs[rid].posted_at;
+                self.reqs[rid].done = Some(t.max(tr) + mpi_sw);
+            }
+        }
+    }
+}
+
+/// Post a nonblocking send at the sender's current clock.
+pub fn isend(world: &mut World, src: usize, dst: usize, bytes: usize) -> Request {
+    let at = world.clocks[src];
+    isend_at(world, src, dst, bytes, at)
+}
+
+/// Post a nonblocking send at an explicit rank-local time.
+pub fn isend_at(
+    world: &mut World,
+    src: usize,
+    dst: usize,
+    bytes: usize,
+    at: SimTime,
+) -> Request {
+    let protocol = protocol_for(world, bytes);
+    let a = world.node_of(src);
+    let b = world.node_of(dst);
+    let fwd = world.fabric.route_cached(a, b);
+    let back = world.fabric.route_cached(b, a);
+    world.progress.post_send(src, dst, bytes, protocol, at, fwd, back)
+}
+
+/// Post a nonblocking receive (from `src`) at the receiver's current clock.
+pub fn irecv(world: &mut World, dst: usize, src: usize, bytes: usize) -> Request {
+    let at = world.clocks[dst];
+    irecv_at(world, dst, src, bytes, at)
+}
+
+/// Post a nonblocking receive at an explicit rank-local time.
+pub fn irecv_at(
+    world: &mut World,
+    dst: usize,
+    src: usize,
+    bytes: usize,
+    at: SimTime,
+) -> Request {
+    let mpi_sw = world.fabric.calib().mpi_sw;
+    world.progress.post_recv(dst, src, bytes, at, mpi_sw)
+}
+
+/// Block until `req` completes; advances the owning rank's clock to the
+/// completion time and returns it.
+pub fn wait(world: &mut World, req: Request) -> SimTime {
+    let World { ref mut progress, ref mut fabric, ref mut clocks, .. } = *world;
+    let done = progress.drive(fabric, req);
+    progress.mark_consumed(req);
+    let rank = progress.rank_of(req);
+    clocks[rank] = clocks[rank].max(done);
+    done
+}
+
+/// Wait for every request; returns the latest completion time.
+pub fn wait_all(world: &mut World, reqs: &[Request]) -> SimTime {
+    let mut last = SimTime::ZERO;
+    for &r in reqs {
+        last = last.max(wait(world, r));
+    }
+    last
+}
+
+/// Nonblocking completion check: progresses the engine up to the owning
+/// rank's current clock and reports the completion time — only if that
+/// completion has actually been reached on the rank's timeline (a
+/// completion stamped beyond the clock stays invisible until the rank
+/// catches up, so overlap loops polling `test` behave causally).
+pub fn test(world: &mut World, req: Request) -> Option<SimTime> {
+    let World { ref mut progress, ref mut fabric, ref mut clocks, .. } = *world;
+    let horizon = clocks[progress.rank_of(req)];
+    progress.drive_until(fabric, horizon);
+    let done = progress.done_time(req).filter(|&d| d <= horizon);
+    if let Some(d) = done {
+        progress.mark_consumed(req);
+        let rank = progress.rank_of(req);
+        clocks[rank] = clocks[rank].max(d);
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::pt2pt;
+    use crate::mpi::world::Placement;
+    use crate::topology::SystemConfig;
+
+    fn world(n: usize) -> World {
+        World::new(SystemConfig::prototype(), n, Placement::PerCore)
+    }
+
+    #[test]
+    fn isend_wait_matches_blocking_closed_form() {
+        for bytes in [0usize, 8, 32, 64, 4096, 1 << 20] {
+            let mut wa = world(8);
+            let mut wb = world(8);
+            let m = pt2pt::message(&mut wa, 0, 4, bytes, SimTime::ZERO, SimTime::ZERO);
+            let s = isend(&mut wb, 0, 4, bytes);
+            let r = irecv(&mut wb, 4, 0, bytes);
+            let rd = wait(&mut wb, r);
+            let sd = wait(&mut wb, s);
+            assert_eq!(sd, m.send_done, "{bytes} B send_done");
+            assert_eq!(rd, m.recv_done, "{bytes} B recv_done");
+        }
+    }
+
+    #[test]
+    fn late_receive_defers_completion() {
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 16);
+        let _ = wait(&mut w, s);
+        // the receive is posted long after the eager payload landed
+        let late = SimTime::from_us(50.0);
+        let r = irecv_at(&mut w, 4, 0, 16, late);
+        let rd = wait(&mut w, r);
+        let mpi_sw = w.fabric.calib().mpi_sw;
+        assert_eq!(rd, late + mpi_sw);
+    }
+
+    #[test]
+    fn compute_hides_communication() {
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 1 << 20);
+        let r = irecv(&mut w, 4, 0, 1 << 20);
+        // the 1 MB rendez-vous takes well under 10 ms; a compute phase of
+        // that length fully hides the send on the sender's timeline
+        w.clocks[0] += SimDuration::from_us(10_000.0);
+        wait_all(&mut w, &[s, r]);
+        assert_eq!(w.clocks[0], SimTime::from_us(10_000.0));
+    }
+
+    #[test]
+    fn per_pair_fifo_matching() {
+        let mut w = world(8);
+        let s1 = isend(&mut w, 0, 4, 8);
+        let s2 = isend(&mut w, 0, 4, 8);
+        let r1 = irecv(&mut w, 4, 0, 8);
+        let r2 = irecv(&mut w, 4, 0, 8);
+        let d1 = wait(&mut w, r1);
+        let d2 = wait(&mut w, r2);
+        assert!(d2 > d1, "second message must land after the first");
+        wait_all(&mut w, &[s1, s2]);
+        assert_eq!(w.progress.outstanding(), 0);
+    }
+
+    #[test]
+    fn test_polls_without_blocking() {
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 8);
+        let r = irecv(&mut w, 4, 0, 8);
+        // the receiver's clock is still at 0: data cannot have arrived
+        assert!(test(&mut w, r).is_none());
+        w.clocks[4] = SimTime::from_us(100.0);
+        assert!(test(&mut w, r).is_some());
+        wait_all(&mut w, &[s, r]);
+    }
+
+    #[test]
+    fn recycle_reclaims_completed_requests_only() {
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 8);
+        // send incomplete (event pending): recycle must be a no-op
+        w.progress.recycle();
+        let r = irecv(&mut w, 4, 0, 8);
+        wait_all(&mut w, &[s, r]);
+        w.progress.recycle();
+        assert_eq!(w.progress.outstanding(), 0);
+        // fresh operations work after the reclaim
+        let s2 = isend(&mut w, 0, 4, 8);
+        let r2 = irecv(&mut w, 4, 0, 8);
+        assert!(wait_all(&mut w, &[s2, r2]) > SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn wait_without_peer_panics() {
+        let mut w = world(8);
+        let r = irecv(&mut w, 4, 0, 16);
+        wait(&mut w, r);
+    }
+
+    #[test]
+    fn rendezvous_needs_matching_receive_to_progress() {
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 1024);
+        // no receive posted: the RTS lands but the CTS never goes out
+        assert!(test(&mut w, s).is_none());
+        let r = irecv(&mut w, 4, 0, 1024);
+        let rd = wait(&mut w, r);
+        let sd = wait(&mut w, s);
+        assert!(sd <= rd, "sender frees its buffer before the receiver is done");
+    }
+}

@@ -5,6 +5,7 @@
 //! devices (links, AXI channels, R5) are occupancy-tracked in the
 //! [`Fabric`], so contention between concurrent ranks emerges naturally.
 
+use super::progress::Progress;
 use crate::network::Fabric;
 use crate::sim::SimTime;
 use crate::topology::{MpsocId, SystemConfig};
@@ -26,6 +27,9 @@ pub struct World {
     pub placement: Placement,
     /// Per-rank local completion clocks.
     pub clocks: Vec<SimTime>,
+    /// The nonblocking progress engine (event queue + request table) all
+    /// point-to-point and collective operations run on.
+    pub progress: Progress,
 }
 
 impl World {
@@ -43,6 +47,7 @@ impl World {
             fabric,
             placement,
             clocks: vec![SimTime::ZERO; nranks],
+            progress: Progress::new(),
         }
     }
 
@@ -66,9 +71,11 @@ impl World {
         (0..self.nranks()).filter(|&r| self.node_of(r) == node).count()
     }
 
-    /// Reset clocks + fabric occupancy (fresh iteration batch).
+    /// Reset clocks, fabric occupancy and the progress engine (fresh
+    /// iteration batch).
     pub fn reset(&mut self) {
         self.fabric.reset();
+        self.progress.reset();
         for c in &mut self.clocks {
             *c = SimTime::ZERO;
         }

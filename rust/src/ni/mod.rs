@@ -10,7 +10,10 @@ pub mod rdma;
 pub mod smmu;
 
 pub use mailbox::{Delivery, Mailbox, MbxError, MbxMessage};
-pub use packetizer::{hw_pingpong, send_small, ChannelState, Packetizer, PktzError};
+pub use packetizer::{eager_send, hw_pingpong, send_small, ChannelState, EagerTiming, Packetizer, PktzError};
 pub use protocol::{NiEvent, ProtocolSim};
-pub use rdma::{rdma_read, rdma_write, rdma_write_with_smmu, Pacing, RdmaCompletion, RdmaEngine, RdmaError};
+pub use rdma::{
+    rdma_read, rdma_write, rdma_write_with_smmu, Pacing, RdmaCompletion, RdmaEngine, RdmaError,
+    HANDSHAKE_BYTES,
+};
 pub use smmu::{Smmu, Translation, PAGE_BYTES};

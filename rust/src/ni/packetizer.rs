@@ -172,6 +172,27 @@ impl Packetizer {
     }
 }
 
+/// Sender-visible timing of one eager transmission, as produced by
+/// [`eager_send`].  Both MPI timing layers — the closed-form oracle in
+/// `mpi::pt2pt::message` and the event chains in `mpi::progress` — hang
+/// off this hook, so the eager datapath is modelled in exactly one place.
+#[derive(Debug, Clone, Copy)]
+pub struct EagerTiming {
+    /// The sending CPU is free again (the triggering PS->PL store retired;
+    /// the packetizer handles the rest in hardware).
+    pub cpu_free: SimTime,
+    /// The payload is visible to a polling receiver (mailbox write done).
+    pub visible: SimTime,
+}
+
+/// Eager datapath hook: `hw_start` is the moment the MPI layer hands the
+/// payload to the packetizer (bookkeeping already charged by the caller).
+pub fn eager_send(fab: &mut Fabric, path: &Path, hw_start: SimTime, payload: usize) -> EagerTiming {
+    let cpu_free = hw_start + fab.calib().ps_pl_copy;
+    let visible = send_small(fab, path, hw_start, payload);
+    EagerTiming { cpu_free, visible }
+}
+
 /// Flow-level timing of one packetizer->mailbox small message along
 /// `path`: PS->PL store of the payload, packet formation, fabric transit,
 /// and the mailbox's coherent write into the receiver's L2.

@@ -16,6 +16,10 @@ pub const WRITE_CHANNELS: usize = 32;
 pub const READ_CHANNELS: usize = 32;
 /// Descriptor size written by the initiating process.
 pub const DESCRIPTOR_BYTES: usize = 64;
+/// Payload of the RTS/CTS rendez-vous control cells: protocol header plus
+/// the rbuf / notification GVAS addresses fit in one packetizer message.
+/// Shared by the closed-form and event-driven MPI layers.
+pub const HANDSHAKE_BYTES: usize = 32;
 
 /// Pacing regime for a transfer's blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -10,7 +10,8 @@
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::errors::{Context, Result};
+use crate::{anyhow, bail, xla};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

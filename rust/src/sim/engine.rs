@@ -7,6 +7,18 @@
 //!
 //! Event order is total and deterministic: ties in timestamp are broken by
 //! insertion sequence number.
+//!
+//! Two scheduling disciplines coexist:
+//! * [`Engine::schedule`] — strictly causal (`at >= now`), used by the NI
+//!   protocol state machines where every event is a consequence of an
+//!   earlier one;
+//! * [`Engine::post`] — may carry a timestamp earlier than the clock.
+//!   The MPI progress engine posts operations at *rank-local* times which
+//!   can trail the global event clock (rank clocks advance independently,
+//!   LogGOPSim-style).  Pending events still pop in (time, seq) order and
+//!   the occupancy-tracked resources serialize in pop order, which mirrors
+//!   the call-order semantics of the blocking API.  `now` never moves
+//!   backwards.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -75,15 +87,28 @@ impl<E> Engine<E> {
     /// Schedule `payload` at absolute time `at` (>= now).
     pub fn schedule(&mut self, at: SimTime, payload: E) {
         debug_assert!(at >= self.now, "scheduling into the past");
+        self.post(at, payload);
+    }
+
+    /// Schedule `payload` without the causality requirement: `at` may be
+    /// earlier than `now` (see the module docs).  Pending events are still
+    /// popped in (time, seq) order.
+    pub fn post(&mut self, at: SimTime, payload: E) {
         let seq = self.seq;
         self.seq += 1;
         self.queue.push(Reverse(Scheduled { at, seq, payload }));
     }
 
-    /// Pop the next event, advancing the clock.
+    /// Timestamp of the next pending event, if any.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.queue.peek().map(|Reverse(ev)| ev.at)
+    }
+
+    /// Pop the next event, advancing the clock (monotonically: an event
+    /// posted in the past via [`Engine::post`] does not rewind `now`).
     pub fn next(&mut self) -> Option<(SimTime, E)> {
         let Reverse(ev) = self.queue.pop()?;
-        self.now = ev.at;
+        self.now = self.now.max(ev.at);
         self.processed += 1;
         Some((ev.at, ev.payload))
     }
@@ -173,6 +198,24 @@ mod tests {
         assert_eq!(count, 10);
         assert_eq!(e.now(), SimTime::from_ns(10.0));
         assert_eq!(e.processed(), 10);
+    }
+
+    #[test]
+    fn post_allows_past_timestamps_and_now_is_monotone() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(100.0), Ev::Tick(1));
+        let (t1, _) = e.next().unwrap();
+        assert_eq!(t1, SimTime::from_ns(100.0));
+        // a rank-local post in the "past" of the global clock
+        e.post(SimTime::from_ns(40.0), Ev::Tick(2));
+        e.post(SimTime::from_ns(60.0), Ev::Tick(3));
+        assert_eq!(e.peek_time(), Some(SimTime::from_ns(40.0)));
+        let (t2, Ev::Tick(i2)) = e.next().unwrap();
+        assert_eq!((t2.ns() as u32, i2), (40, 2));
+        assert_eq!(e.now(), SimTime::from_ns(100.0), "now must not rewind");
+        let (t3, Ev::Tick(i3)) = e.next().unwrap();
+        assert_eq!((t3.ns() as u32, i3), (60, 3));
+        assert_eq!(e.now(), SimTime::from_ns(100.0));
     }
 
     #[test]

@@ -2,14 +2,20 @@
 //! and occupancy-tracked resources.
 //!
 //! Two complementary modelling styles are built on this substrate (see
-//! DESIGN.md):
+//! DESIGN.md §2):
 //!
 //! * an event-driven layer (`Engine`) used by the NI protocol state
 //!   machines (packetizer timeouts, NACK retransmission, SMMU page-fault
-//!   replay) where protocol *behaviour* is the subject under test, and
-//! * a flow-level layer (`Resource`/`RateResource` occupancy) used by the
-//!   MPI/collective/application experiments where thousands of ranks and
-//!   megabyte transfers must stay cheap to simulate.
+//!   replay) and by the MPI progress engine (`mpi::progress`), which
+//!   expresses every send/receive as a chain of scheduled protocol
+//!   events; and
+//! * a flow-level layer (`Resource`/`RateResource` occupancy) that
+//!   charges device time — links, AXI channels, R5 engines — so that
+//!   thousands of ranks and megabyte transfers stay cheap to simulate.
+//!
+//! The two compose: event handlers call flow-level primitives, so the
+//! event layer decides *when and in what order* shared devices are
+//! requested and the flow layer decides *how long* each use takes.
 
 pub mod engine;
 pub mod resources;

@@ -3,11 +3,12 @@
 //! seeded-generate / replayable-failure discipline).
 
 use exanest::mpi::collectives::{bcast_schedule, recursive_doubling_schedule};
-use exanest::mpi::{pt2pt, Placement, World};
+use exanest::mpi::{progress, pt2pt, Placement, World};
+use exanest::network::Fabric;
 use exanest::prop_assert;
 use exanest::sim::{Resource, SimDuration, SimTime};
 use exanest::testing::forall;
-use exanest::topology::{route, Gvas, QfdbId, SystemConfig, Topology};
+use exanest::topology::{route, Gvas, MpsocId, QfdbId, SystemConfig, Topology};
 
 #[test]
 fn prop_gvas_roundtrip() {
@@ -176,6 +177,112 @@ fn prop_eager_latency_monotone_in_distance() {
         let lb = pt2pt::send_recv(&mut w, 0, rb, 0).recv_done;
         let (near, far) = if da < db { (la, lb) } else { (lb, la) };
         prop_assert!(near <= far, "distance {da} vs {db}: {near:?} vs {far:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonblocking_reproduces_blocking_to_the_nanosecond() {
+    // Refactor seam: the event-driven send_recv (isend + irecv + wait on
+    // the progress engine) must reproduce the closed-form blocking oracle
+    // exactly — over random placements, endpoints, sizes and chains of
+    // messages (so fabric occupancy carries over between operations).
+    let cfg = SystemConfig::prototype();
+    forall("isend+wait == blocking send_recv (ps exact)", 40, |rng| {
+        let placement = if rng.below(2) == 0 { Placement::PerCore } else { Placement::PerMpsoc };
+        let n = 16usize;
+        let mut oracle = World::new(cfg.clone(), n, placement);
+        let mut event = World::new(cfg.clone(), n, placement);
+        for _ in 0..8 {
+            let src = rng.below(n as u64) as usize;
+            let dst = rng.below(n as u64) as usize;
+            if src == dst {
+                continue;
+            }
+            let bytes = [0usize, 8, 32, 33, 64, 4096, 100_000][rng.below(7) as usize];
+            // oracle: closed-form message() with the old blocking clock
+            // semantics (clocks *set* to the completion times)
+            let ts = oracle.clocks[src];
+            let tr = oracle.clocks[dst];
+            let m = pt2pt::message(&mut oracle, src, dst, bytes, ts, tr);
+            oracle.clocks[src] = m.send_done;
+            oracle.clocks[dst] = m.recv_done;
+            // event-driven path
+            let r = pt2pt::send_recv(&mut event, src, dst, bytes);
+            prop_assert!(
+                r.send_done == m.send_done && r.recv_done == m.recv_done,
+                "{src}->{dst} {bytes} B: event ({:?}, {:?}) vs oracle ({:?}, {:?})",
+                r.send_done,
+                r.recv_done,
+                m.send_done,
+                m.recv_done
+            );
+            prop_assert!(
+                event.clocks[src] == oracle.clocks[src]
+                    && event.clocks[dst] == oracle.clocks[dst],
+                "clocks diverged after {src}->{dst}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_cached_equals_route() {
+    // Refactor seam: the dense route cache must be exact for every
+    // endpoint pair, including repeated (cache-hit) queries.
+    let cfg = SystemConfig::prototype();
+    forall("Fabric::route_cached == route", 150, |rng| {
+        let mut fab = Fabric::new(cfg.clone());
+        let n = cfg.num_mpsocs() as u64;
+        for _ in 0..4 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            let fresh = fab.route(a, b);
+            for query in 0..2 {
+                let cached = fab.route_cached(a, b);
+                prop_assert!(
+                    cached.src == fresh.src
+                        && cached.dst == fresh.dst
+                        && cached.hops() == fresh.hops()
+                        && cached.routers == fresh.routers
+                        && cached.switches == fresh.switches,
+                    "{a:?}->{b:?} query {query}: cached {cached:?} != fresh {fresh:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wait_all_order_is_irrelevant() {
+    // completion times must not depend on the order requests are waited on
+    let cfg = SystemConfig::prototype();
+    forall("wait order independence", 30, |rng| {
+        let n = 16usize;
+        let mut wa = World::new(cfg.clone(), n, Placement::PerMpsoc);
+        let mut wb = World::new(cfg.clone(), n, Placement::PerMpsoc);
+        let bytes = [64usize, 4096, 65536][rng.below(3) as usize];
+        // two disjoint pairs in flight together
+        let post = |w: &mut World| {
+            let s1 = progress::isend(w, 0, 1, bytes);
+            let r1 = progress::irecv(w, 1, 0, bytes);
+            let s2 = progress::isend(w, 2, 3, bytes);
+            let r2 = progress::irecv(w, 3, 2, bytes);
+            [s1, r1, s2, r2]
+        };
+        let ra = post(&mut wa);
+        let rb = post(&mut wb);
+        let da: Vec<SimTime> = ra.iter().map(|&q| progress::wait(&mut wa, q)).collect();
+        let db: Vec<SimTime> = rb.iter().rev().map(|&q| progress::wait(&mut wb, q)).collect();
+        for (i, &d) in da.iter().enumerate() {
+            prop_assert!(
+                db[3 - i] == d,
+                "request {i}: forward-wait {d:?} != reverse-wait {:?}",
+                db[3 - i]
+            );
+        }
         Ok(())
     });
 }
