@@ -8,6 +8,7 @@ use exanest::topology::SystemConfig;
 
 fn main() {
     let mut s = Suite::new("engine");
+    s.stamp(&SystemConfig::prototype());
     s.bench("engine/schedule+drain/10k", || {
         let mut e: Engine<u32> = Engine::new();
         for i in 0..10_000u32 {

@@ -1,0 +1,47 @@
+//! Bench for the cell-level router mesh: per-cell forwarding cost vs the
+//! flow model, policy overhead, and the hotspot scenario end to end.
+use exanest::bench::{black_box, Suite};
+use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
+use exanest::sim::SimTime;
+use exanest::topology::{QfdbId, SystemConfig, Topology};
+
+fn main() {
+    let cfg = SystemConfig::prototype();
+    let mut s = Suite::new("router");
+    s.stamp(&cfg);
+
+    let topo = Topology::new(cfg.clone());
+    let a = topo.mpsoc(0, 0, 1);
+    let b = topo.mpsoc(6, 1, 2);
+    let mut mesh = RouterMesh::new(topo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+    s.bench("mesh/small_cell/6hops", || {
+        black_box(mesh.small_cell(a, b, SimTime::ZERO, 32));
+    });
+    s.bench("mesh/block16k/6hops", || {
+        black_box(mesh.block(a, b, SimTime::ZERO, 16 * 1024, true));
+    });
+    let mut adaptive = RouterMesh::new(topo.clone(), RoutePolicy::Adaptive, FaultPlan::none());
+    s.bench("mesh/block16k/6hops/adaptive", || {
+        black_box(adaptive.block(a, b, SimTime::ZERO, 16 * 1024, true));
+    });
+    s.bench("mesh/probe_route/5hops", || {
+        black_box(mesh.probe_route(QfdbId(0), QfdbId(26), SimTime::ZERO));
+    });
+
+    // same primitives through the Fabric seam, for flow-vs-cell overhead
+    let mut flow = Fabric::new(cfg.clone());
+    let mut cell = Fabric::with_model(cfg.clone(), NetworkModel::cell(RoutePolicy::Deterministic));
+    let p = flow.route(a, b);
+    s.bench("fabric-flow/rdma_block/6hops", || {
+        black_box(flow.rdma_block(&p, SimTime::ZERO, 16 * 1024, true));
+    });
+    s.bench("fabric-cell/rdma_block/6hops", || {
+        black_box(cell.rdma_block(&p, SimTime::ZERO, 16 * 1024, true));
+    });
+
+    // the hotspot scenario, end to end on the MPI runtime
+    s.bench("osu_mbw_hotspot/adaptive/64k", || {
+        black_box(exanest::apps::osu::osu_mbw_hotspot(&cfg, RoutePolicy::Adaptive, 64 * 1024, 2));
+    });
+    s.write_json().expect("write BENCH_router.json");
+}

@@ -4,10 +4,17 @@
 //! congestion scenarios the nonblocking runtime makes expressible:
 //! multi-pair bandwidth ([`osu_mbw_mr`]), fan-in incast ([`osu_incast`])
 //! and communication/computation overlap ([`osu_overlap`]).
+//!
+//! Every scenario runs against either link model (the `_model` variants
+//! take a [`NetworkModel`]); the cell-level router mesh additionally
+//! enables the hotspot ([`osu_mbw_hotspot`]) and link-failure
+//! ([`osu_incast_failover`]) variants, which need per-cell adaptive
+//! routing and fault injection.
 
 use crate::mpi::{collectives, progress, pt2pt, Placement, World};
+use crate::network::{FaultPlan, NetworkModel, RoutePolicy};
 use crate::sim::{Rng, SimDuration, SimTime};
-use crate::topology::{MpsocId, QfdbId, SystemConfig, Topology};
+use crate::topology::{Dir, MpsocId, QfdbId, SystemConfig, Topology};
 
 /// The evaluated path classes of Table 1 (+ the intra-FPGA row of
 /// Table 2), with representative endpoint pairs.
@@ -71,26 +78,41 @@ pub struct PairWorld {
 }
 
 fn pair_world(cfg: SystemConfig, a: MpsocId, b: MpsocId) -> PairWorld {
+    pair_world_model(cfg, NetworkModel::Flow, a, b)
+}
+
+fn pair_world_model(cfg: SystemConfig, model: NetworkModel, a: MpsocId, b: MpsocId) -> PairWorld {
     // Use PerMpsoc placement: rank r lives on MPSoC r, so ranks a.0 / b.0
     // are exactly the wanted endpoints.  For the intra-FPGA case the two
     // ranks share MPSoC a and we use PerCore with an offset-free world.
     if a == b {
-        let world = World::new(cfg, 2, Placement::PerCore);
+        let world = World::with_model(cfg, 2, Placement::PerCore, model);
         PairWorld { world, ranks: (0, 1) }
     } else {
         let n = (a.0.max(b.0) + 1) as usize;
-        let world = World::new(cfg, n, Placement::PerMpsoc);
+        let world = World::with_model(cfg, n, Placement::PerMpsoc, model);
         PairWorld { world, ranks: (a.0 as usize, b.0 as usize) }
     }
 }
 
 /// osu_latency: ping-pong average one-way latency.
 pub fn osu_latency(cfg: &SystemConfig, path: OsuPath, bytes: usize, iters: usize) -> SimDuration {
+    osu_latency_model(cfg, &NetworkModel::Flow, path, bytes, iters)
+}
+
+/// [`osu_latency`] against an explicit network model.
+pub fn osu_latency_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    path: OsuPath,
+    bytes: usize,
+    iters: usize,
+) -> SimDuration {
     let (a, b) = {
         let w = World::new(cfg.clone(), 2, Placement::PerCore);
         path.endpoints(&w)
     };
-    let mut pw = pair_world(cfg.clone(), a, b);
+    let mut pw = pair_world_model(cfg.clone(), model.clone(), a, b);
     let (r0, r1) = pw.ranks;
     let w = &mut pw.world;
     // warm-up
@@ -129,9 +151,20 @@ pub fn osu_one_way_lat(cfg: &SystemConfig, path: OsuPath, bytes: usize, iters: u
 
 /// osu_bw: windowed unidirectional bandwidth, Gb/s of payload.
 pub fn osu_bw(cfg: &SystemConfig, path: OsuPath, bytes: usize, window: usize) -> f64 {
+    osu_bw_model(cfg, &NetworkModel::Flow, path, bytes, window)
+}
+
+/// [`osu_bw`] against an explicit network model.
+pub fn osu_bw_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    path: OsuPath,
+    bytes: usize,
+    window: usize,
+) -> f64 {
     let w0 = World::new(cfg.clone(), 2, Placement::PerCore);
     let (a, b) = path.endpoints(&w0);
-    let mut pw = pair_world(cfg.clone(), a, b);
+    let mut pw = pair_world_model(cfg.clone(), model.clone(), a, b);
     let (r0, r1) = pw.ranks;
     let w = &mut pw.world;
     let start = w.clocks[r0];
@@ -141,9 +174,20 @@ pub fn osu_bw(cfg: &SystemConfig, path: OsuPath, bytes: usize, window: usize) ->
 
 /// osu_bibw: windowed bidirectional bandwidth, aggregate Gb/s.
 pub fn osu_bibw(cfg: &SystemConfig, path: OsuPath, bytes: usize, window: usize) -> f64 {
+    osu_bibw_model(cfg, &NetworkModel::Flow, path, bytes, window)
+}
+
+/// [`osu_bibw`] against an explicit network model.
+pub fn osu_bibw_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    path: OsuPath,
+    bytes: usize,
+    window: usize,
+) -> f64 {
     let w0 = World::new(cfg.clone(), 2, Placement::PerCore);
     let (a, b) = path.endpoints(&w0);
-    let mut pw = pair_world(cfg.clone(), a, b);
+    let mut pw = pair_world_model(cfg.clone(), model.clone(), a, b);
     let (r0, r1) = pw.ranks;
     let w = &mut pw.world;
     let start = w.clocks[r0].max(w.clocks[r1]);
@@ -234,9 +278,21 @@ pub fn osu_mbw_mr(
     bytes: usize,
     window: usize,
 ) -> MbwResult {
+    osu_mbw_mr_model(cfg, &NetworkModel::Flow, pairs, bytes, window)
+}
+
+/// [`osu_mbw_mr`] against an explicit network model.
+pub fn osu_mbw_mr_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    pairs: &[(MpsocId, MpsocId)],
+    bytes: usize,
+    window: usize,
+) -> MbwResult {
     assert!(!pairs.is_empty() && window > 0);
     let max_node = pairs.iter().map(|&(a, b)| a.0.max(b.0)).max().unwrap() as usize;
-    let mut world = World::new(cfg.clone(), max_node + 1, Placement::PerMpsoc);
+    let mut world =
+        World::with_model(cfg.clone(), max_node + 1, Placement::PerMpsoc, model.clone());
     let npairs = pairs.len();
     let mut sends: Vec<Vec<progress::Request>> = vec![Vec::new(); npairs];
     let mut recvs: Vec<Vec<progress::Request>> = vec![Vec::new(); npairs];
@@ -266,10 +322,21 @@ pub fn osu_mbw_mr(
 /// goodput in Gb/s).  The fan-in torus links into QFDB 0 and the
 /// receiver's AXI write channel are the emergent bottleneck.
 pub fn osu_incast(cfg: &SystemConfig, nsenders: usize, bytes: usize) -> (SimDuration, f64) {
+    osu_incast_model(cfg, &NetworkModel::Flow, nsenders, bytes)
+}
+
+/// [`osu_incast`] against an explicit network model.
+pub fn osu_incast_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    nsenders: usize,
+    bytes: usize,
+) -> (SimDuration, f64) {
     assert!(nsenders >= 1 && nsenders < cfg.num_qfdbs());
     let topo = Topology::new(cfg.clone());
     let max_node = topo.network_mpsoc(QfdbId(nsenders as u32)).0 as usize;
-    let mut world = World::new(cfg.clone(), max_node + 1, Placement::PerMpsoc);
+    let mut world =
+        World::with_model(cfg.clone(), max_node + 1, Placement::PerMpsoc, model.clone());
     let mut reqs = Vec::with_capacity(nsenders * 2);
     for q in 1..=nsenders {
         let s = topo.network_mpsoc(QfdbId(q as u32)).0 as usize;
@@ -279,6 +346,55 @@ pub fn osu_incast(cfg: &SystemConfig, nsenders: usize, bytes: usize) -> (SimDura
     let done = progress::wait_all(&mut world, &reqs);
     let total = done - SimTime::ZERO;
     (total, (nsenders * bytes) as f64 * 8.0 / total.ns())
+}
+
+/// The hotspot pair set (cell-level scenarios): flow 0 is a pure-X
+/// transfer that pins the X+ link out of QFDB (0,0); flow 1 is a diagonal
+/// transfer (one X hop + one Y hop) whose dimension-order route shares
+/// that hot link, while minimal-adaptive routing can escape via Y first.
+/// Needs a topology with at least two blades.
+pub fn hotspot_pairs(topo: &Topology) -> Vec<(MpsocId, MpsocId)> {
+    assert!(
+        topo.cfg.mezzanines >= 2,
+        "the hotspot scenario needs a Y ring (>= 2 blades)"
+    );
+    let diag = topo.qfdb_at(crate::topology::TorusCoord { x: 1, y: 1, z: 0 });
+    vec![
+        (topo.mpsoc(0, 0, 0), topo.mpsoc(0, 1, 0)),
+        (topo.mpsoc(0, 0, 1), topo.network_mpsoc(diag)),
+    ]
+}
+
+/// osu_mbw_mr over [`hotspot_pairs`] on the cell-level mesh with the
+/// given routing policy.  Dimension-order funnels both flows through one
+/// 10 Gb/s link (aggregate ~6.42 Gb/s); minimal-adaptive routes the
+/// diagonal flow around the hot spot, so the aggregate approaches two
+/// links' goodput.
+pub fn osu_mbw_hotspot(
+    cfg: &SystemConfig,
+    policy: RoutePolicy,
+    bytes: usize,
+    window: usize,
+) -> MbwResult {
+    let topo = Topology::new(cfg.clone());
+    let pairs = hotspot_pairs(&topo);
+    osu_mbw_mr_model(cfg, &NetworkModel::cell(policy), &pairs, bytes, window)
+}
+
+/// [`osu_incast`] on the cell-level mesh with the first sender's direct
+/// torus link failed at time zero: QFDB 1's X- link into the receiver is
+/// down, so its traffic must reroute the long way around the X ring
+/// (dimension-order with ring detour + direction lock).  Returns
+/// (completion time, aggregate goodput) — the scenario completing at all
+/// is the point; it also runs slower than the healthy incast.
+pub fn osu_incast_failover(
+    cfg: &SystemConfig,
+    nsenders: usize,
+    bytes: usize,
+) -> (SimDuration, f64) {
+    let faults = FaultPlan::none().fail_torus(QfdbId(1), Dir::XMinus, SimTime::ZERO);
+    let model = NetworkModel::cell_with_faults(RoutePolicy::Deterministic, faults);
+    osu_incast_model(cfg, &model, nsenders, bytes)
 }
 
 /// Communication/computation overlap — the point of the nonblocking API.
@@ -465,6 +581,74 @@ mod tests {
         );
         // compute shorter than the transfer is hidden completely
         assert_eq!(blocking - nonblocking, compute);
+    }
+
+    #[test]
+    fn cell_level_latency_matches_flow_within_one_percent() {
+        // Acceptance: unloaded cell-level runs match the closed-form
+        // oracle on the 1-hop (1.3 us) and 5-hop (2.55 us) paths.
+        let c = cfg();
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        for (path, paper) in [(OsuPath::IntraQfdbSh, 1.293), (OsuPath::InterMezz312, 2.555)] {
+            let flow = osu_latency(&c, path, 0, 30).us();
+            let cell = osu_latency_model(&c, &model, path, 0, 30).us();
+            assert!(
+                (cell - flow).abs() / flow < 0.01,
+                "{}: cell {cell} vs flow {flow}",
+                path.label()
+            );
+            assert!((cell - paper).abs() / paper < 0.15, "{}: {cell} vs paper {paper}", path.label());
+        }
+    }
+
+    #[test]
+    fn cell_level_peak_utilisation_matches_flow() {
+        // Acceptance: 82% peak link utilisation also holds on the mesh.
+        let c = cfg();
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let flow = osu_bw(&c, OsuPath::IntraQfdbSh, 4 << 20, 8);
+        let cell = osu_bw_model(&c, &model, OsuPath::IntraQfdbSh, 4 << 20, 8);
+        assert!((cell - flow).abs() / flow < 0.01, "cell {cell} vs flow {flow}");
+        assert!(((cell / 16.0) - 0.819).abs() < 0.03, "utilisation {}", cell / 16.0);
+    }
+
+    #[test]
+    fn hotspot_adaptive_beats_dimension_order() {
+        // Acceptance: adaptive routing beats dimension-order throughput
+        // on the hotspot traffic pattern.
+        let c = cfg();
+        let bytes = 256 * 1024;
+        let dor = osu_mbw_hotspot(&c, RoutePolicy::Deterministic, bytes, 4);
+        let ada = osu_mbw_hotspot(&c, RoutePolicy::Adaptive, bytes, 4);
+        assert!(
+            ada.aggregate_gbps > 1.2 * dor.aggregate_gbps,
+            "adaptive {} must clearly beat dimension-order {}",
+            ada.aggregate_gbps,
+            dor.aggregate_gbps
+        );
+        // the pure-X flow cannot adapt; the diagonal one escapes, so the
+        // dimension-order run shares one link between both flows
+        assert!(
+            dor.aggregate_gbps < 7.5,
+            "dimension-order hotspot should be capped by one torus link, got {}",
+            dor.aggregate_gbps
+        );
+    }
+
+    #[test]
+    fn incast_with_failed_link_completes_via_reroute() {
+        // Acceptance: the failed-link scenario completes via reroute, and
+        // costs more than the healthy fabric.
+        let c = cfg();
+        let bytes = 256 * 1024;
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let (healthy, hg) = osu_incast_model(&c, &model, 3, bytes);
+        let (failed, fg) = osu_incast_failover(&c, 3, bytes);
+        assert!(fg > 0.0, "failover incast must move payload");
+        assert!(
+            failed > healthy,
+            "reroute {failed} must cost more than the healthy incast {healthy} ({hg} vs {fg} Gb/s)"
+        );
     }
 
     #[test]

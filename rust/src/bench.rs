@@ -87,11 +87,29 @@ fn json_escape(s: &str) -> String {
 pub struct Suite {
     name: String,
     measurements: Vec<Measurement>,
+    /// Commit the numbers were taken at (CI env or `git rev-parse`).
+    git_sha: Option<String>,
+    /// [`crate::topology::SystemConfig::fingerprint`] of the simulated
+    /// machine, so perf trajectories are only compared within one model.
+    config_hash: Option<u64>,
 }
 
 impl Suite {
     pub fn new(name: &str) -> Suite {
-        Suite { name: name.to_string(), measurements: Vec::new() }
+        Suite {
+            name: name.to_string(),
+            measurements: Vec::new(),
+            git_sha: None,
+            config_hash: None,
+        }
+    }
+
+    /// Stamp the suite with the commit SHA and the fingerprint of the
+    /// benchmarked [`crate::topology::SystemConfig`].
+    pub fn stamp(&mut self, cfg: &crate::topology::SystemConfig) -> &mut Self {
+        self.git_sha = Some(git_sha());
+        self.config_hash = Some(cfg.fingerprint());
+        self
     }
 
     /// Run + record one benchmark (same reporting as the free [`bench`]).
@@ -114,15 +132,40 @@ impl Suite {
         let path = dir.as_ref().join(format!("BENCH_{}.json", self.name));
         let body: Vec<String> =
             self.measurements.iter().map(|m| format!("  {}", m.to_json())).collect();
+        let sha = self.git_sha.clone().unwrap_or_else(git_sha);
+        let config = self
+            .config_hash
+            .map(|h| format!("{h:016x}"))
+            .unwrap_or_else(|| "unstamped".to_string());
         let text = format!(
-            "{{\"suite\":\"{}\",\"unit\":\"ns/iter\",\"benchmarks\":[\n{}\n]}}\n",
+            "{{\"suite\":\"{}\",\"git_sha\":\"{}\",\"config_hash\":\"{}\",\"unit\":\"ns/iter\",\"benchmarks\":[\n{}\n]}}\n",
             json_escape(&self.name),
+            json_escape(&sha),
+            config,
             body.join(",\n")
         );
         std::fs::write(&path, text)?;
         println!("wrote {}", path.display());
         Ok(path)
     }
+}
+
+/// The commit the benchmarks ran at: `GITHUB_SHA` in CI, `git rev-parse`
+/// locally, `"unknown"` outside a checkout.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 fn fmt_secs(s: f64) -> String {
@@ -211,6 +254,26 @@ mod tests {
         assert!(text.contains("\"suite\":\"selftest\""));
         assert!(text.contains("median_ns"));
         assert!(text.contains("noop/\\\"quoted\\\""));
+        assert!(text.contains("\"git_sha\":"), "provenance keys always present");
+        assert!(text.contains("\"config_hash\":\"unstamped\""));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn stamped_suite_embeds_config_fingerprint() {
+        use crate::topology::SystemConfig;
+        let dir = std::env::temp_dir().join("exanest_bench_stamp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = SystemConfig::prototype();
+        let mut s = Suite::new("stamped");
+        s.stamp(&cfg);
+        s.bench("noop", || {
+            black_box(1 + 1);
+        });
+        let path = s.write_json_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let expect = format!("\"config_hash\":\"{:016x}\"", cfg.fingerprint());
+        assert!(text.contains(&expect), "fingerprint missing from {text}");
         std::fs::remove_file(path).unwrap();
     }
 }

@@ -20,7 +20,10 @@
 //! Layering (bottom-up):
 //! * [`sim`] — deterministic event queue, resources, RNG, statistics;
 //! * [`topology`] — GVAS addressing, QFDB/torus structure, Table-1 paths;
-//! * [`network`] — cells + the occupancy-tracked fabric;
+//! * [`network`] — cells + the occupancy-tracked fabric, and the
+//!   cell-level torus-router mesh (credit flow control, dimension-order /
+//!   minimal-adaptive routing, link-fault injection) selectable per world
+//!   via [`network::NetworkModel`];
 //! * [`ni`] — packetizer, mailbox, RDMA, SMMU, reliable transport;
 //! * [`mpi`] — the ExaNet-MPI runtime: the nonblocking progress engine
 //!   ([`mpi::progress`]: `isend`/`irecv`/`wait` as event chains on the

@@ -9,23 +9,74 @@ use exanest::apps::{osu, scaling};
 use exanest::ip::{iperf, rtt, IpMode, Scenario, TunnelConfig};
 use exanest::mpi::Placement;
 use exanest::ni::hw_pingpong;
-use exanest::network::Fabric;
+use exanest::network::{Fabric, NetworkModel, RoutePolicy};
 use exanest::power;
 use exanest::report::{gbps, pct, us, Table};
+use exanest::sim::SimDuration;
 use exanest::topology::SystemConfig;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
-    let cfg = SystemConfig::prototype();
+    // Global flags: `--small` runs the two-blade subsystem (CI smoke);
+    // `--network-model flow|cell|cell-adaptive` picks the link model for
+    // the OSU commands.
+    let small = args.iter().any(|a| a == "--small");
+    if small {
+        // Only the congestion/fault scenarios fit a two-blade machine;
+        // the paper-artefact commands hard-code full-prototype endpoints
+        // (Inter-mezz(3,1,2) paths, 512-rank collectives).
+        const SMALL_OK: [&str; 5] =
+            ["hw-pingpong", "osu-mbw", "osu-incast", "osu-overlap", "router-hotspot"];
+        if !SMALL_OK.contains(&cmd) {
+            eprintln!(
+                "--small (two-blade subsystem) supports: {}\n\
+                 ({cmd} reproduces full-prototype artefacts: 8 blades / 512 cores)",
+                SMALL_OK.join(", ")
+            );
+            std::process::exit(2);
+        }
+    }
+    let cfg = if small { SystemConfig::two_blades() } else { SystemConfig::prototype() };
+    let model = match args.iter().position(|a| a == "--network-model") {
+        None => NetworkModel::Flow,
+        Some(i) => match args.get(i + 1).map(|s| s.as_str()) {
+            Some("flow") => NetworkModel::Flow,
+            Some("cell") => NetworkModel::cell(RoutePolicy::Deterministic),
+            Some("cell-adaptive") => NetworkModel::cell(RoutePolicy::Adaptive),
+            Some(other) => {
+                eprintln!("unknown network model {other} (flow | cell | cell-adaptive)");
+                std::process::exit(2);
+            }
+            None => {
+                eprintln!("--network-model needs a value: flow | cell | cell-adaptive");
+                std::process::exit(2);
+            }
+        },
+    };
+    // Commands that actually thread the model through; anything else
+    // would silently print flow-level numbers under a cell-model flag.
+    if !matches!(model, NetworkModel::Flow) {
+        const MODEL_OK: [&str; 4] = ["osu-latency", "osu-bw", "osu-mbw", "osu-incast"];
+        if !MODEL_OK.contains(&cmd) {
+            eprintln!(
+                "--network-model applies to: {} (router-hotspot is always cell-level)",
+                MODEL_OK.join(", ")
+            );
+            std::process::exit(2);
+        }
+    }
     match cmd {
         "table1" => table1(&cfg),
         "hw-pingpong" => hw_pingpong_cmd(&cfg),
-        "osu-latency" => osu_latency(&cfg),
-        "osu-bw" => osu_bw(&cfg, args.iter().any(|a| a == "--bidirectional")),
+        "osu-latency" => osu_latency(&cfg, &model),
+        "osu-bw" => osu_bw(&cfg, &model, args.iter().any(|a| a == "--bidirectional")),
         "osu-bcast" => osu_bcast(&cfg),
         "osu-allreduce" => osu_allreduce(&cfg),
-        "osu-mbw" => osu_mbw(&cfg),
+        "osu-mbw" => osu_mbw(&cfg, &model),
+        "osu-incast" => osu_incast(&cfg, &model),
+        "osu-overlap" => osu_overlap(&cfg),
+        "router-hotspot" => router_hotspot(&cfg),
         "bcast-model" => bcast_model(&cfg),
         "allreduce-accel" => allreduce_accel(&cfg),
         "scaling" => {
@@ -42,12 +93,15 @@ fn main() {
         "all" => {
             table1(&cfg);
             hw_pingpong_cmd(&cfg);
-            osu_latency(&cfg);
-            osu_bw(&cfg, false);
-            osu_bw(&cfg, true);
+            osu_latency(&cfg, &model);
+            osu_bw(&cfg, &model, false);
+            osu_bw(&cfg, &model, true);
             osu_bcast(&cfg);
             osu_allreduce(&cfg);
-            osu_mbw(&cfg);
+            osu_mbw(&cfg, &model);
+            osu_incast(&cfg, &model);
+            osu_overlap(&cfg);
+            router_hotspot(&cfg);
             bcast_model(&cfg);
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
@@ -56,7 +110,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: repro <command>\n\
+                "usage: repro <command> [--small] [--network-model flow|cell|cell-adaptive]\n\
                  commands (paper artefact each regenerates):\n\
                  \ttable1           Table 1: ExaNet path classes\n\
                  \thw-pingpong      §6.1.1: raw packetizer/mailbox ping-pong (470 ns)\n\
@@ -65,12 +119,20 @@ fn main() {
                  \tosu-bcast        Fig 16: osu_bcast vs ranks & size\n\
                  \tosu-allreduce    Fig 17: osu_allreduce vs ranks\n\
                  \tosu-mbw          multi-pair bandwidth: shared-link saturation + incast\n\
+                 \tosu-incast       fan-in congestion: N senders into one QFDB\n\
+                 \tosu-overlap      communication/computation overlap (nonblocking API)\n\
+                 \trouter-hotspot   cell-level router: adaptive vs DOR + link failure\n\
                  \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
                  \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
                  \tscaling          Figs 20-22 + Table 3 (--app lammps|hpcg|minife|all)\n\
                  \tmatmul-accel     §7: matmul accelerator GFLOPS / GFLOPS/W\n\
-                 \tall              everything above"
+                 \tall              everything above\n\
+                 flags:\n\
+                 \t--small          two-blade subsystem (8 QFDBs; CI smoke size) — congestion/fault\n\
+                 \t                 scenarios only (osu-mbw, osu-incast, osu-overlap, router-hotspot, ...)\n\
+                 \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw,\n\
+                 \t                 osu-mbw, osu-incast (router-hotspot is always cell-level)"
             );
             std::process::exit(2);
         }
@@ -106,12 +168,12 @@ fn hw_pingpong_cmd(cfg: &SystemConfig) {
     println!("one-way latency over 1000 iterations: {:.0} ns (paper: ~470 ns)\n", lat.ns());
 }
 
-fn osu_latency(cfg: &SystemConfig) {
-    println!("## Table 2 — osu_latency, 0-byte messages\n");
+fn osu_latency(cfg: &SystemConfig, model: &NetworkModel) {
+    println!("## Table 2 — osu_latency, 0-byte messages ({})\n", model.label());
     let mut t = Table::new(&["path", "osu_latency (us)", "paper (us)"]);
     let paper = [1.17, 1.293, 1.579, 2.0, 2.111, 2.555];
     for (p, pap) in osu::OsuPath::ALL.iter().zip(paper) {
-        let got = osu::osu_latency(cfg, *p, 0, 100);
+        let got = osu::osu_latency_model(cfg, model, *p, 0, 100);
         t.row(&[p.label().to_string(), us(got.us()), us(pap)]);
     }
     println!("{}", t.render());
@@ -122,21 +184,24 @@ fn osu_latency(cfg: &SystemConfig) {
     for s in sizes {
         t.row(&[
             s.to_string(),
-            us(osu::osu_latency(cfg, osu::OsuPath::IntraQfdbSh, s, 30).us()),
-            us(osu::osu_latency(cfg, osu::OsuPath::IntraMezzSh, s, 30).us()),
-            us(osu::osu_latency(cfg, osu::OsuPath::InterMezz312, s, 30).us()),
+            us(osu::osu_latency_model(cfg, model, osu::OsuPath::IntraQfdbSh, s, 30).us()),
+            us(osu::osu_latency_model(cfg, model, osu::OsuPath::IntraMezzSh, s, 30).us()),
+            us(osu::osu_latency_model(cfg, model, osu::OsuPath::InterMezz312, s, 30).us()),
         ]);
     }
     println!("{}", t.render());
 }
 
-fn osu_bw(cfg: &SystemConfig, bidir: bool) {
-    let (name, f): (_, fn(&SystemConfig, osu::OsuPath, usize, usize) -> f64) = if bidir {
-        ("Fig 15 (osu_bibw)", osu::osu_bibw)
-    } else {
-        ("Fig 15 (osu_bw)", osu::osu_bw)
+fn osu_bw(cfg: &SystemConfig, model: &NetworkModel, bidir: bool) {
+    let fig = if bidir { "osu_bibw" } else { "osu_bw" };
+    println!("## Fig 15 ({fig}) — bandwidth vs message size ({}, Gb/s)\n", model.label());
+    let f = |cfg: &SystemConfig, p: osu::OsuPath, s: usize, w: usize| {
+        if bidir {
+            osu::osu_bibw_model(cfg, model, p, s, w)
+        } else {
+            osu::osu_bw_model(cfg, model, p, s, w)
+        }
     };
-    println!("## {name} — bandwidth vs message size (Gb/s)\n");
     let sizes = [256usize, 1024, 4096, 16384, 65536, 1 << 18, 1 << 20, 4 << 20];
     let mut t = Table::new(&["size (B)", "Intra-QFDB-sh", "Intra-mezz-sh", "Inter-mezz(3,1,2)"]);
     for s in sizes {
@@ -149,7 +214,7 @@ fn osu_bw(cfg: &SystemConfig, bidir: bool) {
     }
     println!("{}", t.render());
     if !bidir {
-        let peak = osu::osu_bw(cfg, osu::OsuPath::IntraQfdbSh, 4 << 20, 64);
+        let peak = osu::osu_bw_model(cfg, model, osu::OsuPath::IntraQfdbSh, 4 << 20, 64);
         println!("intra-QFDB link utilisation @4MB: {} (paper: 81.9%)\n", pct(peak / 16.0));
     }
 }
@@ -190,28 +255,95 @@ fn osu_allreduce(cfg: &SystemConfig) {
     println!("{}", t.render());
 }
 
-fn osu_mbw(cfg: &SystemConfig) {
-    println!("## osu_mbw_mr — multi-pair bandwidth, shared vs disjoint torus links\n");
+fn osu_mbw(cfg: &SystemConfig, model: &NetworkModel) {
+    println!(
+        "## osu_mbw_mr — multi-pair bandwidth, shared vs disjoint torus links ({})\n",
+        model.label()
+    );
     let topo = exanest::topology::Topology::new(cfg.clone());
     let bytes = 1 << 20;
+    let max_disjoint = 2 * cfg.mezzanines;
     let mut t = Table::new(&["pairs", "shared link (Gb/s)", "disjoint links (Gb/s)"]);
     for n in 1..=4usize {
-        let sh = osu::osu_mbw_mr(cfg, &osu::shared_link_pairs(&topo, n), bytes, 4);
-        let dj = osu::osu_mbw_mr(cfg, &osu::disjoint_link_pairs(&topo, n), bytes, 4);
-        t.row(&[
-            n.to_string(),
-            gbps(sh.aggregate_gbps),
-            gbps(dj.aggregate_gbps),
-        ]);
+        let sh = osu::osu_mbw_mr_model(cfg, model, &osu::shared_link_pairs(&topo, n), bytes, 4);
+        let dj = if n <= max_disjoint {
+            gbps(
+                osu::osu_mbw_mr_model(cfg, model, &osu::disjoint_link_pairs(&topo, n), bytes, 4)
+                    .aggregate_gbps,
+            )
+        } else {
+            "-".into()
+        };
+        t.row(&[n.to_string(), gbps(sh.aggregate_gbps), dj]);
     }
     println!("{}", t.render());
     println!("(shared link saturates at the calibrated 6.42 Gb/s goodput; disjoint links scale)\n");
-    let (tin, gin) = osu::osu_incast(cfg, 3, bytes);
+    let (tin, gin) = osu::osu_incast_model(cfg, model, 3, bytes);
     println!(
         "osu_incast, 3 senders x 1 MB into one QFDB: {:.3} ms, aggregate {}\n",
         tin.secs() * 1e3,
         gbps(gin)
     );
+}
+
+fn osu_incast(cfg: &SystemConfig, model: &NetworkModel) {
+    println!("## osu_incast — fan-in congestion into one QFDB ({})\n", model.label());
+    let bytes = 1 << 20;
+    let mut t = Table::new(&["senders", "completion (ms)", "aggregate (Gb/s)"]);
+    for n in 1..=3usize {
+        let (tt, g) = osu::osu_incast_model(cfg, model, n, bytes);
+        t.row(&[n.to_string(), format!("{:.3}", tt.secs() * 1e3), gbps(g)]);
+    }
+    println!("{}", t.render());
+    println!("(the X-ring links into the target QFDB and its AXI write channel are the bottleneck)\n");
+}
+
+fn osu_overlap(cfg: &SystemConfig) {
+    println!("## osu_overlap — communication/computation overlap (nonblocking API)\n");
+    let bytes = 256 * 1024;
+    let mut t = Table::new(&["compute (us)", "blocking (us)", "nonblocking (us)", "saved"]);
+    for compute_us in [0.0f64, 50.0, 250.0, 1000.0] {
+        let (blocking, nonblocking) = osu::osu_overlap(
+            cfg,
+            osu::OsuPath::IntraMezzSh,
+            bytes,
+            SimDuration::from_us(compute_us),
+        );
+        t.row(&[
+            format!("{compute_us:.0}"),
+            us(blocking.us()),
+            us(nonblocking.us()),
+            pct(1.0 - nonblocking.ns() / blocking.ns()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(256 KB rendez-vous transfer on the intra-mezzanine path; compute shorter than the transfer is hidden completely)\n");
+}
+
+fn router_hotspot(cfg: &SystemConfig) {
+    println!("## Cell-level torus router — hotspot traffic, adaptive vs dimension-order\n");
+    let bytes = 256 * 1024;
+    let mut t = Table::new(&["policy", "aggregate (Gb/s)", "flow 0 / flow 1 (Gb/s)"]);
+    for policy in [RoutePolicy::Deterministic, RoutePolicy::Adaptive] {
+        let r = osu::osu_mbw_hotspot(cfg, policy, bytes, 4);
+        t.row(&[
+            policy.label().to_string(),
+            gbps(r.aggregate_gbps),
+            format!("{} / {}", gbps(r.per_pair_gbps[0]), gbps(r.per_pair_gbps[1])),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(dimension-order funnels both flows through one 10 Gb/s X link; minimal-adaptive escapes via Y)\n");
+
+    println!("## Cell-level torus router — link failure + reroute\n");
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    let (healthy, hg) = osu::osu_incast_model(cfg, &model, 3, bytes);
+    let (failed, fg) = osu::osu_incast_failover(cfg, 3, bytes);
+    let mut t = Table::new(&["scenario", "completion (us)", "aggregate (Gb/s)"]);
+    t.row(&["healthy fabric".to_string(), us(healthy.us()), gbps(hg)]);
+    t.row(&["QFDB1 X- link down at t=0".to_string(), us(failed.us()), gbps(fg)]);
+    println!("{}", t.render());
+    println!("(the failed sender's cells detour the long way around the X ring and the incast still completes)\n");
 }
 
 fn bcast_model(cfg: &SystemConfig) {

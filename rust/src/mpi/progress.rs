@@ -22,6 +22,13 @@
 //! event clock; the engine's [`Engine::post`] admits that (see the
 //! `sim::engine` module docs).  Matching is per (src, dst) pair, FIFO in
 //! posting order, as MPI requires.
+//!
+//! The fabric primitives the handlers call dispatch on the world's
+//! [`crate::network::NetworkModel`]: against the flow-level links
+//! (default) or against the cell-level torus-router mesh
+//! ([`crate::network::RouterMesh`]) — the progress engine itself is
+//! model-agnostic, so every scenario here (incast, multi-pair, overlap)
+//! also runs with credit flow control, adaptive routing and link faults.
 
 use std::collections::{HashMap, VecDeque};
 

@@ -6,7 +6,7 @@
 //! [`Fabric`], so contention between concurrent ranks emerges naturally.
 
 use super::progress::Progress;
-use crate::network::Fabric;
+use crate::network::{Fabric, NetworkModel};
 use crate::sim::SimTime;
 use crate::topology::{MpsocId, SystemConfig};
 
@@ -34,7 +34,19 @@ pub struct World {
 
 impl World {
     pub fn new(cfg: SystemConfig, nranks: usize, placement: Placement) -> World {
-        let fabric = Fabric::new(cfg);
+        World::with_model(cfg, nranks, placement, NetworkModel::Flow)
+    }
+
+    /// A world whose fabric runs the given [`NetworkModel`] — the same
+    /// MPI runtime (progress engine, collectives, OSU harness) against
+    /// either the flow-level links or the cell-level router mesh.
+    pub fn with_model(
+        cfg: SystemConfig,
+        nranks: usize,
+        placement: Placement,
+        model: NetworkModel,
+    ) -> World {
+        let fabric = Fabric::with_model(cfg, model);
         let cap = match placement {
             Placement::PerCore => fabric.cfg().num_cores(),
             Placement::PerMpsoc => fabric.cfg().num_mpsocs(),

@@ -15,6 +15,7 @@
 //! * The ExaNet router adds `router_latency` (L_ER = 145 ns) per crossing
 //!   to the latency path (N torus hops cross N+1 routers).
 
+use super::router::{NetworkModel, RouterMesh};
 use crate::sim::{RateResource, Resource, SimDuration, SimTime};
 use crate::topology::{route, Calib, LinkId, MpsocId, Path, SystemConfig, Topology};
 
@@ -37,10 +38,20 @@ pub struct Fabric {
     ctrl: Vec<Resource>,
     /// Dense lazily-filled route cache (Path is Copy; §Perf iteration 3).
     path_cache: Vec<Option<Path>>,
+    /// Cell-level router mesh: when present, the small-cell and RDMA-block
+    /// link stages run against it instead of the flow-level link
+    /// resources (memory channels and R5 stay shared — they model the
+    /// endpoints, not the interconnect).
+    mesh: Option<RouterMesh>,
 }
 
 impl Fabric {
     pub fn new(cfg: SystemConfig) -> Fabric {
+        Fabric::with_model(cfg, NetworkModel::Flow)
+    }
+
+    /// Build a fabric running the given [`NetworkModel`].
+    pub fn with_model(cfg: SystemConfig, model: NetworkModel) -> Fabric {
         let topo = Topology::new(cfg);
         let cfg = &topo.cfg;
         let n_links = LinkId::slots(cfg);
@@ -64,7 +75,13 @@ impl Fabric {
         let r5 = (0..n).map(|_| Resource::new()).collect();
         let ctrl = (0..n_links).map(|_| Resource::new()).collect();
         let path_cache = vec![None; n * n];
-        Fabric { topo, links, mem_rd, mem_wr, r5, ctrl, path_cache }
+        let mesh = match model {
+            NetworkModel::Flow => None,
+            NetworkModel::Cell { policy, faults } => {
+                Some(RouterMesh::new(topo.clone(), policy, faults))
+            }
+        };
+        Fabric { topo, links, mem_rd, mem_wr, r5, ctrl, path_cache, mesh }
     }
 
     pub fn cfg(&self) -> &SystemConfig {
@@ -75,7 +92,21 @@ impl Fabric {
         &self.topo.cfg.calib
     }
 
-    /// Reset all occupancy (fresh experiment, same hardware).
+    /// The active cell-level mesh, if any.
+    pub fn mesh(&self) -> Option<&RouterMesh> {
+        self.mesh.as_ref()
+    }
+
+    /// Is this fabric running the cell-level router model?
+    pub fn is_cell_level(&self) -> bool {
+        self.mesh.is_some()
+    }
+
+    /// Reset all occupancy (fresh experiment, same hardware).  Busy/use
+    /// statistics clear with the occupancy; the route cache is kept — the
+    /// topology is static, so cached paths stay exact (asserted by the
+    /// `reset_clears_busy_stats_and_keeps_route_cache_valid` unit test
+    /// and `prop_route_cached_valid_after_reset`).
     pub fn reset(&mut self) {
         for l in &mut self.links {
             l.reset();
@@ -92,6 +123,29 @@ impl Fabric {
         for c in &mut self.ctrl {
             c.reset();
         }
+        if let Some(mesh) = &mut self.mesh {
+            mesh.reset();
+        }
+    }
+
+    /// Every cached path still equals a fresh route computation (the
+    /// cache-coherence invariant behind keeping the cache across
+    /// `reset`).  O(cached pairs · route cost) — test-only.
+    #[cfg(test)]
+    fn path_cache_is_valid(&self) -> bool {
+        let n = self.topo.cfg.num_mpsocs();
+        self.path_cache.iter().enumerate().all(|(idx, slot)| match slot {
+            None => true,
+            Some(p) => {
+                let (a, b) = (MpsocId((idx / n) as u32), MpsocId((idx % n) as u32));
+                let fresh = route(&self.topo, a, b);
+                p.src == fresh.src
+                    && p.dst == fresh.dst
+                    && p.hops() == fresh.hops()
+                    && p.routers == fresh.routers
+                    && p.switches == fresh.switches
+            }
+        })
     }
 
     /// Route between two endpoints (delegates to topology).
@@ -139,8 +193,12 @@ impl Fabric {
         self.r5[node.0 as usize].acquire(at, dur)
     }
 
-    /// Link utilisation bookkeeping for reports: (busy, uses).
+    /// Link utilisation bookkeeping for reports: (busy, uses).  Reads the
+    /// active model's counters (bulk-wire scope in both).
     pub fn link_busy(&self, link: LinkId) -> (SimDuration, u64) {
+        if let Some(mesh) = &self.mesh {
+            return mesh.link_busy(link);
+        }
         let r = &self.links[link.flat(&self.topo.cfg)];
         (r.busy_time(), r.uses())
     }
@@ -175,6 +233,9 @@ impl Fabric {
     ///
     /// `payload` is the cell payload in bytes (<= 256).
     pub fn small_cell(&mut self, path: &Path, at: SimTime, payload: usize) -> SimTime {
+        if let Some(mesh) = &mut self.mesh {
+            return mesh.small_cell(path.src, path.dst, at, payload);
+        }
         // copy the few scalars used, avoiding a full Calib clone per call
         // (§Perf iteration 2)
         let c = &self.topo.cfg.calib;
@@ -241,6 +302,13 @@ impl Fabric {
         let (_, mem_first) = self.mem_read(path.src, at, first);
         if bytes as u64 > first {
             self.mem_read(path.src, mem_first, bytes as u64 - first);
+        }
+        if let Some(mesh) = &mut self.mesh {
+            // Cell-level link stage; memory endpoints stay on the shared
+            // flow-level AXI channels above/below.
+            let (src_free, arrival) = mesh.block(path.src, path.dst, mem_first, bytes, pipelined);
+            let (_, w_end) = self.mem_write(path.dst, arrival, bytes.max(1) as u64);
+            return (src_free, w_end);
         }
         let mut t = mem_first + sw_lat;
 
@@ -396,5 +464,56 @@ mod tests {
         let (busy, uses) = f.link_busy(p.hops()[0].link);
         assert_eq!(busy, SimDuration::ZERO);
         assert_eq!(uses, 0);
+    }
+
+    #[test]
+    fn reset_clears_busy_stats_and_keeps_route_cache_valid() {
+        // Regression for the reset/cache seam: drive traffic through
+        // cached routes, reset, and require (a) zeroed link statistics and
+        // (b) a still-exact cache on both the hit and the fresh path.
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(0, 1, 0);
+        let p = f.route_cached(a, b);
+        f.rdma_block(&p, SimTime::ZERO, 16 * 1024, true);
+        let link = p.hops()[0].link;
+        assert!(f.link_busy(link).0 > SimDuration::ZERO);
+        f.reset();
+        assert_eq!(f.link_busy(link), (SimDuration::ZERO, 0), "busy stats survive reset");
+        let cached = f.route_cached(a, b);
+        let fresh = route(&f.topo, a, b);
+        assert_eq!(cached.hops(), fresh.hops());
+        assert_eq!(cached.routers, fresh.routers);
+        assert!(f.path_cache_is_valid());
+    }
+
+    #[test]
+    fn cell_level_fabric_matches_flow_fabric_unloaded() {
+        // The NetworkModel seam: identical primitives, identical zero-load
+        // timing (small cells exact; single-link blocks within per-cell
+        // rounding).
+        use crate::network::router::{NetworkModel, RoutePolicy};
+        let mut flow = fabric();
+        let mut cell = Fabric::with_model(
+            SystemConfig::prototype(),
+            NetworkModel::cell(RoutePolicy::Deterministic),
+        );
+        assert!(cell.is_cell_level() && !flow.is_cell_level());
+        let a = flow.topo.mpsoc(0, 0, 1);
+        let b = flow.topo.mpsoc(6, 1, 2);
+        let p = flow.route(a, b);
+        assert_eq!(
+            cell.small_cell(&p, SimTime::ZERO, 32),
+            flow.small_cell(&p, SimTime::ZERO, 32),
+            "5-torus-hop small cell must be ps-exact across models"
+        );
+        let c = flow.topo.mpsoc(0, 0, 0);
+        let d = flow.topo.mpsoc(0, 0, 1);
+        let q = flow.route(c, d);
+        let (ff, fa) = flow.rdma_block(&q, SimTime::ZERO, 16 * 1024, true);
+        let (cf, ca) = cell.rdma_block(&q, SimTime::ZERO, 16 * 1024, true);
+        let tol = SimDuration(64); // one ps of rounding per cell
+        assert!(ca.since(fa).max(fa.since(ca)) <= tol, "arrival {ca} vs {fa}");
+        assert!(cf.since(ff).max(ff.since(cf)) <= tol, "src_free {cf} vs {ff}");
     }
 }

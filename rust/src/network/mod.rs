@@ -4,9 +4,23 @@
 //! Latency constants (switch 2 cycles @ 150 MHz, router L_ER = 145 ns,
 //! link 120 ns) live in [`crate::topology::Calib`]; this module owns the
 //! occupancy bookkeeping that turns them into end-to-end behaviour.
+//!
+//! Two interchangeable link models sit behind [`Fabric`] (selected by
+//! [`NetworkModel`], see DESIGN.md §8):
+//!
+//! * the **flow level** ([`fabric`]): occupancy-tracked links, fast and
+//!   calibrated — the default;
+//! * the **cell level** ([`router`] + [`switch`]): per-QFDB torus routers
+//!   with credited input buffers, cut-through cell forwarding,
+//!   dimension-order or minimal-adaptive routing, and link-fault
+//!   injection with reroute.
 
 pub mod cell;
 pub mod fabric;
+pub mod router;
+pub mod switch;
 
 pub use cell::{cell_sizes, Cell, CellKind, NackReason, CELL_OVERHEAD, CELL_PAYLOAD};
 pub use fabric::Fabric;
+pub use router::{FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
+pub use switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};

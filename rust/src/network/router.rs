@@ -1,0 +1,913 @@
+//! The cell-level torus router mesh (paper §6.1.2, APEnet+-style
+//! microarchitecture): one router object per QFDB, per-direction credited
+//! input buffers, cut-through cell forwarding driven by the
+//! [`crate::sim::Engine`] event queue, two routing policies and a link
+//! fault model.
+//!
+//! ## Why a third model level
+//!
+//! The flow-level [`crate::network::Fabric`] charges whole transfers onto
+//! occupancy-tracked links: congestion spreads instantaneously and routes
+//! are fixed dimension-order, so head-of-line blocking, credit
+//! backpressure, adaptive escape around hot links and link failures are
+//! inexpressible.  The mesh simulates individual ExaNet cells:
+//!
+//! * **Credit flow control** — every cell consumes one downstream-buffer
+//!   credit when it starts on a link and returns it when the downstream
+//!   router dequeues it (cut-through forward, or delivery).  A fast link
+//!   feeding a slow one (16 Gb/s intra-QFDB into a 10 Gb/s torus port)
+//!   therefore throttles at the bottleneck cadence — real backpressure.
+//! * **Routing policies** — [`RoutePolicy::Deterministic`] reproduces the
+//!   prototype's dimension-order tables ([`Topology::qfdb_route`], and by
+//!   extension [`crate::topology::route`]); [`RoutePolicy::Adaptive`]
+//!   picks the least-congested *productive* direction (most free credits,
+//!   then earliest-free wire) per cell, falling back to dimension order on
+//!   ties — so an idle mesh routes exactly like the deterministic tables.
+//!   Small/control cells always route dimension-order on their own VC.
+//!   Bulk deadlock-freedom rests on two invariants (not on a Duato-style
+//!   escape transition — bulk cells never switch VC): every public call
+//!   drains its cells fully before the next call injects, and a cell
+//!   that finds no credit commits to a single dimension-order-preferred
+//!   link and waits FIFO there.
+//! * **Faults** — a [`FaultPlan`] marks links down from configurable
+//!   times; both policies steer around a failed link, going the long way
+//!   around the ring when no productive direction survives (the chosen
+//!   detour direction is locked per dimension so ring reroutes cannot
+//!   livelock).
+//!
+//! ## Calibration contract
+//!
+//! At zero load the mesh reproduces the flow model hop for hop: the same
+//! `Calib` constants are charged in the same order (source switch, L_ER
+//! per torus crossing incl. both endpoint F1s, serialization at link
+//! rate, per-cell flow-control gap on torus wires, link propagation), so
+//! a lone small cell matches [`Fabric::small_cell`] to the picosecond and
+//! a single-link RDMA block matches [`Fabric::rdma_block`] up to per-cell
+//! rounding (≤ 1 ps per cell).  Multi-link blocks are *faster* than the
+//! flow model because cells genuinely cut through intermediate routers
+//! instead of store-and-forwarding per hop — see DESIGN.md §8 for the
+//! calibration table.
+
+use super::switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};
+use crate::sim::{Engine, SimDuration, SimTime};
+use crate::topology::{Dir, LinkId, MpsocId, QfdbId, Topology, NETWORK_FPGA};
+
+/// How the mesh routes bulk cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Static dimension-order (X, then Y, then Z; ties to the + ring
+    /// direction) — reproduces [`crate::topology::route`].
+    #[default]
+    Deterministic,
+    /// Minimal-adaptive: among the productive directions pick the one
+    /// with the most free credits, then the earliest-free wire; ties fall
+    /// back to dimension order.
+    Adaptive,
+}
+
+impl RoutePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::Deterministic => "dimension-order",
+            RoutePolicy::Adaptive => "minimal-adaptive",
+        }
+    }
+}
+
+/// Links taken down at configurable times (fault injection scenarios).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    down: Vec<(LinkId, SimTime)>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Mark `link` failed from `at` on (builder style).  Only torus
+    /// (inter-QFDB SFP+) links can fail: an intra-QFDB hard link has no
+    /// alternative route (traffic funnels F_src → F1 over a fixed mesh),
+    /// so a fault there could only be ignored — reject it loudly instead.
+    pub fn fail_link(mut self, link: LinkId, at: SimTime) -> FaultPlan {
+        assert!(
+            link.is_torus(),
+            "FaultPlan supports torus links only; {link:?} has no alternative route"
+        );
+        self.down.push((link, at));
+        self
+    }
+
+    /// Mark the torus link leaving `qfdb` in `dir` failed from `at` on.
+    pub fn fail_torus(self, qfdb: QfdbId, dir: Dir, at: SimTime) -> FaultPlan {
+        self.fail_link(LinkId::Torus { qfdb, dir }, at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.down.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(LinkId, SimTime)> {
+        self.down.iter()
+    }
+}
+
+/// Which network model a [`crate::network::Fabric`] (and therefore every
+/// MPI world) runs its small-cell and RDMA-block stages against.
+#[derive(Debug, Clone, Default)]
+pub enum NetworkModel {
+    /// The flow-level occupancy model: fast, calibrated, congestion as
+    /// emergent bandwidth sharing (the default).
+    #[default]
+    Flow,
+    /// The cell-level router mesh: per-cell credit flow control, policy
+    /// routing, fault injection.  Slower, congestion/fault-capable.
+    Cell { policy: RoutePolicy, faults: FaultPlan },
+}
+
+impl NetworkModel {
+    /// Cell-level model with a healthy fabric.
+    pub fn cell(policy: RoutePolicy) -> NetworkModel {
+        NetworkModel::Cell { policy, faults: FaultPlan::default() }
+    }
+
+    /// Cell-level model with a fault plan.
+    pub fn cell_with_faults(policy: RoutePolicy, faults: FaultPlan) -> NetworkModel {
+        NetworkModel::Cell { policy, faults }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetworkModel::Flow => "flow",
+            NetworkModel::Cell { policy: RoutePolicy::Deterministic, .. } => "cell/dimension-order",
+            NetworkModel::Cell { policy: RoutePolicy::Adaptive, .. } => "cell/adaptive",
+        }
+    }
+}
+
+/// Where a cell currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loc {
+    /// At an MPSoC endpoint (source before injection, or destination).
+    At(MpsocId),
+    /// At the torus router of a QFDB (the F1 network FPGA).
+    Router(QfdbId),
+    Delivered,
+}
+
+/// A committed-but-stalled departure waiting for a credit.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    link: usize,
+    ready: SimTime,
+    next_loc: Loc,
+    is_torus: bool,
+}
+
+/// One in-flight ExaNet cell.
+#[derive(Debug, Clone)]
+struct MeshCell {
+    dst: MpsocId,
+    payload: usize,
+    /// Control/small cell: routes dimension-order on the control lane.
+    ctrl: bool,
+    /// No switch crossing is charged before the very first link (the
+    /// source switch is charged at injection, like the flow model).
+    first_hop: bool,
+    loc: Loc,
+    next_loc: Loc,
+    /// Link whose downstream buffer slot this cell occupies.
+    in_link: Option<usize>,
+    pending: Option<Pending>,
+    /// Per-dimension ring-direction lock (0 none, 1 plus, 2 minus): set
+    /// when a detour takes the long way around a ring, so the cell keeps
+    /// going that way instead of oscillating at the failed link.
+    dir_lock: [u8; 3],
+    crossed_torus: bool,
+    hops: u32,
+    delivered: Option<SimTime>,
+}
+
+#[derive(Debug)]
+enum MeshEvent {
+    /// The cell (re-)attempts its next departure.
+    Depart(usize),
+    /// The cell's last bit arrived at the downstream node.
+    Arrive(usize),
+}
+
+/// The rack-wide mesh of per-QFDB torus routers plus the intra-QFDB
+/// cut-through switches, at cell granularity.
+#[derive(Debug)]
+pub struct RouterMesh {
+    topo: Topology,
+    policy: RoutePolicy,
+    faults: FaultPlan,
+    /// One credited link per unidirectional physical link, indexed by
+    /// [`LinkId::flat`].
+    links: Vec<CreditedLink>,
+    engine: Engine<MeshEvent>,
+    /// Cells of the call in progress (cleared between calls; the mesh
+    /// always drains fully before returning).
+    cells: Vec<MeshCell>,
+    live: usize,
+    /// Distinct hop-0 links of the call in progress (usually one; an
+    /// adaptive source router can spray a block over several).  The
+    /// pipelined pacing gap and `src_free` cover every one of them.
+    inject_links: Vec<usize>,
+    // Calibration scalars (copied out of Calib; see the module docs).
+    sw_lat: SimDuration,
+    rt_lat: SimDuration,
+    ln_lat: SimDuration,
+    cell_payload: usize,
+    cell_overhead: usize,
+    pipe_gap: SimDuration,
+}
+
+impl RouterMesh {
+    pub fn new(topo: Topology, policy: RoutePolicy, faults: FaultPlan) -> RouterMesh {
+        let cfg = &topo.cfg;
+        let calib = &cfg.calib;
+        let credits = calib.router_credit_cells as u32;
+        let n_links = LinkId::slots(cfg);
+        let f = cfg.fpgas_per_qfdb;
+        let mut links = Vec::with_capacity(n_links);
+        for _ in 0..cfg.num_qfdbs() * f * f {
+            links.push(CreditedLink::new(cfg.intra_qfdb_gbps, SimDuration::ZERO, credits));
+        }
+        for _ in 0..cfg.num_qfdbs() * 6 {
+            links.push(CreditedLink::new(cfg.torus_gbps, calib.torus_cell_gap, credits));
+        }
+        debug_assert_eq!(links.len(), n_links);
+        for &(link, at) in faults.entries() {
+            links[link.flat(cfg)].fail_at(at);
+        }
+        RouterMesh {
+            policy,
+            faults,
+            links,
+            engine: Engine::new(),
+            cells: Vec::new(),
+            live: 0,
+            inject_links: Vec::new(),
+            sw_lat: calib.switch_latency,
+            rt_lat: calib.router_latency,
+            ln_lat: calib.link_latency,
+            cell_payload: calib.cell_payload,
+            cell_overhead: calib.cell_overhead,
+            pipe_gap: calib.rdma_block_gap_pipelined,
+            topo,
+        }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Bulk-wire (busy, uses) of a link — same scope as the flow model's
+    /// [`crate::network::Fabric::link_busy`].
+    pub fn link_busy(&self, link: LinkId) -> (SimDuration, u64) {
+        self.links[link.flat(&self.topo.cfg)].busy_stats()
+    }
+
+    /// Forget all occupancy and statistics; the fault plan (scenario
+    /// configuration) is preserved.
+    pub fn reset(&mut self) {
+        debug_assert_eq!(self.live, 0, "reset with cells in flight");
+        for l in &mut self.links {
+            l.reset();
+        }
+        self.engine.clear();
+        self.cells.clear();
+        self.inject_links.clear();
+    }
+
+    // ---- public transfer API --------------------------------------------
+
+    /// Forward one small/control cell from `src` to `dst`, cut-through on
+    /// the control lane.  Returns the arrival time of the cell at the
+    /// destination NI.  Matches [`crate::network::Fabric::small_cell`]
+    /// exactly at zero load.
+    pub fn small_cell(&mut self, src: MpsocId, dst: MpsocId, at: SimTime, payload: usize) -> SimTime {
+        self.begin_call();
+        if src == dst {
+            return at + self.sw_lat;
+        }
+        let id = self.spawn(dst, payload, true, Loc::At(src));
+        self.live += 1;
+        self.engine.post(at + self.sw_lat, MeshEvent::Depart(id));
+        self.drive();
+        self.cells[id].delivered.expect("driven to delivery")
+    }
+
+    /// Stream one RDMA block (<= 16 KB) of `bytes` from `src` to `dst` as
+    /// individual cells.  Returns (time the injection wire frees, arrival
+    /// time of the block's last cell).  `at` is the moment the first cell
+    /// leaves memory (the caller charges AXI and the source switch is
+    /// charged here, mirroring [`crate::network::Fabric::rdma_block`]).
+    pub fn block(
+        &mut self,
+        src: MpsocId,
+        dst: MpsocId,
+        at: SimTime,
+        bytes: usize,
+        pipelined: bool,
+    ) -> (SimTime, SimTime) {
+        self.begin_call();
+        let start = at + self.sw_lat;
+        if src == dst {
+            return (start, start);
+        }
+        let ncells = bytes.div_ceil(self.cell_payload).max(1);
+        let mut remaining = bytes;
+        for _ in 0..ncells {
+            let p = remaining.min(self.cell_payload);
+            remaining -= p;
+            let id = self.spawn(dst, p, false, Loc::At(src));
+            self.live += 1;
+            self.engine.post(start, MeshEvent::Depart(id));
+        }
+        self.drive();
+        let arrival = self
+            .cells
+            .iter()
+            .map(|c| c.delivered.expect("driven to delivery"))
+            .max()
+            .unwrap_or(start);
+        // The sender can stream its next block once every injection wire
+        // it used is free; the pipelined pacing gap throttles each of them
+        // (one link in the common case — the flow-model behaviour).
+        let mut src_free = start;
+        for i in 0..self.inject_links.len() {
+            let l = self.inject_links[i];
+            if pipelined {
+                self.links[l].pad_wire(self.pipe_gap);
+            }
+            src_free = src_free.max(self.links[l].wire_free());
+        }
+        (src_free, arrival)
+    }
+
+    /// The torus route the current policy would take from `from` to `to`
+    /// right now (link state read, not modified) for a bulk cell.  On an
+    /// idle healthy mesh this equals [`Topology::qfdb_route`] for both
+    /// policies.
+    pub fn probe_route(&self, from: QfdbId, to: QfdbId, at: SimTime) -> Vec<Dir> {
+        let mut probe = MeshCell {
+            dst: self.topo.network_mpsoc(to),
+            payload: self.cell_payload,
+            ctrl: false,
+            first_hop: false,
+            loc: Loc::Router(from),
+            next_loc: Loc::Router(from),
+            in_link: None,
+            pending: None,
+            dir_lock: [0; 3],
+            crossed_torus: false,
+            hops: 0,
+            delivered: None,
+        };
+        let mut q = from;
+        let mut dirs = Vec::new();
+        while q != to {
+            let (dir, lock) = self
+                .torus_step(&probe, q, at)
+                .unwrap_or_else(|| panic!("no usable torus link out of {q:?} towards {to:?}"));
+            if let Some((dim, way)) = lock {
+                probe.dir_lock[dim] = way;
+            }
+            dirs.push(dir);
+            q = self.topo.qfdb_neighbor(q, dir);
+            assert!(
+                dirs.len() as u32 <= MAX_CELL_HOPS,
+                "probe {from:?}->{to:?} exceeded {MAX_CELL_HOPS} hops (reroute livelock)"
+            );
+        }
+        dirs
+    }
+
+    // ---- event machinery ------------------------------------------------
+
+    fn begin_call(&mut self) {
+        debug_assert_eq!(self.live, 0, "previous call left cells in flight");
+        debug_assert_eq!(self.engine.pending(), 0, "previous call left events queued");
+        self.cells.clear();
+        self.inject_links.clear();
+    }
+
+    fn spawn(&mut self, dst: MpsocId, payload: usize, ctrl: bool, loc: Loc) -> usize {
+        self.cells.push(MeshCell {
+            dst,
+            payload,
+            ctrl,
+            first_hop: true,
+            loc,
+            next_loc: loc,
+            in_link: None,
+            pending: None,
+            dir_lock: [0; 3],
+            crossed_torus: false,
+            hops: 0,
+            delivered: None,
+        });
+        self.cells.len() - 1
+    }
+
+    /// Run the event queue until every live cell is delivered.
+    fn drive(&mut self) {
+        while self.live > 0 {
+            let Some((t, ev)) = self.engine.next() else {
+                panic!(
+                    "router mesh stalled with {} undelivered cells \
+                     (credit deadlock or unroutable fault plan)",
+                    self.live
+                );
+            };
+            match ev {
+                MeshEvent::Depart(id) => self.handle_depart(id, t),
+                MeshEvent::Arrive(id) => self.handle_arrive(id, t),
+            }
+        }
+        debug_assert!(self.links.iter().all(|l| l.is_quiescent()), "buffers not drained");
+    }
+
+    fn handle_depart(&mut self, id: usize, t: SimTime) {
+        if self.cells[id].delivered.is_some() {
+            return;
+        }
+        // A woken waiter retries its committed grant (crossing latency was
+        // already charged into `ready` on the first attempt) — unless the
+        // link died while it waited, in which case it falls through to a
+        // fresh routing decision and reroutes.  Credits wake one waiter
+        // each, and a rerouting waiter will never return a credit on the
+        // dead link, so it also evacuates everyone still queued behind it
+        // (each evacuee re-enters here, sees the dead link, and reroutes).
+        if let Some(p) = self.cells[id].pending.take() {
+            let ready = p.ready.max(t);
+            if self.links[p.link].is_up(ready) {
+                self.try_start(id, p.link, ready, p.is_torus, p.next_loc);
+                return;
+            }
+            self.evacuate_dead_link(p.link, t);
+        }
+        let decision = {
+            let cell = &self.cells[id];
+            let dst = cell.dst;
+            match cell.loc {
+                Loc::At(m) => {
+                    debug_assert!(m != dst, "cell departing from its destination");
+                    let mc = self.topo.coord(m);
+                    let mq = self.topo.qfdb_of(m);
+                    let dq = self.topo.qfdb_of(dst);
+                    if mq == dq {
+                        let dc = self.topo.coord(dst);
+                        (
+                            LinkId::Intra { qfdb: mq, from: mc.fpga, to: dc.fpga },
+                            false,
+                            Loc::At(dst),
+                            None,
+                        )
+                    } else if mc.fpga != NETWORK_FPGA {
+                        (
+                            LinkId::Intra { qfdb: mq, from: mc.fpga, to: NETWORK_FPGA },
+                            false,
+                            Loc::Router(mq),
+                            None,
+                        )
+                    } else {
+                        self.torus_hop(cell, mq, t)
+                    }
+                }
+                Loc::Router(q) => {
+                    let dq = self.topo.qfdb_of(dst);
+                    if q == dq {
+                        let dc = self.topo.coord(dst);
+                        (
+                            LinkId::Intra { qfdb: q, from: NETWORK_FPGA, to: dc.fpga },
+                            false,
+                            Loc::At(dst),
+                            None,
+                        )
+                    } else {
+                        self.torus_hop(cell, q, t)
+                    }
+                }
+                Loc::Delivered => return,
+            }
+        };
+        let (link, is_torus, next_loc, lock) = decision;
+        if let Some((dim, way)) = lock {
+            self.cells[id].dir_lock[dim] = way;
+        }
+        // Crossing latency ahead of the wire: L_ER before every torus
+        // link, a switch crossing before every non-first intra link.
+        let pre = if is_torus {
+            self.rt_lat
+        } else if !self.cells[id].first_hop {
+            self.sw_lat
+        } else {
+            SimDuration::ZERO
+        };
+        let flat = link.flat(&self.topo.cfg);
+        self.try_start(id, flat, t + pre, is_torus, next_loc);
+    }
+
+    /// Torus departure: policy decision wrapped with flat-link metadata.
+    #[allow(clippy::type_complexity)]
+    fn torus_hop(
+        &self,
+        cell: &MeshCell,
+        q: QfdbId,
+        t: SimTime,
+    ) -> (LinkId, bool, Loc, Option<(usize, u8)>) {
+        let (dir, lock) = self.torus_step(cell, q, t).unwrap_or_else(|| {
+            panic!(
+                "no usable torus link out of {q:?} towards {:?} (fault plan isolates the node?)",
+                cell.dst
+            )
+        });
+        let next = self.topo.qfdb_neighbor(q, dir);
+        (LinkId::Torus { qfdb: q, dir }, true, Loc::Router(next), lock)
+    }
+
+    /// Pick the torus direction a cell takes out of router `q`.  Returns
+    /// the direction plus an optional (dimension, way) ring lock when the
+    /// choice is a distance-increasing detour around a failed link.
+    fn torus_step(&self, cell: &MeshCell, q: QfdbId, t: SimTime) -> Option<(Dir, Option<(usize, u8)>)> {
+        let dq = self.topo.qfdb_of(cell.dst);
+        let c = self.topo.qfdb_coord(q);
+        let d = self.topo.qfdb_coord(dq);
+        let (nx, ny, nz) = self.topo.cfg.torus_dims();
+        let n = [nx, ny, nz];
+        let cc = [c.x, c.y, c.z];
+        let dd = [d.x, d.y, d.z];
+        let adaptive = !cell.ctrl && self.policy == RoutePolicy::Adaptive;
+        let vc = if cell.ctrl { VC_CTRL } else { VC_BULK };
+
+        let up = |dir: Dir| {
+            let flat = LinkId::Torus { qfdb: q, dir }.flat(&self.topo.cfg);
+            self.links[flat].is_up(t)
+        };
+        // Productive directions (shorter way around each unresolved ring,
+        // honouring locks; + before - so dimension-order ties match the
+        // static tables), and distance-increasing detours as fallback.
+        let mut prod: Vec<(usize, Dir)> = Vec::new();
+        let mut detour: Vec<(usize, Dir)> = Vec::new();
+        for dim in 0..3 {
+            if cc[dim] == dd[dim] {
+                continue;
+            }
+            let fwd = (dd[dim] + n[dim] - cc[dim]) % n[dim];
+            let bwd = (cc[dim] + n[dim] - dd[dim]) % n[dim];
+            let (p, m) = (dir_of(dim, true), dir_of(dim, false));
+            match cell.dir_lock[dim] {
+                1 => {
+                    if up(p) {
+                        prod.push((dim, p));
+                    }
+                }
+                2 => {
+                    if up(m) {
+                        prod.push((dim, m));
+                    }
+                }
+                _ => {
+                    if fwd <= bwd && up(p) {
+                        prod.push((dim, p));
+                    }
+                    if bwd <= fwd && up(m) {
+                        prod.push((dim, m));
+                    }
+                    if fwd > bwd && up(p) {
+                        detour.push((dim, p));
+                    }
+                    if bwd > fwd && up(m) {
+                        detour.push((dim, m));
+                    }
+                }
+            }
+        }
+        let pick = |set: &[(usize, Dir)]| -> Option<(usize, Dir)> {
+            if set.is_empty() {
+                return None;
+            }
+            if !adaptive {
+                return Some(set[0]);
+            }
+            set.iter().copied().min_by_key(|&(dim, dir)| {
+                let flat = LinkId::Torus { qfdb: q, dir }.flat(&self.topo.cfg);
+                let l = &self.links[flat];
+                (std::cmp::Reverse(l.credit_free(vc)), l.wire_free(), dim, dir.index())
+            })
+        };
+        if let Some((_, dir)) = pick(&prod) {
+            return Some((dir, None));
+        }
+        // Only detours survive: go the long way around the ring and lock
+        // the direction so the cell cannot oscillate at the failed link.
+        let (dim, dir) = pick(&detour)?;
+        let way = if dir.index() % 2 == 0 { 1 } else { 2 };
+        Some((dir, Some((dim, way))))
+    }
+
+    /// Grant the cell's next wire slot, or queue it for a credit.
+    fn try_start(&mut self, id: usize, link: usize, ready: SimTime, is_torus: bool, next_loc: Loc) {
+        let ctrl = self.cells[id].ctrl;
+        let vc = if ctrl { VC_CTRL } else { VC_BULK };
+        if !self.links[link].try_take_credit(vc) {
+            self.links[link].enqueue_waiter(vc, id);
+            self.cells[id].pending = Some(Pending { link, ready, next_loc, is_torus });
+            return;
+        }
+        let wire_bytes = (self.cells[id].payload + self.cell_overhead) as u64;
+        let full_cell = (self.cell_payload + self.cell_overhead) as u64;
+        let (start, ser) = if ctrl {
+            self.links[link].grant_ctrl(ready, wire_bytes, full_cell)
+        } else {
+            self.links[link].grant_bulk(ready, wire_bytes)
+        };
+        // Cut-through dequeue: the upstream buffer slot frees the moment
+        // this cell starts on the next wire.
+        if let Some(prev) = self.cells[id].in_link.take() {
+            self.release_credit(prev, vc, start);
+        }
+        if self.cells[id].first_hop && !ctrl && !self.inject_links.contains(&link) {
+            self.inject_links.push(link);
+        }
+        let cell = &mut self.cells[id];
+        cell.in_link = Some(link);
+        cell.first_hop = false;
+        cell.next_loc = next_loc;
+        cell.crossed_torus |= is_torus;
+        cell.hops += 1;
+        assert!(
+            cell.hops <= MAX_CELL_HOPS,
+            "cell to {:?} exceeded {MAX_CELL_HOPS} hops (reroute livelock)",
+            cell.dst
+        );
+        self.engine.post(start + ser + self.ln_lat, MeshEvent::Arrive(id));
+    }
+
+    /// Return a credit on `link`/`vc`; a queued waiter retries at `at`.
+    fn release_credit(&mut self, link: usize, vc: usize, at: SimTime) {
+        if let Some(waiter) = self.links[link].give_credit(vc) {
+            self.engine.post(at, MeshEvent::Depart(waiter));
+        }
+    }
+
+    /// Wake every cell still queued behind a failed link so each makes a
+    /// fresh routing decision (no credits involved — none of them ever
+    /// held one on this link).
+    fn evacuate_dead_link(&mut self, link: usize, at: SimTime) {
+        for vc in 0..NUM_VCS {
+            while let Some(w) = self.links[link].pop_waiter(vc) {
+                self.engine.post(at, MeshEvent::Depart(w));
+            }
+        }
+    }
+
+    fn handle_arrive(&mut self, id: usize, t: SimTime) {
+        let next = self.cells[id].next_loc;
+        self.cells[id].loc = next;
+        match next {
+            Loc::At(m) => {
+                debug_assert_eq!(m, self.cells[id].dst, "cell arrived at a foreign MPSoC");
+                self.deliver(id, t);
+            }
+            Loc::Router(q) => {
+                let dst = self.cells[id].dst;
+                if self.topo.qfdb_of(dst) == q && self.topo.coord(dst).fpga == NETWORK_FPGA {
+                    self.deliver(id, t);
+                } else {
+                    self.engine.post(t, MeshEvent::Depart(id));
+                }
+            }
+            Loc::Delivered => unreachable!("arrival of a delivered cell"),
+        }
+    }
+
+    fn deliver(&mut self, id: usize, t: SimTime) {
+        let vc = if self.cells[id].ctrl { VC_CTRL } else { VC_BULK };
+        if let Some(l) = self.cells[id].in_link.take() {
+            self.release_credit(l, vc, t);
+        }
+        let cell = &mut self.cells[id];
+        // The destination-side F1 router crossing (the N+1'th L_ER) trails
+        // the last link, exactly like the flow model.
+        let done = if cell.crossed_torus { t + self.rt_lat } else { t };
+        cell.loc = Loc::Delivered;
+        cell.delivered = Some(done);
+        self.live -= 1;
+    }
+}
+
+fn dir_of(dim: usize, plus: bool) -> Dir {
+    match (dim, plus) {
+        (0, true) => Dir::XPlus,
+        (0, false) => Dir::XMinus,
+        (1, true) => Dir::YPlus,
+        (1, false) => Dir::YMinus,
+        (2, true) => Dir::ZPlus,
+        (2, false) => Dir::ZMinus,
+        _ => unreachable!("dimension out of range"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Fabric;
+    use crate::topology::SystemConfig;
+
+    fn topo() -> Topology {
+        Topology::new(SystemConfig::prototype())
+    }
+
+    fn mesh(policy: RoutePolicy) -> RouterMesh {
+        RouterMesh::new(topo(), policy, FaultPlan::none())
+    }
+
+    #[test]
+    fn probe_reproduces_dimension_order_tables() {
+        let t = topo();
+        for policy in [RoutePolicy::Deterministic, RoutePolicy::Adaptive] {
+            let m = mesh(policy);
+            for a in 0..t.cfg.num_qfdbs() as u32 {
+                for b in 0..t.cfg.num_qfdbs() as u32 {
+                    assert_eq!(
+                        m.probe_route(QfdbId(a), QfdbId(b), SimTime::ZERO),
+                        t.qfdb_route(QfdbId(a), QfdbId(b)),
+                        "{policy:?} {a} -> {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_cell_matches_flow_model_exactly_at_zero_load() {
+        // Same endpoints as the fabric tests: the mesh must reproduce the
+        // flow model's per-hop arithmetic to the picosecond.
+        let mut fab = Fabric::new(SystemConfig::prototype());
+        let mut m = mesh(RoutePolicy::Deterministic);
+        let cases = [
+            (fab.topo.mpsoc(0, 0, 0), fab.topo.mpsoc(0, 0, 1)), // intra-QFDB
+            (fab.topo.mpsoc(0, 0, 0), fab.topo.mpsoc(0, 1, 0)), // 1 torus hop
+            (fab.topo.mpsoc(0, 0, 1), fab.topo.mpsoc(6, 1, 2)), // 4 hops + fan in/out
+            (fab.topo.mpsoc(0, 0, 2), fab.topo.mpsoc(0, 0, 2)), // same MPSoC
+        ];
+        for (i, &(a, b)) in cases.iter().enumerate() {
+            let p = fab.route(a, b);
+            for payload in [0usize, 8, 64, 256] {
+                let at = SimTime::from_us(i as f64 * 50.0);
+                let flow = fab.small_cell(&p, at, payload);
+                let cell = m.small_cell(a, b, at, payload);
+                assert_eq!(cell, flow, "case {i} payload {payload}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_single_link_matches_flow_cadence() {
+        // One intra-QFDB link: per-cell serialization must sum to the flow
+        // model's whole-block serialization (<= 1 ps rounding per cell).
+        let t = topo();
+        let a = t.mpsoc(0, 0, 0);
+        let b = t.mpsoc(0, 0, 1);
+        let c = SystemConfig::prototype().calib;
+        for bytes in [1usize, 256, 4096, 16 * 1024] {
+            let mut m = mesh(RoutePolicy::Deterministic);
+            let cells = c.cells(bytes) as u64;
+            let (src_free, arr) = m.block(a, b, SimTime::ZERO, bytes, true);
+            // the flow model's single-hop timing, recomputed: source
+            // switch, whole-block wire bytes at 16 Gb/s, link propagation
+            let ser = SimDuration::serialize(c.wire_bytes(bytes), 16.0);
+            let expect_arr = SimTime::ZERO + c.switch_latency + ser + c.link_latency;
+            let diff = arr.since(expect_arr).0.max(expect_arr.since(arr).0);
+            assert!(diff <= cells, "bytes {bytes}: mesh {arr} vs flow {expect_arr}");
+            let expect_free =
+                SimTime::ZERO + c.switch_latency + ser + c.rdma_block_gap_pipelined;
+            let dfree = src_free.since(expect_free).0.max(expect_free.since(src_free).0);
+            assert!(dfree <= cells, "bytes {bytes}: free {src_free} vs {expect_free}");
+        }
+    }
+
+    #[test]
+    fn credits_throttle_fast_link_into_slow_link() {
+        // 16 Gb/s intra hop feeding a 10 Gb/s torus hop: the finite
+        // downstream buffer must throttle injection to the torus cadence —
+        // backpressure the flow model cannot express (it would free the
+        // injection wire after 16 KB @ 16 Gb/s ≈ 9.2 us).
+        let mut m = mesh(RoutePolicy::Deterministic);
+        let t = topo();
+        let a = t.mpsoc(0, 0, 1);
+        let b = t.mpsoc(0, 1, 0);
+        let (src_free, arr) = m.block(a, b, SimTime::ZERO, 16 * 1024, false);
+        assert!(arr > src_free);
+        // 64 cells at the torus cadence (288 B @ 10G + 75 ns gap = 305.4
+        // ns) minus the 8-credit head start
+        assert!(
+            src_free.us() > 15.0,
+            "injection wire freed at {src_free}, backpressure missing"
+        );
+    }
+
+    #[test]
+    fn failed_link_reroutes_the_long_way_around_the_ring() {
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::ZERO);
+        let m = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults.clone());
+        // healthy: 0 -> 1 is one X+ hop; with X+ down the detour is X-
+        // all the way around the 4-ring, locked so it cannot oscillate
+        let dirs = m.probe_route(QfdbId(0), QfdbId(1), SimTime::ZERO);
+        assert_eq!(dirs, vec![Dir::XMinus, Dir::XMinus, Dir::XMinus]);
+        // and a transfer over the failed link completes, slower
+        let mut healthy = mesh(RoutePolicy::Deterministic);
+        let mut failed = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        let a = t.mpsoc(0, 0, 0);
+        let b = t.mpsoc(0, 1, 0);
+        let ok = healthy.small_cell(a, b, SimTime::ZERO, 8);
+        let re = failed.small_cell(a, b, SimTime::ZERO, 8);
+        assert!(re > ok, "reroute {re} must cost more than the direct hop {ok}");
+    }
+
+    #[test]
+    fn fault_before_its_time_is_invisible() {
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::from_us(100.0));
+        let m = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        assert_eq!(m.probe_route(QfdbId(0), QfdbId(1), SimTime::ZERO), vec![Dir::XPlus]);
+        assert_eq!(
+            m.probe_route(QfdbId(0), QfdbId(1), SimTime::from_us(100.0)),
+            vec![Dir::XMinus, Dir::XMinus, Dir::XMinus]
+        );
+    }
+
+    #[test]
+    fn fault_mid_experiment_reroutes_later_transfers() {
+        // The failure time is honoured dynamically: transfers decided
+        // before it take the direct link, transfers after it detour.
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::from_us(50.0));
+        let mut m = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        let a = t.network_mpsoc(QfdbId(0));
+        let b = t.network_mpsoc(QfdbId(1));
+        let (_, early) = m.block(a, b, SimTime::ZERO, 4096, false);
+        let (_, late) = m.block(a, b, SimTime::from_us(100.0), 4096, false);
+        let early_dur = early.since(SimTime::ZERO);
+        let late_dur = late.since(SimTime::from_us(100.0));
+        assert!(
+            late_dur > early_dur,
+            "post-fault transfer must take the ring detour: {late_dur} vs direct {early_dur}"
+        );
+    }
+
+    #[test]
+    fn adaptive_escapes_a_hot_link() {
+        let t = topo();
+        let src = t.network_mpsoc(QfdbId(0));
+        let x_neighbor = t.network_mpsoc(QfdbId(1));
+        // destination needing X and Y: QFDB (x=1, y=1) = blade 1, slot 1
+        let diag = t.network_mpsoc(t.qfdb_at(crate::topology::TorusCoord { x: 1, y: 1, z: 0 }));
+        let mut results = Vec::new();
+        for policy in [RoutePolicy::Deterministic, RoutePolicy::Adaptive] {
+            let mut m = RouterMesh::new(t.clone(), policy, FaultPlan::none());
+            // pre-heat the X+ wire out of QFDB 0 with back-to-back blocks
+            for _ in 0..8 {
+                m.block(src, x_neighbor, SimTime::ZERO, 16 * 1024, true);
+            }
+            let (_, arr) = m.block(src, diag, SimTime::ZERO, 16 * 1024, false);
+            results.push(arr);
+        }
+        let (dor, adaptive) = (results[0], results[1]);
+        assert!(
+            adaptive < dor,
+            "adaptive {adaptive} must beat dimension-order {dor} past a hot link"
+        );
+    }
+
+    #[test]
+    fn reset_clears_occupancy_keeps_faults() {
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::ZERO);
+        let mut m = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        let a = t.mpsoc(0, 0, 0);
+        let b = t.mpsoc(0, 0, 1);
+        m.small_cell(a, b, SimTime::ZERO, 8);
+        let link = LinkId::Intra { qfdb: QfdbId(0), from: 0, to: 1 };
+        assert!(m.link_busy(link).1 == 0, "small cells ride the control lane");
+        m.block(a, b, SimTime::ZERO, 4096, false);
+        assert!(m.link_busy(link).1 > 0);
+        m.reset();
+        assert_eq!(m.link_busy(link), (SimDuration::ZERO, 0));
+        // the fault plan survives reset
+        assert_eq!(
+            m.probe_route(QfdbId(0), QfdbId(1), SimTime::ZERO),
+            vec![Dir::XMinus, Dir::XMinus, Dir::XMinus]
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Per-link machinery of the cell-level router model (paper §4.2/§6.1.2):
+//! the credited unidirectional link a [`crate::network::router::RouterMesh`]
+//! composes once per physical link of the rack.
+//!
+//! A [`CreditedLink`] bundles what the torus-router microarchitecture
+//! attaches to each output port:
+//!
+//! * a **wire serializer** for bulk RDMA cells — one cell on the wire at a
+//!   time, plus the per-cell flow-control gap on inter-QFDB links that
+//!   calibrates to the paper's 6.42 Gb/s goodput on 10 Gb/s links;
+//! * a **control lane** for small cells (packetizer messages, RTS/CTS,
+//!   notifications): they interleave *ahead* of a busy bulk stream, paying
+//!   at most one full-cell serialization before being inserted between
+//!   bulk cells (paper §4.2 — mirrored from the flow model's `ctrl`
+//!   resource so the two models agree at zero load);
+//! * per-VC **credit counters** over the downstream router's finite input
+//!   buffer: a cell consumes one credit when it starts on the wire and the
+//!   credit returns when the downstream router dequeues it (cut-through
+//!   forward on the next link, or delivery).  Cells that find no credit
+//!   wait in a per-VC FIFO and are woken by the returning credit;
+//! * a **fault switch**: a link can be marked down from a configurable
+//!   time, after which the routing policies steer around it.
+//!
+//! Timing constants (link rates, cell gap) come from
+//! [`crate::topology::Calib`]; this file only owns the occupancy and
+//! credit bookkeeping.
+
+use std::collections::VecDeque;
+
+use crate::sim::{Resource, SimDuration, SimTime};
+
+/// Virtual channels per link.  VC0 carries bulk RDMA cells (routed
+/// dimension-order or minimal-adaptive); VC1 is the control lane used by
+/// small cells, which always route dimension-order.  Note: bulk cells
+/// never fall back to VC1 (no Duato-style escape transition) — bulk
+/// deadlock-freedom instead rests on the mesh draining each transfer
+/// before the next starts and on waiters committing to one DOR-chosen
+/// link; a future fully-concurrent mesh would need a real escape VC.
+pub const NUM_VCS: usize = 2;
+/// Bulk-data virtual channel.
+pub const VC_BULK: usize = 0;
+/// Control/escape virtual channel.
+pub const VC_CTRL: usize = 1;
+
+/// Ceiling on hops any cell may take (reroute livelock guard).  The
+/// longest healthy path on the prototype is 7 links; ring reroutes around
+/// failed links add at most ring-size - 1 extra hops per dimension.
+pub const MAX_CELL_HOPS: u32 = 64;
+
+/// One unidirectional link with credit-based flow control.  The wire and
+/// control-lane serializers are the same FIFO-device model as the flow
+/// level ([`Resource`]), so the occupancy arithmetic cannot drift between
+/// the two models; this type adds the credit pools on top.
+#[derive(Debug, Clone)]
+pub struct CreditedLink {
+    /// Payload rate in Gb/s (16 intra-QFDB, 10 torus).
+    pub gbps: f64,
+    /// Per-cell flow-control gap charged on the wire (torus links only).
+    pub cell_gap: SimDuration,
+    /// Input-buffer depth of the downstream port, in cells per VC.
+    pub capacity: u32,
+    /// Cells currently holding a downstream buffer slot, per VC.
+    in_flight: [u32; NUM_VCS],
+    /// Cells waiting for a credit, FIFO per VC (mesh cell ids).
+    waiting: [VecDeque<usize>; NUM_VCS],
+    /// The bulk serializer (its busy/uses match the flow model's
+    /// `link_busy` scope; the control lane is tracked separately).
+    wire: Resource,
+    /// The control-lane serializer.
+    ctrl: Resource,
+    /// The link is down from this time on (fault injection).
+    down_at: Option<SimTime>,
+}
+
+impl CreditedLink {
+    pub fn new(gbps: f64, cell_gap: SimDuration, capacity: u32) -> CreditedLink {
+        assert!(capacity > 0, "a credited link needs at least one buffer cell");
+        CreditedLink {
+            gbps,
+            cell_gap,
+            capacity,
+            in_flight: [0; NUM_VCS],
+            waiting: Default::default(),
+            wire: Resource::new(),
+            ctrl: Resource::new(),
+            down_at: None,
+        }
+    }
+
+    /// Mark the link failed from `at` on.
+    pub fn fail_at(&mut self, at: SimTime) {
+        self.down_at = Some(match self.down_at {
+            Some(prev) => prev.min(at),
+            None => at,
+        });
+    }
+
+    /// Is the link usable for a cell departing at `at`?
+    pub fn is_up(&self, at: SimTime) -> bool {
+        self.down_at.map_or(true, |d| at < d)
+    }
+
+    /// Free downstream buffer slots on `vc`.
+    pub fn credit_free(&self, vc: usize) -> u32 {
+        self.capacity - self.in_flight[vc]
+    }
+
+    /// Consume one credit if available.
+    pub fn try_take_credit(&mut self, vc: usize) -> bool {
+        if self.in_flight[vc] < self.capacity {
+            self.in_flight[vc] += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return one credit (downstream dequeue).  If a cell was waiting for
+    /// it, pops and returns that cell id — the caller re-attempts its
+    /// departure at the release time.
+    pub fn give_credit(&mut self, vc: usize) -> Option<usize> {
+        debug_assert!(self.in_flight[vc] > 0, "credit underflow");
+        self.in_flight[vc] -= 1;
+        self.waiting[vc].pop_front()
+    }
+
+    /// Queue a cell waiting for a credit on `vc`.
+    pub fn enqueue_waiter(&mut self, vc: usize, cell: usize) {
+        self.waiting[vc].push_back(cell);
+    }
+
+    /// Pop a waiter without touching the credit count (used to evacuate
+    /// the queue of a failed link — those cells reroute, so no credit of
+    /// this link is involved).
+    pub fn pop_waiter(&mut self, vc: usize) -> Option<usize> {
+        self.waiting[vc].pop_front()
+    }
+
+    /// Any cell still queued or buffered (used to assert the mesh drained).
+    pub fn is_quiescent(&self) -> bool {
+        self.in_flight == [0; NUM_VCS] && self.waiting.iter().all(|q| q.is_empty())
+    }
+
+    /// When the bulk serializer frees (congestion signal for adaptive
+    /// routing and the interleave penalty of small cells).
+    pub fn wire_free(&self) -> SimTime {
+        self.wire.next_free()
+    }
+
+    /// Serialize one bulk cell of `wire_bytes` no earlier than `ready`.
+    /// Returns (start, serialization time); the wire stays occupied for
+    /// the serialization plus the flow-control gap.
+    pub fn grant_bulk(&mut self, ready: SimTime, wire_bytes: u64) -> (SimTime, SimDuration) {
+        let ser = SimDuration::serialize(wire_bytes, self.gbps);
+        let (start, _) = self.wire.acquire(ready, ser + self.cell_gap);
+        (start, ser)
+    }
+
+    /// Serialize one small cell on the control lane.  If the bulk wire is
+    /// mid-cell the small cell waits at most one `full_cell_bytes`
+    /// serialization before it is inserted between bulk cells (priority
+    /// interleave, paper §4.2).
+    pub fn grant_ctrl(
+        &mut self,
+        ready: SimTime,
+        wire_bytes: u64,
+        full_cell_bytes: u64,
+    ) -> (SimTime, SimDuration) {
+        let ser = SimDuration::serialize(wire_bytes, self.gbps);
+        let interleave = if self.wire.next_free() > ready {
+            SimDuration::serialize(full_cell_bytes, self.gbps)
+        } else {
+            SimDuration::ZERO
+        };
+        let (start, _) = self.ctrl.acquire(ready + interleave, ser + self.cell_gap);
+        (start, ser)
+    }
+
+    /// Extend the bulk wire occupancy (per-block pacing gap of pipelined
+    /// RDMA windows, charged on the injection link like the flow model).
+    pub fn pad_wire(&mut self, extra: SimDuration) {
+        self.wire.acquire(self.wire.next_free(), extra);
+    }
+
+    /// Bulk (busy, uses) — same scope as the flow model's `link_busy`.
+    pub fn busy_stats(&self) -> (SimDuration, u64) {
+        (self.wire.busy_time(), self.wire.uses())
+    }
+
+    /// Control-lane (busy, uses).
+    pub fn ctrl_stats(&self) -> (SimDuration, u64) {
+        (self.ctrl.busy_time(), self.ctrl.uses())
+    }
+
+    /// Forget all occupancy and statistics; fault configuration (part of
+    /// the scenario, not of the experiment state) is preserved.
+    pub fn reset(&mut self) {
+        self.wire.reset();
+        self.ctrl.reset();
+        self.in_flight = [0; NUM_VCS];
+        for q in &mut self.waiting {
+            q.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> CreditedLink {
+        CreditedLink::new(10.0, SimDuration::from_ns(75.0), 2)
+    }
+
+    #[test]
+    fn bulk_serializes_with_gap() {
+        let mut l = link();
+        // 288 B at 10 Gb/s = 230.4 ns on the wire + 75 ns gap
+        let (s1, ser) = l.grant_bulk(SimTime::ZERO, 288);
+        assert_eq!(s1, SimTime::ZERO);
+        assert_eq!(ser, SimDuration::from_ns(230.4));
+        let (s2, _) = l.grant_bulk(SimTime::ZERO, 288);
+        assert_eq!(s2, SimTime::from_ns(305.4), "second cell waits ser + gap");
+        let (busy, uses) = l.busy_stats();
+        assert_eq!(uses, 2);
+        assert_eq!(busy, SimDuration::from_ns(2.0 * 305.4));
+    }
+
+    #[test]
+    fn ctrl_interleaves_behind_busy_wire() {
+        let mut l = link();
+        l.grant_bulk(SimTime::ZERO, 288);
+        // wire busy: the small cell pays one full-cell (288 B) interleave
+        let (s, _) = l.grant_ctrl(SimTime::ZERO, 64, 288);
+        assert_eq!(s, SimTime::from_ns(230.4));
+        // idle wire: no interleave, no ctrl backlog at t=1ms
+        let (s2, _) = l.grant_ctrl(SimTime::from_us(1000.0), 64, 288);
+        assert_eq!(s2, SimTime::from_us(1000.0));
+    }
+
+    #[test]
+    fn credits_exhaust_and_return_fifo() {
+        let mut l = link();
+        assert!(l.try_take_credit(VC_BULK));
+        assert!(l.try_take_credit(VC_BULK));
+        assert!(!l.try_take_credit(VC_BULK), "capacity 2 exhausted");
+        assert_eq!(l.credit_free(VC_BULK), 0);
+        l.enqueue_waiter(VC_BULK, 7);
+        l.enqueue_waiter(VC_BULK, 9);
+        assert_eq!(l.give_credit(VC_BULK), Some(7), "FIFO wake order");
+        assert_eq!(l.give_credit(VC_BULK), Some(9));
+        assert!(l.is_quiescent());
+        // VCs are independent pools
+        assert!(l.try_take_credit(VC_CTRL));
+        assert_eq!(l.credit_free(VC_BULK), 2);
+    }
+
+    #[test]
+    fn fault_window() {
+        let mut l = link();
+        assert!(l.is_up(SimTime::from_us(5.0)));
+        l.fail_at(SimTime::from_us(3.0));
+        assert!(l.is_up(SimTime::from_us(2.9)));
+        assert!(!l.is_up(SimTime::from_us(3.0)));
+        // earliest failure wins
+        l.fail_at(SimTime::from_us(10.0));
+        assert!(!l.is_up(SimTime::from_us(4.0)));
+    }
+
+    #[test]
+    fn reset_keeps_fault_clears_occupancy() {
+        let mut l = link();
+        l.grant_bulk(SimTime::ZERO, 288);
+        l.try_take_credit(VC_BULK);
+        l.fail_at(SimTime::from_us(1.0));
+        l.reset();
+        assert_eq!(l.busy_stats(), (SimDuration::ZERO, 0));
+        assert_eq!(l.wire_free(), SimTime::ZERO);
+        assert_eq!(l.credit_free(VC_BULK), 2);
+        assert!(!l.is_up(SimTime::from_us(1.0)), "fault plan survives reset");
+    }
+}

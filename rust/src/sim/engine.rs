@@ -104,6 +104,16 @@ impl<E> Engine<E> {
         self.queue.peek().map(|Reverse(ev)| ev.at)
     }
 
+    /// Drop all pending events and rewind the clock to zero (fresh
+    /// experiment on the same engine; keeps the queue's allocation).
+    /// The sequence counter is *not* rewound, so events scheduled after a
+    /// clear still order deterministically against any stale diagnostics.
+    pub fn clear(&mut self) {
+        self.queue.clear();
+        self.now = SimTime::ZERO;
+        self.processed = 0;
+    }
+
     /// Pop the next event, advancing the clock (monotonically: an event
     /// posted in the past via [`Engine::post`] does not rewind `now`).
     pub fn next(&mut self) -> Option<(SimTime, E)> {
@@ -229,6 +239,22 @@ mod tests {
         assert_eq!(seen, 5); // ticks at 0,10,20,30,40
         assert_eq!(e.pending(), 5);
         assert_eq!(e.now(), SimTime::from_ns(45.0));
+    }
+
+    #[test]
+    fn clear_rewinds_clock_and_drops_events() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(10.0), Ev::Tick(1));
+        e.next().unwrap();
+        e.schedule(SimTime::from_ns(20.0), Ev::Tick(2));
+        e.clear();
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.now(), SimTime::ZERO);
+        assert_eq!(e.processed(), 0);
+        // usable again from t=0
+        e.schedule(SimTime::from_ns(1.0), Ev::Tick(3));
+        let (t, Ev::Tick(i)) = e.next().unwrap();
+        assert_eq!((t.ns() as u32, i), (1, 3));
     }
 
     #[test]

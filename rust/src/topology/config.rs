@@ -53,6 +53,28 @@ impl SystemConfig {
         SystemConfig { mezzanines: 1, ..SystemConfig::prototype() }
     }
 
+    /// A two-blade subsystem (8 QFDBs, 32 MPSoCs, torus 4x2x1): the
+    /// smallest shape with two torus dimensions, so adaptive routing and
+    /// ring reroutes are exercisable.  Used by CI smoke runs (`--small`).
+    pub fn two_blades() -> SystemConfig {
+        SystemConfig { mezzanines: 2, ..SystemConfig::prototype() }
+    }
+
+    /// A stable 64-bit digest of the full configuration (shape, link
+    /// rates and every calibration constant), stamped into `BENCH_*.json`
+    /// so perf trajectories are only compared across identical models.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over the canonical Debug rendering: every field of
+        // SystemConfig and Calib participates, and f64 Debug formatting is
+        // stable for the finite values used here.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     pub fn num_qfdbs(&self) -> usize {
         self.mezzanines * self.qfdbs_per_mezz
     }
@@ -114,6 +136,11 @@ pub struct Calib {
     /// Extra per-cell occupancy of the inter-QFDB torus router (flow
     /// control + control data; calibrated to 6.42 Gb/s on 10 Gb/s links).
     pub torus_cell_gap: SimDuration,
+    /// Input-buffer depth of a cell-level router port, in cells per VC
+    /// (the credit loop of `network::router`; deep enough that the
+    /// credit round-trip never throttles a single healthy link, so the
+    /// cell-level model stays on the flow-model calibration at zero load).
+    pub router_credit_cells: usize,
     /// AXI read/write channel bandwidth between NI and memory (128 bit
     /// @ 150 MHz = 19.2 Gb/s per direction).
     pub axi_gbps: f64,
@@ -162,6 +189,7 @@ impl Default for Calib {
             cell_payload: 256,
             cell_overhead: 32,
             torus_cell_gap: SimDuration::from_ns(75.0),
+            router_credit_cells: 8,
             axi_gbps: 19.2,
             notif_write: SimDuration::from_ns(125.0),
             notif_poll: SimDuration::from_ns(100.0),
@@ -218,6 +246,24 @@ mod tests {
         assert_eq!(c.num_qfdbs(), 4);
         assert_eq!(c.num_mpsocs(), 16);
         assert_eq!(c.torus_dims(), (4, 1, 1));
+    }
+
+    #[test]
+    fn two_blade_shape() {
+        let c = SystemConfig::two_blades();
+        assert_eq!(c.num_qfdbs(), 8);
+        assert_eq!(c.num_mpsocs(), 32);
+        assert_eq!(c.torus_dims(), (4, 2, 1));
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_changes() {
+        let a = SystemConfig::prototype();
+        assert_eq!(a.fingerprint(), SystemConfig::prototype().fingerprint());
+        assert_ne!(a.fingerprint(), SystemConfig::mezzanine().fingerprint());
+        let mut tweaked = SystemConfig::prototype();
+        tweaked.calib.router_credit_cells += 1;
+        assert_ne!(a.fingerprint(), tweaked.fingerprint(), "calib must participate");
     }
 
     #[test]

@@ -7,6 +7,7 @@ use exanest::apps::scaling::{scaling_curve, AppParams, Mode};
 use exanest::ip::{iperf, IpMode, Scenario, TunnelConfig};
 use exanest::model;
 use exanest::mpi::{collectives, pt2pt, Placement, World};
+use exanest::network::{NetworkModel, RoutePolicy};
 use exanest::topology::SystemConfig;
 
 fn cfg() -> SystemConfig {
@@ -31,6 +32,42 @@ fn paper_headline_numbers() {
     assert!((hw - 470.0).abs() < 40.0, "hw ping-pong {hw}");
     let util = osu::osu_bw(&c, OsuPath::IntraQfdbSh, 4 << 20, 64) / 16.0;
     assert!((util - 0.819).abs() < 0.03, "link utilisation {util}");
+}
+
+#[test]
+fn network_models_agree_on_table2_at_zero_load() {
+    // The whole MPI stack (progress engine, eager protocol, OSU harness)
+    // over the cell-level router mesh must land on the flow model's
+    // numbers for every Table-2 path class when nothing contends.
+    let c = cfg();
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    for path in OsuPath::ALL {
+        let flow = osu::osu_latency(&c, path, 0, 20).us();
+        let cell = osu::osu_latency_model(&c, &model, path, 0, 20).us();
+        assert!(
+            (cell - flow).abs() / flow < 0.01,
+            "{}: cell-level {cell} vs flow {flow}",
+            path.label()
+        );
+    }
+}
+
+#[test]
+fn cell_level_full_machine_collectives_run() {
+    // A 64-rank broadcast entirely on the router mesh: completes, stays in
+    // a sane envelope, and a barrier after reset still works (mesh reset
+    // path through World::reset).
+    let mut w = World::with_model(
+        SystemConfig::two_blades(),
+        64,
+        Placement::PerCore,
+        NetworkModel::cell(RoutePolicy::Adaptive),
+    );
+    let b = collectives::bcast(&mut w, 64);
+    assert!(b.us() > 1.0 && b.us() < 100.0, "cell-level bcast {b}");
+    w.reset();
+    let bar = collectives::barrier(&mut w);
+    assert!(bar.us() > 1.0 && bar.us() < 100.0, "cell-level barrier {bar}");
 }
 
 #[test]

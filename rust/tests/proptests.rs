@@ -4,7 +4,7 @@
 
 use exanest::mpi::collectives::{bcast_schedule, recursive_doubling_schedule};
 use exanest::mpi::{progress, pt2pt, Placement, World};
-use exanest::network::Fabric;
+use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
 use exanest::prop_assert;
 use exanest::sim::{Resource, SimDuration, SimTime};
 use exanest::testing::forall;
@@ -250,6 +250,138 @@ fn prop_route_cached_equals_route() {
                     "{a:?}->{b:?} query {query}: cached {cached:?} != fresh {fresh:?}"
                 );
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cell_level_zero_load_matches_oracle() {
+    // The router-mesh seam: at zero load, cell-level deterministic
+    // routing must reproduce the closed-form `pt2pt::message` oracle —
+    // exactly (< 1%) for eager messages on any path and for rendez-vous
+    // on single-link paths; multi-link rendez-vous may only be *faster*
+    // (cells genuinely cut through intermediate routers, where the flow
+    // model store-and-forwards whole blocks per hop).
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("cell-level zero load == oracle", 25, |rng| {
+        let n = cfg.num_mpsocs();
+        let a = rng.below(n as u64) as usize;
+        let b = rng.below(n as u64) as usize;
+        if a == b {
+            return Ok(());
+        }
+        let p = route(&topo, MpsocId(a as u32), MpsocId(b as u32));
+        let single_link = p.hops().len() <= 1;
+        let mut sizes: Vec<usize> = vec![0, 8, 32];
+        if single_link {
+            sizes.extend([64, 4096, 64 * 1024]);
+        }
+        for bytes in sizes {
+            let mut flow = World::new(cfg.clone(), n, Placement::PerMpsoc);
+            let mut cell = World::with_model(
+                cfg.clone(),
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            let f = pt2pt::message(&mut flow, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let c = pt2pt::message(&mut cell, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let rel = (c.recv_done.ns() - f.recv_done.ns()).abs() / f.recv_done.ns();
+            prop_assert!(
+                rel < 0.01,
+                "{a}->{b} {bytes} B: cell {:?} vs oracle {:?} ({rel:.4} off)",
+                c.recv_done,
+                f.recv_done
+            );
+        }
+        // multi-link rendez-vous: cut-through must never be slower
+        if !single_link {
+            let mut flow = World::new(cfg.clone(), n, Placement::PerMpsoc);
+            let mut cell = World::with_model(
+                cfg.clone(),
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            let f = pt2pt::message(&mut flow, a, b, 64 * 1024, SimTime::ZERO, SimTime::ZERO);
+            let c = pt2pt::message(&mut cell, a, b, 64 * 1024, SimTime::ZERO, SimTime::ZERO);
+            prop_assert!(
+                c.recv_done <= f.recv_done + SimDuration::from_ns(1.0),
+                "{a}->{b}: cut-through {:?} slower than store-and-forward {:?}",
+                c.recv_done,
+                f.recv_done
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_degenerates_to_dimension_order_when_idle() {
+    // On an idle healthy mesh the adaptive policy's congestion signals
+    // are all ties, so it must route and time exactly like the static
+    // dimension-order tables.
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("idle adaptive == dimension order", 60, |rng| {
+        let nq = cfg.num_qfdbs() as u64;
+        let qa = QfdbId(rng.below(nq) as u32);
+        let qb = QfdbId(rng.below(nq) as u32);
+        let det = RouterMesh::new(topo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+        let ada = RouterMesh::new(topo.clone(), RoutePolicy::Adaptive, FaultPlan::none());
+        prop_assert!(
+            ada.probe_route(qa, qb, SimTime::ZERO) == det.probe_route(qa, qb, SimTime::ZERO),
+            "{qa:?}->{qb:?}: adaptive route diverges on an idle mesh"
+        );
+        prop_assert!(
+            det.probe_route(qa, qb, SimTime::ZERO) == topo.qfdb_route(qa, qb),
+            "{qa:?}->{qb:?}: deterministic mesh route != static DOR table"
+        );
+        if qa != qb {
+            let a = topo.network_mpsoc(qa);
+            let b = topo.network_mpsoc(qb);
+            let mut det = det;
+            let mut ada = ada;
+            let bytes = [256usize, 4096, 16 * 1024][rng.below(3) as usize];
+            let d = det.block(a, b, SimTime::ZERO, bytes, false);
+            let m = ada.block(a, b, SimTime::ZERO, bytes, false);
+            prop_assert!(m == d, "{qa:?}->{qb:?} {bytes} B: adaptive {m:?} != DOR {d:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_cached_valid_after_reset() {
+    // Satellite regression: `Fabric::reset` keeps the route cache, which
+    // must therefore stay exact after arbitrary traffic + reset cycles.
+    let cfg = SystemConfig::prototype();
+    forall("route cache exact across reset", 40, |rng| {
+        let mut fab = Fabric::new(cfg.clone());
+        let n = cfg.num_mpsocs() as u64;
+        let mut pairs = Vec::new();
+        for _ in 0..4 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            let p = fab.route_cached(a, b);
+            if a != b {
+                fab.small_cell(&p, SimTime::ZERO, 64);
+                fab.rdma_block(&p, SimTime::ZERO, 4096, true);
+            }
+            pairs.push((a, b));
+        }
+        fab.reset();
+        for (a, b) in pairs {
+            let cached = fab.route_cached(a, b);
+            let fresh = fab.route(a, b);
+            prop_assert!(
+                cached.hops() == fresh.hops()
+                    && cached.routers == fresh.routers
+                    && cached.switches == fresh.switches,
+                "{a:?}->{b:?}: cache corrupted across reset"
+            );
         }
         Ok(())
     });
