@@ -1,5 +1,10 @@
-//! Bench for the simulation substrate itself (§Perf baseline): event
-//! queue throughput, fabric primitive costs, and the MPI progress engine.
+//! Bench for the simulation substrate itself (§Perf baseline): timing-
+//! wheel event-queue throughput (near-horizon, rollover, far-future
+//! overflow, posts into the past), fabric primitive costs, and the MPI
+//! progress engine.  Stamps engine events/sec and peak queue depth into
+//! `BENCH_engine.json`.
+use std::time::Instant;
+
 use exanest::bench::{black_box, Suite};
 use exanest::mpi::{progress, Placement, World};
 use exanest::network::Fabric;
@@ -9,6 +14,7 @@ use exanest::topology::SystemConfig;
 fn main() {
     let mut s = Suite::new("engine");
     s.stamp(&SystemConfig::prototype());
+    // near-horizon traffic: timestamps within one wheel span (~67 us)
     s.bench("engine/schedule+drain/10k", || {
         let mut e: Engine<u32> = Engine::new();
         for i in 0..10_000u32 {
@@ -21,6 +27,32 @@ fn main() {
         });
         black_box(acc);
     });
+    // rollover + overflow: timestamps spread over ~3000 wheel horizons,
+    // exercising bucket laps and far-heap migration
+    s.bench("engine/schedule+drain/far-future/10k", || {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10_000u32 {
+            e.schedule(SimTime(i as u64 * 7919 * 2_718_281 % 200_000_000_000), i);
+        }
+        let mut acc = 0u64;
+        e.run(&mut acc, |a, _, _, i| {
+            *a += i as u64;
+            true
+        });
+        black_box(acc);
+    });
+    // rank-local posts trailing the clock (the MPI progress pattern)
+    s.bench("engine/post-past+drain/10k", || {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule(SimTime(1_000_000), 0);
+        e.next();
+        for i in 1..10_000u32 {
+            e.post(SimTime(i as u64 * 101 % 2_000_000), i);
+        }
+        while e.next().is_some() {}
+        black_box(e.processed());
+    });
+
     let mut fab = Fabric::new(SystemConfig::prototype());
     let a = fab.topo.mpsoc(0, 0, 0);
     let b = fab.topo.mpsoc(6, 1, 2);
@@ -45,5 +77,25 @@ fn main() {
         black_box(progress::wait_all(&mut w, &[sr, rr]));
         w.progress.recycle();
     });
+
+    // raw wheel throughput metric: events/sec through a full
+    // schedule-and-drain cycle of near-horizon traffic
+    let t0 = Instant::now();
+    let mut e: Engine<u32> = Engine::new();
+    let rounds = 50u64;
+    for _ in 0..rounds {
+        for i in 0..10_000u32 {
+            e.schedule(e.now() + exanest::sim::SimDuration(i as u64 * 7919 % 100_000), i);
+        }
+        while e.next().is_some() {}
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    s.metric("engine/events_per_sec", e.processed() as f64 / wall, "1/s");
+    s.metric("engine/peak_queue_depth", e.peak_pending() as f64, "events");
+    // accumulated over the progress bench above: queue pressure of the
+    // MPI event chains
+    s.metric("progress/events_processed", w.progress.events_processed() as f64, "events");
+    s.metric("progress/peak_queue_depth", w.progress.peak_queue_depth() as f64, "events");
+
     s.write_json().expect("write BENCH_engine.json");
 }

@@ -1,5 +1,14 @@
 //! Bench for the cell-level router mesh: per-cell forwarding cost vs the
-//! flow model, policy overhead, and the hotspot scenario end to end.
+//! flow model, policy overhead, the train fast path vs the per-cell
+//! event reference, and the hotspot scenario end to end — on the
+//! prototype and on the full 256-MPSoC rack.
+//!
+//! Besides wall times, the suite stamps simulator-throughput metrics
+//! (events/sec of the per-cell engine, peak event-queue depth, and the
+//! train-batching speedup) into `BENCH_router.json` so the perf
+//! trajectory is tracked PR-over-PR.
+use std::time::Instant;
+
 use exanest::bench::{black_box, Suite};
 use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
 use exanest::sim::SimTime;
@@ -20,6 +29,27 @@ fn main() {
     s.bench("mesh/block16k/6hops", || {
         black_box(mesh.block(a, b, SimTime::ZERO, 16 * 1024, true));
     });
+    // the train fast path vs the per-cell event reference: meshes hoisted
+    // out so the samples time only block() (construction would otherwise
+    // dilute the speedup ratio); timestamps chain through src_free so
+    // every iteration runs the steady-state busy-wire case
+    let mut fastm = RouterMesh::new(topo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+    let mut fast_at = SimTime::ZERO;
+    let m_batched = s.bench("mesh/block16k/6hops/batched", || {
+        let (free, _) = fastm.block(a, b, fast_at, 16 * 1024, true);
+        fast_at = black_box(free);
+    });
+    let batched_ns = m_batched.median();
+    let mut slowm = RouterMesh::new(topo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+    slowm.set_batching(false);
+    let mut slow_at = SimTime::ZERO;
+    let m_events = s.bench("mesh/block16k/6hops/event-path", || {
+        let (free, _) = slowm.block(a, b, slow_at, 16 * 1024, true);
+        slow_at = black_box(free);
+    });
+    let event_ns = m_events.median();
+    s.metric("train_batching_speedup/block16k_6hops", event_ns / batched_ns.max(1e-12), "x");
+
     let mut adaptive = RouterMesh::new(topo.clone(), RoutePolicy::Adaptive, FaultPlan::none());
     s.bench("mesh/block16k/6hops/adaptive", || {
         black_box(adaptive.block(a, b, SimTime::ZERO, 16 * 1024, true));
@@ -39,9 +69,39 @@ fn main() {
         black_box(cell.rdma_block(&p, SimTime::ZERO, 16 * 1024, true));
     });
 
-    // the hotspot scenario, end to end on the MPI runtime
+    // the hotspot scenario, end to end on the MPI runtime (same bench
+    // name as PR 2 so the trajectory shows the batching speedup)
     s.bench("osu_mbw_hotspot/adaptive/64k", || {
         black_box(exanest::apps::osu::osu_mbw_hotspot(&cfg, RoutePolicy::Adaptive, 64 * 1024, 2));
     });
+
+    // full 256-MPSoC rack: the tentpole's target scale
+    let rack = SystemConfig::rack();
+    let rtopo = Topology::new(rack.clone());
+    let ra = rtopo.mpsoc(0, 0, 1);
+    let rb = rtopo.mpsoc(10, 2, 2); // 2+2+2 ring hops + fan in/out: the rack's longest path
+    let mut rmesh = RouterMesh::new(rtopo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+    s.bench("mesh/block16k/rack-8hops", || {
+        black_box(rmesh.block(ra, rb, SimTime::ZERO, 16 * 1024, true));
+    });
+    s.bench("osu_mbw_hotspot/adaptive/rack/64k", || {
+        black_box(exanest::apps::osu::osu_mbw_hotspot(&rack, RoutePolicy::Adaptive, 64 * 1024, 2));
+    });
+
+    // raw event-engine throughput + queue pressure on the rack shape
+    // (batching off so the per-cell engine is actually exercised)
+    let mut emesh = RouterMesh::new(rtopo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+    emesh.set_batching(false);
+    let t0 = Instant::now();
+    let mut at = SimTime::ZERO;
+    for _ in 0..64 {
+        let (free, _) = emesh.block(ra, rb, at, 16 * 1024, true);
+        at = free;
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    s.metric("event_path/events_per_sec/rack", emesh.events_processed() as f64 / wall, "1/s");
+    s.metric("event_path/peak_queue_depth/rack", emesh.peak_queue_depth() as f64, "events");
+    s.metric("event_path/events_per_block16k", emesh.events_processed() as f64 / 64.0, "events");
+
     s.write_json().expect("write BENCH_router.json");
 }

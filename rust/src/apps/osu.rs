@@ -218,7 +218,22 @@ pub fn osu_bcast(cfg: &SystemConfig, nranks: usize, bytes: usize, execs: usize, 
 
 /// osu_allreduce: average allreduce latency (software recursive doubling).
 pub fn osu_allreduce(cfg: &SystemConfig, nranks: usize, bytes: usize, execs: usize, placement: Placement) -> SimDuration {
-    let mut world = World::new(cfg.clone(), nranks, placement);
+    osu_allreduce_model(cfg, &NetworkModel::Flow, nranks, bytes, execs, placement)
+}
+
+/// [`osu_allreduce`] against an explicit network model — the full-rack
+/// cell-level scenario (`repro osu-allreduce --rack --network-model
+/// cell`, 256 ranks x 1 MiB) runs every RDMA block of every round
+/// through the credited torus-router mesh.
+pub fn osu_allreduce_model(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    nranks: usize,
+    bytes: usize,
+    execs: usize,
+    placement: Placement,
+) -> SimDuration {
+    let mut world = World::with_model(cfg.clone(), nranks, placement, model.clone());
     let mut acc = 0.0f64;
     for _ in 0..execs {
         world.reset();
@@ -649,6 +664,33 @@ mod tests {
             failed > healthy,
             "reroute {failed} must cost more than the healthy incast {healthy} ({hg} vs {fg} Gb/s)"
         );
+    }
+
+    #[test]
+    fn cell_model_allreduce_completes_and_tracks_flow() {
+        // The CI full-rack perf smoke in miniature: the whole MPI
+        // collective stack on the cell-level mesh.  Unloaded per-message
+        // parity is ps-exact; under collective concurrency the models
+        // may differ slightly, so only same-order agreement is required.
+        let c = SystemConfig::two_blades();
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let flow = osu_allreduce(&c, 32, 1024, 2, Placement::PerMpsoc);
+        let cell = osu_allreduce_model(&c, &model, 32, 1024, 2, Placement::PerMpsoc);
+        assert!(cell > SimDuration::ZERO);
+        let ratio = cell.ns() / flow.ns();
+        assert!((0.3..3.0).contains(&ratio), "cell {cell} vs flow {flow}");
+    }
+
+    #[test]
+    fn rack_config_runs_collectives_at_256_ranks() {
+        // Structural smoke for the 256-MPSoC shape on both models (the
+        // 1 MiB full-rack runs live in the CI perf-smoke job).
+        let c = SystemConfig::rack();
+        let flow = osu_allreduce(&c, 256, 64, 1, Placement::PerMpsoc);
+        assert!(flow > SimDuration::ZERO);
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let cell = osu_allreduce_model(&c, &model, 256, 64, 1, Placement::PerMpsoc);
+        assert!(cell > SimDuration::ZERO);
     }
 
     #[test]

@@ -83,10 +83,32 @@ fn json_escape(s: &str) -> String {
     out
 }
 
+/// A scalar counter stamped alongside the timing measurements (simulator
+/// events/sec, peak event-queue depth, ...): the perf trajectory of the
+/// engine itself, tracked PR-over-PR next to the wall times.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+impl Metric {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"value\":{:.3},\"unit\":\"{}\"}}",
+            json_escape(&self.name),
+            self.value,
+            json_escape(&self.unit)
+        )
+    }
+}
+
 /// A named collection of measurements that lands in `BENCH_<name>.json`.
 pub struct Suite {
     name: String,
     measurements: Vec<Measurement>,
+    metrics: Vec<Metric>,
     /// Commit the numbers were taken at (CI env or `git rev-parse`).
     git_sha: Option<String>,
     /// [`crate::topology::SystemConfig::fingerprint`] of the simulated
@@ -99,9 +121,21 @@ impl Suite {
         Suite {
             name: name.to_string(),
             measurements: Vec::new(),
+            metrics: Vec::new(),
             git_sha: None,
             config_hash: None,
         }
+    }
+
+    /// Record a scalar metric (written into the JSON's `metrics` array).
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) -> &mut Self {
+        println!("metric {name:<44} {value:.3} {unit}");
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+        self
     }
 
     /// Stamp the suite with the commit SHA and the fingerprint of the
@@ -132,16 +166,19 @@ impl Suite {
         let path = dir.as_ref().join(format!("BENCH_{}.json", self.name));
         let body: Vec<String> =
             self.measurements.iter().map(|m| format!("  {}", m.to_json())).collect();
+        let metrics: Vec<String> =
+            self.metrics.iter().map(|m| format!("  {}", m.to_json())).collect();
         let sha = self.git_sha.clone().unwrap_or_else(git_sha);
         let config = self
             .config_hash
             .map(|h| format!("{h:016x}"))
             .unwrap_or_else(|| "unstamped".to_string());
         let text = format!(
-            "{{\"suite\":\"{}\",\"git_sha\":\"{}\",\"config_hash\":\"{}\",\"unit\":\"ns/iter\",\"benchmarks\":[\n{}\n]}}\n",
+            "{{\"suite\":\"{}\",\"git_sha\":\"{}\",\"config_hash\":\"{}\",\"unit\":\"ns/iter\",\"metrics\":[\n{}\n],\"benchmarks\":[\n{}\n]}}\n",
             json_escape(&self.name),
             json_escape(&sha),
             config,
+            metrics.join(",\n"),
             body.join(",\n")
         );
         std::fs::write(&path, text)?;
@@ -249,6 +286,7 @@ mod tests {
         s.bench("noop/\"quoted\"", || {
             black_box(1 + 1);
         });
+        s.metric("events_per_sec", 1234567.89, "1/s");
         let path = s.write_json_to(&dir).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"suite\":\"selftest\""));
@@ -256,6 +294,10 @@ mod tests {
         assert!(text.contains("noop/\\\"quoted\\\""));
         assert!(text.contains("\"git_sha\":"), "provenance keys always present");
         assert!(text.contains("\"config_hash\":\"unstamped\""));
+        assert!(text.contains("\"metrics\":["), "metrics array always present");
+        assert!(text.contains("\"name\":\"events_per_sec\""));
+        assert!(text.contains("\"value\":1234567.890"));
+        assert!(text.contains("\"unit\":\"1/s\""));
         std::fs::remove_file(path).unwrap();
     }
 

@@ -19,9 +19,15 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     // Global flags: `--small` runs the two-blade subsystem (CI smoke);
+    // `--rack` the full 256-MPSoC rack (16 blades, 4x4x4 torus);
     // `--network-model flow|cell|cell-adaptive` picks the link model for
     // the OSU commands.
     let small = args.iter().any(|a| a == "--small");
+    let rack = args.iter().any(|a| a == "--rack");
+    if small && rack {
+        eprintln!("--small and --rack are mutually exclusive");
+        std::process::exit(2);
+    }
     if small {
         // Only the congestion/fault scenarios fit a two-blade machine;
         // the paper-artefact commands hard-code full-prototype endpoints
@@ -37,7 +43,13 @@ fn main() {
             std::process::exit(2);
         }
     }
-    let cfg = if small { SystemConfig::two_blades() } else { SystemConfig::prototype() };
+    let cfg = if small {
+        SystemConfig::two_blades()
+    } else if rack {
+        SystemConfig::rack()
+    } else {
+        SystemConfig::prototype()
+    };
     let model = match args.iter().position(|a| a == "--network-model") {
         None => NetworkModel::Flow,
         Some(i) => match args.get(i + 1).map(|s| s.as_str()) {
@@ -57,7 +69,8 @@ fn main() {
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
-        const MODEL_OK: [&str; 4] = ["osu-latency", "osu-bw", "osu-mbw", "osu-incast"];
+        const MODEL_OK: [&str; 5] =
+            ["osu-latency", "osu-bw", "osu-mbw", "osu-incast", "osu-allreduce"];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
                 "--network-model applies to: {} (router-hotspot is always cell-level)",
@@ -72,7 +85,7 @@ fn main() {
         "osu-latency" => osu_latency(&cfg, &model),
         "osu-bw" => osu_bw(&cfg, &model, args.iter().any(|a| a == "--bidirectional")),
         "osu-bcast" => osu_bcast(&cfg),
-        "osu-allreduce" => osu_allreduce(&cfg),
+        "osu-allreduce" => osu_allreduce(&cfg, &model),
         "osu-mbw" => osu_mbw(&cfg, &model),
         "osu-incast" => osu_incast(&cfg, &model),
         "osu-overlap" => osu_overlap(&cfg),
@@ -97,7 +110,7 @@ fn main() {
             osu_bw(&cfg, &model, false);
             osu_bw(&cfg, &model, true);
             osu_bcast(&cfg);
-            osu_allreduce(&cfg);
+            osu_allreduce(&cfg, &model);
             osu_mbw(&cfg, &model);
             osu_incast(&cfg, &model);
             osu_overlap(&cfg);
@@ -110,7 +123,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: repro <command> [--small] [--network-model flow|cell|cell-adaptive]\n\
+                "usage: repro <command> [--small|--rack] [--network-model flow|cell|cell-adaptive]\n\
                  commands (paper artefact each regenerates):\n\
                  \ttable1           Table 1: ExaNet path classes\n\
                  \thw-pingpong      §6.1.1: raw packetizer/mailbox ping-pong (470 ns)\n\
@@ -131,8 +144,9 @@ fn main() {
                  flags:\n\
                  \t--small          two-blade subsystem (8 QFDBs; CI smoke size) — congestion/fault\n\
                  \t                 scenarios only (osu-mbw, osu-incast, osu-overlap, router-hotspot, ...)\n\
+                 \t--rack           full 256-MPSoC rack (16 blades, 64 QFDBs, 4x4x4 torus, 1024 cores)\n\
                  \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw,\n\
-                 \t                 osu-mbw, osu-incast (router-hotspot is always cell-level)"
+                 \t                 osu-mbw, osu-incast, osu-allreduce (router-hotspot is always cell-level)"
             );
             std::process::exit(2);
         }
@@ -237,18 +251,29 @@ fn osu_bcast(cfg: &SystemConfig) {
     println!("{}", t.render());
 }
 
-fn osu_allreduce(cfg: &SystemConfig) {
-    println!("## Fig 17 — osu_allreduce average latency (us)\n");
-    let ranks = [4usize, 16, 64, 256, 512];
-    let sizes = [4usize, 64, 256, 1024, 4096];
+fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
+    // The flow model reproduces Fig 17 in full; the cell-level mesh runs
+    // a focused rack-scale sweep (256-rank 1 MiB is the CI perf-smoke
+    // acceptance scenario — every RDMA block of every round is simulated
+    // cell by cell on the credited torus routers).
+    let (ranks, sizes, execs): (Vec<usize>, Vec<usize>, usize) =
+        if matches!(model, NetworkModel::Flow) {
+            (vec![4, 16, 64, 256, 512], vec![4, 64, 256, 1024, 4096], 10)
+        } else {
+            (vec![64, 256], vec![1024, 4096, 1 << 20], 2)
+        };
+    println!("## Fig 17 — osu_allreduce average latency (us, {})\n", model.label());
+    let ranks: Vec<usize> = ranks.into_iter().filter(|&n| n <= cfg.num_cores()).collect();
     let mut hdr = vec!["ranks".to_string()];
     hdr.extend(sizes.iter().map(|s| format!("{s} B")));
     let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(&hdr_refs);
     for n in ranks {
         let mut row = vec![n.to_string()];
-        for s in sizes {
-            row.push(us(osu::osu_allreduce(cfg, n, s, 10, Placement::PerCore).us()));
+        for &s in &sizes {
+            row.push(us(
+                osu::osu_allreduce_model(cfg, model, n, s, execs, Placement::PerCore).us(),
+            ));
         }
         t.row(&row);
     }

@@ -276,15 +276,23 @@ impl Progress {
         self.state(req).done.unwrap()
     }
 
-    /// Process all events timestamped at or before `horizon`.
+    /// Process all events timestamped at or before `horizon` (single
+    /// queue lookup per event via [`Engine::next_before`]).
     fn drive_until(&mut self, fab: &mut Fabric, horizon: SimTime) {
-        while let Some(t) = self.engine.peek_time() {
-            if t > horizon {
-                break;
-            }
-            let (t, ev) = self.engine.next().unwrap();
+        while let Some((t, ev)) = self.engine.next_before(horizon) {
             self.handle(fab, t, ev);
         }
+    }
+
+    /// Events handled by the progress engine so far (benches stamp this
+    /// into BENCH_*.json as events/sec).
+    pub fn events_processed(&self) -> u64 {
+        self.engine.processed()
+    }
+
+    /// High-water mark of the progress engine's event queue.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.engine.peak_pending()
     }
 
     fn handle(&mut self, fab: &mut Fabric, t: SimTime, ev: MpiEvent) {

@@ -61,18 +61,66 @@ impl Cell {
     }
 }
 
-/// Split a payload into per-cell sizes.
-pub fn cell_sizes(bytes: usize) -> Vec<usize> {
-    if bytes == 0 {
-        return vec![0];
+/// Exact-size iterator over the per-cell payload sizes of a transfer:
+/// `full` cells of the maximum payload followed by an optional tail.
+/// Replaces the old `Vec<usize>`-returning splitter — the split sits on
+/// the per-block hot path of the cell-level router, where a heap
+/// allocation per message is unaffordable at rack scale.
+#[derive(Debug, Clone)]
+pub struct CellSizes {
+    payload: usize,
+    full: usize,
+    tail: Option<usize>,
+}
+
+impl CellSizes {
+    /// Split against an explicit per-cell payload capacity (the router
+    /// uses [`crate::topology::Calib::cell_payload`]).
+    pub fn with_payload(bytes: usize, payload: usize) -> CellSizes {
+        assert!(payload > 0, "cell payload must be positive");
+        if bytes == 0 {
+            // a zero-byte transfer still occupies one (control-only) cell
+            return CellSizes { payload, full: 0, tail: Some(0) };
+        }
+        let full = bytes / payload;
+        let rem = bytes % payload;
+        CellSizes { payload, full, tail: (rem > 0).then_some(rem) }
     }
-    let full = bytes / CELL_PAYLOAD;
-    let rem = bytes % CELL_PAYLOAD;
-    let mut v = vec![CELL_PAYLOAD; full];
-    if rem > 0 {
-        v.push(rem);
+
+    /// Total number of cells (count of the remaining iteration).
+    pub fn count_cells(&self) -> usize {
+        self.full + self.tail.is_some() as usize
     }
-    v
+
+    /// Payload of the last cell.
+    pub fn tail_size(&self) -> usize {
+        self.tail.unwrap_or(self.payload)
+    }
+}
+
+impl Iterator for CellSizes {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.full > 0 {
+            self.full -= 1;
+            Some(self.payload)
+        } else {
+            self.tail.take()
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.count_cells();
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for CellSizes {}
+
+/// Split a payload into per-cell sizes ([`CELL_PAYLOAD`] capacity).
+pub fn cell_sizes(bytes: usize) -> CellSizes {
+    CellSizes::with_payload(bytes, CELL_PAYLOAD)
 }
 
 #[cfg(test)]
@@ -96,18 +144,36 @@ mod tests {
 
     #[test]
     fn split_exact() {
-        assert_eq!(cell_sizes(512), vec![256, 256]);
+        assert_eq!(cell_sizes(512).collect::<Vec<_>>(), vec![256, 256]);
+        assert_eq!(cell_sizes(512).len(), 2);
+        assert_eq!(cell_sizes(512).tail_size(), 256);
     }
 
     #[test]
     fn split_remainder() {
-        assert_eq!(cell_sizes(300), vec![256, 44]);
+        assert_eq!(cell_sizes(300).collect::<Vec<_>>(), vec![256, 44]);
+        assert_eq!(cell_sizes(300).count_cells(), 2);
+        assert_eq!(cell_sizes(300).tail_size(), 44);
     }
 
     #[test]
     fn split_small_and_empty() {
-        assert_eq!(cell_sizes(1), vec![1]);
-        assert_eq!(cell_sizes(0), vec![0]); // control-only cell
+        assert_eq!(cell_sizes(1).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(cell_sizes(0).collect::<Vec<_>>(), vec![0]); // control-only cell
+        assert_eq!(cell_sizes(0).len(), 1);
+    }
+
+    #[test]
+    fn split_is_exact_size_and_matches_calib() {
+        use crate::topology::SystemConfig;
+        let calib = SystemConfig::prototype().calib;
+        for bytes in [0usize, 1, 255, 256, 257, 4096, 16 * 1024, 1 << 20] {
+            let it = CellSizes::with_payload(bytes, calib.cell_payload);
+            assert_eq!(it.len(), calib.cells(bytes), "{bytes} B cell count");
+            let sizes: Vec<usize> = it.collect();
+            assert_eq!(sizes.iter().sum::<usize>(), bytes, "{bytes} B conserved");
+            assert!(sizes.iter().all(|&s| s <= calib.cell_payload));
+        }
     }
 
     #[test]

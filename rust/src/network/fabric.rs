@@ -102,6 +102,15 @@ impl Fabric {
         self.mesh.is_some()
     }
 
+    /// Toggle the mesh's cell-train fast path (no-op on the flow model).
+    /// Parity tests and benches use this to force the per-cell event
+    /// reference path.
+    pub fn set_cell_batching(&mut self, on: bool) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.set_batching(on);
+        }
+    }
+
     /// Reset all occupancy (fresh experiment, same hardware).  Busy/use
     /// statistics clear with the occupancy; the route cache is kept — the
     /// topology is static, so cached paths stay exact (asserted by the
@@ -217,8 +226,8 @@ impl Fabric {
         let ser = SimDuration::serialize(wire, link.gbps(&self.topo.cfg));
         if link.is_torus() {
             let cells = calib.cells(payload) as u64;
-            let occ = ser + SimDuration(calib.torus_cell_gap.0 * cells);
-            let transit = ser + SimDuration(calib.torus_cell_gap.0 * (cells - 1));
+            let occ = ser + calib.torus_cell_gap.times(cells);
+            let transit = ser + calib.torus_cell_gap.times(cells - 1);
             (occ, transit)
         } else {
             (ser, ser)
@@ -485,6 +494,37 @@ mod tests {
         assert_eq!(cached.hops(), fresh.hops());
         assert_eq!(cached.routers, fresh.routers);
         assert!(f.path_cache_is_valid());
+    }
+
+    #[test]
+    fn cell_batching_is_transparent_through_the_fabric_seam() {
+        // The train fast path must be invisible at the Fabric API: same
+        // primitives, same timestamps, batched or per-cell.
+        use crate::network::router::{NetworkModel, RoutePolicy};
+        let mk = || {
+            Fabric::with_model(
+                SystemConfig::prototype(),
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            )
+        };
+        let (mut fast, mut slow) = (mk(), mk());
+        slow.set_cell_batching(false);
+        let a = fast.topo.mpsoc(0, 0, 1);
+        let b = fast.topo.mpsoc(6, 1, 2);
+        let p = fast.route(a, b);
+        for bytes in [64usize, 4096, 16 * 1024] {
+            assert_eq!(
+                fast.rdma_block(&p, SimTime::ZERO, bytes, true),
+                slow.rdma_block(&p, SimTime::ZERO, bytes, true),
+                "{bytes} B"
+            );
+        }
+        assert_eq!(
+            fast.small_cell(&p, SimTime::ZERO, 32),
+            slow.small_cell(&p, SimTime::ZERO, 32)
+        );
+        assert_eq!(fast.mesh().unwrap().events_processed(), 0);
+        assert!(slow.mesh().unwrap().events_processed() > 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod fabric;
 pub mod router;
 pub mod switch;
 
-pub use cell::{cell_sizes, Cell, CellKind, NackReason, CELL_OVERHEAD, CELL_PAYLOAD};
+pub use cell::{cell_sizes, Cell, CellKind, CellSizes, NackReason, CELL_OVERHEAD, CELL_PAYLOAD};
 pub use fabric::Fabric;
 pub use router::{FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
 pub use switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};

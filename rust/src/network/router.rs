@@ -35,6 +35,34 @@
 //!   detour direction is locked per dimension so ring reroutes cannot
 //!   livelock).
 //!
+//! ## Cell-train batching (§Perf: full-rack scale, DESIGN.md §9)
+//!
+//! Simulating every cell of every 16 KB block as its own Depart/Arrive
+//! event chain costs O(cells × hops) events — tens of millions for a
+//! 256-MPSoC collective.  The mesh therefore forwards a *train* (the
+//! contiguous back-to-back cell burst of one block) without events
+//! whenever the whole train provably makes identical decisions:
+//!
+//! * the route is **forced** (dimension-order policy, or adaptive with a
+//!   single surviving candidate at every router), and
+//! * no link changes up/down state after the call starts (a fault
+//!   transition inside the train's span is a split point).
+//!
+//! Because every public call drains fully before the next injects, the
+//! only dynamics inside a call are the train's own wire serialization
+//! and its own credit feedback.  Those obey exact recurrences
+//! (`start[h][i] = max(arrival, wire chain, release of cell i-cap at
+//! hop h+1)`), which [`RouterMesh::run_train`] evaluates with plain
+//! scalar sweeps against the same [`CreditedLink`] serializers — the
+//! per-cell grant sequence, and hence every timestamp and every
+//! busy/uses statistic, is reproduced **ps-exactly** with zero events
+//! and zero allocations.  Contention points (multi-candidate adaptive
+//! arbitration, mid-call fault transitions) fall back to the per-cell
+//! event path, which is kept verbatim as the reference implementation;
+//! `tests/proptests.rs` asserts batched == per-cell on idle, hotspot
+//! and fault traffic.  [`RouterMesh::set_batching`] toggles the fast
+//! path for those comparisons.
+//!
 //! ## Calibration contract
 //!
 //! At zero load the mesh reproduces the flow model hop for hop: the same
@@ -48,8 +76,11 @@
 //! instead of store-and-forwarding per hop — see DESIGN.md §8 for the
 //! calibration table.
 
+use std::collections::VecDeque;
+
+use super::cell::CellSizes;
 use super::switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};
-use crate::sim::{Engine, SimDuration, SimTime};
+use crate::sim::{Engine, InlineVec, SimDuration, SimTime};
 use crate::topology::{Dir, LinkId, MpsocId, QfdbId, Topology, NETWORK_FPGA};
 
 /// How the mesh routes bulk cells.
@@ -188,12 +219,44 @@ struct MeshCell {
     delivered: Option<SimTime>,
 }
 
+impl MeshCell {
+    fn probe(dst: MpsocId, payload: usize, ctrl: bool, loc: Loc) -> MeshCell {
+        MeshCell {
+            dst,
+            payload,
+            ctrl,
+            first_hop: true,
+            loc,
+            next_loc: loc,
+            in_link: None,
+            pending: None,
+            dir_lock: [0; 3],
+            crossed_torus: false,
+            hops: 0,
+            delivered: None,
+        }
+    }
+}
+
 #[derive(Debug)]
 enum MeshEvent {
     /// The cell (re-)attempts its next departure.
     Depart(usize),
     /// The cell's last bit arrived at the downstream node.
     Arrive(usize),
+}
+
+/// Capacity of a planned-route hop list (the hop-count livelock guard).
+const MAX_PLAN: usize = MAX_CELL_HOPS as usize;
+
+/// One hop of a planned (forced-route) cell train.
+#[derive(Debug, Clone, Copy)]
+struct PlannedHop {
+    /// Flat link index.
+    link: usize,
+    /// Crossing latency charged before the wire (L_ER on torus hops, a
+    /// switch crossing on non-first intra hops, zero on the first hop).
+    pre: SimDuration,
 }
 
 /// The rack-wide mesh of per-QFDB torus routers plus the intra-QFDB
@@ -215,6 +278,13 @@ pub struct RouterMesh {
     /// adaptive source router can spray a block over several).  The
     /// pipelined pacing gap and `src_free` cover every one of them.
     inject_links: Vec<usize>,
+    /// Cell-train fast path enabled (default).  Turned off by the parity
+    /// property tests to force the per-cell event reference path.
+    batching: bool,
+    /// Per-hop credit-release schedules of the train in flight (reused
+    /// across calls; entry h holds the downstream dequeue times that free
+    /// hop h's buffer slots, in cell order).
+    rel_rings: Vec<VecDeque<SimTime>>,
     // Calibration scalars (copied out of Calib; see the module docs).
     sw_lat: SimDuration,
     rt_lat: SimDuration,
@@ -250,6 +320,8 @@ impl RouterMesh {
             cells: Vec::new(),
             live: 0,
             inject_links: Vec::new(),
+            batching: true,
+            rel_rings: Vec::new(),
             sw_lat: calib.switch_latency,
             rt_lat: calib.router_latency,
             ln_lat: calib.link_latency,
@@ -268,6 +340,27 @@ impl RouterMesh {
         &self.faults
     }
 
+    /// Enable/disable the cell-train fast path (parity tests compare
+    /// batched runs against the per-cell event reference).
+    pub fn set_batching(&mut self, on: bool) {
+        self.batching = on;
+    }
+
+    pub fn batching_enabled(&self) -> bool {
+        self.batching
+    }
+
+    /// Events handled by the per-cell engine so far (the train fast path
+    /// adds none; benches stamp this into BENCH_*.json as events/sec).
+    pub fn events_processed(&self) -> u64 {
+        self.engine.processed()
+    }
+
+    /// High-water mark of the per-cell event queue.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.engine.peak_pending()
+    }
+
     /// Bulk-wire (busy, uses) of a link — same scope as the flow model's
     /// [`crate::network::Fabric::link_busy`].
     pub fn link_busy(&self, link: LinkId) -> (SimDuration, u64) {
@@ -284,6 +377,9 @@ impl RouterMesh {
         self.engine.clear();
         self.cells.clear();
         self.inject_links.clear();
+        for r in &mut self.rel_rings {
+            r.clear();
+        }
     }
 
     // ---- public transfer API --------------------------------------------
@@ -296,6 +392,13 @@ impl RouterMesh {
         self.begin_call();
         if src == dst {
             return at + self.sw_lat;
+        }
+        if self.batching {
+            // A lone cell's event chain is a deterministic sequential
+            // walk — replay it without the queue (ps-identical; a single
+            // cell can never contend with itself, and calls drain fully
+            // before the next injects).
+            return self.walk_single(src, dst, at + self.sw_lat, payload);
         }
         let id = self.spawn(dst, payload, true, Loc::At(src));
         self.live += 1;
@@ -322,11 +425,12 @@ impl RouterMesh {
         if src == dst {
             return (start, start);
         }
-        let ncells = bytes.div_ceil(self.cell_payload).max(1);
-        let mut remaining = bytes;
-        for _ in 0..ncells {
-            let p = remaining.min(self.cell_payload);
-            remaining -= p;
+        if self.batching && self.faults_static_at(at) {
+            if let Some((plan, crossed)) = self.plan_forced_route(src, dst, at) {
+                return self.run_train(&plan, crossed, bytes, start, pipelined);
+            }
+        }
+        for p in CellSizes::with_payload(bytes, self.cell_payload) {
             let id = self.spawn(dst, p, false, Loc::At(src));
             self.live += 1;
             self.engine.post(start, MeshEvent::Depart(id));
@@ -357,20 +461,9 @@ impl RouterMesh {
     /// idle healthy mesh this equals [`Topology::qfdb_route`] for both
     /// policies.
     pub fn probe_route(&self, from: QfdbId, to: QfdbId, at: SimTime) -> Vec<Dir> {
-        let mut probe = MeshCell {
-            dst: self.topo.network_mpsoc(to),
-            payload: self.cell_payload,
-            ctrl: false,
-            first_hop: false,
-            loc: Loc::Router(from),
-            next_loc: Loc::Router(from),
-            in_link: None,
-            pending: None,
-            dir_lock: [0; 3],
-            crossed_torus: false,
-            hops: 0,
-            delivered: None,
-        };
+        let mut probe =
+            MeshCell::probe(self.topo.network_mpsoc(to), self.cell_payload, false, Loc::Router(from));
+        probe.first_hop = false;
         let mut q = from;
         let mut dirs = Vec::new();
         while q != to {
@@ -390,6 +483,233 @@ impl RouterMesh {
         dirs
     }
 
+    // ---- cell-train fast path -------------------------------------------
+
+    /// No link changes up/down state strictly after `at` (every fault
+    /// either already happened or never does within this call).
+    fn faults_static_at(&self, at: SimTime) -> bool {
+        self.faults.entries().all(|&(_, t)| t <= at)
+    }
+
+    /// Crossing latency charged before a cell's wire slot: L_ER ahead of
+    /// every torus link, a switch crossing ahead of every non-first intra
+    /// link, nothing on the first hop (the source switch is charged at
+    /// injection).  Single source of truth for the event path, the
+    /// lone-cell walk and the train planner — the ps-exact parity between
+    /// them depends on this term staying identical.
+    #[inline]
+    fn pre_latency(&self, is_torus: bool, first_hop: bool) -> SimDuration {
+        if is_torus {
+            self.rt_lat
+        } else if !first_hop {
+            self.sw_lat
+        } else {
+            SimDuration::ZERO
+        }
+    }
+
+    /// Replay a lone cell's Depart/Arrive chain as a scalar walk.  Exact
+    /// mirror of `handle_depart`/`try_start`/`handle_arrive` for the
+    /// contention-free single-cell case (credit take/release nets to zero
+    /// with nothing else in flight, so only the serializers are touched).
+    fn walk_single(&mut self, src: MpsocId, dst: MpsocId, depart: SimTime, payload: usize) -> SimTime {
+        let mut cell = MeshCell::probe(dst, payload, true, Loc::At(src));
+        let full_cell = (self.cell_payload + self.cell_overhead) as u64;
+        let wire_bytes = (payload + self.cell_overhead) as u64;
+        let mut t = depart;
+        loop {
+            let (link, is_torus, next_loc, lock) = self.decide(&cell, t);
+            if let Some((dim, way)) = lock {
+                cell.dir_lock[dim] = way;
+            }
+            let pre = self.pre_latency(is_torus, cell.first_hop);
+            let flat = link.flat(&self.topo.cfg);
+            let (start, ser) = self.links[flat].grant_ctrl(t + pre, wire_bytes, full_cell);
+            cell.first_hop = false;
+            cell.crossed_torus |= is_torus;
+            cell.hops += 1;
+            assert!(
+                cell.hops <= MAX_CELL_HOPS,
+                "cell to {dst:?} exceeded {MAX_CELL_HOPS} hops (reroute livelock)"
+            );
+            t = start + ser + self.ln_lat;
+            match next_loc {
+                Loc::At(m) => {
+                    debug_assert_eq!(m, dst, "cell arrived at a foreign MPSoC");
+                    break;
+                }
+                Loc::Router(q) => {
+                    if self.topo.qfdb_of(dst) == q && self.topo.coord(dst).fpga == NETWORK_FPGA {
+                        break;
+                    }
+                    cell.loc = Loc::Router(q);
+                }
+                Loc::Delivered => unreachable!("walk past delivery"),
+            }
+        }
+        if cell.crossed_torus {
+            t + self.rt_lat
+        } else {
+            t
+        }
+    }
+
+    /// Plan the (single) route a bulk train takes when every decision is
+    /// forced: dimension-order policy, or adaptive with exactly one
+    /// surviving candidate at each router.  Valid only under
+    /// [`RouterMesh::faults_static_at`] — link up/down is then constant
+    /// over the call, so one probe walk speaks for every cell.  Returns
+    /// `None` when any decision is state-dependent (≥ 2 adaptive
+    /// candidates): that call runs on the per-cell event path.
+    fn plan_forced_route(
+        &self,
+        src: MpsocId,
+        dst: MpsocId,
+        at: SimTime,
+    ) -> Option<(InlineVec<PlannedHop, MAX_PLAN>, bool)> {
+        let adaptive = self.policy == RoutePolicy::Adaptive;
+        let mut cell = MeshCell::probe(dst, self.cell_payload, false, Loc::At(src));
+        let mut plan: InlineVec<PlannedHop, MAX_PLAN> = InlineVec::new();
+        let mut crossed = false;
+        let mut first = true;
+        loop {
+            // Same decision structure as `decide`, with the torus pick
+            // replaced by its forced (state-independent) variant.
+            let (link, is_torus, next_loc) = match self.intra_step(cell.loc, dst) {
+                Some((link, next)) => (link, false, next),
+                None => {
+                    let q = self.router_of(cell.loc);
+                    let (dir, lock) = self.forced_torus_step(&cell, q, at, adaptive)?;
+                    if let Some((dim, way)) = lock {
+                        cell.dir_lock[dim] = way;
+                    }
+                    let next = self.topo.qfdb_neighbor(q, dir);
+                    (LinkId::Torus { qfdb: q, dir }, true, Loc::Router(next))
+                }
+            };
+            let pre = self.pre_latency(is_torus, first);
+            if plan.len() >= MAX_CELL_HOPS as usize {
+                panic!("train to {dst:?} exceeded {MAX_CELL_HOPS} hops (reroute livelock)");
+            }
+            plan.push(PlannedHop { link: link.flat(&self.topo.cfg), pre });
+            crossed |= is_torus;
+            first = false;
+            match next_loc {
+                Loc::At(_) => break,
+                Loc::Router(q) => {
+                    if self.topo.qfdb_of(dst) == q && self.topo.coord(dst).fpga == NETWORK_FPGA {
+                        break;
+                    }
+                    cell.loc = Loc::Router(q);
+                }
+                Loc::Delivered => unreachable!(),
+            }
+        }
+        Some((plan, crossed))
+    }
+
+    /// A torus step that is the same for every cell of the train, or
+    /// `None` when the adaptive policy has a real (state-dependent)
+    /// choice.  Panics like `torus_hop` when the fault plan isolates the
+    /// node.
+    fn forced_torus_step(
+        &self,
+        cell: &MeshCell,
+        q: QfdbId,
+        t: SimTime,
+        adaptive: bool,
+    ) -> Option<(Dir, Option<(usize, u8)>)> {
+        let (prod, detour) = self.torus_candidates(cell, q, t);
+        if !prod.is_empty() {
+            if adaptive && prod.len() > 1 {
+                return None;
+            }
+            let (_, dir) = prod.first().unwrap();
+            return Some((dir, None));
+        }
+        if adaptive && detour.len() > 1 {
+            return None;
+        }
+        let (dim, dir) = detour.first().unwrap_or_else(|| {
+            panic!(
+                "no usable torus link out of {q:?} towards {:?} (fault plan isolates the node?)",
+                cell.dst
+            )
+        });
+        let way = if dir.index() % 2 == 0 { 1 } else { 2 };
+        Some((dir, Some((dim, way))))
+    }
+
+    /// Run a planned train of `bytes` through the mesh with plain scalar
+    /// sweeps (no events).  Reproduces the per-cell event path exactly:
+    /// cell i's grant on hop h starts at
+    /// `max(arrival_i + pre_h, wire chain, release of cell i-cap)` where
+    /// the release times are cell (i-cap)'s start on hop h+1 (cut-through
+    /// dequeue) or its delivery time on the last hop — the same
+    /// recurrence the Depart/Arrive/credit-wake event cascade resolves,
+    /// evaluated in the same per-link FIFO order against the same
+    /// serializers (so busy/uses statistics match too).  Credit counters
+    /// are not touched: within one fully-draining call they net to zero
+    /// and nothing can observe the intermediate state.
+    fn run_train(
+        &mut self,
+        plan: &InlineVec<PlannedHop, MAX_PLAN>,
+        crossed: bool,
+        bytes: usize,
+        start: SimTime,
+        pipelined: bool,
+    ) -> (SimTime, SimTime) {
+        let nhops = plan.len();
+        debug_assert!(nhops > 0);
+        // The per-link FIFO sweeps assume every hop uses a distinct link
+        // (true for forced routes: minimal steps + locked ring detours
+        // never revisit a node).
+        debug_assert!(
+            (0..nhops).all(|i| {
+                (i + 1..nhops).all(|j| plan.get(i).unwrap().link != plan.get(j).unwrap().link)
+            }),
+            "planned train revisits a link"
+        );
+        while self.rel_rings.len() < nhops {
+            self.rel_rings.push(VecDeque::new());
+        }
+        for r in &mut self.rel_rings[..nhops] {
+            r.clear();
+        }
+        let (ln_lat, rt_lat, overhead) = (self.ln_lat, self.rt_lat, self.cell_overhead);
+        let mut arrival = start;
+        for (i, payload) in CellSizes::with_payload(bytes, self.cell_payload).enumerate() {
+            let wire_bytes = (payload + overhead) as u64;
+            let mut t = start;
+            for h in 0..nhops {
+                let hop = plan.get(h).expect("hop within plan");
+                let mut ready = t + hop.pre;
+                if i >= self.links[hop.link].capacity as usize {
+                    // the train waits for its own credit round-trip —
+                    // cell i-cap's downstream dequeue frees the slot
+                    let rel = self.rel_rings[h].pop_front().expect("release schedule underflow");
+                    ready = ready.max(rel);
+                }
+                let (s, ser) = self.links[hop.link].grant_bulk(ready, wire_bytes);
+                if h > 0 {
+                    // cut-through: starting on hop h dequeues hop h-1
+                    self.rel_rings[h - 1].push_back(s);
+                }
+                t = s + ser + ln_lat;
+            }
+            // delivery dequeues the last hop's buffer slot at arrival
+            self.rel_rings[nhops - 1].push_back(t);
+            let done = if crossed { t + rt_lat } else { t };
+            arrival = arrival.max(done);
+        }
+        let inject = plan.first().expect("non-empty plan").link;
+        if pipelined {
+            self.links[inject].pad_wire(self.pipe_gap);
+        }
+        let src_free = start.max(self.links[inject].wire_free());
+        (src_free, arrival)
+    }
+
     // ---- event machinery ------------------------------------------------
 
     fn begin_call(&mut self) {
@@ -400,20 +720,7 @@ impl RouterMesh {
     }
 
     fn spawn(&mut self, dst: MpsocId, payload: usize, ctrl: bool, loc: Loc) -> usize {
-        self.cells.push(MeshCell {
-            dst,
-            payload,
-            ctrl,
-            first_hop: true,
-            loc,
-            next_loc: loc,
-            in_link: None,
-            pending: None,
-            dir_lock: [0; 3],
-            crossed_torus: false,
-            hops: 0,
-            delivered: None,
-        });
+        self.cells.push(MeshCell::probe(dst, payload, ctrl, loc));
         self.cells.len() - 1
     }
 
@@ -435,83 +742,91 @@ impl RouterMesh {
         debug_assert!(self.links.iter().all(|l| l.is_quiescent()), "buffers not drained");
     }
 
+    /// The non-torus part of a routing decision: the intra-QFDB link and
+    /// landing spot when the next hop is fixed by the QFDB structure
+    /// (direct same-QFDB hop, funnel to the local F1, fan-out from the
+    /// destination F1), or `None` when the cell sits at a router that
+    /// must pick a torus direction.  Single source of truth for the
+    /// event path, the lone-cell walk and the train planner.
+    fn intra_step(&self, loc: Loc, dst: MpsocId) -> Option<(LinkId, Loc)> {
+        match loc {
+            Loc::At(m) => {
+                debug_assert!(m != dst, "cell departing from its destination");
+                let mc = self.topo.coord(m);
+                let mq = self.topo.qfdb_of(m);
+                if mq == self.topo.qfdb_of(dst) {
+                    let dc = self.topo.coord(dst);
+                    Some((LinkId::Intra { qfdb: mq, from: mc.fpga, to: dc.fpga }, Loc::At(dst)))
+                } else if mc.fpga != NETWORK_FPGA {
+                    Some((
+                        LinkId::Intra { qfdb: mq, from: mc.fpga, to: NETWORK_FPGA },
+                        Loc::Router(mq),
+                    ))
+                } else {
+                    None
+                }
+            }
+            Loc::Router(q) => {
+                if q == self.topo.qfdb_of(dst) {
+                    let dc = self.topo.coord(dst);
+                    Some((LinkId::Intra { qfdb: q, from: NETWORK_FPGA, to: dc.fpga }, Loc::At(dst)))
+                } else {
+                    None
+                }
+            }
+            Loc::Delivered => unreachable!("routing a delivered cell"),
+        }
+    }
+
+    /// The router the cell's torus decision is made at (valid only when
+    /// [`RouterMesh::intra_step`] returned `None`).
+    fn router_of(&self, loc: Loc) -> QfdbId {
+        match loc {
+            Loc::Router(q) => q,
+            Loc::At(m) => self.topo.qfdb_of(m),
+            Loc::Delivered => unreachable!("routing a delivered cell"),
+        }
+    }
+
+    /// The routing decision of `handle_depart`, shared with the
+    /// single-cell walk: which link the cell takes next, whether it is a
+    /// torus hop, where the cell lands, and an optional ring lock.
+    #[allow(clippy::type_complexity)]
+    fn decide(&self, cell: &MeshCell, t: SimTime) -> (LinkId, bool, Loc, Option<(usize, u8)>) {
+        if let Some((link, next)) = self.intra_step(cell.loc, cell.dst) {
+            return (link, false, next, None);
+        }
+        self.torus_hop(cell, self.router_of(cell.loc), t)
+    }
+
     fn handle_depart(&mut self, id: usize, t: SimTime) {
         if self.cells[id].delivered.is_some() {
             return;
         }
-        // A woken waiter retries its committed grant (crossing latency was
-        // already charged into `ready` on the first attempt) — unless the
-        // link died while it waited, in which case it falls through to a
-        // fresh routing decision and reroutes.  Credits wake one waiter
-        // each, and a rerouting waiter will never return a credit on the
-        // dead link, so it also evacuates everyone still queued behind it
-        // (each evacuee re-enters here, sees the dead link, and reroutes).
+        // A woken waiter arrives already owning the handed-off credit
+        // (FIFO handoff in `CreditedLink::give_credit`) and retries its
+        // committed grant (crossing latency was already charged into
+        // `ready` on the first attempt) — unless the link died while it
+        // waited, in which case it returns the credit, evacuates everyone
+        // still queued behind it (each evacuee re-enters here, sees the
+        // dead link, and reroutes) and falls through to a fresh routing
+        // decision.
         if let Some(p) = self.cells[id].pending.take() {
             let ready = p.ready.max(t);
             if self.links[p.link].is_up(ready) {
-                self.try_start(id, p.link, ready, p.is_torus, p.next_loc);
+                self.start_on(id, p.link, ready, p.is_torus, p.next_loc);
                 return;
             }
+            let vc = if self.cells[id].ctrl { VC_CTRL } else { VC_BULK };
             self.evacuate_dead_link(p.link, t);
+            // the queue is empty now, so this is a plain counter decrement
+            self.release_credit(p.link, vc, t);
         }
-        let decision = {
-            let cell = &self.cells[id];
-            let dst = cell.dst;
-            match cell.loc {
-                Loc::At(m) => {
-                    debug_assert!(m != dst, "cell departing from its destination");
-                    let mc = self.topo.coord(m);
-                    let mq = self.topo.qfdb_of(m);
-                    let dq = self.topo.qfdb_of(dst);
-                    if mq == dq {
-                        let dc = self.topo.coord(dst);
-                        (
-                            LinkId::Intra { qfdb: mq, from: mc.fpga, to: dc.fpga },
-                            false,
-                            Loc::At(dst),
-                            None,
-                        )
-                    } else if mc.fpga != NETWORK_FPGA {
-                        (
-                            LinkId::Intra { qfdb: mq, from: mc.fpga, to: NETWORK_FPGA },
-                            false,
-                            Loc::Router(mq),
-                            None,
-                        )
-                    } else {
-                        self.torus_hop(cell, mq, t)
-                    }
-                }
-                Loc::Router(q) => {
-                    let dq = self.topo.qfdb_of(dst);
-                    if q == dq {
-                        let dc = self.topo.coord(dst);
-                        (
-                            LinkId::Intra { qfdb: q, from: NETWORK_FPGA, to: dc.fpga },
-                            false,
-                            Loc::At(dst),
-                            None,
-                        )
-                    } else {
-                        self.torus_hop(cell, q, t)
-                    }
-                }
-                Loc::Delivered => return,
-            }
-        };
-        let (link, is_torus, next_loc, lock) = decision;
+        let (link, is_torus, next_loc, lock) = self.decide(&self.cells[id], t);
         if let Some((dim, way)) = lock {
             self.cells[id].dir_lock[dim] = way;
         }
-        // Crossing latency ahead of the wire: L_ER before every torus
-        // link, a switch crossing before every non-first intra link.
-        let pre = if is_torus {
-            self.rt_lat
-        } else if !self.cells[id].first_hop {
-            self.sw_lat
-        } else {
-            SimDuration::ZERO
-        };
+        let pre = self.pre_latency(is_torus, self.cells[id].first_hop);
         let flat = link.flat(&self.topo.cfg);
         self.try_start(id, flat, t + pre, is_torus, next_loc);
     }
@@ -534,10 +849,18 @@ impl RouterMesh {
         (LinkId::Torus { qfdb: q, dir }, true, Loc::Router(next), lock)
     }
 
-    /// Pick the torus direction a cell takes out of router `q`.  Returns
-    /// the direction plus an optional (dimension, way) ring lock when the
-    /// choice is a distance-increasing detour around a failed link.
-    fn torus_step(&self, cell: &MeshCell, q: QfdbId, t: SimTime) -> Option<(Dir, Option<(usize, u8)>)> {
+    /// The usable torus directions out of router `q` for a cell: the
+    /// productive set (shorter way around each unresolved ring, honouring
+    /// locks; + before - so dimension-order ties match the static tables)
+    /// and the distance-increasing detours as fallback.  At most one
+    /// candidate per dimension per set — inline arrays, no allocation.
+    #[allow(clippy::type_complexity)]
+    fn torus_candidates(
+        &self,
+        cell: &MeshCell,
+        q: QfdbId,
+        t: SimTime,
+    ) -> (InlineVec<(usize, Dir), 6>, InlineVec<(usize, Dir), 6>) {
         let dq = self.topo.qfdb_of(cell.dst);
         let c = self.topo.qfdb_coord(q);
         let d = self.topo.qfdb_coord(dq);
@@ -545,18 +868,12 @@ impl RouterMesh {
         let n = [nx, ny, nz];
         let cc = [c.x, c.y, c.z];
         let dd = [d.x, d.y, d.z];
-        let adaptive = !cell.ctrl && self.policy == RoutePolicy::Adaptive;
-        let vc = if cell.ctrl { VC_CTRL } else { VC_BULK };
-
         let up = |dir: Dir| {
             let flat = LinkId::Torus { qfdb: q, dir }.flat(&self.topo.cfg);
             self.links[flat].is_up(t)
         };
-        // Productive directions (shorter way around each unresolved ring,
-        // honouring locks; + before - so dimension-order ties match the
-        // static tables), and distance-increasing detours as fallback.
-        let mut prod: Vec<(usize, Dir)> = Vec::new();
-        let mut detour: Vec<(usize, Dir)> = Vec::new();
+        let mut prod: InlineVec<(usize, Dir), 6> = InlineVec::new();
+        let mut detour: InlineVec<(usize, Dir), 6> = InlineVec::new();
         for dim in 0..3 {
             if cc[dim] == dd[dim] {
                 continue;
@@ -591,14 +908,24 @@ impl RouterMesh {
                 }
             }
         }
-        let pick = |set: &[(usize, Dir)]| -> Option<(usize, Dir)> {
+        (prod, detour)
+    }
+
+    /// Pick the torus direction a cell takes out of router `q`.  Returns
+    /// the direction plus an optional (dimension, way) ring lock when the
+    /// choice is a distance-increasing detour around a failed link.
+    fn torus_step(&self, cell: &MeshCell, q: QfdbId, t: SimTime) -> Option<(Dir, Option<(usize, u8)>)> {
+        let adaptive = !cell.ctrl && self.policy == RoutePolicy::Adaptive;
+        let vc = if cell.ctrl { VC_CTRL } else { VC_BULK };
+        let (prod, detour) = self.torus_candidates(cell, q, t);
+        let pick = |set: &InlineVec<(usize, Dir), 6>| -> Option<(usize, Dir)> {
             if set.is_empty() {
                 return None;
             }
             if !adaptive {
-                return Some(set[0]);
+                return set.first();
             }
-            set.iter().copied().min_by_key(|&(dim, dir)| {
+            set.iter().min_by_key(|&(dim, dir)| {
                 let flat = LinkId::Torus { qfdb: q, dir }.flat(&self.topo.cfg);
                 let l = &self.links[flat];
                 (std::cmp::Reverse(l.credit_free(vc)), l.wire_free(), dim, dir.index())
@@ -614,15 +941,23 @@ impl RouterMesh {
         Some((dir, Some((dim, way))))
     }
 
-    /// Grant the cell's next wire slot, or queue it for a credit.
+    /// Acquire a credit and grant the cell's next wire slot, or queue it
+    /// in the link's per-VC FIFO.
     fn try_start(&mut self, id: usize, link: usize, ready: SimTime, is_torus: bool, next_loc: Loc) {
-        let ctrl = self.cells[id].ctrl;
-        let vc = if ctrl { VC_CTRL } else { VC_BULK };
+        let vc = if self.cells[id].ctrl { VC_CTRL } else { VC_BULK };
         if !self.links[link].try_take_credit(vc) {
             self.links[link].enqueue_waiter(vc, id);
             self.cells[id].pending = Some(Pending { link, ready, next_loc, is_torus });
             return;
         }
+        self.start_on(id, link, ready, is_torus, next_loc);
+    }
+
+    /// Grant the wire slot of a cell that already owns a credit on `link`
+    /// (fresh acquisition in `try_start`, or FIFO handoff on wake).
+    fn start_on(&mut self, id: usize, link: usize, ready: SimTime, is_torus: bool, next_loc: Loc) {
+        let ctrl = self.cells[id].ctrl;
+        let vc = if ctrl { VC_CTRL } else { VC_BULK };
         let wire_bytes = (self.cells[id].payload + self.cell_overhead) as u64;
         let full_cell = (self.cell_payload + self.cell_overhead) as u64;
         let (start, ser) = if ctrl {
@@ -660,11 +995,14 @@ impl RouterMesh {
     }
 
     /// Wake every cell still queued behind a failed link so each makes a
-    /// fresh routing decision (no credits involved — none of them ever
-    /// held one on this link).
+    /// fresh routing decision.  Unlike a handoff wake, evacuees never
+    /// received a credit, so their pending record is cleared — they
+    /// re-enter `handle_depart` on the fresh-decision path and must not
+    /// return a credit they never held.
     fn evacuate_dead_link(&mut self, link: usize, at: SimTime) {
         for vc in 0..NUM_VCS {
             while let Some(w) = self.links[link].pop_waiter(vc) {
+                self.cells[w].pending = None;
                 self.engine.post(at, MeshEvent::Depart(w));
             }
         }
@@ -801,7 +1139,8 @@ mod tests {
         // 16 Gb/s intra hop feeding a 10 Gb/s torus hop: the finite
         // downstream buffer must throttle injection to the torus cadence —
         // backpressure the flow model cannot express (it would free the
-        // injection wire after 16 KB @ 16 Gb/s ≈ 9.2 us).
+        // injection wire after 16 KB @ 16 Gb/s ≈ 9.2 us).  This is the
+        // credit-feedback recurrence of the train fast path at work.
         let mut m = mesh(RoutePolicy::Deterministic);
         let t = topo();
         let a = t.mpsoc(0, 0, 1);
@@ -814,6 +1153,111 @@ mod tests {
             src_free.us() > 15.0,
             "injection wire freed at {src_free}, backpressure missing"
         );
+    }
+
+    #[test]
+    fn batched_block_is_ps_identical_to_event_path() {
+        // The tentpole parity contract, unit-level: same block sequence on
+        // a batched and an event-path mesh, idle and pre-heated, single-
+        // and multi-hop — identical timestamps and link statistics.
+        let t = topo();
+        let cases = [
+            (t.mpsoc(0, 0, 0), t.mpsoc(0, 0, 1)),  // intra-QFDB
+            (t.mpsoc(0, 0, 1), t.mpsoc(0, 1, 0)),  // 16G into 10G (credits)
+            (t.mpsoc(0, 0, 1), t.mpsoc(6, 1, 2)),  // 6 hops, fan in/out
+        ];
+        for &(a, b) in &cases {
+            let mut fast = mesh(RoutePolicy::Deterministic);
+            let mut slow = mesh(RoutePolicy::Deterministic);
+            slow.set_batching(false);
+            assert!(fast.batching_enabled() && !slow.batching_enabled());
+            let mut at = SimTime::ZERO;
+            for (k, bytes) in [16 * 1024usize, 300, 1, 4096, 16 * 1024].iter().enumerate() {
+                let pipelined = k % 2 == 0;
+                let f = fast.block(a, b, at, *bytes, pipelined);
+                let s = slow.block(a, b, at, *bytes, pipelined);
+                assert_eq!(f, s, "{a:?}->{b:?} {bytes} B call {k} (at {at})");
+                // back-to-back: next call lands while wires are still hot
+                at = f.0;
+            }
+            for link in [
+                LinkId::Intra { qfdb: QfdbId(0), from: 0, to: 1 },
+                LinkId::Intra { qfdb: QfdbId(0), from: 1, to: 0 },
+                LinkId::Torus { qfdb: QfdbId(0), dir: Dir::XPlus },
+            ] {
+                assert_eq!(fast.link_busy(link), slow.link_busy(link), "{link:?} stats");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_small_cell_is_ps_identical_to_event_path() {
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::from_us(50.0));
+        let mut fast = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults.clone());
+        let mut slow = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        slow.set_batching(false);
+        let a = t.mpsoc(0, 0, 0);
+        let b = t.mpsoc(0, 1, 1);
+        // before the fault, straddling wire occupancy, and after it (the
+        // lone-cell walk makes its routing decisions at real per-hop
+        // times, so mid-experiment fault transitions are handled too)
+        for at_us in [0.0, 0.1, 49.9, 50.0, 120.0] {
+            let at = SimTime::from_us(at_us);
+            for payload in [0usize, 32, 256] {
+                assert_eq!(
+                    fast.small_cell(a, b, at, payload),
+                    slow.small_cell(a, b, at, payload),
+                    "at {at_us} us payload {payload}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_batching_collapses_events() {
+        // A forced-route block must cost zero per-cell events batched,
+        // and O(cells x hops) on the reference path.
+        let t = topo();
+        let a = t.mpsoc(0, 0, 1);
+        let b = t.mpsoc(6, 1, 2);
+        let mut fast = mesh(RoutePolicy::Deterministic);
+        let mut slow = mesh(RoutePolicy::Deterministic);
+        slow.set_batching(false);
+        fast.block(a, b, SimTime::ZERO, 16 * 1024, true);
+        slow.block(a, b, SimTime::ZERO, 16 * 1024, true);
+        assert_eq!(fast.events_processed(), 0, "train fast path must not touch the queue");
+        assert!(
+            slow.events_processed() > 2 * 64,
+            "reference path should be per-cell ({} events)",
+            slow.events_processed()
+        );
+        assert!(slow.peak_queue_depth() > 0);
+    }
+
+    #[test]
+    fn future_fault_falls_back_to_event_path() {
+        // A fault transition after the call start is a train split point:
+        // the whole call must run per-cell (and still match a mesh that
+        // was forced onto the event path).
+        let t = topo();
+        let faults = FaultPlan::none().fail_torus(QfdbId(0), Dir::XPlus, SimTime::from_us(50.0));
+        let mut fast = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults.clone());
+        let mut slow = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        slow.set_batching(false);
+        let a = t.network_mpsoc(QfdbId(0));
+        let b = t.network_mpsoc(QfdbId(1));
+        let f = fast.block(a, b, SimTime::ZERO, 16 * 1024, false);
+        let s = slow.block(a, b, SimTime::ZERO, 16 * 1024, false);
+        assert_eq!(f, s);
+        assert!(fast.events_processed() > 0, "future fault must force the event path");
+        // once the fault time has passed, the state is static again and
+        // the train path re-engages (on the detour route)
+        let before = fast.events_processed();
+        let f2 = fast.block(a, b, SimTime::from_us(100.0), 16 * 1024, false);
+        let s2 = slow.block(a, b, SimTime::from_us(100.0), 16 * 1024, false);
+        assert_eq!(f2, s2);
+        assert_eq!(fast.events_processed(), before, "static post-fault call must batch");
     }
 
     #[test]

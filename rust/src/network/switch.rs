@@ -17,7 +17,9 @@
 //!   buffer: a cell consumes one credit when it starts on the wire and the
 //!   credit returns when the downstream router dequeues it (cut-through
 //!   forward on the next link, or delivery).  Cells that find no credit
-//!   wait in a per-VC FIFO and are woken by the returning credit;
+//!   wait in a per-VC FIFO; a returning slot is handed off directly to
+//!   the FIFO head (strictly in-order acquisition — no younger cell can
+//!   grab a freed slot ahead of a queued waiter);
 //! * a **fault switch**: a link can be marked down from a configurable
 //!   time, after which the routing policies steer around it.
 //!
@@ -96,16 +98,19 @@ impl CreditedLink {
     }
 
     /// Is the link usable for a cell departing at `at`?
+    #[inline]
     pub fn is_up(&self, at: SimTime) -> bool {
         self.down_at.map_or(true, |d| at < d)
     }
 
     /// Free downstream buffer slots on `vc`.
+    #[inline]
     pub fn credit_free(&self, vc: usize) -> u32 {
         self.capacity - self.in_flight[vc]
     }
 
     /// Consume one credit if available.
+    #[inline]
     pub fn try_take_credit(&mut self, vc: usize) -> bool {
         if self.in_flight[vc] < self.capacity {
             self.in_flight[vc] += 1;
@@ -115,13 +120,22 @@ impl CreditedLink {
         }
     }
 
-    /// Return one credit (downstream dequeue).  If a cell was waiting for
-    /// it, pops and returns that cell id — the caller re-attempts its
-    /// departure at the release time.
+    /// Return one credit (downstream dequeue).  If a cell is waiting, the
+    /// slot is handed off to the head of the FIFO directly — `in_flight`
+    /// stays unchanged and the popped cell id is returned already *owning*
+    /// the credit (the caller re-attempts its departure at the release
+    /// time without re-acquiring).  The handoff closes the window in
+    /// which a younger cell's first attempt could grab the freed slot
+    /// ahead of the queued waiter: per-VC credit acquisition is strictly
+    /// FIFO, which is both how the hardware VC queue behaves and the
+    /// invariant the cell-train fast path's recurrences rest on.
     pub fn give_credit(&mut self, vc: usize) -> Option<usize> {
         debug_assert!(self.in_flight[vc] > 0, "credit underflow");
+        if let Some(w) = self.waiting[vc].pop_front() {
+            return Some(w);
+        }
         self.in_flight[vc] -= 1;
-        self.waiting[vc].pop_front()
+        None
     }
 
     /// Queue a cell waiting for a credit on `vc`.
@@ -143,6 +157,7 @@ impl CreditedLink {
 
     /// When the bulk serializer frees (congestion signal for adaptive
     /// routing and the interleave penalty of small cells).
+    #[inline]
     pub fn wire_free(&self) -> SimTime {
         self.wire.next_free()
     }
@@ -239,7 +254,7 @@ mod tests {
     }
 
     #[test]
-    fn credits_exhaust_and_return_fifo() {
+    fn credits_exhaust_and_hand_off_fifo() {
         let mut l = link();
         assert!(l.try_take_credit(VC_BULK));
         assert!(l.try_take_credit(VC_BULK));
@@ -247,8 +262,15 @@ mod tests {
         assert_eq!(l.credit_free(VC_BULK), 0);
         l.enqueue_waiter(VC_BULK, 7);
         l.enqueue_waiter(VC_BULK, 9);
+        // a returning slot transfers to the FIFO head: the waiter now owns
+        // the credit, so the pool stays exhausted until the queue drains
         assert_eq!(l.give_credit(VC_BULK), Some(7), "FIFO wake order");
+        assert_eq!(l.credit_free(VC_BULK), 0, "slot handed off, not freed");
+        assert!(!l.try_take_credit(VC_BULK), "no queue-jumping past waiter 9");
         assert_eq!(l.give_credit(VC_BULK), Some(9));
+        // both waiters hold credits now; they return once each dequeues
+        assert_eq!(l.give_credit(VC_BULK), None);
+        assert_eq!(l.give_credit(VC_BULK), None);
         assert!(l.is_quiescent());
         // VCs are independent pools
         assert!(l.try_take_credit(VC_CTRL));

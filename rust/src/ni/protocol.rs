@@ -10,7 +10,7 @@
 use super::mailbox::{Delivery, Mailbox, MbxMessage};
 use super::packetizer::{ChannelState, Packetizer};
 use crate::network::{Fabric, NackReason};
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, SimDuration, SimTime};
 use crate::topology::MpsocId;
 
 /// Events of the protocol simulation.
@@ -22,6 +22,8 @@ pub enum NiEvent {
     AckArrive { msg_id: usize, delivery: Delivery },
     /// The source-side hardware timer for a message fires.
     Timeout { msg_id: usize, attempt: u32 },
+    /// A backed-off retransmission (mailbox-full NACK) relaunches.
+    Relaunch { msg_id: usize, attempt: u32 },
 }
 
 /// Per-message protocol record.
@@ -160,7 +162,7 @@ impl ProtocolSim {
                     }
                     Delivery::Nack(NackReason::MailboxFull) => {
                         // retransmit after a backoff = timeout period
-                        self.retry(eng, now + calib.pktz_timeout, msg_id);
+                        self.retry(eng, calib.pktz_timeout, msg_id);
                     }
                     Delivery::Nack(_) => {
                         let m = &mut self.msgs[msg_id];
@@ -176,20 +178,31 @@ impl ProtocolSim {
                 if m.done || m.attempt != attempt {
                     return; // stale timer
                 }
-                self.retry(eng, now, msg_id);
+                self.retry(eng, SimDuration::ZERO, msg_id);
+            }
+            NiEvent::Relaunch { msg_id, attempt } => {
+                let m = &self.msgs[msg_id];
+                if m.done || m.attempt != attempt {
+                    return; // a newer retry superseded the backoff
+                }
+                self.launch(eng, now, msg_id);
             }
         }
     }
 
-    fn retry(&mut self, eng: &mut Engine<NiEvent>, at: SimTime, msg_id: usize) {
+    /// Bump the attempt counter and relaunch `delay` after the engine's
+    /// current event (the NI's timers and backoffs are clock-relative: a
+    /// non-zero backoff is scheduled as a [`NiEvent::Relaunch`] via
+    /// [`Engine::schedule_after`]).
+    fn retry(&mut self, eng: &mut Engine<NiEvent>, delay: SimDuration, msg_id: usize) {
         let give_up = {
             let m = &mut self.msgs[msg_id];
             m.attempt += 1;
             m.attempt > self.max_retries
         };
-        let (vif, ch, src) = {
+        let (vif, ch, src, attempt) = {
             let m = &self.msgs[msg_id];
-            (m.vif, m.ch, m.src)
+            (m.vif, m.ch, m.src, m.attempt)
         };
         if give_up {
             let m = &mut self.msgs[msg_id];
@@ -199,7 +212,12 @@ impl ProtocolSim {
             return;
         }
         self.packetizers[src.0 as usize].retransmit(vif, ch);
-        self.launch(eng, at, msg_id);
+        if delay == SimDuration::ZERO {
+            let at = eng.now();
+            self.launch(eng, at, msg_id);
+        } else {
+            eng.schedule_after(delay, NiEvent::Relaunch { msg_id, attempt });
+        }
     }
 
     /// Drive the simulation to completion.

@@ -1,4 +1,5 @@
-//! Discrete-event core: a deterministic time-ordered event queue.
+//! Discrete-event core: a deterministic time-ordered event queue on a
+//! hierarchical timing wheel.
 //!
 //! The engine is generic over the event payload.  Handlers receive the
 //! payload together with a mutable scheduler handle, so they can post
@@ -7,6 +8,33 @@
 //!
 //! Event order is total and deterministic: ties in timestamp are broken by
 //! insertion sequence number.
+//!
+//! ## Queue structure (§Perf: rack-scale cell-level runs)
+//!
+//! A global `BinaryHeap` costs O(log n) per operation and thrashes the
+//! cache once full-rack cell-level collectives push tens of millions of
+//! events through it.  The queue is instead a classic hierarchical timing
+//! wheel (Varghese & Lauck) specialised for ps timestamps:
+//!
+//! * **near** — a small binary heap holding every pending event earlier
+//!   than the current wheel slot's end.  Same-slot events and events
+//!   [`Engine::post`]ed into the past land here; the heap is tiny (one
+//!   slot's worth), so its log factor is negligible.
+//! * **wheel** — [`NUM_SLOTS`] buckets of [`SLOT_PS`] picoseconds each
+//!   (2^16 ps ≈ 65.5 ns per slot, ≈ 67 µs horizon).  Insertion is O(1):
+//!   push onto the bucket `at >> SLOT_BITS`.  A bucket only ever holds
+//!   events of a single absolute slot, so draining the next non-empty
+//!   bucket into `near` preserves the total order.
+//! * **far** — an overflow heap for events beyond the wheel horizon
+//!   (fault-plan timers, packetizer timeouts, multi-ms app phases).  When
+//!   the wheel drains, the cursor jumps to the earliest far event and the
+//!   horizon's worth of far events migrates into the wheel buckets.
+//!
+//! Every event is touched a constant number of times (bucket push, move
+//! to `near`, heap pop within one slot), giving amortised O(1) inserts
+//! and pops at the ps-grained near horizon while keeping the exact
+//! `(time, seq)` pop order of the original heap engine — property-tested
+//! against a reference model in `tests/proptests.rs`.
 //!
 //! Two scheduling disciplines coexist:
 //! * [`Engine::schedule`] — strictly causal (`at >= now`), used by the NI
@@ -23,7 +51,17 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use super::time::SimTime;
+use super::time::{SimDuration, SimTime};
+
+/// log2 of the wheel slot width in picoseconds (2^16 ps ≈ 65.5 ns — wide
+/// enough that a cell serialization (≥ 144 ns) always crosses slots, so
+/// cascading cell events never pile into one bucket).
+const SLOT_BITS: u32 = 16;
+/// Wheel slot width in picoseconds.
+const SLOT_PS: u64 = 1 << SLOT_BITS;
+/// Number of wheel slots (horizon = NUM_SLOTS * SLOT_PS ≈ 67 µs — covers
+/// every protocol-chain delay; ms-scale timers ride the overflow heap).
+const NUM_SLOTS: usize = 1024;
 
 #[derive(Debug)]
 struct Scheduled<E> {
@@ -49,13 +87,30 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+#[inline]
+fn slot_of(at: SimTime) -> u64 {
+    at.0 >> SLOT_BITS
+}
+
 /// The event queue + clock.
 #[derive(Debug)]
 pub struct Engine<E> {
-    queue: BinaryHeap<Reverse<Scheduled<E>>>,
+    /// Events earlier than the end of the current slot (`cursor`), i.e.
+    /// everything that must pop before any wheel/far event.
+    near: BinaryHeap<Reverse<Scheduled<E>>>,
+    /// One bucket per slot residue; a bucket holds events of exactly one
+    /// absolute slot in [cursor, cursor + NUM_SLOTS).
+    wheel: Vec<Vec<Scheduled<E>>>,
+    /// Events at or beyond the wheel horizon.
+    far: BinaryHeap<Reverse<Scheduled<E>>>,
+    /// Absolute slot index: all events in slots < cursor live in `near`.
+    cursor: u64,
+    /// Events currently held in wheel buckets.
+    in_wheel: usize,
     now: SimTime,
     seq: u64,
     processed: u64,
+    peak_pending: usize,
 }
 
 impl<E> Default for Engine<E> {
@@ -66,50 +121,164 @@ impl<E> Default for Engine<E> {
 
 impl<E> Engine<E> {
     pub fn new() -> Engine<E> {
-        Engine { queue: BinaryHeap::new(), now: SimTime::ZERO, seq: 0, processed: 0 }
+        let mut wheel = Vec::with_capacity(NUM_SLOTS);
+        wheel.resize_with(NUM_SLOTS, Vec::new);
+        Engine {
+            near: BinaryHeap::new(),
+            wheel,
+            far: BinaryHeap::new(),
+            cursor: 0,
+            in_wheel: 0,
+            now: SimTime::ZERO,
+            seq: 0,
+            processed: 0,
+            peak_pending: 0,
+        }
     }
 
     /// Current simulation time.
+    #[inline]
     pub fn now(&self) -> SimTime {
         self.now
     }
 
     /// Number of events handled so far.
+    #[inline]
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
     /// Number of pending events.
+    #[inline]
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.near.len() + self.in_wheel + self.far.len()
+    }
+
+    /// High-water mark of [`Engine::pending`] over the engine's lifetime
+    /// (stamped into BENCH_*.json to track queue pressure PR-over-PR).
+    #[inline]
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 
     /// Schedule `payload` at absolute time `at` (>= now).
+    #[inline]
     pub fn schedule(&mut self, at: SimTime, payload: E) {
         debug_assert!(at >= self.now, "scheduling into the past");
+        self.post(at, payload);
+    }
+
+    /// Schedule `payload` at `now + delay` (the common NI state-machine
+    /// pattern: timers and backoffs relative to the current event).
+    #[inline]
+    pub fn schedule_after(&mut self, delay: SimDuration, payload: E) {
+        let at = self.now + delay;
         self.post(at, payload);
     }
 
     /// Schedule `payload` without the causality requirement: `at` may be
     /// earlier than `now` (see the module docs).  Pending events are still
     /// popped in (time, seq) order.
+    #[inline]
     pub fn post(&mut self, at: SimTime, payload: E) {
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Reverse(Scheduled { at, seq, payload }));
+        let ev = Scheduled { at, seq, payload };
+        let slot = slot_of(at);
+        if slot < self.cursor {
+            self.near.push(Reverse(ev));
+        } else if slot - self.cursor < NUM_SLOTS as u64 {
+            self.wheel[(slot % NUM_SLOTS as u64) as usize].push(ev);
+            self.in_wheel += 1;
+        } else {
+            self.far.push(Reverse(ev));
+        }
+        let pending = self.pending();
+        if pending > self.peak_pending {
+            self.peak_pending = pending;
+        }
     }
 
-    /// Timestamp of the next pending event, if any.
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.queue.peek().map(|Reverse(ev)| ev.at)
+    /// Move events into `near` until it holds the globally-earliest
+    /// pending event (no-op when `near` is already non-empty or the
+    /// engine is idle).  Only advances the wheel cursor — never the
+    /// clock — so calling it early is always safe.
+    fn ensure_near(&mut self) {
+        if !self.near.is_empty() {
+            return;
+        }
+        if self.in_wheel == 0 {
+            // Jump an empty wheel straight to the earliest far event
+            // (`max`: the cursor never moves backwards).
+            let Some(Reverse(head)) = self.far.peek() else {
+                return;
+            };
+            self.cursor = self.cursor.max(slot_of(head.at));
+        }
+        // Migrate far events that have entered the wheel window BEFORE
+        // scanning: the cursor advances while the wheel is non-empty, so
+        // the window [cursor, cursor + NUM_SLOTS) slides over far events
+        // that were beyond it at insert time — draining a bucket without
+        // this pull could pop a wheel event ahead of an earlier far one.
+        while let Some(Reverse(head)) = self.far.peek() {
+            let slot = slot_of(head.at);
+            if slot >= self.cursor + NUM_SLOTS as u64 {
+                break;
+            }
+            let Reverse(ev) = self.far.pop().unwrap();
+            if slot < self.cursor {
+                self.near.push(Reverse(ev));
+            } else {
+                self.wheel[(slot % NUM_SLOTS as u64) as usize].push(ev);
+                self.in_wheel += 1;
+            }
+        }
+        if !self.near.is_empty() {
+            // a migrated behind-cursor event is earlier than everything
+            // in the wheel (wheel slots are all >= cursor)
+            return;
+        }
+        // Drain the next non-empty bucket (guaranteed within one lap: all
+        // wheel events live in [cursor, cursor + NUM_SLOTS)).
+        for _ in 0..NUM_SLOTS {
+            let idx = (self.cursor % NUM_SLOTS as u64) as usize;
+            self.cursor += 1;
+            if !self.wheel[idx].is_empty() {
+                // swap the bucket out so near and wheel borrows are
+                // disjoint; the swap-back keeps the bucket's allocation
+                let mut bucket = std::mem::take(&mut self.wheel[idx]);
+                self.in_wheel -= bucket.len();
+                for ev in bucket.drain(..) {
+                    self.near.push(Reverse(ev));
+                }
+                self.wheel[idx] = bucket;
+                return;
+            }
+        }
+        debug_assert_eq!(self.in_wheel, 0, "wheel events outside the horizon");
+    }
+
+    /// Timestamp of the next pending event, if any.  (Takes `&mut self`
+    /// since the wheel engine may advance its cursor to find the head —
+    /// this never changes the clock or the pop order.)
+    #[inline]
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.ensure_near();
+        self.near.peek().map(|Reverse(ev)| ev.at)
     }
 
     /// Drop all pending events and rewind the clock to zero (fresh
-    /// experiment on the same engine; keeps the queue's allocation).
+    /// experiment on the same engine; keeps the buckets' allocations).
     /// The sequence counter is *not* rewound, so events scheduled after a
     /// clear still order deterministically against any stale diagnostics.
     pub fn clear(&mut self) {
-        self.queue.clear();
+        self.near.clear();
+        self.far.clear();
+        for b in &mut self.wheel {
+            b.clear();
+        }
+        self.cursor = 0;
+        self.in_wheel = 0;
         self.now = SimTime::ZERO;
         self.processed = 0;
     }
@@ -117,7 +286,24 @@ impl<E> Engine<E> {
     /// Pop the next event, advancing the clock (monotonically: an event
     /// posted in the past via [`Engine::post`] does not rewind `now`).
     pub fn next(&mut self) -> Option<(SimTime, E)> {
-        let Reverse(ev) = self.queue.pop()?;
+        self.ensure_near();
+        let Reverse(ev) = self.near.pop()?;
+        self.now = self.now.max(ev.at);
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+
+    /// Pop the next event only if it is timestamped at or before
+    /// `deadline` — the single-lookup primitive behind [`Engine::run_until`]
+    /// (the old peek-then-`next().unwrap()` pattern paid two heap
+    /// traversals per event).
+    pub fn next_before(&mut self, deadline: SimTime) -> Option<(SimTime, E)> {
+        self.ensure_near();
+        match self.near.peek() {
+            Some(Reverse(ev)) if ev.at <= deadline => {}
+            _ => return None,
+        }
+        let Reverse(ev) = self.near.pop().unwrap();
         self.now = self.now.max(ev.at);
         self.processed += 1;
         Some((ev.at, ev.payload))
@@ -143,11 +329,7 @@ impl<E> Engine<E> {
         deadline: SimTime,
         mut handler: impl FnMut(&mut W, &mut Engine<E>, SimTime, E),
     ) {
-        while let Some(Reverse(head)) = self.queue.peek() {
-            if head.at > deadline {
-                break;
-            }
-            let (t, ev) = self.next().unwrap();
+        while let Some((t, ev)) = self.next_before(deadline) {
             handler(world, self, t, ev);
         }
         self.now = self.now.max(deadline);
@@ -270,5 +452,114 @@ mod tests {
         });
         assert_eq!(seen, 3);
         assert_eq!(e.pending(), 7);
+    }
+
+    #[test]
+    fn schedule_after_is_relative_to_now() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_us(5.0), Ev::Tick(1));
+        e.next().unwrap();
+        e.schedule_after(SimDuration::from_ns(100.0), Ev::Tick(2));
+        let (t, Ev::Tick(i)) = e.next().unwrap();
+        assert_eq!((t, i), (SimTime::from_us(5.0) + SimDuration::from_ns(100.0), 2));
+    }
+
+    #[test]
+    fn next_before_single_lookup() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(10.0), Ev::Tick(1));
+        e.schedule(SimTime::from_ns(30.0), Ev::Tick(2));
+        assert!(e.next_before(SimTime::from_ns(5.0)).is_none());
+        let (t, _) = e.next_before(SimTime::from_ns(10.0)).unwrap();
+        assert_eq!(t, SimTime::from_ns(10.0));
+        assert!(e.next_before(SimTime::from_ns(29.9)).is_none());
+        assert_eq!(e.pending(), 1);
+    }
+
+    #[test]
+    fn wheel_rollover_preserves_order() {
+        // Events spread over many horizons (NUM_SLOTS * SLOT_PS ≈ 67 us;
+        // span here is 5 ms) must still pop in exact (time, seq) order.
+        let mut e: Engine<Ev> = Engine::new();
+        let span = 50u64;
+        for k in 0..span {
+            // insertion order deliberately scrambled
+            let i = (k * 37) % span;
+            e.schedule(SimTime::from_us(i as f64 * 100.0), Ev::Tick(i as u32));
+        }
+        let mut prev = None;
+        let mut count = 0;
+        while let Some((t, Ev::Tick(i))) = e.next() {
+            assert_eq!(t, SimTime::from_us(i as f64 * 100.0));
+            if let Some(p) = prev {
+                assert!(t > p, "rollover broke ordering");
+            }
+            prev = Some(t);
+            count += 1;
+        }
+        assert_eq!(count, span);
+    }
+
+    #[test]
+    fn far_future_overflow_migrates() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_us(1_000_000.0), Ev::Tick(9)); // 1 s: far bucket
+        e.schedule(SimTime::from_ns(1.0), Ev::Tick(0));
+        let (t0, Ev::Tick(i0)) = e.next().unwrap();
+        assert_eq!((t0, i0), (SimTime::from_ns(1.0), 0));
+        // posting into the past after the cursor jumped to the far event
+        assert_eq!(e.peek_time(), Some(SimTime::from_us(1_000_000.0)));
+        e.post(SimTime::from_us(3.0), Ev::Tick(1));
+        let (t1, Ev::Tick(i1)) = e.next().unwrap();
+        assert_eq!((t1, i1), (SimTime::from_us(3.0), 1));
+        let (t9, Ev::Tick(i9)) = e.next().unwrap();
+        assert_eq!((t9, i9), (SimTime::from_us(1_000_000.0), 9));
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn sliding_window_does_not_overtake_far_events() {
+        // Regression: the cursor advances while the wheel is non-empty,
+        // so a later insert can land in the wheel window *numerically
+        // after* an event still sitting in the far heap.  The far heap
+        // must migrate into the window before buckets drain, or the
+        // wheel event (slot 1040) would pop before the far one (1030).
+        let mut e: Engine<Ev> = Engine::new();
+        let slot = |s: u64| SimTime(s << SLOT_BITS);
+        e.schedule(slot(20), Ev::Tick(0));
+        e.schedule(slot(1030), Ev::Tick(1)); // beyond the horizon: far heap
+        let (_, Ev::Tick(x)) = e.next().unwrap(); // drains slot 20; cursor = 21
+        assert_eq!(x, 0);
+        e.schedule(slot(1040), Ev::Tick(2)); // inside the slid window: wheel
+        let (ta, Ev::Tick(a)) = e.next().unwrap();
+        assert_eq!((ta, a), (slot(1030), 1), "far event must not be overtaken");
+        let (tb, Ev::Tick(b)) = e.next().unwrap();
+        assert_eq!((tb, b), (slot(1040), 2));
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn same_slot_fifo_ties_across_structures() {
+        // Two events at the same timestamp, one inserted before and one
+        // after the cursor passed their slot, must still pop in seq order.
+        let mut e: Engine<Ev> = Engine::new();
+        let t = SimTime::from_ns(10.0);
+        e.schedule(t, Ev::Tick(1));
+        assert_eq!(e.peek_time(), Some(t)); // advances the cursor past slot 0
+        e.post(t, Ev::Tick(2));
+        let (_, Ev::Tick(a)) = e.next().unwrap();
+        let (_, Ev::Tick(b)) = e.next().unwrap();
+        assert_eq!((a, b), (1, 2), "seq tie-break must survive cursor advance");
+    }
+
+    #[test]
+    fn peak_pending_tracks_high_water_mark() {
+        let mut e: Engine<Ev> = Engine::new();
+        for i in 0..5 {
+            e.schedule(SimTime::from_ns(i as f64), Ev::Tick(i));
+        }
+        while e.next().is_some() {}
+        assert_eq!(e.peak_pending(), 5);
+        assert_eq!(e.pending(), 0);
     }
 }

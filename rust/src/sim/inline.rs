@@ -1,0 +1,107 @@
+//! A fixed-capacity inline vector (SmallVec-style, but never spills):
+//! the allocation-discipline primitive of the cell-level hot paths.
+//!
+//! Routing candidate sets (≤ 3 productive directions), planned hop lists
+//! (≤ [`crate::network::switch::MAX_CELL_HOPS`]) and similar bounded
+//! scratch collections used to be `Vec`s allocated per cell per hop —
+//! millions of heap round-trips per full-rack transfer.  `InlineVec`
+//! keeps them on the stack.
+//!
+//! Storage is `[Option<T>; N]` so no `Default` bound is needed on `T`;
+//! for the tiny `N` used here the tag overhead is irrelevant.
+
+/// A stack-only vector of at most `N` `Copy` elements.
+#[derive(Debug, Clone, Copy)]
+pub struct InlineVec<T: Copy, const N: usize> {
+    items: [Option<T>; N],
+    len: usize,
+}
+
+impl<T: Copy, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy, const N: usize> InlineVec<T, N> {
+    #[inline]
+    pub fn new() -> InlineVec<T, N> {
+        InlineVec { items: [None; N], len: 0 }
+    }
+
+    /// Append an element; panics if the fixed capacity is exceeded (the
+    /// call sites all have a structural bound ≤ N).
+    #[inline]
+    pub fn push(&mut self, item: T) {
+        assert!(self.len < N, "InlineVec capacity {N} exceeded");
+        self.items[self.len] = Some(item);
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<T> {
+        if i < self.len {
+            self.items[i]
+        } else {
+            None
+        }
+    }
+
+    /// First element, if any.
+    #[inline]
+    pub fn first(&self) -> Option<T> {
+        self.get(0)
+    }
+
+    /// Iterate over the elements by value.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        self.items[..self.len].iter().map(|o| o.expect("initialised up to len"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_iter() {
+        let mut v: InlineVec<u32, 3> = InlineVec::new();
+        assert!(v.is_empty());
+        assert_eq!(v.first(), None);
+        v.push(7);
+        v.push(9);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.first(), Some(7));
+        assert_eq!(v.get(1), Some(9));
+        assert_eq!(v.get(2), None);
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![7, 9]);
+        v.clear();
+        assert!(v.is_empty());
+        v.push(1);
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn overflow_panics() {
+        let mut v: InlineVec<u8, 1> = InlineVec::new();
+        v.push(1);
+        v.push(2);
+    }
+}

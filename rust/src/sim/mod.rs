@@ -18,12 +18,14 @@
 //! requested and the flow layer decides *how long* each use takes.
 
 pub mod engine;
+pub mod inline;
 pub mod resources;
 pub mod rng;
 pub mod stats;
 pub mod time;
 
 pub use engine::Engine;
+pub use inline::InlineVec;
 pub use resources::{RateResource, Resource};
 pub use rng::Rng;
 pub use stats::{LogHistogram, OnlineStats, Samples};

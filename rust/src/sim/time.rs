@@ -116,6 +116,13 @@ impl SimDuration {
     pub fn scale(self, factor: f64) -> SimDuration {
         SimDuration((self.0 as f64 * factor).round() as u64)
     }
+
+    /// Exact integer multiple (per-cell-gap × cell-count arithmetic; no
+    /// float rounding).
+    #[inline]
+    pub fn times(self, n: u64) -> SimDuration {
+        SimDuration(self.0 * n)
+    }
 }
 
 impl Add<SimDuration> for SimTime {
@@ -211,6 +218,12 @@ mod tests {
         // 288 B on the wire at 10 Gb/s = 230.4 ns
         let d = SimDuration::serialize(288, 10.0);
         assert_eq!(d.0, 230_400);
+    }
+
+    #[test]
+    fn integer_multiple_is_exact() {
+        assert_eq!(SimDuration(305_400).times(64).0, 64 * 305_400);
+        assert_eq!(SimDuration::ZERO.times(1_000_000), SimDuration::ZERO);
     }
 
     #[test]

@@ -60,6 +60,16 @@ impl SystemConfig {
         SystemConfig { mezzanines: 2, ..SystemConfig::prototype() }
     }
 
+    /// The full 256-MPSoC rack the paper's rack-scale §6 figures target:
+    /// 16 blades = 64 QFDBs = 256 ZU9EG MPSoCs = 1024 A53 cores on a
+    /// 4x4x4 torus (the prototype's 4x4x2 doubled along Z).  Every path
+    /// still fits [`crate::topology::path::MAX_HOPS`] (2 intra hops +
+    /// 2+2+2 ring hops).  Used by the full-rack cell-level scenarios
+    /// (`repro --rack`, CI perf smoke).
+    pub fn rack() -> SystemConfig {
+        SystemConfig { mezzanines: 16, ..SystemConfig::prototype() }
+    }
+
     /// A stable 64-bit digest of the full configuration (shape, link
     /// rates and every calibration constant), stamped into `BENCH_*.json`
     /// so perf trajectories are only compared across identical models.
@@ -254,6 +264,15 @@ mod tests {
         assert_eq!(c.num_qfdbs(), 8);
         assert_eq!(c.num_mpsocs(), 32);
         assert_eq!(c.torus_dims(), (4, 2, 1));
+    }
+
+    #[test]
+    fn rack_shape() {
+        let c = SystemConfig::rack();
+        assert_eq!(c.num_qfdbs(), 64);
+        assert_eq!(c.num_mpsocs(), 256);
+        assert_eq!(c.num_cores(), 1024);
+        assert_eq!(c.torus_dims(), (4, 4, 4));
     }
 
     #[test]

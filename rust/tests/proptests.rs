@@ -6,9 +6,9 @@ use exanest::mpi::collectives::{bcast_schedule, recursive_doubling_schedule};
 use exanest::mpi::{progress, pt2pt, Placement, World};
 use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
 use exanest::prop_assert;
-use exanest::sim::{Resource, SimDuration, SimTime};
+use exanest::sim::{Engine, Resource, SimDuration, SimTime};
 use exanest::testing::forall;
-use exanest::topology::{route, Gvas, MpsocId, QfdbId, SystemConfig, Topology};
+use exanest::topology::{route, Dir, Gvas, MpsocId, QfdbId, SystemConfig, Topology};
 
 #[test]
 fn prop_gvas_roundtrip() {
@@ -382,6 +382,197 @@ fn prop_route_cached_valid_after_reset() {
                     && cached.switches == fresh.switches,
                 "{a:?}->{b:?}: cache corrupted across reset"
             );
+        }
+        Ok(())
+    });
+}
+
+/// Reference event-queue model for the timing-wheel proptest: a flat
+/// list popped by minimum (time, seq) — the semantics of the original
+/// `BinaryHeap` engine.
+mod refqueue {
+    pub type Entry = (u64, u64, u32); // (at, seq, id)
+
+    pub fn peek(q: &[Entry]) -> Option<Entry> {
+        q.iter().copied().min_by_key(|&(at, seq, _)| (at, seq))
+    }
+
+    pub fn pop(q: &mut Vec<Entry>) -> Option<Entry> {
+        let min = peek(q)?;
+        let idx = q.iter().position(|&e| e == min).unwrap();
+        Some(q.remove(idx))
+    }
+}
+
+#[test]
+fn prop_timing_wheel_is_a_drop_in_for_the_heap() {
+    // The tentpole scheduler contract: the hierarchical timing wheel must
+    // pop in exactly the (time, seq) order of the old global heap under
+    // random interleavings of schedule / post-into-the-past / next /
+    // run_until / peek / clear — including same-tick FIFO ties, wheel
+    // rollover (timestamps many horizons out) and far-future
+    // overflow-bucket migration.
+    const HORIZON: u64 = 1 << 26; // NUM_SLOTS * SLOT_PS = 1024 * 2^16 ps
+    forall("timing wheel == reference heap", 120, |rng| {
+        let mut e: Engine<u32> = Engine::new();
+        let mut model: Vec<refqueue::Entry> = Vec::new();
+        let mut mseq = 0u64;
+        let mut mnow = 0u64;
+        let mut next_id = 0u32;
+        for step in 0..80 {
+            match rng.below(10) {
+                0..=4 => {
+                    // schedule at now + delta, deltas spanning same-slot,
+                    // in-wheel, multi-lap and far-overflow distances
+                    let delta = match rng.below(4) {
+                        0 => rng.below(1 << 16),
+                        1 => rng.below(HORIZON),
+                        2 => rng.below(3 * HORIZON),
+                        _ => rng.below(1 << 40),
+                    };
+                    let at = mnow + delta;
+                    e.schedule(SimTime(at), next_id);
+                    model.push((at, mseq, next_id));
+                    mseq += 1;
+                    next_id += 1;
+                }
+                5 => {
+                    // rank-local post, possibly into the past
+                    let at = rng.below(mnow + 1);
+                    e.post(SimTime(at), next_id);
+                    model.push((at, mseq, next_id));
+                    mseq += 1;
+                    next_id += 1;
+                }
+                6..=7 => {
+                    let got = e.next();
+                    let want = refqueue::pop(&mut model);
+                    if let Some((at, _, _)) = want {
+                        mnow = mnow.max(at);
+                    }
+                    prop_assert!(
+                        got.map(|(t, i)| (t.0, i)) == want.map(|(at, _, id)| (at, id)),
+                        "step {step}: next {got:?} vs {want:?}"
+                    );
+                    prop_assert!(e.now().0 == mnow, "step {step}: now {:?} vs {mnow}", e.now());
+                }
+                8 => {
+                    let deadline = mnow + rng.below(2 * HORIZON);
+                    let mut got: Vec<(u64, u32)> = Vec::new();
+                    e.run_until(&mut got, SimTime(deadline), |g, _, t, i| g.push((t.0, i)));
+                    let mut want: Vec<(u64, u32)> = Vec::new();
+                    while let Some((at, _, _)) = refqueue::peek(&model) {
+                        if at > deadline {
+                            break;
+                        }
+                        let (at, _, id) = refqueue::pop(&mut model).unwrap();
+                        mnow = mnow.max(at);
+                        want.push((at, id));
+                    }
+                    mnow = mnow.max(deadline);
+                    prop_assert!(got == want, "step {step}: run_until {got:?} vs {want:?}");
+                    prop_assert!(e.now().0 == mnow, "step {step}: now after run_until");
+                }
+                _ => {
+                    if rng.below(6) == 0 {
+                        e.clear();
+                        model.clear();
+                        mnow = 0;
+                    } else {
+                        let want = refqueue::peek(&model).map(|(at, _, _)| at);
+                        prop_assert!(
+                            e.peek_time().map(|t| t.0) == want,
+                            "step {step}: peek {:?} vs {want:?}",
+                            e.peek_time()
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                e.pending() == model.len(),
+                "step {step}: pending {} vs {}",
+                e.pending(),
+                model.len()
+            );
+        }
+        // drain fully in lockstep
+        loop {
+            let got = e.next();
+            let want = refqueue::pop(&mut model);
+            prop_assert!(
+                got.map(|(t, i)| (t.0, i)) == want.map(|(at, _, id)| (at, id)),
+                "drain: {got:?} vs {want:?}"
+            );
+            if got.is_none() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_train_batching_matches_event_path() {
+    // The tentpole parity contract: cell-train batching must be
+    // ps-identical to per-cell event simulation under random traffic —
+    // idle meshes, hotspot chains (blocks issued back-to-back into still-
+    // busy wires), both policies, and fault plans (already-down links
+    // batch onto the detour route; future fault times force both meshes
+    // onto the event path).
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("batched trains == per-cell events (ps exact)", 30, |rng| {
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let nq = cfg.num_qfdbs() as u64;
+        let faults = match rng.below(3) {
+            0 => FaultPlan::none(),
+            1 => FaultPlan::none().fail_torus(
+                QfdbId(rng.below(nq) as u32),
+                Dir::XPlus,
+                SimTime::ZERO,
+            ),
+            _ => FaultPlan::none().fail_torus(
+                QfdbId(rng.below(nq) as u32),
+                Dir::YMinus,
+                SimTime::from_us(30.0),
+            ),
+        };
+        let mut fast = RouterMesh::new(topo.clone(), policy, faults.clone());
+        let mut slow = RouterMesh::new(topo.clone(), policy, faults);
+        slow.set_batching(false);
+        let n = cfg.num_mpsocs() as u64;
+        let mut at = SimTime::ZERO;
+        for k in 0..8 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            if a == b {
+                continue;
+            }
+            if rng.below(4) == 0 {
+                let payload = [0usize, 8, 32, 256][rng.below(4) as usize];
+                let f = fast.small_cell(a, b, at, payload);
+                let s = slow.small_cell(a, b, at, payload);
+                prop_assert!(f == s, "call {k}: small_cell {a:?}->{b:?} {f:?} vs {s:?}");
+            } else {
+                let bytes = [1usize, 300, 4096, 16 * 1024][rng.below(4) as usize];
+                let pipelined = rng.below(2) == 0;
+                let f = fast.block(a, b, at, bytes, pipelined);
+                let s = slow.block(a, b, at, bytes, pipelined);
+                prop_assert!(
+                    f == s,
+                    "call {k}: block {a:?}->{b:?} {bytes} B at {at} — batched {f:?} vs events {s:?}"
+                );
+                if rng.below(2) == 0 {
+                    at = f.0; // chain into the still-busy injection window
+                }
+            }
+            if rng.below(3) == 0 {
+                at = at + SimDuration::from_us(rng.below(40) as f64);
+            }
         }
         Ok(())
     });
