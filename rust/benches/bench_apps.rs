@@ -1,17 +1,42 @@
-//! Bench for Figs 20-22 / Table 3: application scaling simulations.
-use exanest::apps::scaling::{run_point, AppParams, Mode};
+//! Bench for Figs 20-22 / Table 3: the event-driven proxy applications.
+use exanest::apps::scaling::{run_point, AppParams, HaloSchedule, Mode, ProxyConfig};
 use exanest::bench::{black_box, Suite};
+use exanest::mpi::Backend;
 use exanest::topology::SystemConfig;
 
 fn main() {
     let mut s = Suite::new("apps");
     let cfg = SystemConfig::prototype();
+    s.stamp(&cfg);
+    let proxy = ProxyConfig::default();
+    // captured from the benched runs themselves — no extra simulation
+    let mut hpcg_weak = None;
     for app in [AppParams::lammps(), AppParams::hpcg(), AppParams::minife()] {
         for (mode, tag) in [(Mode::Weak, "weak"), (Mode::Strong, "strong")] {
             s.bench(&format!("scaling/{}/{tag}/512ranks", app.name), || {
-                black_box(run_point(&cfg, &app, 512, mode));
+                let m = run_point(&cfg, &app, 512, mode, &proxy);
+                if app.name == "hpcg" && mode == Mode::Weak {
+                    hpcg_weak = Some(m);
+                } else {
+                    black_box(m);
+                }
             });
         }
+    }
+    // the maximally overlapped halo schedule and the accel dispatch path
+    let hpcg = AppParams::hpcg();
+    let all_faces = ProxyConfig { halo: HaloSchedule::AllFaces, ..ProxyConfig::default() };
+    s.bench("scaling/hpcg/weak/512ranks/all-faces", || {
+        black_box(run_point(&cfg, &hpcg, 512, Mode::Weak, &all_faces));
+    });
+    let accel = ProxyConfig { backend: Backend::Accel, ..ProxyConfig::default() };
+    s.bench("scaling/hpcg/weak/64ranks/accel", || {
+        black_box(run_point(&cfg, &hpcg, 64, Mode::Weak, &accel));
+    });
+    // stamp the headline simulation outputs next to the host-time numbers
+    if let Some(m) = hpcg_weak {
+        s.metric("hpcg/weak/comm_fraction@512ranks", m.comm_fraction, "frac");
+        s.metric("hpcg/weak/halo_overlap@512ranks", m.overlap_fraction, "frac");
     }
     s.write_json().expect("write BENCH_apps.json");
 }

@@ -26,6 +26,16 @@ fn main() {
         let mut w = World::new(cfg.clone(), 64, Placement::PerCore);
         black_box(collectives::alltoall(&mut w, 1024));
     });
+    // the generalized (non-power-of-two) schedule: fold-in + doubling + fold-out
+    s.bench("allreduce/12ranks/64B/folded", || {
+        let mut w = World::new(cfg.clone(), 12, Placement::PerCore);
+        black_box(collectives::allreduce(&mut w, 64));
+    });
+    // the backend dispatcher routing to the event-retimed accelerator
+    s.bench("allreduce_via/accel/64ranks/256B", || {
+        let mut w = World::new(cfg.clone(), 64, Placement::PerMpsoc);
+        black_box(collectives::allreduce_via(&mut w, 256, collectives::Backend::Accel));
+    });
     s.bench("scatter/512ranks/1KB", || {
         let mut w = World::new(cfg.clone(), 512, Placement::PerCore);
         black_box(collectives::scatter(&mut w, 1024));

@@ -92,8 +92,17 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     s.metric("engine/events_per_sec", e.processed() as f64 / wall, "1/s");
     s.metric("engine/peak_queue_depth", e.peak_pending() as f64, "events");
-    // accumulated over the progress bench above: queue pressure of the
-    // MPI event chains
+    // Queue pressure of the MPI event chains over a FIXED workload (1000
+    // eager pingpongs on a fresh world) — the adaptive bench harness
+    // above runs a host-speed-dependent iteration count, which would
+    // make these counters machine noise instead of a trajectory metric.
+    w.reset();
+    for _ in 0..1000 {
+        let sr = progress::isend(&mut w, 0, 4, 8);
+        let rr = progress::irecv(&mut w, 4, 0, 8);
+        progress::wait_all(&mut w, &[sr, rr]);
+        w.progress.recycle();
+    }
     s.metric("progress/events_processed", w.progress.events_processed() as f64, "events");
     s.metric("progress/peak_queue_depth", w.progress.peak_queue_depth() as f64, "events");
 

@@ -21,7 +21,8 @@ use crate::bail;
 use crate::errors::Result;
 use crate::mpi::{Placement, World};
 use crate::runtime::Executor;
-use crate::sim::{SimDuration, SimTime};
+use crate::sim::{Engine, SimDuration, SimTime};
+use crate::topology::{MpsocId, QfdbId};
 
 /// Arithmetic operations supported by the accelerator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,12 +50,34 @@ pub const MAX_RANKS: usize = 1024;
 /// The accelerator model over a simulated world.
 pub struct AccelAllreduce;
 
+/// Protocol phases of the event-retimed accelerator, one state machine
+/// per QFDB on the [`crate::sim::Engine`] DES core.  Unlike the
+/// closed-form [`AccelAllreduce::latency`] (which times one
+/// representative QFDB and assumes symmetry), every QFDB's cells charge
+/// their *own* fabric paths here, so torus-link sharing between
+/// concurrent server exchanges — and, on the cell-level mesh, credit
+/// backpressure — emerges instead of being averaged away.
+#[derive(Debug, Clone, Copy)]
+enum AccelEvent {
+    /// The QFDB's three client modules DMA their vectors and push them
+    /// to the server module on the Network FPGA, which reduces them.
+    ClientPush { qfdb: usize },
+    /// The server's level-`level` partial is ready: inject one cell
+    /// toward the XOR-partner server.
+    Send { qfdb: usize, level: usize },
+    /// A partner's level-`level` partial landed at this server.
+    Arrive { qfdb: usize, level: usize },
+    /// The server broadcasts the finished block back to its clients.
+    Broadcast { qfdb: usize },
+}
+
 impl AccelAllreduce {
-    /// Validate the paper's §4.7 use-case constraints.
-    pub fn check(world: &World, nranks: usize) -> Result<()> {
-        if world.placement != Placement::PerMpsoc {
-            bail!("accelerator supports at most 1 MPI rank per MPSoC");
-        }
+    /// The placement-independent §4.7 constraints: whole QFDBs, a
+    /// power-of-two rank count, at most [`MAX_RANKS`], and the machine
+    /// must host the count at one rank per MPSoC.  This is the single
+    /// predicate [`check`](AccelAllreduce::check) and the scaling
+    /// sweep's placement selection share.
+    pub fn supports(cfg: &crate::topology::SystemConfig, nranks: usize) -> Result<()> {
         if nranks % 4 != 0 {
             bail!("whole QFDBs must participate (ranks multiple of 4)");
         }
@@ -64,7 +87,21 @@ impl AccelAllreduce {
         if !nranks.is_power_of_two() {
             bail!("rank count must be a power of two for the level schedule");
         }
+        if nranks > cfg.num_mpsocs() {
+            bail!(
+                "machine hosts {} MPSoCs < {nranks} ranks at 1 rank per MPSoC",
+                cfg.num_mpsocs()
+            );
+        }
         Ok(())
+    }
+
+    /// Validate the paper's §4.7 use-case constraints for a world.
+    pub fn check(world: &World, nranks: usize) -> Result<()> {
+        if world.placement != Placement::PerMpsoc {
+            bail!("accelerator supports at most 1 MPI rank per MPSoC");
+        }
+        Self::supports(world.fabric.cfg(), nranks)
     }
 
     /// Latency of one accelerated allreduce of `bytes` (timing only).
@@ -120,6 +157,115 @@ impl AccelAllreduce {
         t = world.fabric.small_cell(&back, t, BLOCK_BYTES);
         t += calib.accel_client_dma + calib.accel_finish;
         t
+    }
+
+    /// Event-driven latency of one accelerated allreduce of `bytes`: the
+    /// client→server→exchange→broadcast phases of every QFDB run as
+    /// events on the DES core (`AccelEvent`), charging each QFDB's own
+    /// fabric paths concurrently.  Blocks stay serialized (each 256 B
+    /// block runs the whole level schedule, §6.1.5), and for a single
+    /// QFDB's timeline the charges match [`AccelAllreduce::latency`]'s
+    /// closed form — the representative-QFDB model remains the
+    /// calibration oracle, this path adds the emergent link contention.
+    /// This is what [`crate::mpi::collectives::allreduce_via`] dispatches
+    /// to for `Backend::Accel`.
+    pub fn latency_events(world: &mut World, bytes: usize) -> SimDuration {
+        let n = world.nranks();
+        Self::check(world, n).expect("accelerator constraints");
+        world.sync_clocks();
+        let start = world.max_clock();
+        let calib = world.fabric.calib().clone();
+        let qfdbs = n / 4;
+        let levels = qfdbs.trailing_zeros() as usize;
+        let nblocks = bytes.div_ceil(BLOCK_BYTES).max(1);
+        // Per-QFDB endpoints: the server on F1, plus a representative
+        // client MPSoC (F2 — same wire cost for each of the three
+        // clients, whose cells ride disjoint intra-QFDB links).
+        let servers: Vec<MpsocId> = (0..qfdbs)
+            .map(|q| world.fabric.topo.network_mpsoc(QfdbId(q as u32)))
+            .collect();
+        let clients: Vec<MpsocId> = servers.iter().map(|f1| MpsocId(f1.0 + 1)).collect();
+        let mut engine: Engine<AccelEvent> = Engine::new();
+        let mut ready = vec![SimTime::ZERO; qfdbs];
+        let mut done = vec![SimTime::ZERO; qfdbs];
+        // Per-server level sequencing: a partner's level-L partial can
+        // land *before* the level-(L-1) one under link contention (the
+        // two ride disjoint paths); the hardware buffers it until the
+        // server has absorbed every earlier level.  `next_level` is the
+        // level a server will reduce next; `held` parks early arrivals
+        // (at most `levels` entries per server).
+        let mut next_level = vec![0usize; qfdbs];
+        let mut held: Vec<Vec<(usize, SimTime)>> = vec![Vec::new(); qfdbs];
+        let mut t_block = start;
+        for _ in 0..nblocks {
+            for q in 0..qfdbs {
+                next_level[q] = 0;
+                held[q].clear();
+                engine.post(t_block, AccelEvent::ClientPush { qfdb: q });
+            }
+            while let Some((t, ev)) = engine.next() {
+                match ev {
+                    AccelEvent::ClientPush { qfdb } => {
+                        // Software programs the modules; clients DMA and
+                        // push; the server reduces the three client
+                        // vectors into its own.
+                        let t0 = t + calib.accel_init + calib.accel_client_dma;
+                        let p = world.fabric.route_cached(clients[qfdb], servers[qfdb]);
+                        let arr = world.fabric.small_cell(&p, t0, BLOCK_BYTES);
+                        let r = arr + SimDuration(calib.accel_reduce_per_level.0 * 3);
+                        ready[qfdb] = r;
+                        if levels == 0 {
+                            engine.post(r, AccelEvent::Broadcast { qfdb });
+                        } else {
+                            engine.post(r, AccelEvent::Send { qfdb, level: 0 });
+                        }
+                    }
+                    AccelEvent::Send { qfdb, level } => {
+                        let partner = qfdb ^ (1usize << level);
+                        let p = world.fabric.route_cached(servers[qfdb], servers[partner]);
+                        let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
+                        engine.post(arr, AccelEvent::Arrive { qfdb: partner, level });
+                    }
+                    AccelEvent::Arrive { qfdb, level } => {
+                        if level != next_level[qfdb] {
+                            held[qfdb].push((level, t));
+                            continue;
+                        }
+                        // absorb this level, then any buffered ones that
+                        // became in-order
+                        let mut at = t;
+                        loop {
+                            let r = at.max(ready[qfdb]) + calib.accel_reduce_per_level;
+                            ready[qfdb] = r;
+                            next_level[qfdb] += 1;
+                            if next_level[qfdb] == levels {
+                                engine.post(r, AccelEvent::Broadcast { qfdb });
+                                break;
+                            }
+                            engine.post(
+                                r,
+                                AccelEvent::Send { qfdb, level: next_level[qfdb] },
+                            );
+                            let want = next_level[qfdb];
+                            match held[qfdb].iter().position(|&(l, _)| l == want) {
+                                Some(i) => at = held[qfdb].swap_remove(i).1,
+                                None => break,
+                            }
+                        }
+                    }
+                    AccelEvent::Broadcast { qfdb } => {
+                        let p = world.fabric.route_cached(servers[qfdb], clients[qfdb]);
+                        let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
+                        done[qfdb] = arr + calib.accel_client_dma + calib.accel_finish;
+                    }
+                }
+            }
+            t_block = done.iter().copied().max().unwrap_or(t_block);
+        }
+        for c in world.clocks.iter_mut() {
+            *c = t_block;
+        }
+        t_block - start
     }
 
     /// Accelerated allreduce with real numerics: every rank contributes a
@@ -253,6 +399,65 @@ mod tests {
         assert!(
             ratio < 1.75,
             "accelerator scaling should be mild: {ratio} (paper 1.42)"
+        );
+    }
+
+    #[test]
+    fn event_path_tracks_closed_form_at_16_ranks() {
+        // The event-retimed path adds real per-QFDB link sharing the
+        // representative-QFDB closed form averages away, so exact
+        // equality is not expected — but at 4 QFDBs the exchange pairs
+        // are nearly disjoint and the two must stay close to each other
+        // (and hence to the paper's 6.79 us anchor).
+        let mut w = world(16);
+        let oracle = AccelAllreduce::latency(&mut w, 256);
+        w.reset();
+        let ev = AccelAllreduce::latency_events(&mut w, 256);
+        assert!(
+            (ev.ns() - oracle.ns()).abs() / oracle.ns() < 0.15,
+            "event path {} vs closed form {}",
+            ev.us(),
+            oracle.us()
+        );
+    }
+
+    #[test]
+    fn event_path_doubles_with_blocks() {
+        let mut w = world(16);
+        let l256 = AccelAllreduce::latency_events(&mut w, 256);
+        w.reset();
+        let l512 = AccelAllreduce::latency_events(&mut w, 512);
+        let r = l512.ns() / l256.ns();
+        assert!((r - 2.0).abs() < 0.15, "512/256 event-path ratio {r}");
+    }
+
+    #[test]
+    fn event_path_single_qfdb_has_no_exchange_levels() {
+        // 4 ranks = 1 QFDB: client push + broadcast only; must complete
+        // and undercut the 4-QFDB latency
+        let mut w4 = world(4);
+        let l4 = AccelAllreduce::latency_events(&mut w4, 256);
+        assert!(l4 > SimDuration::ZERO);
+        let mut w16 = world(16);
+        let l16 = AccelAllreduce::latency_events(&mut w16, 256);
+        assert!(l4 < l16, "1-QFDB {l4} vs 4-QFDB {l16}");
+    }
+
+    #[test]
+    fn event_path_runs_on_cell_level_mesh() {
+        use crate::network::{NetworkModel, RoutePolicy};
+        let mut w = World::with_model(
+            SystemConfig::prototype(),
+            16,
+            Placement::PerMpsoc,
+            NetworkModel::cell(RoutePolicy::Deterministic),
+        );
+        let lat = AccelAllreduce::latency_events(&mut w, 256);
+        // zero-load cell level tracks the flow level closely (DESIGN §8)
+        assert!(
+            (lat.us() - 6.79).abs() / 6.79 < 0.25,
+            "cell-model accel 16r/256B {} vs 6.79",
+            lat.us()
         );
     }
 

@@ -3,6 +3,15 @@
 //! (paper §7).  Timing comes from cycle/latency models calibrated to the
 //! paper; numerics come from the AOT-compiled Pallas kernels via
 //! [`crate::runtime::Executor`].
+//!
+//! The Allreduce engine has two timing paths: the closed-form
+//! representative-QFDB model ([`AccelAllreduce::latency`], the
+//! calibration oracle for the §6.1.5 anchors) and the event-retimed
+//! path ([`AccelAllreduce::latency_events`]) whose
+//! client→server→exchange→broadcast phases run as DES events per QFDB —
+//! this is what [`crate::mpi::collectives::allreduce_via`] dispatches to
+//! when an application asks for `Backend::Accel`.  See `REPRODUCING.md`
+//! for the commands that regenerate Fig 17/19.
 
 pub mod allreduce;
 pub mod matmul;

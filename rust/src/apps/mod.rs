@@ -1,5 +1,12 @@
 //! Benchmarks and applications of the paper's evaluation (§6): the OSU
-//! microbenchmark suite and the LAMMPS/HPCG/miniFE scaling experiments.
+//! microbenchmark suite and the LAMMPS/HPCG/miniFE proxy applications.
+//!
+//! The scaling experiments ([`scaling`]) run as event-driven proxy apps
+//! on the nonblocking MPI core: compute phases are DES events, halo
+//! faces are posted `isend`/`irecv` with `wait_all` barriers, and dot
+//! products dispatch through [`crate::mpi::collectives::allreduce_via`]
+//! (software recursive doubling or the in-NI accelerator).  See
+//! `REPRODUCING.md` for the paper-artifact → command map.
 
 pub mod osu;
 pub mod scaling;
@@ -8,4 +15,7 @@ pub use osu::{
     disjoint_link_pairs, osu_allreduce, osu_bcast, osu_bibw, osu_bw, osu_incast, osu_latency,
     osu_mbw_mr, osu_one_way_lat, osu_overlap, shared_link_pairs, MbwResult, OsuPath,
 };
-pub use scaling::{dims3, run_point, scaling_curve, AppParams, Mode, ScalePoint};
+pub use scaling::{
+    dims3, run_point, scaling_curve, AppParams, HaloSchedule, Mode, ProxyConfig, RunMetrics,
+    ScalePoint, ScalingSweep,
+};

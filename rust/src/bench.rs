@@ -95,10 +95,18 @@ pub struct Metric {
 
 impl Metric {
     fn to_json(&self) -> String {
+        // Shortest-roundtrip float formatting: a fixed {:.3} would floor
+        // small fractions (an allreduce share of 2e-4) to 0.000 and
+        // erase exactly the trajectories these metrics exist to track.
+        let value = if self.value.is_finite() {
+            format!("{}", self.value)
+        } else {
+            "null".to_string()
+        };
         format!(
-            "{{\"name\":\"{}\",\"value\":{:.3},\"unit\":\"{}\"}}",
+            "{{\"name\":\"{}\",\"value\":{},\"unit\":\"{}\"}}",
             json_escape(&self.name),
-            self.value,
+            value,
             json_escape(&self.unit)
         )
     }
@@ -287,6 +295,7 @@ mod tests {
             black_box(1 + 1);
         });
         s.metric("events_per_sec", 1234567.89, "1/s");
+        s.metric("tiny_fraction", 0.0002, "frac");
         let path = s.write_json_to(&dir).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"suite\":\"selftest\""));
@@ -296,8 +305,10 @@ mod tests {
         assert!(text.contains("\"config_hash\":\"unstamped\""));
         assert!(text.contains("\"metrics\":["), "metrics array always present");
         assert!(text.contains("\"name\":\"events_per_sec\""));
-        assert!(text.contains("\"value\":1234567.890"));
+        assert!(text.contains("\"value\":1234567.89"));
         assert!(text.contains("\"unit\":\"1/s\""));
+        // small fractions must not floor to zero (allreduce shares, overlap)
+        assert!(text.contains("\"value\":0.0002"));
         std::fs::remove_file(path).unwrap();
     }
 

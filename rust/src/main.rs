@@ -6,8 +6,9 @@
 
 use exanest::accel::{allreduce::AccelAllreduce, matmul::MatmulAccel};
 use exanest::apps::{osu, scaling};
+use exanest::bench::Suite;
 use exanest::ip::{iperf, rtt, IpMode, Scenario, TunnelConfig};
-use exanest::mpi::Placement;
+use exanest::mpi::{collectives, Backend, Placement, World};
 use exanest::ni::hw_pingpong;
 use exanest::network::{Fabric, NetworkModel, RoutePolicy};
 use exanest::power;
@@ -31,9 +32,10 @@ fn main() {
     if small {
         // Only the congestion/fault scenarios fit a two-blade machine;
         // the paper-artefact commands hard-code full-prototype endpoints
-        // (Inter-mezz(3,1,2) paths, 512-rank collectives).
-        const SMALL_OK: [&str; 5] =
-            ["hw-pingpong", "osu-mbw", "osu-incast", "osu-overlap", "router-hotspot"];
+        // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
+        // adapts its rank list to the machine, so it smokes at any size.
+        const SMALL_OK: [&str; 6] =
+            ["hw-pingpong", "osu-mbw", "osu-incast", "osu-overlap", "router-hotspot", "scaling"];
         if !SMALL_OK.contains(&cmd) {
             eprintln!(
                 "--small (two-blade subsystem) supports: {}\n\
@@ -69,8 +71,8 @@ fn main() {
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
-        const MODEL_OK: [&str; 5] =
-            ["osu-latency", "osu-bw", "osu-mbw", "osu-incast", "osu-allreduce"];
+        const MODEL_OK: [&str; 6] =
+            ["osu-latency", "osu-bw", "osu-mbw", "osu-incast", "osu-allreduce", "scaling"];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
                 "--network-model applies to: {} (router-hotspot is always cell-level)",
@@ -99,7 +101,26 @@ fn main() {
                 .and_then(|i| args.get(i + 1))
                 .map(|s| s.as_str())
                 .unwrap_or("all");
-            scaling_cmd(&cfg, app);
+            let backend = match args
+                .iter()
+                .position(|a| a == "--allreduce-backend")
+                .and_then(|i| args.get(i + 1))
+            {
+                None => Backend::Software,
+                Some(name) => Backend::by_name(name).unwrap_or_else(|| {
+                    eprintln!("unknown allreduce backend {name} (software | accel)");
+                    std::process::exit(2);
+                }),
+            };
+            let halo = match args.iter().position(|a| a == "--halo").and_then(|i| args.get(i + 1))
+            {
+                None => scaling::HaloSchedule::DimStaged,
+                Some(name) => scaling::HaloSchedule::by_name(name).unwrap_or_else(|| {
+                    eprintln!("unknown halo schedule {name} (dim-staged | all-faces)");
+                    std::process::exit(2);
+                }),
+            };
+            scaling_cmd(&cfg, app, &model, backend, halo);
         }
         "ip-overlay" => ip_overlay(&cfg),
         "matmul-accel" => matmul_accel(),
@@ -118,7 +139,7 @@ fn main() {
             bcast_model(&cfg);
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
-            scaling_cmd(&cfg, "all");
+            scaling_cmd(&cfg, "all", &model, Backend::Software, scaling::HaloSchedule::DimStaged);
             matmul_accel();
         }
         _ => {
@@ -138,15 +159,19 @@ fn main() {
                  \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
                  \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
-                 \tscaling          Figs 20-22 + Table 3 (--app lammps|hpcg|minife|all)\n\
+                 \tscaling          Figs 20-22 + Table 3 (--app lammps|hpcg|minife|all;\n\
+                 \t                 --allreduce-backend software|accel; --halo dim-staged|all-faces)\n\
                  \tmatmul-accel     §7: matmul accelerator GFLOPS / GFLOPS/W\n\
                  \tall              everything above\n\
                  flags:\n\
                  \t--small          two-blade subsystem (8 QFDBs; CI smoke size) — congestion/fault\n\
-                 \t                 scenarios only (osu-mbw, osu-incast, osu-overlap, router-hotspot, ...)\n\
+                 \t                 scenarios + scaling (osu-mbw, osu-incast, osu-overlap, ...)\n\
                  \t--rack           full 256-MPSoC rack (16 blades, 64 QFDBs, 4x4x4 torus, 1024 cores)\n\
-                 \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw,\n\
-                 \t                 osu-mbw, osu-incast, osu-allreduce (router-hotspot is always cell-level)"
+                 \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw, osu-mbw,\n\
+                 \t                 osu-incast, osu-allreduce, scaling (router-hotspot is always cell-level)\n\
+                 \t--allreduce-backend  software | accel: dot-product dispatch for scaling\n\
+                 \t                 (accel degrades to software outside its §4.7 constraints)\n\
+                 \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling"
             );
             std::process::exit(2);
         }
@@ -427,7 +452,26 @@ fn ip_overlay(_cfg: &SystemConfig) {
     );
 }
 
-fn scaling_cmd(cfg: &SystemConfig, which: &str) {
+/// The rank counts a scaling sweep visits: the paper's figure points
+/// capped to the machine's core count, trimmed for the (much more
+/// expensive) cell-level mesh.
+fn scaling_ranks(cfg: &SystemConfig, model: &NetworkModel) -> Vec<usize> {
+    let cap = cfg.num_cores();
+    let base: &[usize] = if matches!(model, NetworkModel::Flow) {
+        &scaling::RANKS
+    } else {
+        &[1, 4, 16, 64, 256]
+    };
+    base.iter().copied().filter(|&n| n <= cap).collect()
+}
+
+fn scaling_cmd(
+    cfg: &SystemConfig,
+    which: &str,
+    model: &NetworkModel,
+    backend: Backend,
+    halo: scaling::HaloSchedule,
+) {
     let apps: Vec<scaling::AppParams> = match which {
         "all" => vec![
             scaling::AppParams::lammps(),
@@ -439,43 +483,157 @@ fn scaling_cmd(cfg: &SystemConfig, which: &str) {
             std::process::exit(2);
         })],
     };
-    let ranks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
-    let mut table3 = Table::new(&["app", "weak@2", "weak@512", "strong@2", "strong@512"]);
+    let proxy =
+        scaling::ProxyConfig { model: model.clone(), backend, halo };
+    let ranks = scaling_ranks(cfg, model);
+    let last = *ranks.last().expect("at least one rank count");
+    let small = *ranks.iter().find(|&&n| n > 1).unwrap_or(&last);
+    let hdr_w2 = format!("weak@{small}");
+    let hdr_wn = format!("weak@{last}");
+    let hdr_s2 = format!("strong@{small}");
+    let hdr_sn = format!("strong@{last}");
+    let mut table3 = Table::new(&[
+        "app",
+        hdr_w2.as_str(),
+        hdr_wn.as_str(),
+        hdr_s2.as_str(),
+        hdr_sn.as_str(),
+    ]);
+    // The backend comparison depends only on the machine and the link
+    // model, not on the app: compute and print it once, stamp the
+    // improvement metrics into every app's suite below.
+    let accel_improvements = if backend == Backend::Accel {
+        accel_vs_software(cfg, model)
+    } else {
+        Vec::new()
+    };
     for app in &apps {
+        // One sweep per app: the single-rank reference is simulated once
+        // per mode and the Table-3 corners reuse the curve's points.
+        let mut sweep = scaling::ScalingSweep::new(cfg, app, proxy.clone());
+        let mut suite = Suite::new(&format!("scaling_{}", app.name));
+        suite.stamp(cfg);
+        let mut corners = Vec::new();
         for mode in [scaling::Mode::Weak, scaling::Mode::Strong] {
             let fig = match app.name {
                 "lammps" => "Fig 20",
                 "hpcg" => "Fig 21",
                 _ => "Fig 22",
             };
-            println!("## {fig} — {} {:?} scaling\n", app.name, mode);
-            let pts = scaling::scaling_curve(cfg, app, mode, &ranks);
-            let mut t = Table::new(&["ranks", "time (s)", "efficiency", "comm share"]);
+            println!(
+                "## {fig} — {} {:?} scaling ({}, {} allreduce, {} halo)\n",
+                app.name,
+                mode,
+                model.label(),
+                backend.label(),
+                halo.label()
+            );
+            let pts = sweep.curve(mode, &ranks).unwrap_or_else(|e| {
+                eprintln!("scaling sweep failed: {e}");
+                std::process::exit(1);
+            });
+            let mut t = Table::new(&[
+                "ranks",
+                "time (s)",
+                "efficiency",
+                "comm share",
+                "allreduce share",
+                "halo overlap",
+                "backend",
+            ]);
             for p in &pts {
                 t.row(&[
                     p.ranks.to_string(),
                     format!("{:.4}", p.time_s),
                     pct(p.efficiency),
                     pct(p.comm_fraction),
+                    pct(p.allreduce_fraction),
+                    pct(p.overlap_fraction),
+                    p.backend.label().to_string(),
                 ]);
             }
             println!("{}", t.render());
+            let tag = match mode {
+                scaling::Mode::Weak => "weak",
+                scaling::Mode::Strong => "strong",
+            };
+            let at = |n: usize| pts.iter().find(|p| p.ranks == n);
+            if let (Some(ps), Some(pl)) = (at(small), at(last)) {
+                corners.push((ps.efficiency, pl.efficiency));
+                suite.metric(&format!("{tag}/efficiency@{last}ranks"), pl.efficiency, "frac");
+                suite.metric(&format!("{tag}/comm_fraction@{last}ranks"), pl.comm_fraction, "frac");
+                suite.metric(
+                    &format!("{tag}/halo_overlap@{last}ranks"),
+                    pl.overlap_fraction,
+                    "frac",
+                );
+                suite.metric(
+                    &format!("{tag}/allreduce_fraction@{last}ranks"),
+                    pl.allreduce_fraction,
+                    "frac",
+                );
+                if mode == scaling::Mode::Weak {
+                    // the §6.2 acceptance line: the paper's floor is 69%
+                    println!(
+                        "{}: weak-scaling parallel efficiency at {} ranks: {}\n",
+                        app.name,
+                        last,
+                        pct(pl.efficiency)
+                    );
+                }
+            }
         }
-        // Table 3 corners
-        let w = scaling::scaling_curve(cfg, app, scaling::Mode::Weak, &[2, 512]);
-        let s = scaling::scaling_curve(cfg, app, scaling::Mode::Strong, &[2, 512]);
-        table3.row(&[
-            app.name.to_string(),
-            pct(w[0].efficiency),
-            pct(w[1].efficiency),
-            pct(s[0].efficiency),
-            pct(s[1].efficiency),
-        ]);
+        if corners.len() == 2 {
+            table3.row(&[
+                app.name.to_string(),
+                pct(corners[0].0),
+                pct(corners[0].1),
+                pct(corners[1].0),
+                pct(corners[1].1),
+            ]);
+        }
+        for &(n, b, improvement) in &accel_improvements {
+            if b == 256 {
+                suite.metric(&format!("accel_improvement/{n}ranks/256B"), improvement, "frac");
+            }
+        }
+        if let Err(e) = suite.write_json() {
+            eprintln!("could not write BENCH_scaling_{}.json: {e}", app.name);
+        }
     }
     if which == "all" {
         println!("## Table 3 — parallel efficiency summary\n");
         println!("{}", table3.render());
     }
+}
+
+/// Side-by-side dot-product allreduce latencies, software vs the in-NI
+/// accelerator, on the sweep's network model (1 rank per MPSoC, the
+/// accelerator's §4.7 placement).  The paper's Fig 19 margin — at least
+/// 80% improvement for small vectors at rendez-vous sizes — is what the
+/// `--allreduce-backend accel` acceptance checks read off this table.
+/// Returns `(ranks, bytes, improvement)` rows for metric stamping.
+fn accel_vs_software(cfg: &SystemConfig, model: &NetworkModel) -> Vec<(usize, usize, f64)> {
+    println!("## Allreduce backends — software vs accelerator (us)\n");
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["ranks", "size (B)", "software", "accel", "improvement"]);
+    for &n in &[4usize, 16, 64] {
+        if n > cfg.num_mpsocs() {
+            continue;
+        }
+        for &b in &[64usize, 256, 1024] {
+            let mut w = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model.clone());
+            let (sw, _) = collectives::allreduce_via(&mut w, b, Backend::Software);
+            w.reset();
+            let (hw, used) = collectives::allreduce_via(&mut w, b, Backend::Accel);
+            debug_assert_eq!(used, Backend::Accel);
+            let improvement = 1.0 - hw.ns() / sw.ns();
+            t.row(&[n.to_string(), b.to_string(), us(sw.us()), us(hw.us()), pct(improvement)]);
+            rows.push((n, b, improvement));
+        }
+    }
+    println!("{}", t.render());
+    rows
 }
 
 fn matmul_accel() {

@@ -139,10 +139,54 @@ fn subtree_size(rank: usize, n: usize) -> usize {
     span.min(n - rank)
 }
 
-/// MPI_Allreduce of `bytes` via recursive doubling, including the
-/// temporary-buffer management of the implementation (§6.1.3: one memcopy
-/// to populate the temp buffer, local reduction per step, one memcopy to
-/// the receive buffer at the end).
+/// The three phases of an any-rank-count allreduce (MPICH
+/// `MPIR_Allreduce_intra`): a fold-in step that reduces the surplus ranks
+/// into their neighbours, recursive doubling over the surviving
+/// power-of-two subset, and a fold-out step that hands the surplus ranks
+/// the result back.  For a power-of-two rank count the pre/post phases
+/// are empty and the main phase is exactly
+/// [`recursive_doubling_schedule`].
+#[derive(Debug, Clone)]
+pub struct AllreducePhases {
+    /// Fold-in: `(even, odd)` pairs among the first `2 * rem` ranks; the
+    /// even rank sends its vector, the odd rank reduces it in.
+    pub pre: Step,
+    /// Recursive-doubling exchange steps, mapped onto the real rank ids
+    /// of the `pof2` active ranks.
+    pub main: Vec<Step>,
+    /// Fold-out: `(odd, even)` pairs returning the finished vector.
+    pub post: Step,
+}
+
+/// Build the [`AllreducePhases`] for `nranks` ranks (any count >= 1).
+pub fn allreduce_phases(nranks: usize) -> AllreducePhases {
+    assert!(nranks >= 1, "allreduce needs at least one rank");
+    let pof2 = if nranks.is_power_of_two() {
+        nranks
+    } else {
+        nranks.next_power_of_two() / 2
+    };
+    let rem = nranks - pof2;
+    let pre: Step = (0..rem).map(|k| (2 * k, 2 * k + 1)).collect();
+    let post: Step = (0..rem).map(|k| (2 * k + 1, 2 * k)).collect();
+    // Active ranks: the odd halves of the folded pairs, then everyone
+    // past the folded prefix.
+    let active: Vec<usize> = (0..rem).map(|k| 2 * k + 1).chain(2 * rem..nranks).collect();
+    debug_assert_eq!(active.len(), pof2);
+    let main: Vec<Step> = recursive_doubling_schedule(pof2)
+        .into_iter()
+        .map(|step| step.into_iter().map(|(a, b)| (active[a], active[b])).collect())
+        .collect();
+    AllreducePhases { pre, main, post }
+}
+
+/// MPI_Allreduce of `bytes`, including the temporary-buffer management of
+/// the implementation (§6.1.3: one memcopy to populate the temp buffer,
+/// local reduction per step, one memcopy to the receive buffer at the
+/// end).  Power-of-two rank counts run pure recursive doubling (the
+/// paper's setups); any other count folds the surplus ranks in and out
+/// around the doubling phase ([`allreduce_phases`]), so every rank count
+/// reduces instead of being silently skipped.
 pub fn allreduce(world: &mut World, bytes: usize) -> SimDuration {
     world.sync_clocks();
     let start = world.max_clock();
@@ -153,18 +197,79 @@ pub fn allreduce(world: &mut World, bytes: usize) -> SimDuration {
     for c in world.clocks.iter_mut() {
         *c += memcpy;
     }
-    for step in recursive_doubling_schedule(world.nranks()) {
-        run_exchange_step(world, &step, bytes);
-        for &(a, b) in &step {
+    let phases = allreduce_phases(world.nranks());
+    if !phases.pre.is_empty() {
+        run_pair_step(world, &phases.pre, |_, _| bytes);
+        for &(_, odd) in &phases.pre {
+            world.clocks[odd] += reduce;
+        }
+    }
+    for step in &phases.main {
+        run_exchange_step(world, step, bytes);
+        for &(a, b) in step {
             world.clocks[a] += reduce;
             world.clocks[b] += reduce;
         }
+    }
+    if !phases.post.is_empty() {
+        run_pair_step(world, &phases.post, |_, _| bytes);
     }
     // final copy into recvbuf
     for c in world.clocks.iter_mut() {
         *c += memcpy;
     }
     world.max_clock() - start
+}
+
+/// Which implementation an allreduce dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The software schedule above (MPICH recursive doubling + folding).
+    #[default]
+    Software,
+    /// The in-NI Allreduce accelerator (paper §4.7), honoring its
+    /// use-case constraints: 1 rank per MPSoC, whole QFDBs (rank count a
+    /// multiple of 4), at most 1024 ranks.  Falls back to [`allreduce`]
+    /// when the world violates any of them.
+    Accel,
+}
+
+impl Backend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Software => "software",
+            Backend::Accel => "accel",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Backend> {
+        match name {
+            "software" => Some(Backend::Software),
+            "accel" => Some(Backend::Accel),
+            _ => None,
+        }
+    }
+}
+
+/// Allreduce of `bytes` through the requested [`Backend`].  Returns the
+/// latency and the backend that actually ran: `Accel` silently degrades
+/// to `Software` when the accelerator's §4.7 constraints don't hold (the
+/// paper's ExaNet-MPI does the same), so callers can always ask for the
+/// accelerator and observe what they got.
+pub fn allreduce_via(world: &mut World, bytes: usize, backend: Backend) -> (SimDuration, Backend) {
+    match backend {
+        Backend::Software => (allreduce(world, bytes), Backend::Software),
+        Backend::Accel => {
+            if crate::accel::AccelAllreduce::check(world, world.nranks()).is_ok() {
+                (
+                    crate::accel::AccelAllreduce::latency_events(world, bytes),
+                    Backend::Accel,
+                )
+            } else {
+                (allreduce(world, bytes), Backend::Software)
+            }
+        }
+    }
 }
 
 /// MPI_Reduce to rank 0 (binomial tree, reversed bcast).
@@ -371,6 +476,99 @@ mod tests {
             (lat.us() - 33.62).abs() / 33.62 < 0.45,
             "allreduce(4, 64B) {} vs 33.62",
             lat.us()
+        );
+    }
+
+    /// Execute an [`AllreducePhases`] schedule on real per-rank values and
+    /// return the final per-rank sums (the timing model's data-movement
+    /// pattern, checked for correctness).
+    fn execute_phases(vals: &mut [i64]) {
+        let phases = allreduce_phases(vals.len());
+        for &(even, odd) in &phases.pre {
+            vals[odd] += vals[even];
+        }
+        for step in &phases.main {
+            for &(a, b) in step {
+                let s = vals[a] + vals[b];
+                vals[a] = s;
+                vals[b] = s;
+            }
+        }
+        for &(odd, even) in &phases.post {
+            vals[even] = vals[odd];
+        }
+    }
+
+    #[test]
+    fn allreduce_phases_compute_global_sum_at_6_ranks() {
+        let mut vals: Vec<i64> = vec![3, 1, 4, 1, 5, 9];
+        let total: i64 = vals.iter().sum();
+        execute_phases(&mut vals);
+        assert!(vals.iter().all(|&v| v == total), "{vals:?} != {total}");
+    }
+
+    #[test]
+    fn allreduce_phases_compute_global_sum_at_12_ranks() {
+        let mut vals: Vec<i64> = (0..12).map(|r| 7 * r - 3).collect();
+        let total: i64 = vals.iter().sum();
+        execute_phases(&mut vals);
+        assert!(vals.iter().all(|&v| v == total), "{vals:?} != {total}");
+    }
+
+    #[test]
+    fn allreduce_runs_at_non_power_of_two_rank_counts() {
+        // the old schedule silently required 2^k ranks; N=6 and N=12 must
+        // now reduce, and cost at least as much as the next-lower 2^k
+        // (same doubling phase plus the fold-in/fold-out steps)
+        for (n, pof2) in [(6usize, 4usize), (12, 8)] {
+            let mut w = world(n);
+            let lat = allreduce(&mut w, 64);
+            let mut wp = world(pof2);
+            let base = allreduce(&mut wp, 64);
+            assert!(lat > base, "allreduce({n}) {lat} should exceed allreduce({pof2}) {base}");
+        }
+    }
+
+    #[test]
+    fn allreduce_power_of_two_unchanged_by_generalization() {
+        // pof2 counts take the pure recursive-doubling path: the phases
+        // must have empty pre/post and the calibrated 4-rank latencies
+        // (asserted above) keep passing
+        let p = allreduce_phases(16);
+        assert!(p.pre.is_empty() && p.post.is_empty());
+        assert_eq!(p.main.len(), 4);
+    }
+
+    #[test]
+    fn allreduce_via_software_matches_allreduce() {
+        let mut w = world(8);
+        let direct = allreduce(&mut w, 256);
+        w.reset();
+        let (via, used) = allreduce_via(&mut w, 256, Backend::Software);
+        assert_eq!(used, Backend::Software);
+        assert_eq!(via, direct);
+    }
+
+    #[test]
+    fn allreduce_via_accel_falls_back_when_constraints_violated() {
+        // PerCore placement violates the 1-rank-per-MPSoC constraint:
+        // the dispatcher must degrade to software, not panic
+        let mut w = world(16);
+        let (lat, used) = allreduce_via(&mut w, 256, Backend::Accel);
+        assert_eq!(used, Backend::Software);
+        assert!(lat > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn allreduce_via_accel_dispatches_and_wins() {
+        let mut w = World::new(SystemConfig::prototype(), 16, Placement::PerMpsoc);
+        let (hw, used) = allreduce_via(&mut w, 256, Backend::Accel);
+        assert_eq!(used, Backend::Accel);
+        w.reset();
+        let (sw, _) = allreduce_via(&mut w, 256, Backend::Software);
+        assert!(
+            hw.ns() < 0.2 * sw.ns(),
+            "accel {hw} should cut >= 80% off software {sw}"
         );
     }
 

@@ -3,16 +3,27 @@
 //! — all timed against the simulated ExaNet fabric and NI.
 //!
 //! Since the event-driven refactor the runtime is nonblocking at its core:
-//! [`progress`] posts `isend`/`irecv` request chains onto the
-//! discrete-event engine, and the blocking API ([`send_recv`], the
-//! collectives) is a layer of post-then-wait wrappers on top.
+//! [`progress`] posts `isend`/`irecv` request chains (and, for the proxy
+//! applications, [`icompute`] compute phases) onto the discrete-event
+//! engine, and the blocking API ([`send_recv`], the collectives) is a
+//! layer of post-then-wait wrappers on top.
+//!
+//! Allreduce dispatches through [`allreduce_via`]: the software schedule
+//! handles *any* rank count (fold-in/fold-out around recursive doubling,
+//! [`collectives::allreduce_phases`]), and [`Backend::Accel`] routes to
+//! the in-NI accelerator when the paper's §4.7 constraints hold, falling
+//! back to software otherwise.
 
 pub mod collectives;
 pub mod progress;
 pub mod pt2pt;
 pub mod world;
 
-pub use progress::{irecv, irecv_at, isend, isend_at, test, wait, wait_all, Progress, Request};
+pub use collectives::{allreduce_via, Backend};
+pub use progress::{
+    icompute, icompute_at, irecv, irecv_at, isend, isend_at, test, wait, wait_all, Progress,
+    Request,
+};
 pub use pt2pt::{
     message, post_exchange, protocol_for, send_recv, sendrecv_exchange, windowed_bw, Protocol,
     SendRecv,

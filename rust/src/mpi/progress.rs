@@ -53,6 +53,11 @@ pub struct Request {
 enum DirKind {
     Send,
     Recv,
+    /// A local compute phase ([`icompute`]): no peer, no fabric traffic —
+    /// just a completion event at `posted_at + duration`, so application
+    /// compute is ordered in the same global event stream as the
+    /// protocol stages it overlaps with.
+    Compute,
 }
 
 /// Protocol stages of one operation, driven by the event queue.
@@ -71,6 +76,8 @@ enum MpiEvent {
     CtsArrive(usize),
     /// The completion notification is visible to the polling receiver.
     DataDelivered(usize),
+    /// A local compute phase finished on its rank ([`icompute`]).
+    ComputeDone(usize),
 }
 
 #[derive(Debug)]
@@ -258,6 +265,27 @@ impl Progress {
         Request { id, gen: self.gen }
     }
 
+    fn post_compute(&mut self, rank: usize, at: SimTime, dur: SimDuration) -> Request {
+        let id = self.reqs.len();
+        self.reqs.push(ReqState {
+            rank,
+            peer: rank,
+            bytes: 0,
+            dir: DirKind::Compute,
+            protocol: Protocol::Eager, // unused for compute
+            posted_at: at,
+            fwd: None,
+            back: None,
+            partner: None,
+            rts_arrival: None,
+            eager_arrival: None,
+            done: None,
+            consumed: false,
+        });
+        self.engine.post(at + dur, MpiEvent::ComputeDone(id));
+        Request { id, gen: self.gen }
+    }
+
     /// Process events until `req` completes; panics on a guaranteed
     /// deadlock (event queue drained with the request still pending).
     fn drive(&mut self, fab: &mut Fabric, req: Request) -> SimTime {
@@ -364,6 +392,9 @@ impl Progress {
                 let tr = self.reqs[rid].posted_at;
                 self.reqs[rid].done = Some(t.max(tr) + mpi_sw);
             }
+            MpiEvent::ComputeDone(id) => {
+                self.reqs[id].done = Some(t);
+            }
         }
     }
 }
@@ -406,6 +437,25 @@ pub fn irecv_at(
 ) -> Request {
     let mpi_sw = world.fabric.calib().mpi_sw;
     world.progress.post_recv(dst, src, bytes, at, mpi_sw)
+}
+
+/// Post a local compute phase of `dur` on `rank`, starting at the rank's
+/// current clock.  Returns a [`Request`] that completes at `start + dur`
+/// — the proxy applications use this to put compute phases on the same
+/// event timeline as the communication they overlap with.
+pub fn icompute(world: &mut World, rank: usize, dur: SimDuration) -> Request {
+    let at = world.clocks[rank];
+    icompute_at(world, rank, dur, at)
+}
+
+/// Post a local compute phase at an explicit rank-local start time.
+pub fn icompute_at(
+    world: &mut World,
+    rank: usize,
+    dur: SimDuration,
+    at: SimTime,
+) -> Request {
+    world.progress.post_compute(rank, at, dur)
 }
 
 /// Block until `req` completes; advances the owning rank's clock to the
@@ -545,6 +595,30 @@ mod tests {
         let mut w = world(8);
         let r = irecv(&mut w, 4, 0, 16);
         wait(&mut w, r);
+    }
+
+    #[test]
+    fn icompute_advances_exactly_by_duration() {
+        let mut w = world(8);
+        let c = icompute(&mut w, 3, SimDuration::from_us(7.5));
+        let done = wait(&mut w, c);
+        assert_eq!(done, SimTime::from_us(7.5));
+        assert_eq!(w.clocks[3], SimTime::from_us(7.5));
+        // other ranks' clocks untouched
+        assert_eq!(w.clocks[0], SimTime::ZERO);
+    }
+
+    #[test]
+    fn icompute_interleaves_with_messages() {
+        // compute posted alongside a rendez-vous: the message's protocol
+        // events and the compute completion share one event timeline, and
+        // a compute longer than the transfer hides it completely.
+        let mut w = world(8);
+        let s = isend(&mut w, 0, 4, 1 << 20);
+        let r = irecv(&mut w, 4, 0, 1 << 20);
+        let c = icompute(&mut w, 0, SimDuration::from_us(10_000.0));
+        wait_all(&mut w, &[s, r, c]);
+        assert_eq!(w.clocks[0], SimTime::from_us(10_000.0));
     }
 
     #[test]

@@ -156,12 +156,34 @@ fn eq1_model_inputs_match_measurements() {
 fn scaling_curves_are_complete_and_sane() {
     let c = cfg();
     let app = AppParams::hpcg();
-    let pts = scaling_curve(&c, &app, Mode::Weak, &[1, 2, 4, 8]);
+    let pts = scaling_curve(&c, &app, Mode::Weak, &[1, 2, 4, 8]).unwrap();
     assert_eq!(pts.len(), 4);
     assert!((pts[0].efficiency - 1.0).abs() < 1e-9, "1-rank eff must be 1.0");
     for p in &pts {
         assert!(p.time_s > 0.0 && p.comm_fraction < 0.6);
+        assert!((0.0..1.0).contains(&p.overlap_fraction));
     }
+}
+
+#[test]
+fn full_stack_proxy_app_on_cell_mesh_with_accel_dispatch() {
+    // The first end-to-end run of the whole stack on one workload:
+    // timing-wheel engine → cell-level torus routers → NI protocol →
+    // nonblocking MPI → event-driven proxy app, with dot products
+    // dispatched to the in-NI accelerator.
+    use exanest::apps::scaling::{run_point, ProxyConfig};
+    use exanest::mpi::Backend;
+    let c = SystemConfig::two_blades();
+    let app = AppParams::minife();
+    let proxy = ProxyConfig {
+        model: NetworkModel::cell(RoutePolicy::Deterministic),
+        backend: Backend::Accel,
+        ..ProxyConfig::default()
+    };
+    let m = run_point(&c, &app, 16, Mode::Weak, &proxy);
+    assert!(m.time_s > 0.0);
+    assert_eq!(m.backend, Backend::Accel, "16 ranks on 8 QFDBs satisfy §4.7");
+    assert!(m.comm_fraction > 0.0 && m.comm_fraction < 1.0);
 }
 
 #[test]
