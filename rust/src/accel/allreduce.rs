@@ -96,10 +96,19 @@ impl AccelAllreduce {
         Ok(())
     }
 
-    /// Validate the paper's §4.7 use-case constraints for a world.
+    /// Validate the paper's §4.7 use-case constraints for a world.  The
+    /// level schedule hard-wires the server topology (QFDB 0..n/4 with
+    /// XOR partners), so beyond the `PerMpsoc` style the world's
+    /// [`crate::mpi::RankMap`] must actually be the contiguous
+    /// one-rank-per-MPSoC layout starting at MPSoC 0 — a scheduler job
+    /// placed at an offset or scattered across blades falls back to the
+    /// software allreduce instead of charging the wrong links.
     pub fn check(world: &World, nranks: usize) -> Result<()> {
         if world.placement != Placement::PerMpsoc {
             bail!("accelerator supports at most 1 MPI rank per MPSoC");
+        }
+        if !world.rank_map().matches_contiguous(world.fabric.cfg(), Placement::PerMpsoc) {
+            bail!("accelerator requires the contiguous whole-rack PerMpsoc placement");
         }
         Self::supports(world.fabric.cfg(), nranks)
     }

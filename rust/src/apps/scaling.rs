@@ -276,12 +276,38 @@ pub enum Mode {
 }
 
 /// In-flight halo requests of one schedule step, with the bookkeeping
-/// the overlap accounting needs.
+/// the overlap accounting needs.  Ranks are *local* (indices into the
+/// job's group), so the same batch machinery serves a dedicated world
+/// and a scheduler job placed anywhere on a shared rack.
 #[derive(Default)]
-struct HaloBatch {
+pub struct HaloBatch {
     sends: Vec<Request>,
-    /// (rank, posted_at, request) per face receive.
+    /// (local rank, posted_at, request) per face receive.
     recvs: Vec<(usize, SimTime, Request)>,
+}
+
+impl HaloBatch {
+    /// No face exchanges posted (single-rank decomposition)?
+    pub fn is_empty(&self) -> bool {
+        self.recvs.is_empty()
+    }
+}
+
+/// Accumulated timing shares of a proxy run, folded across iterations by
+/// [`proxy_iteration`].  [`run_point`] turns one of these into
+/// [`RunMetrics`]; the scheduler keeps one per job.
+#[derive(Debug, Clone, Default)]
+pub struct ProxyAccum {
+    /// Seconds spent in communication (halos + allreduces).
+    pub comm_time: f64,
+    /// Seconds spent in dot-product allreduces.
+    pub allreduce_time: f64,
+    /// Overlap accounting numerator/denominator (see
+    /// [`RunMetrics::overlap_fraction`]).
+    pub overlap_num: f64,
+    pub overlap_den: f64,
+    /// The allreduce backend that actually ran.
+    pub backend_used: Backend,
 }
 
 /// Post one dimension's face exchanges nonblocking: every rank isends
@@ -290,10 +316,13 @@ struct HaloBatch {
 /// exchange, as the legacy schedule did).  Receives are staggered by
 /// [`pt2pt::recv_turnaround`]: the in-order A53 hands its sends to the
 /// NI before the receive path starts.
-fn post_halo_dim(
+///
+/// `group` maps the decomposition's local ranks onto global world ranks
+/// (`group[local] == global`); a dedicated world passes the identity.
+pub fn post_halo_dim(
     world: &mut World,
     dims: (usize, usize, usize),
-    ranks: usize,
+    group: &[usize],
     dim: usize,
     face_bytes: usize,
     out: &mut HaloBatch,
@@ -303,7 +332,7 @@ fn post_halo_dim(
         return;
     }
     let turnaround = pt2pt::recv_turnaround(world);
-    for r in 0..ranks {
+    for r in 0..group.len() {
         let c = rank_coord(r, dims);
         let mut up = c;
         let mut down = c;
@@ -323,24 +352,25 @@ fn post_halo_dim(
         }
         let nu = coord_rank(up, dims);
         let nd = coord_rank(down, dims);
-        let t = world.clocks[r];
+        let (gr, gu, gd) = (group[r], group[nu], group[nd]);
+        let t = world.clocks[gr];
         if d == 2 {
             // +neighbour == −neighbour: one bidirectional exchange per
             // pair covers both faces; post it from the lower rank only.
             if r < nu {
-                let tb = world.clocks[nu];
-                out.sends.push(progress::isend_at(world, r, nu, face_bytes, t));
-                out.sends.push(progress::isend_at(world, nu, r, face_bytes, tb));
-                let ra = progress::irecv_at(world, r, nu, face_bytes, t + turnaround);
-                let rb = progress::irecv_at(world, nu, r, face_bytes, tb + turnaround);
+                let tb = world.clocks[gu];
+                out.sends.push(progress::isend_at(world, gr, gu, face_bytes, t));
+                out.sends.push(progress::isend_at(world, gu, gr, face_bytes, tb));
+                let ra = progress::irecv_at(world, gr, gu, face_bytes, t + turnaround);
+                let rb = progress::irecv_at(world, gu, gr, face_bytes, tb + turnaround);
                 out.recvs.push((r, t, ra));
                 out.recvs.push((nu, tb, rb));
             }
         } else {
-            out.sends.push(progress::isend_at(world, r, nu, face_bytes, t));
-            out.sends.push(progress::isend_at(world, r, nd, face_bytes, t));
-            let ru = progress::irecv_at(world, r, nu, face_bytes, t + turnaround);
-            let rd = progress::irecv_at(world, r, nd, face_bytes, t + turnaround);
+            out.sends.push(progress::isend_at(world, gr, gu, face_bytes, t));
+            out.sends.push(progress::isend_at(world, gr, gd, face_bytes, t));
+            let ru = progress::irecv_at(world, gr, gu, face_bytes, t + turnaround);
+            let rd = progress::irecv_at(world, gr, gd, face_bytes, t + turnaround);
             out.recvs.push((r, t, ru));
             out.recvs.push((r, t, rd));
         }
@@ -352,17 +382,16 @@ fn post_halo_dim(
 /// post-to-completion latencies, `actual` the makespan — the gap is the
 /// schedule compression reported as [`RunMetrics::overlap_fraction`]
 /// (an upper bound on genuine overlap; see its docs).
-fn wait_halo_batch(
+pub fn wait_halo_batch(
     world: &mut World,
-    ranks: usize,
+    nlocal: usize,
     batch: &HaloBatch,
-    overlap_num: &mut f64,
-    overlap_den: &mut f64,
+    acc: &mut ProxyAccum,
 ) {
-    let mut posted: Vec<SimTime> = vec![SimTime::ZERO; ranks];
-    let mut serialized: Vec<f64> = vec![0.0; ranks];
-    let mut last_done: Vec<SimTime> = vec![SimTime::ZERO; ranks];
-    let mut nfaces: Vec<usize> = vec![0; ranks];
+    let mut posted: Vec<SimTime> = vec![SimTime::ZERO; nlocal];
+    let mut serialized: Vec<f64> = vec![0.0; nlocal];
+    let mut last_done: Vec<SimTime> = vec![SimTime::ZERO; nlocal];
+    let mut nfaces: Vec<usize> = vec![0; nlocal];
     for &(rank, at, req) in &batch.recvs {
         let done = progress::wait(world, req);
         serialized[rank] += (done - at).secs();
@@ -373,15 +402,99 @@ fn wait_halo_batch(
     for &s in &batch.sends {
         progress::wait(world, s);
     }
-    for r in 0..ranks {
+    for r in 0..nlocal {
         if nfaces[r] == 0 {
             continue;
         }
         let actual = (last_done[r] - posted[r]).secs();
-        *overlap_num += (serialized[r] - actual).max(0.0);
-        *overlap_den += serialized[r];
+        acc.overlap_num += (serialized[r] - actual).max(0.0);
+        acc.overlap_den += serialized[r];
     }
     world.progress.recycle();
+}
+
+/// The per-iteration compute duration and halo-face size of one rank of
+/// `app` at `ranks` total ranks, with `colocated` ranks sharing the
+/// MPSoC's memory channel (the contention slowdown of Fig 20a).
+pub fn iteration_params(
+    app: &AppParams,
+    mode: Mode,
+    ranks: usize,
+    colocated: usize,
+) -> (SimDuration, usize) {
+    let local_points = match mode {
+        Mode::Weak => app.weak_points_per_rank,
+        Mode::Strong => app.strong_points_total / ranks as f64,
+    };
+    let mu = match mode {
+        Mode::Weak => app.mu_weak,
+        Mode::Strong => app.mu_strong,
+    };
+    let slowdown = 1.0 + mu * (colocated.saturating_sub(1)) as f64;
+    let compute = SimDuration::from_secs(local_points * app.sec_per_point * slowdown);
+    // Halo message size: 6 faces of (local_points)^(2/3) units.
+    let face_bytes = (local_points.powf(2.0 / 3.0) * app.halo_bytes_per_face_unit) as usize;
+    (compute, face_bytes)
+}
+
+/// One proxy iteration — compute phase, halo exchange, dot-product
+/// allreduces, intra-job clock sync — for the job whose local ranks
+/// `0..group.len()` live at global world ranks `group[..]`.  This is the
+/// single iteration body shared by [`run_point`] (identity group on a
+/// dedicated world) and the rack scheduler ([`crate::sched`], arbitrary
+/// groups on a shared world): a lone job stepping through here is
+/// ps-identical to the direct run by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn proxy_iteration(
+    world: &mut World,
+    group: &[usize],
+    dims: (usize, usize, usize),
+    compute: SimDuration,
+    face_bytes: usize,
+    allreduces: usize,
+    halo: HaloSchedule,
+    backend: Backend,
+    acc: &mut ProxyAccum,
+) {
+    // compute phase: one DES event per rank
+    let comps: Vec<Request> =
+        group.iter().map(|&g| progress::icompute(world, g, compute)).collect();
+    progress::wait_all(world, &comps);
+    world.progress.recycle();
+    let comm_start = collectives::group_max_clock(world, group);
+    match halo {
+        HaloSchedule::DimStaged => {
+            for dim in 0..3 {
+                let mut batch = HaloBatch::default();
+                post_halo_dim(world, dims, group, dim, face_bytes, &mut batch);
+                if !batch.is_empty() {
+                    wait_halo_batch(world, group.len(), &batch, acc);
+                }
+            }
+        }
+        HaloSchedule::AllFaces => {
+            let mut batch = HaloBatch::default();
+            for dim in 0..3 {
+                post_halo_dim(world, dims, group, dim, face_bytes, &mut batch);
+            }
+            if !batch.is_empty() {
+                wait_halo_batch(world, group.len(), &batch, acc);
+            }
+        }
+    }
+    // dot-product allreduces, through the backend dispatcher (every
+    // rank count reduces; accel degrades to software when its
+    // constraints don't hold or the group is not the whole world)
+    if group.len() > 1 {
+        for _ in 0..allreduces {
+            let (lat, used) =
+                collectives::allreduce_via_group(world, group, DOT_BYTES, backend);
+            acc.allreduce_time += lat.secs();
+            acc.backend_used = used;
+        }
+    }
+    acc.comm_time += (collectives::group_max_clock(world, group) - comm_start).secs();
+    collectives::sync_group_clocks(world, group);
 }
 
 /// Run one scaling point: `ranks` ranks of `app` in `mode` under the
@@ -398,87 +511,37 @@ pub fn run_point(
     let placement = placement_for(cfg, ranks, proxy.backend);
     let mut world = World::with_model(cfg.clone(), ranks, placement, proxy.model.clone());
     let dims = dims3(ranks);
-    let local_points = match mode {
-        Mode::Weak => app.weak_points_per_rank,
-        Mode::Strong => app.strong_points_total / ranks as f64,
-    };
+    let group: Vec<usize> = (0..ranks).collect();
     // Per-iteration compute, with memory-channel contention.
     let colocated = world.colocated(0).min(ranks);
-    let mu = match mode {
-        Mode::Weak => app.mu_weak,
-        Mode::Strong => app.mu_strong,
-    };
-    let slowdown = 1.0 + mu * (colocated.saturating_sub(1)) as f64;
-    let compute = SimDuration::from_secs(local_points * app.sec_per_point * slowdown);
+    let (compute, face_bytes) = iteration_params(app, mode, ranks, colocated);
 
-    // Halo message size: 6 faces of (local_points)^(2/3) units.
-    let face_bytes = (local_points.powf(2.0 / 3.0) * app.halo_bytes_per_face_unit) as usize;
-
-    let mut comm_time = 0.0f64;
-    let mut allreduce_time = 0.0f64;
-    let mut overlap_num = 0.0f64;
-    let mut overlap_den = 0.0f64;
-    let mut backend_used = Backend::Software;
+    let mut acc = ProxyAccum::default();
     let start = world.max_clock();
     for _ in 0..app.iters {
-        // compute phase: one DES event per rank
-        let comps: Vec<Request> =
-            (0..ranks).map(|r| progress::icompute(&mut world, r, compute)).collect();
-        progress::wait_all(&mut world, &comps);
-        world.progress.recycle();
-        let comm_start = world.max_clock();
-        match proxy.halo {
-            HaloSchedule::DimStaged => {
-                for dim in 0..3 {
-                    let mut batch = HaloBatch::default();
-                    post_halo_dim(&mut world, dims, ranks, dim, face_bytes, &mut batch);
-                    if !batch.recvs.is_empty() {
-                        wait_halo_batch(
-                            &mut world,
-                            ranks,
-                            &batch,
-                            &mut overlap_num,
-                            &mut overlap_den,
-                        );
-                    }
-                }
-            }
-            HaloSchedule::AllFaces => {
-                let mut batch = HaloBatch::default();
-                for dim in 0..3 {
-                    post_halo_dim(&mut world, dims, ranks, dim, face_bytes, &mut batch);
-                }
-                if !batch.recvs.is_empty() {
-                    wait_halo_batch(
-                        &mut world,
-                        ranks,
-                        &batch,
-                        &mut overlap_num,
-                        &mut overlap_den,
-                    );
-                }
-            }
-        }
-        // dot-product allreduces, through the backend dispatcher (every
-        // rank count reduces; accel degrades to software when its
-        // constraints don't hold)
-        if ranks > 1 {
-            for _ in 0..app.allreduces_per_iter {
-                let (lat, used) = collectives::allreduce_via(&mut world, DOT_BYTES, proxy.backend);
-                allreduce_time += lat.secs();
-                backend_used = used;
-            }
-        }
-        comm_time += (world.max_clock() - comm_start).secs();
-        world.sync_clocks();
+        proxy_iteration(
+            &mut world,
+            &group,
+            dims,
+            compute,
+            face_bytes,
+            app.allreduces_per_iter,
+            proxy.halo,
+            proxy.backend,
+            &mut acc,
+        );
     }
     let total = (world.max_clock() - start).secs();
     RunMetrics {
         time_s: total,
-        comm_fraction: if total > 0.0 { comm_time / total } else { 0.0 },
-        allreduce_fraction: if total > 0.0 { allreduce_time / total } else { 0.0 },
-        overlap_fraction: if overlap_den > 0.0 { overlap_num / overlap_den } else { 0.0 },
-        backend: backend_used,
+        comm_fraction: if total > 0.0 { acc.comm_time / total } else { 0.0 },
+        allreduce_fraction: if total > 0.0 { acc.allreduce_time / total } else { 0.0 },
+        overlap_fraction: if acc.overlap_den > 0.0 {
+            acc.overlap_num / acc.overlap_den
+        } else {
+            0.0
+        },
+        backend: acc.backend_used,
     }
 }
 

@@ -32,6 +32,9 @@
 //! * [`accel`] — the Allreduce and matmul accelerators;
 //! * [`apps`] — OSU microbenchmarks (including the multi-pair/incast/
 //!   overlap congestion scenarios) + LAMMPS/HPCG/miniFE skeletons;
+//! * [`sched`] — the multi-tenant rack workload manager: placement
+//!   policies over an MPSoC-granular allocator, concurrent jobs on one
+//!   shared fabric, and interference/utilization/power metrics;
 //! * [`ip`] — the IP-over-ExaNet converged-network service;
 //! * [`model`] — the paper's Eq. 1 analytic broadcast model;
 //! * [`power`] — QFDB power + energy-efficiency model;
@@ -54,6 +57,7 @@ pub mod ni;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod testing;
 pub mod topology;

@@ -13,18 +13,82 @@ use exanest::ni::hw_pingpong;
 use exanest::network::{Fabric, NetworkModel, RoutePolicy};
 use exanest::power;
 use exanest::report::{gbps, pct, us, Table};
+use exanest::sched::{self, Policy};
 use exanest::sim::SimDuration;
 use exanest::topology::SystemConfig;
 
+/// Strict CLI arguments: every `--flag` must be consumed by the global
+/// or per-command parsing below, and [`Args::finish`] rejects whatever
+/// is left over — `repro osu-bw --bidirektional` is a usage error, not a
+/// silently ignored typo.
+struct Args {
+    raw: Vec<String>,
+    used: Vec<bool>,
+}
+
+impl Args {
+    fn new(raw: Vec<String>) -> Args {
+        let used = vec![false; raw.len()];
+        Args { raw, used }
+    }
+
+    /// Consume a boolean flag; true when present (all occurrences).
+    fn flag(&mut self, name: &str) -> bool {
+        let mut found = false;
+        for i in 0..self.raw.len() {
+            if self.raw[i] == name {
+                self.used[i] = true;
+                found = true;
+            }
+        }
+        found
+    }
+
+    /// Consume `--name <value>`.  `None` when the flag is absent; a
+    /// usage error when it is present without a value.
+    fn value(&mut self, name: &str) -> Option<String> {
+        let i = self.raw.iter().position(|a| a == name)?;
+        self.used[i] = true;
+        match self.raw.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                self.used[i + 1] = true;
+                Some(v.clone())
+            }
+            _ => {
+                eprintln!("{name} needs a value");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Reject any argument no parser consumed (unknown flags, stray
+    /// positionals).  Shared across all subcommands.
+    fn finish(&self, cmd: &str) {
+        for (i, a) in self.raw.iter().enumerate() {
+            if !self.used[i] {
+                eprintln!(
+                    "unknown argument {a:?} for `repro {cmd}` (run `repro help` for usage)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd: String = raw.first().cloned().unwrap_or_else(|| "help".to_string());
+    let cmd = cmd.as_str();
+    let mut args = Args::new(raw);
+    if !args.raw.is_empty() {
+        args.used[0] = true; // the command word itself
+    }
     // Global flags: `--small` runs the two-blade subsystem (CI smoke);
     // `--rack` the full 256-MPSoC rack (16 blades, 4x4x4 torus);
     // `--network-model flow|cell|cell-adaptive` picks the link model for
-    // the OSU commands.
-    let small = args.iter().any(|a| a == "--small");
-    let rack = args.iter().any(|a| a == "--rack");
+    // the OSU/scaling/sched commands.
+    let small = args.flag("--small");
+    let rack = args.flag("--rack");
     if small && rack {
         eprintln!("--small and --rack are mutually exclusive");
         std::process::exit(2);
@@ -33,9 +97,17 @@ fn main() {
         // Only the congestion/fault scenarios fit a two-blade machine;
         // the paper-artefact commands hard-code full-prototype endpoints
         // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
-        // adapts its rank list to the machine, so it smokes at any size.
-        const SMALL_OK: [&str; 6] =
-            ["hw-pingpong", "osu-mbw", "osu-incast", "osu-overlap", "router-hotspot", "scaling"];
+        // and `sched` adapt their rank lists to the machine, so they
+        // smoke at any size.
+        const SMALL_OK: [&str; 7] = [
+            "hw-pingpong",
+            "osu-mbw",
+            "osu-incast",
+            "osu-overlap",
+            "router-hotspot",
+            "scaling",
+            "sched",
+        ];
         if !SMALL_OK.contains(&cmd) {
             eprintln!(
                 "--small (two-blade subsystem) supports: {}\n\
@@ -52,27 +124,28 @@ fn main() {
     } else {
         SystemConfig::prototype()
     };
-    let model = match args.iter().position(|a| a == "--network-model") {
+    let model = match args.value("--network-model").as_deref() {
         None => NetworkModel::Flow,
-        Some(i) => match args.get(i + 1).map(|s| s.as_str()) {
-            Some("flow") => NetworkModel::Flow,
-            Some("cell") => NetworkModel::cell(RoutePolicy::Deterministic),
-            Some("cell-adaptive") => NetworkModel::cell(RoutePolicy::Adaptive),
-            Some(other) => {
-                eprintln!("unknown network model {other} (flow | cell | cell-adaptive)");
-                std::process::exit(2);
-            }
-            None => {
-                eprintln!("--network-model needs a value: flow | cell | cell-adaptive");
-                std::process::exit(2);
-            }
-        },
+        Some("flow") => NetworkModel::Flow,
+        Some("cell") => NetworkModel::cell(RoutePolicy::Deterministic),
+        Some("cell-adaptive") => NetworkModel::cell(RoutePolicy::Adaptive),
+        Some(other) => {
+            eprintln!("unknown network model {other} (flow | cell | cell-adaptive)");
+            std::process::exit(2);
+        }
     };
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
-        const MODEL_OK: [&str; 6] =
-            ["osu-latency", "osu-bw", "osu-mbw", "osu-incast", "osu-allreduce", "scaling"];
+        const MODEL_OK: [&str; 7] = [
+            "osu-latency",
+            "osu-bw",
+            "osu-mbw",
+            "osu-incast",
+            "osu-allreduce",
+            "scaling",
+            "sched",
+        ];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
                 "--network-model applies to: {} (router-hotspot is always cell-level)",
@@ -82,49 +155,96 @@ fn main() {
         }
     }
     match cmd {
-        "table1" => table1(&cfg),
-        "hw-pingpong" => hw_pingpong_cmd(&cfg),
-        "osu-latency" => osu_latency(&cfg, &model),
-        "osu-bw" => osu_bw(&cfg, &model, args.iter().any(|a| a == "--bidirectional")),
-        "osu-bcast" => osu_bcast(&cfg),
-        "osu-allreduce" => osu_allreduce(&cfg, &model),
-        "osu-mbw" => osu_mbw(&cfg, &model),
-        "osu-incast" => osu_incast(&cfg, &model),
-        "osu-overlap" => osu_overlap(&cfg),
-        "router-hotspot" => router_hotspot(&cfg),
-        "bcast-model" => bcast_model(&cfg),
-        "allreduce-accel" => allreduce_accel(&cfg),
+        "table1" => {
+            args.finish(cmd);
+            table1(&cfg);
+        }
+        "hw-pingpong" => {
+            args.finish(cmd);
+            hw_pingpong_cmd(&cfg);
+        }
+        "osu-latency" => {
+            args.finish(cmd);
+            osu_latency(&cfg, &model);
+        }
+        "osu-bw" => {
+            let bidir = args.flag("--bidirectional");
+            args.finish(cmd);
+            osu_bw(&cfg, &model, bidir);
+        }
+        "osu-bcast" => {
+            args.finish(cmd);
+            osu_bcast(&cfg);
+        }
+        "osu-allreduce" => {
+            args.finish(cmd);
+            osu_allreduce(&cfg, &model);
+        }
+        "osu-mbw" => {
+            args.finish(cmd);
+            osu_mbw(&cfg, &model);
+        }
+        "osu-incast" => {
+            args.finish(cmd);
+            osu_incast(&cfg, &model);
+        }
+        "osu-overlap" => {
+            args.finish(cmd);
+            osu_overlap(&cfg);
+        }
+        "router-hotspot" => {
+            args.finish(cmd);
+            router_hotspot(&cfg);
+        }
+        "bcast-model" => {
+            args.finish(cmd);
+            bcast_model(&cfg);
+        }
+        "allreduce-accel" => {
+            args.finish(cmd);
+            allreduce_accel(&cfg);
+        }
         "scaling" => {
-            let app = args
-                .iter()
-                .position(|a| a == "--app")
-                .and_then(|i| args.get(i + 1))
-                .map(|s| s.as_str())
-                .unwrap_or("all");
-            let backend = match args
-                .iter()
-                .position(|a| a == "--allreduce-backend")
-                .and_then(|i| args.get(i + 1))
-            {
+            let app = args.value("--app").unwrap_or_else(|| "all".to_string());
+            let backend = match args.value("--allreduce-backend") {
                 None => Backend::Software,
-                Some(name) => Backend::by_name(name).unwrap_or_else(|| {
+                Some(name) => Backend::by_name(&name).unwrap_or_else(|| {
                     eprintln!("unknown allreduce backend {name} (software | accel)");
                     std::process::exit(2);
                 }),
             };
-            let halo = match args.iter().position(|a| a == "--halo").and_then(|i| args.get(i + 1))
-            {
+            let halo = match args.value("--halo") {
                 None => scaling::HaloSchedule::DimStaged,
-                Some(name) => scaling::HaloSchedule::by_name(name).unwrap_or_else(|| {
+                Some(name) => scaling::HaloSchedule::by_name(&name).unwrap_or_else(|| {
                     eprintln!("unknown halo schedule {name} (dim-staged | all-faces)");
                     std::process::exit(2);
                 }),
             };
-            scaling_cmd(&cfg, app, &model, backend, halo);
+            args.finish(cmd);
+            scaling_cmd(&cfg, &app, &model, backend, halo);
         }
-        "ip-overlay" => ip_overlay(&cfg),
-        "matmul-accel" => matmul_accel(),
+        "sched" => {
+            let policy = match args.value("--policy") {
+                None => Policy::Compact,
+                Some(name) => Policy::by_name(&name).unwrap_or_else(|| {
+                    eprintln!("unknown policy {name} (compact | best-fit | scattered)");
+                    std::process::exit(2);
+                }),
+            };
+            let jobs = args.value("--jobs").unwrap_or_else(|| "synthetic".to_string());
+            args.finish(cmd);
+            sched_cmd(&cfg, &model, policy, &jobs);
+        }
+        "ip-overlay" => {
+            args.finish(cmd);
+            ip_overlay(&cfg);
+        }
+        "matmul-accel" => {
+            args.finish(cmd);
+            matmul_accel();
+        }
         "all" => {
+            args.finish(cmd);
             table1(&cfg);
             hw_pingpong_cmd(&cfg);
             osu_latency(&cfg, &model);
@@ -140,6 +260,7 @@ fn main() {
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
             scaling_cmd(&cfg, "all", &model, Backend::Software, scaling::HaloSchedule::DimStaged);
+            sched_cmd(&cfg, &model, Policy::Compact, "synthetic");
             matmul_accel();
         }
         _ => {
@@ -161,17 +282,23 @@ fn main() {
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
                  \tscaling          Figs 20-22 + Table 3 (--app lammps|hpcg|minife|all;\n\
                  \t                 --allreduce-backend software|accel; --halo dim-staged|all-faces)\n\
+                 \tsched            multi-tenant rack scheduler: concurrent jobs on one shared torus\n\
+                 \t                 (--policy compact|best-fit|scattered; --jobs <trace file>|synthetic)\n\
                  \tmatmul-accel     §7: matmul accelerator GFLOPS / GFLOPS/W\n\
                  \tall              everything above\n\
                  flags:\n\
                  \t--small          two-blade subsystem (8 QFDBs; CI smoke size) — congestion/fault\n\
-                 \t                 scenarios + scaling (osu-mbw, osu-incast, osu-overlap, ...)\n\
+                 \t                 scenarios + scaling/sched (osu-mbw, osu-incast, osu-overlap, ...)\n\
                  \t--rack           full 256-MPSoC rack (16 blades, 64 QFDBs, 4x4x4 torus, 1024 cores)\n\
                  \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw, osu-mbw,\n\
-                 \t                 osu-incast, osu-allreduce, scaling (router-hotspot is always cell-level)\n\
+                 \t                 osu-incast, osu-allreduce, scaling, sched (router-hotspot is\n\
+                 \t                 always cell-level)\n\
                  \t--allreduce-backend  software | accel: dot-product dispatch for scaling\n\
                  \t                 (accel degrades to software outside its §4.7 constraints)\n\
-                 \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling"
+                 \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling\n\
+                 \t--policy         compact | best-fit | scattered: sched placement policy\n\
+                 \t--jobs           sched job stream: a trace file path, or `synthetic`\n\
+                 unknown --flags are rejected (no silent ignoring)"
             );
             std::process::exit(2);
         }
@@ -634,6 +761,93 @@ fn accel_vs_software(cfg: &SystemConfig, model: &NetworkModel) -> Vec<(usize, us
     }
     println!("{}", t.render());
     rows
+}
+
+/// `repro sched`: admit a job stream under a placement policy, run all
+/// admitted jobs concurrently on one shared fabric, and report per-job
+/// interference (slowdown vs the same job alone) plus rack-level
+/// makespan/utilization/fragmentation/power.  Stamps BENCH_sched.json.
+fn sched_cmd(cfg: &SystemConfig, model: &NetworkModel, policy: Policy, jobs_arg: &str) {
+    let specs = if jobs_arg == "synthetic" {
+        sched::synthetic_jobs(cfg)
+    } else {
+        let text = std::fs::read_to_string(jobs_arg).unwrap_or_else(|e| {
+            eprintln!("cannot read job trace {jobs_arg}: {e}");
+            std::process::exit(2);
+        });
+        sched::parse_trace(&text).unwrap_or_else(|e| {
+            eprintln!("bad job trace {jobs_arg}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let sc = sched::SchedConfig::new(policy, model.clone());
+    let out = sched::run_schedule(cfg, &specs, &sc).unwrap_or_else(|e| {
+        eprintln!("sched failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "## Rack scheduler — {} placement, {} jobs, {} ({} MPSoCs)\n",
+        policy.label(),
+        specs.len(),
+        model.label(),
+        cfg.num_mpsocs()
+    );
+    let mut t = Table::new(&[
+        "job",
+        "workload",
+        "ranks",
+        "MPSoCs",
+        "first",
+        "wait (us)",
+        "run (ms)",
+        "isolated (ms)",
+        "slowdown",
+        "comm share",
+    ]);
+    for j in &out.jobs {
+        t.row(&[
+            j.name.clone(),
+            j.workload.clone(),
+            j.ranks.to_string(),
+            j.mpsocs.len().to_string(),
+            j.mpsocs.first().map_or("-".to_string(), |m| m.0.to_string()),
+            format!("{:.1}", j.wait_s() * 1e6),
+            format!("{:.3}", j.duration_s * 1e3),
+            format!("{:.3}", j.isolated_s * 1e3),
+            format!("{:.3}", j.slowdown),
+            pct(j.comm_fraction),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "makespan {:.3} ms | mean slowdown {:.3} | utilization {} | fragmentation mean {} / peak {} | rack power avg {:.0} W / peak {:.0} W\n",
+        out.makespan_s * 1e3,
+        out.mean_slowdown(),
+        pct(out.utilization),
+        pct(out.frag_mean),
+        pct(out.frag_peak),
+        out.power_avg_w,
+        out.power_peak_w
+    );
+    let mut suite = Suite::new("sched");
+    suite.stamp(cfg);
+    suite.metric(&format!("policy/{}", policy.label()), 1.0, "flag");
+    suite.metric("jobs", out.jobs.len() as f64, "count");
+    suite.metric("makespan_s", out.makespan_s, "s");
+    suite.metric("mean_slowdown", out.mean_slowdown(), "x");
+    suite.metric("utilization", out.utilization, "frac");
+    suite.metric("fragmentation_mean", out.frag_mean, "frac");
+    suite.metric("fragmentation_peak", out.frag_peak, "frac");
+    suite.metric("rack_power_avg_w", out.power_avg_w, "W");
+    suite.metric("rack_power_peak_w", out.power_peak_w, "W");
+    for j in &out.jobs {
+        suite.metric(&format!("job/{}/slowdown", j.name), j.slowdown, "x");
+        suite.metric(&format!("job/{}/wait_s", j.name), j.wait_s(), "s");
+        suite.metric(&format!("job/{}/comm_fraction", j.name), j.comm_fraction, "frac");
+    }
+    if let Err(e) = suite.write_json() {
+        eprintln!("could not write BENCH_sched.json: {e}");
+    }
 }
 
 fn matmul_accel() {

@@ -12,7 +12,7 @@
 use super::progress;
 use super::pt2pt;
 use super::world::World;
-use crate::sim::SimDuration;
+use crate::sim::{SimDuration, SimTime};
 
 /// One communication step of a schedule: concurrent (src, dst) pairs.
 pub type Step = Vec<(usize, usize)>;
@@ -180,6 +180,21 @@ pub fn allreduce_phases(nranks: usize) -> AllreducePhases {
     AllreducePhases { pre, main, post }
 }
 
+/// Synchronise the clocks of the ranks in `group` to the group's max (an
+/// idealised intra-job barrier; other ranks' clocks are untouched, so
+/// concurrent jobs on a shared world never see each other's barriers).
+pub fn sync_group_clocks(world: &mut World, group: &[usize]) {
+    let m = group_max_clock(world, group);
+    for &r in group {
+        world.clocks[r] = m;
+    }
+}
+
+/// Max clock over the ranks in `group`.
+pub fn group_max_clock(world: &World, group: &[usize]) -> SimTime {
+    group.iter().map(|&r| world.clocks[r]).max().unwrap_or(SimTime::ZERO)
+}
+
 /// MPI_Allreduce of `bytes`, including the temporary-buffer management of
 /// the implementation (§6.1.3: one memcopy to populate the temp buffer,
 /// local reduction per step, one memcopy to the receive buffer at the
@@ -188,37 +203,51 @@ pub fn allreduce_phases(nranks: usize) -> AllreducePhases {
 /// around the doubling phase ([`allreduce_phases`]), so every rank count
 /// reduces instead of being silently skipped.
 pub fn allreduce(world: &mut World, bytes: usize) -> SimDuration {
-    world.sync_clocks();
-    let start = world.max_clock();
+    let group: Vec<usize> = (0..world.nranks()).collect();
+    allreduce_group(world, &group, bytes)
+}
+
+/// [`allreduce`] over a communicator subgroup: the schedule runs among
+/// the global ranks listed in `group` (local rank *i* of the job is
+/// global rank `group[i]`).  For the identity group this is exactly the
+/// whole-world [`allreduce`] — same schedule, same clock updates — which
+/// is what keeps a single scheduled job ps-identical to a direct run.
+pub fn allreduce_group(world: &mut World, group: &[usize], bytes: usize) -> SimDuration {
+    assert!(!group.is_empty(), "allreduce needs at least one rank");
+    sync_group_clocks(world, group);
+    let start = group_max_clock(world, group);
     let calib = world.fabric.calib().clone();
     let memcpy = calib.memcpy_fixed + SimDuration::serialize(bytes as u64, calib.memcpy_gbps);
     let reduce = calib.reduce_fixed + SimDuration::serialize(bytes as u64, calib.reduce_gbps);
-    // temp-buffer alloc + initial copy on every rank
-    for c in world.clocks.iter_mut() {
-        *c += memcpy;
+    // temp-buffer alloc + initial copy on every participating rank
+    for &r in group {
+        world.clocks[r] += memcpy;
     }
-    let phases = allreduce_phases(world.nranks());
+    let phases = allreduce_phases(group.len());
     if !phases.pre.is_empty() {
-        run_pair_step(world, &phases.pre, |_, _| bytes);
+        let step: Step = phases.pre.iter().map(|&(a, b)| (group[a], group[b])).collect();
+        run_pair_step(world, &step, |_, _| bytes);
         for &(_, odd) in &phases.pre {
-            world.clocks[odd] += reduce;
+            world.clocks[group[odd]] += reduce;
         }
     }
     for step in &phases.main {
-        run_exchange_step(world, step, bytes);
+        let mapped: Step = step.iter().map(|&(a, b)| (group[a], group[b])).collect();
+        run_exchange_step(world, &mapped, bytes);
         for &(a, b) in step {
-            world.clocks[a] += reduce;
-            world.clocks[b] += reduce;
+            world.clocks[group[a]] += reduce;
+            world.clocks[group[b]] += reduce;
         }
     }
     if !phases.post.is_empty() {
-        run_pair_step(world, &phases.post, |_, _| bytes);
+        let step: Step = phases.post.iter().map(|&(a, b)| (group[a], group[b])).collect();
+        run_pair_step(world, &step, |_, _| bytes);
     }
     // final copy into recvbuf
-    for c in world.clocks.iter_mut() {
-        *c += memcpy;
+    for &r in group {
+        world.clocks[r] += memcpy;
     }
-    world.max_clock() - start
+    group_max_clock(world, group) - start
 }
 
 /// Which implementation an allreduce dispatches to.
@@ -257,16 +286,33 @@ impl Backend {
 /// paper's ExaNet-MPI does the same), so callers can always ask for the
 /// accelerator and observe what they got.
 pub fn allreduce_via(world: &mut World, bytes: usize, backend: Backend) -> (SimDuration, Backend) {
+    let group: Vec<usize> = (0..world.nranks()).collect();
+    allreduce_via_group(world, &group, bytes, backend)
+}
+
+/// [`allreduce_via`] over a communicator subgroup.  The accelerator's
+/// level schedule spans the whole rack (§4.7), so `Backend::Accel` only
+/// dispatches to hardware when the group is the entire world *and* the
+/// world satisfies [`crate::accel::AccelAllreduce::check`]; a scheduler
+/// job's subgroup reduces in software on its own links.
+pub fn allreduce_via_group(
+    world: &mut World,
+    group: &[usize],
+    bytes: usize,
+    backend: Backend,
+) -> (SimDuration, Backend) {
     match backend {
-        Backend::Software => (allreduce(world, bytes), Backend::Software),
+        Backend::Software => (allreduce_group(world, group, bytes), Backend::Software),
         Backend::Accel => {
-            if crate::accel::AccelAllreduce::check(world, world.nranks()).is_ok() {
+            let whole_world = group.len() == world.nranks()
+                && group.iter().enumerate().all(|(local, &global)| local == global);
+            if whole_world && crate::accel::AccelAllreduce::check(world, world.nranks()).is_ok() {
                 (
                     crate::accel::AccelAllreduce::latency_events(world, bytes),
                     Backend::Accel,
                 )
             } else {
-                (allreduce(world, bytes), Backend::Software)
+                (allreduce_group(world, group, bytes), Backend::Software)
             }
         }
     }
@@ -537,6 +583,42 @@ mod tests {
         let p = allreduce_phases(16);
         assert!(p.pre.is_empty() && p.post.is_empty());
         assert_eq!(p.main.len(), 4);
+    }
+
+    #[test]
+    fn allreduce_identity_group_is_ps_exact() {
+        let mut wa = world(8);
+        let direct = allreduce(&mut wa, 256);
+        let mut wb = world(8);
+        let group: Vec<usize> = (0..8).collect();
+        let via_group = allreduce_group(&mut wb, &group, 256);
+        assert_eq!(direct, via_group, "identity group must be the whole-world path");
+        assert_eq!(wa.clocks, wb.clocks);
+    }
+
+    #[test]
+    fn allreduce_subgroup_leaves_other_ranks_alone() {
+        let mut w = world(16);
+        let group: Vec<usize> = vec![2, 3, 6, 7];
+        let lat = allreduce_group(&mut w, &group, 256);
+        assert!(lat > SimDuration::ZERO);
+        for r in [0usize, 1, 8, 15] {
+            assert_eq!(w.clocks[r], crate::sim::SimTime::ZERO, "rank {r} is not in the group");
+        }
+        for &r in &group {
+            assert!(w.clocks[r] > crate::sim::SimTime::ZERO);
+        }
+    }
+
+    #[test]
+    fn allreduce_subgroup_accel_request_degrades_to_software() {
+        // even on a PerMpsoc world the accelerator spans the whole rack:
+        // a subgroup must reduce in software
+        let mut w = World::new(SystemConfig::prototype(), 16, Placement::PerMpsoc);
+        let group: Vec<usize> = (0..8).collect();
+        let (lat, used) = allreduce_via_group(&mut w, &group, 256, Backend::Accel);
+        assert_eq!(used, Backend::Software);
+        assert!(lat > SimDuration::ZERO);
     }
 
     #[test]

@@ -19,7 +19,10 @@ pub mod progress;
 pub mod pt2pt;
 pub mod world;
 
-pub use collectives::{allreduce_via, Backend};
+pub use collectives::{
+    allreduce_group, allreduce_via, allreduce_via_group, group_max_clock, sync_group_clocks,
+    Backend,
+};
 pub use progress::{
     icompute, icompute_at, irecv, irecv_at, isend, isend_at, test, wait, wait_all, Progress,
     Request,
@@ -28,4 +31,4 @@ pub use pt2pt::{
     message, post_exchange, protocol_for, send_recv, sendrecv_exchange, windowed_bw, Protocol,
     SendRecv,
 };
-pub use world::{Placement, World};
+pub use world::{Placement, RankMap, RankSlot, World};

@@ -4,6 +4,16 @@
 //! that the point-to-point and collective operations advance; shared
 //! devices (links, AXI channels, R5) are occupancy-tracked in the
 //! [`Fabric`], so contention between concurrent ranks emerges naturally.
+//!
+//! Since the multi-tenant scheduler ([`crate::sched`]) the rank→hardware
+//! mapping is an explicit [`RankMap`] instead of the implicit contiguous
+//! formula: a world can host any injective placement of ranks onto
+//! (MPSoC, core) slots — an offset job, a fragment scattered across
+//! blades, or several concurrent jobs' ranks side by side — and every
+//! layer above (progress engine, pt2pt, collectives, the cell routers)
+//! reads the map through [`World::node_of`].  The legacy contiguous
+//! layouts are [`RankMap::contiguous`], and constructing a world through
+//! [`World::new`]/[`World::with_model`] reproduces them bit-for-bit.
 
 use super::progress::Progress;
 use crate::network::{Fabric, NetworkModel};
@@ -21,10 +31,156 @@ pub enum Placement {
     PerMpsoc,
 }
 
+/// One rank's physical slot: the MPSoC hosting it and the A53 core index
+/// within that MPSoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RankSlot {
+    pub mpsoc: MpsocId,
+    pub core: u8,
+}
+
+/// Explicit rank → (MPSoC, core) mapping: any injective placement of
+/// ranks onto the machine's cores.  Replaces the hard-wired contiguous
+/// formula so jobs can be placed at offsets, fragmented, or co-scheduled
+/// by the rack workload manager ([`crate::sched`]).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RankMap {
+    slots: Vec<RankSlot>,
+    /// Ranks whose job has completed: their cores are free for new jobs
+    /// (injectivity is only enforced among live ranks), and they no
+    /// longer count as co-located neighbours.
+    retired: Vec<bool>,
+}
+
+impl RankMap {
+    /// An empty map (a world ranks are added to as jobs are admitted).
+    pub fn empty() -> RankMap {
+        RankMap::default()
+    }
+
+    /// The legacy contiguous layout: rank *r* on MPSoC `r /
+    /// cores_per_fpga` core `r % cores_per_fpga` (`PerCore`) or on MPSoC
+    /// *r* core 0 (`PerMpsoc`).
+    pub fn contiguous(cfg: &SystemConfig, nranks: usize, placement: Placement) -> RankMap {
+        let slots: Vec<RankSlot> = (0..nranks)
+            .map(|r| match placement {
+                Placement::PerCore => RankSlot {
+                    mpsoc: MpsocId((r / cfg.cores_per_fpga) as u32),
+                    core: (r % cfg.cores_per_fpga) as u8,
+                },
+                Placement::PerMpsoc => RankSlot { mpsoc: MpsocId(r as u32), core: 0 },
+            })
+            .collect();
+        let retired = vec![false; slots.len()];
+        RankMap { slots, retired }
+    }
+
+    /// Build a map from explicit slots, validating that every slot is
+    /// within the machine and that no two ranks share a core.
+    pub fn from_slots(cfg: &SystemConfig, slots: Vec<RankSlot>) -> crate::errors::Result<RankMap> {
+        let mut map = RankMap::empty();
+        map.extend_validated(cfg, &slots)?;
+        Ok(map)
+    }
+
+    /// Append `slots` (a newly admitted job's ranks), validating capacity
+    /// and injectivity against the ranks already mapped.  Returns the
+    /// base index of the first appended rank.
+    pub fn extend_validated(
+        &mut self,
+        cfg: &SystemConfig,
+        slots: &[RankSlot],
+    ) -> crate::errors::Result<usize> {
+        let nodes = cfg.num_mpsocs();
+        let cores = cfg.cores_per_fpga;
+        for s in slots {
+            if (s.mpsoc.0 as usize) >= nodes || (s.core as usize) >= cores {
+                crate::bail!(
+                    "rank slot (MPSoC {}, core {}) outside the machine ({} MPSoCs x {} cores)",
+                    s.mpsoc.0,
+                    s.core,
+                    nodes,
+                    cores
+                );
+            }
+        }
+        // Injectivity over the union of *live* existing slots (retired
+        // ranks' cores are reusable) and the new slots.
+        let mut seen: std::collections::HashSet<RankSlot> = self
+            .slots
+            .iter()
+            .zip(&self.retired)
+            .filter(|&(_, &retired)| !retired)
+            .map(|(&s, _)| s)
+            .collect();
+        for s in slots {
+            if !seen.insert(*s) {
+                crate::bail!(
+                    "rank map not injective: (MPSoC {}, core {}) assigned twice",
+                    s.mpsoc.0,
+                    s.core
+                );
+            }
+        }
+        let base = self.slots.len();
+        self.slots.extend_from_slice(slots);
+        self.retired.resize(self.slots.len(), false);
+        Ok(base)
+    }
+
+    /// Mark ranks as retired (their job completed): their cores become
+    /// reusable by later [`RankMap::extend_validated`] calls and they
+    /// stop counting as co-located neighbours.
+    pub fn retire(&mut self, ranks: &[usize]) {
+        for &r in ranks {
+            self.retired[r] = true;
+        }
+    }
+
+    /// Has this rank's job completed?
+    pub fn is_retired(&self, rank: usize) -> bool {
+        self.retired[rank]
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The slot of one rank.
+    pub fn slot(&self, rank: usize) -> RankSlot {
+        self.slots[rank]
+    }
+
+    /// The MPSoC hosting a rank.
+    pub fn node_of(&self, rank: usize) -> MpsocId {
+        self.slots[rank].mpsoc
+    }
+
+    /// All slots in rank order.
+    pub fn slots(&self) -> &[RankSlot] {
+        &self.slots
+    }
+
+    /// Does this map equal the legacy contiguous layout for `placement`
+    /// starting at MPSoC 0?  The accelerator dispatch uses this to keep
+    /// its §4.7 topology assumptions (servers on QFDBs 0..n/4) honest
+    /// when worlds carry arbitrary maps.
+    pub fn matches_contiguous(&self, cfg: &SystemConfig, placement: Placement) -> bool {
+        *self == RankMap::contiguous(cfg, self.len(), placement)
+    }
+}
+
 /// The simulated communicator world.
 pub struct World {
     pub fabric: Fabric,
     pub placement: Placement,
+    /// Explicit rank → (MPSoC, core) mapping (mutate only through
+    /// [`World::add_ranks`], which validates injectivity and capacity).
+    pub(crate) rank_map: RankMap,
     /// Per-rank local completion clocks.
     pub clocks: Vec<SimTime>,
     /// The nonblocking progress engine (event queue + request table) all
@@ -46,41 +202,73 @@ impl World {
         placement: Placement,
         model: NetworkModel,
     ) -> World {
-        let fabric = Fabric::with_model(cfg, model);
         let cap = match placement {
-            Placement::PerCore => fabric.cfg().num_cores(),
-            Placement::PerMpsoc => fabric.cfg().num_mpsocs(),
+            Placement::PerCore => cfg.num_cores(),
+            Placement::PerMpsoc => cfg.num_mpsocs(),
         };
         assert!(
             nranks <= cap,
             "{nranks} ranks exceed capacity {cap} for {placement:?}"
         );
-        World {
-            fabric,
-            placement,
-            clocks: vec![SimTime::ZERO; nranks],
-            progress: Progress::new(),
-        }
+        let rank_map = RankMap::contiguous(&cfg, nranks, placement);
+        World::with_rank_map(cfg, rank_map, placement, model)
+    }
+
+    /// A world over an explicit [`RankMap`] (the scheduler's shared rack
+    /// world, or an isolated job re-run on its own fabric).  `placement`
+    /// records the layout style for the accelerator's §4.7 check; the
+    /// rank→node mapping itself comes from the map alone.
+    pub fn with_rank_map(
+        cfg: SystemConfig,
+        rank_map: RankMap,
+        placement: Placement,
+        model: NetworkModel,
+    ) -> World {
+        let fabric = Fabric::with_model(cfg, model);
+        let clocks = vec![SimTime::ZERO; rank_map.len()];
+        World { fabric, placement, rank_map, clocks, progress: Progress::new() }
+    }
+
+    /// Append ranks (a newly admitted job) with their clocks initialised
+    /// to `at` (the job's start time on the shared rack timeline).
+    /// Returns the global rank index of the first appended rank.  The
+    /// slots are validated against the machine and against every rank
+    /// already mapped.
+    pub fn add_ranks(&mut self, slots: &[RankSlot], at: SimTime) -> crate::errors::Result<usize> {
+        let cfg = self.fabric.cfg().clone();
+        let base = self.rank_map.extend_validated(&cfg, slots)?;
+        self.clocks.resize(base + slots.len(), at);
+        Ok(base)
     }
 
     pub fn nranks(&self) -> usize {
         self.clocks.len()
     }
 
+    /// The rank → hardware mapping.
+    pub fn rank_map(&self) -> &RankMap {
+        &self.rank_map
+    }
+
     /// The MPSoC hosting a rank.
     pub fn node_of(&self, rank: usize) -> MpsocId {
-        match self.placement {
-            Placement::PerCore => {
-                MpsocId((rank / self.fabric.cfg().cores_per_fpga) as u32)
-            }
-            Placement::PerMpsoc => MpsocId(rank as u32),
-        }
+        self.rank_map.node_of(rank)
+    }
+
+    /// Retire a completed job's ranks: their cores become reusable and
+    /// they stop counting as co-located neighbours.  Their clocks and
+    /// slots stay readable (nothing references them again).
+    pub fn retire_ranks(&mut self, ranks: &[usize]) {
+        self.rank_map.retire(ranks);
     }
 
     /// Ranks co-located on the same MPSoC as `rank` (including itself).
+    /// Retired ranks (completed scheduler jobs) don't count.
     pub fn colocated(&self, rank: usize) -> usize {
         let node = self.node_of(rank);
-        (0..self.nranks()).filter(|&r| self.node_of(r) == node).count()
+        (0..self.nranks())
+            .filter(|&r| !self.rank_map.is_retired(r) && self.node_of(r) == node)
+            .count()
     }
 
     /// Reset clocks, fabric occupancy and the progress engine (fresh
@@ -150,5 +338,102 @@ mod tests {
         assert_eq!(w.clocks[0], SimTime::from_us(5.0));
         w.reset();
         assert_eq!(w.max_clock(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn contiguous_map_matches_legacy_formula() {
+        let cfg = SystemConfig::prototype();
+        let m = RankMap::contiguous(&cfg, 12, Placement::PerCore);
+        assert_eq!(m.node_of(0), MpsocId(0));
+        assert_eq!(m.node_of(3), MpsocId(0));
+        assert_eq!(m.node_of(4), MpsocId(1));
+        assert_eq!(m.slot(5), RankSlot { mpsoc: MpsocId(1), core: 1 });
+        assert!(m.matches_contiguous(&cfg, Placement::PerCore));
+        assert!(!m.matches_contiguous(&cfg, Placement::PerMpsoc));
+        let p = RankMap::contiguous(&cfg, 8, Placement::PerMpsoc);
+        assert_eq!(p.node_of(7), MpsocId(7));
+        assert!(p.matches_contiguous(&cfg, Placement::PerMpsoc));
+    }
+
+    #[test]
+    fn offset_map_places_ranks_anywhere() {
+        let cfg = SystemConfig::prototype();
+        let slots: Vec<RankSlot> = (0..8)
+            .map(|r| RankSlot { mpsoc: MpsocId(40 + (r / 4) as u32), core: (r % 4) as u8 })
+            .collect();
+        let m = RankMap::from_slots(&cfg, slots).unwrap();
+        let w = World::with_rank_map(cfg, m, Placement::PerCore, NetworkModel::Flow);
+        assert_eq!(w.node_of(0), MpsocId(40));
+        assert_eq!(w.node_of(7), MpsocId(41));
+        assert_eq!(w.colocated(0), 4);
+    }
+
+    #[test]
+    fn rank_map_rejects_duplicate_slots() {
+        let cfg = SystemConfig::prototype();
+        let dup = vec![
+            RankSlot { mpsoc: MpsocId(3), core: 0 },
+            RankSlot { mpsoc: MpsocId(3), core: 0 },
+        ];
+        assert!(RankMap::from_slots(&cfg, dup).is_err());
+    }
+
+    #[test]
+    fn rank_map_rejects_out_of_machine_slots() {
+        let cfg = SystemConfig::mezzanine(); // 16 MPSoCs
+        let bad = vec![RankSlot { mpsoc: MpsocId(16), core: 0 }];
+        assert!(RankMap::from_slots(&cfg, bad).is_err());
+        let bad_core = vec![RankSlot { mpsoc: MpsocId(0), core: 4 }];
+        assert!(RankMap::from_slots(&cfg, bad_core).is_err());
+    }
+
+    #[test]
+    fn add_ranks_appends_jobs_with_start_clocks() {
+        let cfg = SystemConfig::prototype();
+        let mut w = World::with_rank_map(
+            cfg,
+            RankMap::empty(),
+            Placement::PerCore,
+            NetworkModel::Flow,
+        );
+        assert_eq!(w.nranks(), 0);
+        let a: Vec<RankSlot> =
+            (0..4).map(|c| RankSlot { mpsoc: MpsocId(0), core: c as u8 }).collect();
+        let base_a = w.add_ranks(&a, SimTime::ZERO).unwrap();
+        assert_eq!(base_a, 0);
+        let b: Vec<RankSlot> =
+            (0..4).map(|c| RankSlot { mpsoc: MpsocId(9), core: c as u8 }).collect();
+        let base_b = w.add_ranks(&b, SimTime::from_us(50.0)).unwrap();
+        assert_eq!(base_b, 4);
+        assert_eq!(w.nranks(), 8);
+        assert_eq!(w.clocks[0], SimTime::ZERO);
+        assert_eq!(w.clocks[5], SimTime::from_us(50.0));
+        assert_eq!(w.node_of(5), MpsocId(9));
+        // a second job claiming the same cores must be rejected
+        assert!(w.add_ranks(&a, SimTime::ZERO).is_err());
+        assert_eq!(w.nranks(), 8, "failed add must not grow the world");
+    }
+
+    #[test]
+    fn retired_ranks_free_their_cores_and_colocation() {
+        let cfg = SystemConfig::prototype();
+        let mut w = World::with_rank_map(
+            cfg,
+            RankMap::empty(),
+            Placement::PerCore,
+            NetworkModel::Flow,
+        );
+        let a: Vec<RankSlot> =
+            (0..4).map(|c| RankSlot { mpsoc: MpsocId(2), core: c as u8 }).collect();
+        w.add_ranks(&a, SimTime::ZERO).unwrap();
+        // job a still live: the same cores cannot be granted again
+        assert!(w.add_ranks(&a, SimTime::ZERO).is_err());
+        w.retire_ranks(&[0, 1, 2, 3]);
+        // a finished: a new job may reuse the cores...
+        let base = w.add_ranks(&a, SimTime::from_us(9.0)).unwrap();
+        assert_eq!(base, 4);
+        assert_eq!(w.nranks(), 8);
+        // ...and retired ranks do not inflate the contention count
+        assert_eq!(w.colocated(4), 4, "only the live job's ranks co-locate");
     }
 }

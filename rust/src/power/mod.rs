@@ -40,6 +40,15 @@ pub fn rack_power(qfdbs: usize, load: QfdbLoad) -> f64 {
     qfdbs as f64 * qfdb_power(load)
 }
 
+/// Whole-rack power for a heterogeneous load map: one [`QfdbLoad`] per
+/// QFDB, summed through [`qfdb_power`] so every board's draw is clamped
+/// to the measured 20–200 W envelope individually.  This is the rack
+/// scheduler's power metric: idle boards contribute their 20 W floor,
+/// boards running concurrent jobs contribute their own mix.
+pub fn rack_power_map(loads: &[QfdbLoad]) -> f64 {
+    loads.iter().map(|&l| qfdb_power(l)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +74,33 @@ mod tests {
     fn rack_power_scales() {
         let l = QfdbLoad { busy_cpus: 4, matmul_accels: 0 };
         assert_eq!(rack_power(32, l), 32.0 * qfdb_power(l));
+    }
+
+    #[test]
+    fn rack_power_map_idle_boards_draw_the_20w_floor() {
+        let loads = vec![QfdbLoad::default(); 8];
+        assert_eq!(rack_power_map(&loads), 8.0 * QFDB_IDLE_W);
+        assert_eq!(rack_power_map(&[]), 0.0);
+    }
+
+    #[test]
+    fn rack_power_map_mixes_heterogeneous_loads() {
+        let loads = [
+            QfdbLoad::default(),
+            QfdbLoad { busy_cpus: 2, matmul_accels: 0 },
+            QfdbLoad { busy_cpus: 4, matmul_accels: 4 },
+        ];
+        let expect = qfdb_power(loads[0]) + qfdb_power(loads[1]) + qfdb_power(loads[2]);
+        assert_eq!(rack_power_map(&loads), expect);
+        assert!(rack_power_map(&loads) > 3.0 * QFDB_IDLE_W);
+    }
+
+    #[test]
+    fn rack_power_map_clamps_each_board_to_the_envelope() {
+        // an absurd per-board load clamps at 200 W per QFDB, not above
+        let silly = QfdbLoad { busy_cpus: 400, matmul_accels: 400 };
+        assert_eq!(qfdb_power(silly), QFDB_MAX_W);
+        let loads = vec![silly; 16];
+        assert_eq!(rack_power_map(&loads), 16.0 * QFDB_MAX_W);
     }
 }

@@ -27,7 +27,39 @@ impl Table {
         self.row(&owned)
     }
 
-    /// Render with aligned columns.
+    /// Is `cell` a numeric value for alignment purposes?  Plain numbers,
+    /// percentages (`82.1%`) and the `-` placeholder all count, so the
+    /// per-job slowdown tables and the OSU bandwidth columns line up on
+    /// the decimal point.
+    fn is_numeric_cell(cell: &str) -> bool {
+        let c = cell.trim();
+        if c == "-" || c.is_empty() {
+            return true;
+        }
+        c.strip_suffix('%').unwrap_or(c).parse::<f64>().is_ok()
+    }
+
+    /// Columns whose body cells are all numeric are right-aligned.
+    fn numeric_columns(&self) -> Vec<bool> {
+        (0..self.header.len())
+            .map(|i| {
+                let mut any = false;
+                for r in &self.rows {
+                    let c = r[i].trim();
+                    if !Self::is_numeric_cell(c) {
+                        return false;
+                    }
+                    if !c.is_empty() && c != "-" {
+                        any = true;
+                    }
+                }
+                any
+            })
+            .collect()
+    }
+
+    /// Render with aligned columns: text columns flush left, numeric
+    /// columns flush right.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths = vec![0usize; ncols];
@@ -39,11 +71,16 @@ impl Table {
                 widths[i] = widths[i].max(c.len());
             }
         }
+        let numeric = self.numeric_columns();
         let mut out = String::new();
         let fmt_row = |cells: &[String], widths: &[usize]| {
             let mut line = String::from("|");
-            for (c, w) in cells.iter().zip(widths) {
-                line.push_str(&format!(" {c:<w$} |"));
+            for ((c, w), right) in cells.iter().zip(widths).zip(&numeric) {
+                if *right {
+                    line.push_str(&format!(" {c:>w$} |"));
+                } else {
+                    line.push_str(&format!(" {c:<w$} |"));
+                }
             }
             line
         };
@@ -109,5 +146,37 @@ mod tests {
         assert_eq!(us(1.2934), "1.293");
         assert_eq!(gbps(13.004), "13.00");
         assert_eq!(pct(0.821), "82.1%");
+    }
+
+    #[test]
+    fn numeric_columns_right_align() {
+        let mut t = Table::new(&["job", "slowdown", "Gb/s"]);
+        t.row_strs(&["halo-a", "1.05", "6.42"]);
+        t.row_strs(&["dots-b-long-name", "12.50", "-"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        // numeric cells are flush right within the 8-wide "slowdown"
+        // column: the short value gains left padding
+        assert!(lines[2].contains("    1.05 |"), "{s}");
+        assert!(lines[3].contains("   12.50 |"), "{s}");
+        // '-' placeholders keep the column numeric
+        assert!(lines[3].contains("|    - |"), "{s}");
+        // text column stays flush left
+        assert!(lines[2].starts_with("| halo-a "), "{s}");
+    }
+
+    #[test]
+    fn percentage_and_mixed_columns() {
+        let mut t = Table::new(&["name", "eff"]);
+        t.row_strs(&["a", "96.0%"]);
+        t.row_strs(&["b", "9.1%"]);
+        let s = t.render();
+        assert!(s.contains("|  9.1% |"), "percent column right-aligns: {s}");
+        // a column with any non-numeric body cell stays left-aligned
+        let mut t2 = Table::new(&["k", "v"]);
+        t2.row_strs(&["x", "12"]);
+        t2.row_strs(&["y", "n/a"]);
+        let s2 = t2.render();
+        assert!(s2.contains("| 12  |"), "mixed column left-aligns: {s2}");
     }
 }

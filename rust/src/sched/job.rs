@@ -1,0 +1,247 @@
+//! Job specifications and the per-job stepping driver.
+//!
+//! A [`JobSpec`] describes one workload of the multi-tenant trace: a rank
+//! count, an arrival time, a placement style and a [`Workload`] (a halo
+//! proxy application from [`crate::apps::scaling`] or an OSU collective
+//! pattern from the paper's microbenchmark set).  Once admitted, a
+//! [`JobRun`] steps the workload one iteration at a time against the
+//! *shared* rack world — all admitted jobs post their events into the
+//! same progress engine and fabric, so inter-job slowdown emerges from
+//! link/router occupancy, never from an analytic penalty.
+
+use crate::apps::scaling::{
+    dims3, iteration_params, proxy_iteration, AppParams, HaloSchedule, Mode, ProxyAccum,
+};
+use crate::bail;
+use crate::errors::{Context, Result};
+use crate::mpi::{collectives, Backend, Placement, World};
+use crate::sim::{SimDuration, SimTime};
+use crate::topology::MpsocId;
+
+/// Default proxy iterations per scheduled job (a representative slice of
+/// the run; the full 10-iteration scaling sample would make cell-level
+/// multi-job traces needlessly slow).
+pub const DEFAULT_JOB_ITERS: usize = 3;
+
+/// What a job executes.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// A halo-exchange proxy application (weak-scaling problem size per
+    /// rank, [`crate::apps::scaling`] iteration loop).
+    Proxy { app: AppParams, mode: Mode, iters: usize },
+    /// An osu_allreduce pattern: `execs` software allreduces of `bytes`.
+    Allreduce { bytes: usize, execs: usize },
+}
+
+impl Workload {
+    /// Parse a workload spec: `halo:<lammps|hpcg|minife>[:<iters>]` or
+    /// `allreduce:<bytes>x<execs>`.
+    pub fn by_spec(spec: &str) -> Result<Workload> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let parsed = match kind {
+            "halo" => {
+                let name = parts.next().context("halo needs an app: halo:<app>")?;
+                let app = AppParams::by_name(name)
+                    .with_context(|| format!("unknown app {name} (lammps | hpcg | minife)"))?;
+                let iters = match parts.next() {
+                    None => DEFAULT_JOB_ITERS,
+                    Some(s) => {
+                        s.parse().with_context(|| format!("bad iteration count {s}"))?
+                    }
+                };
+                if iters == 0 {
+                    bail!("halo workload needs at least one iteration");
+                }
+                Workload::Proxy { app, mode: Mode::Weak, iters }
+            }
+            "allreduce" => {
+                let arg =
+                    parts.next().context("allreduce needs a size: allreduce:<bytes>x<execs>")?;
+                let (bytes_s, execs_s) = arg.split_once('x').unwrap_or((arg, "1"));
+                let bytes = bytes_s
+                    .parse()
+                    .with_context(|| format!("bad allreduce byte count {bytes_s}"))?;
+                let execs = execs_s
+                    .parse()
+                    .with_context(|| format!("bad allreduce exec count {execs_s}"))?;
+                if execs == 0 {
+                    bail!("allreduce workload needs at least one execution");
+                }
+                Workload::Allreduce { bytes, execs }
+            }
+            other => bail!(
+                "unknown workload {other} (halo:<app>[:<iters>] | allreduce:<bytes>x<execs>)"
+            ),
+        };
+        // reject trailing components instead of silently dropping them
+        // (the CLI contract: nothing is silently ignored)
+        if let Some(extra) = parts.next() {
+            bail!("trailing workload component {extra:?} in {spec:?}");
+        }
+        Ok(parsed)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Proxy { app, iters, .. } => format!("halo:{}:{}", app.name, iters),
+            Workload::Allreduce { bytes, execs } => format!("allreduce:{bytes}x{execs}"),
+        }
+    }
+
+    /// Total iteration steps of this workload.  Must be ≥ 1 for the
+    /// stepping driver to terminate ([`crate::sched::run_schedule`]
+    /// validates this for programmatically built specs; `by_spec`
+    /// rejects zero at parse time).
+    pub fn total_steps(&self) -> usize {
+        match self {
+            Workload::Proxy { iters, .. } => *iters,
+            Workload::Allreduce { execs, .. } => *execs,
+        }
+    }
+}
+
+/// One job of the trace.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub ranks: usize,
+    pub arrival: SimTime,
+    /// Placement style hint (MPSoCs are allocated accordingly).
+    pub placement: Placement,
+    pub workload: Workload,
+}
+
+/// A running (admitted) job on the shared rack world.
+pub struct JobRun {
+    /// Index of the spec in the submitted trace.
+    pub spec_idx: usize,
+    /// Global world ranks of the job (local rank *i* is `group[i]`).
+    pub group: Vec<usize>,
+    /// The MPSoCs granted by the allocator (released on completion).
+    pub mpsocs: Vec<MpsocId>,
+    /// Admission time (clocks of the job's ranks start here).
+    pub start: SimTime,
+    steps_done: usize,
+    steps_total: usize,
+    halo: HaloSchedule,
+    kind: RunKind,
+    /// Per-job communication accounting (same accumulator as the
+    /// scaling sweeps).
+    pub acc: ProxyAccum,
+}
+
+enum RunKind {
+    Proxy {
+        dims: (usize, usize, usize),
+        compute: SimDuration,
+        face_bytes: usize,
+        allreduces: usize,
+    },
+    Allreduce {
+        bytes: usize,
+    },
+}
+
+impl JobRun {
+    /// Prepare a job for stepping: derive its decomposition and compute
+    /// parameters from the world it was placed into.
+    pub fn new(
+        spec_idx: usize,
+        spec: &JobSpec,
+        group: Vec<usize>,
+        mpsocs: Vec<MpsocId>,
+        start: SimTime,
+        halo: HaloSchedule,
+        world: &World,
+    ) -> JobRun {
+        let kind = match &spec.workload {
+            Workload::Proxy { app, mode, .. } => {
+                let colocated = world.colocated(group[0]).min(group.len());
+                let (compute, face_bytes) =
+                    iteration_params(app, *mode, group.len(), colocated);
+                RunKind::Proxy {
+                    dims: dims3(group.len()),
+                    compute,
+                    face_bytes,
+                    allreduces: app.allreduces_per_iter,
+                }
+            }
+            Workload::Allreduce { bytes, .. } => RunKind::Allreduce { bytes: *bytes },
+        };
+        JobRun {
+            spec_idx,
+            group,
+            mpsocs,
+            start,
+            steps_done: 0,
+            steps_total: spec.workload.total_steps(),
+            halo,
+            kind,
+            acc: ProxyAccum::default(),
+        }
+    }
+
+    /// The job's current frontier on the shared timeline (min-clock
+    /// scheduling key of the interleaving driver).
+    pub fn clock(&self, world: &World) -> SimTime {
+        collectives::group_max_clock(world, &self.group)
+    }
+
+    /// Run one iteration step; returns `true` when the workload is done.
+    pub fn step(&mut self, world: &mut World) -> bool {
+        debug_assert!(self.steps_done < self.steps_total);
+        match &self.kind {
+            RunKind::Proxy { dims, compute, face_bytes, allreduces } => {
+                proxy_iteration(
+                    world,
+                    &self.group,
+                    *dims,
+                    *compute,
+                    *face_bytes,
+                    *allreduces,
+                    self.halo,
+                    Backend::Software,
+                    &mut self.acc,
+                );
+            }
+            RunKind::Allreduce { bytes } => {
+                let lat = collectives::allreduce_group(world, &self.group, *bytes);
+                self.acc.allreduce_time += lat.secs();
+                self.acc.comm_time += lat.secs();
+                world.progress.recycle();
+            }
+        }
+        self.steps_done += 1;
+        self.steps_done == self.steps_total
+    }
+}
+
+/// Completed-job record with the interference metrics.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub name: String,
+    pub workload: String,
+    pub ranks: usize,
+    pub mpsocs: Vec<MpsocId>,
+    pub arrival: SimTime,
+    /// Admission time (>= arrival when the job queued for resources).
+    pub start: SimTime,
+    pub finish: SimTime,
+    /// Wall time on the shared rack (finish − start), seconds.
+    pub duration_s: f64,
+    /// Wall time of the identical job alone on an empty rack, same
+    /// slots, seconds.
+    pub isolated_s: f64,
+    /// `duration_s / isolated_s`: ≥ 1.0 under occupancy-only contention.
+    pub slowdown: f64,
+    /// Fraction of the shared wall time spent communicating.
+    pub comm_fraction: f64,
+}
+
+impl JobResult {
+    /// Queueing delay before admission, seconds.
+    pub fn wait_s(&self) -> f64 {
+        (self.start - self.arrival).secs()
+    }
+}

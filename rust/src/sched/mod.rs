@@ -1,0 +1,555 @@
+//! The multi-tenant rack workload manager.
+//!
+//! The ExaNeSt rack was a *shared* testbed, yet until this subsystem the
+//! reproduction could only run one contiguous job (`World` hard-wired
+//! rank *r* to MPSoC/core *r*).  The scheduler turns the cell-accurate
+//! model into a system serving many concurrent workloads:
+//!
+//! 1. A stream of [`JobSpec`]s (halo-exchange proxy apps, OSU allreduce
+//!    patterns; rank count, arrival time, placement hint) is admitted
+//!    FCFS.
+//! 2. The [`RackAlloc`] grants whole MPSoCs under a pluggable
+//!    [`Policy`] — `Compact` blade-aligned first-fit, `BestFit` by free
+//!    region size, `Scattered` round-robin across blades — with
+//!    external-fragmentation accounting.
+//! 3. All admitted jobs run *concurrently on one shared
+//!    [`Fabric`](crate::network::Fabric)/[`sim::Engine`](crate::sim::Engine)*:
+//!    each job's ranks live in one shared [`World`] under an explicit
+//!    [`RankMap`], and the driver interleaves job iterations in
+//!    min-clock order so every fabric resource (torus links, routers,
+//!    AXI channels, R5s) is acquired in global time order.  Inter-job
+//!    slowdown therefore *emerges* from link/router occupancy — there is
+//!    no analytic interference penalty anywhere.
+//! 4. Per-job metrics compare the shared run against the identical job
+//!    alone on an empty rack (same MPSoCs, same model): slowdown ≥ 1.0,
+//!    plus makespan, rack utilization, fragmentation and aggregate
+//!    power ([`crate::power::rack_power_map`]).
+//!
+//! Scheduling semantics (kept deliberately simple and deterministic):
+//! strict FCFS by arrival time — a queued head blocks later arrivals
+//! even if they would fit (no backfill), and MPSoCs are granted for a
+//! job's whole lifetime (no migration, no preemption).
+
+pub mod alloc;
+pub mod job;
+pub mod trace;
+
+pub use alloc::{mpsocs_needed, Allocation, Policy, RackAlloc};
+pub use job::{JobResult, JobRun, JobSpec, Workload, DEFAULT_JOB_ITERS};
+pub use trace::{parse_trace, synthetic_jobs};
+
+use std::collections::VecDeque;
+
+use crate::apps::scaling::HaloSchedule;
+use crate::bail;
+use crate::errors::Result;
+use crate::mpi::{Placement, RankMap, World};
+use crate::network::NetworkModel;
+use crate::power::{self, QfdbLoad};
+use crate::sim::SimTime;
+use crate::topology::SystemConfig;
+
+/// Scheduler-run configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub policy: Policy,
+    pub model: NetworkModel,
+    /// Halo schedule for proxy jobs (dim-staged keeps the calibrated
+    /// message set).
+    pub halo: HaloSchedule,
+}
+
+impl SchedConfig {
+    pub fn new(policy: Policy, model: NetworkModel) -> SchedConfig {
+        SchedConfig { policy, model, halo: HaloSchedule::DimStaged }
+    }
+}
+
+/// The outcome of one scheduled trace.
+#[derive(Debug, Clone)]
+pub struct SchedOutcome {
+    /// Per-job results, in submission order.
+    pub jobs: Vec<JobResult>,
+    /// Last finish − first start, seconds.
+    pub makespan_s: f64,
+    /// Allocated core-time over available core-time within the makespan.
+    pub utilization: f64,
+    /// Mean external fragmentation sampled after each admission.
+    pub frag_mean: f64,
+    /// Peak external fragmentation across admissions.
+    pub frag_peak: f64,
+    /// Time-weighted average whole-rack power over the makespan (W).
+    pub power_avg_w: f64,
+    /// Peak whole-rack power (W).
+    pub power_peak_w: f64,
+}
+
+impl SchedOutcome {
+    /// Mean per-job slowdown.
+    pub fn mean_slowdown(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 1.0;
+        }
+        self.jobs.iter().map(|j| j.slowdown).sum::<f64>() / self.jobs.len() as f64
+    }
+}
+
+/// Admit FCFS-head jobs whose arrival the scheduler clock has reached
+/// and that the allocator can place.  Boards are granted at admission —
+/// never before a job's arrival (a future job must not reserve MPSoCs
+/// it does not yet own).  `state_change` is the time of the last
+/// allocation-state change (previous admission start or release): the
+/// free-set is piecewise constant between such events, so a job that
+/// had to wait starts at `max(arrival, state_change)`; it is advanced
+/// to each admitted job's start.
+#[allow(clippy::too_many_arguments)]
+fn admit_wave(
+    specs: &[JobSpec],
+    sc: &SchedConfig,
+    world: &mut World,
+    rack: &mut RackAlloc,
+    queue: &mut VecDeque<usize>,
+    running: &mut Vec<JobRun>,
+    frag_samples: &mut Vec<f64>,
+    now: SimTime,
+    state_change: &mut SimTime,
+) -> Result<()> {
+    while let Some(&idx) = queue.front() {
+        let spec = &specs[idx];
+        if spec.arrival > now {
+            break; // not arrived yet: no reservation ahead of time
+        }
+        let Some(allocation) = rack.allocate(spec.ranks, spec.placement, sc.policy) else {
+            break; // strict FCFS: the head waits, everyone behind it too
+        };
+        let start = spec.arrival.max(*state_change);
+        let slots = allocation.slots(world.fabric.cfg(), spec.ranks, spec.placement);
+        let base = world.add_ranks(&slots, start)?;
+        let group: Vec<usize> = (base..base + spec.ranks).collect();
+        running.push(JobRun::new(
+            idx,
+            spec,
+            group,
+            allocation.mpsocs.clone(),
+            start,
+            sc.halo,
+            world,
+        ));
+        frag_samples.push(rack.fragmentation());
+        *state_change = (*state_change).max(start);
+        queue.pop_front();
+    }
+    Ok(())
+}
+
+/// Run the identical job alone on an empty rack (same MPSoC slots, same
+/// network model) and return its wall time in seconds — the denominator
+/// of the slowdown metric.
+fn isolated_duration(cfg: &SystemConfig, spec: &JobSpec, run: &JobRun, sc: &SchedConfig) -> Result<f64> {
+    let allocation = Allocation { mpsocs: run.mpsocs.clone() };
+    let slots = allocation.slots(cfg, spec.ranks, spec.placement);
+    let map = RankMap::from_slots(cfg, slots)?;
+    let mut world = World::with_rank_map(cfg.clone(), map, spec.placement, sc.model.clone());
+    let group: Vec<usize> = (0..spec.ranks).collect();
+    let mut jr = JobRun::new(
+        run.spec_idx,
+        spec,
+        group,
+        allocation.mpsocs,
+        SimTime::ZERO,
+        sc.halo,
+        &world,
+    );
+    while !jr.step(&mut world) {}
+    let dur = jr.clock(&world).secs();
+    if dur <= 0.0 {
+        bail!("degenerate job {}: isolated run has zero wall time", spec.name);
+    }
+    Ok(dur)
+}
+
+/// Time-weighted average and peak whole-rack power over the span of the
+/// schedule: every interval between job starts/finishes contributes a
+/// per-QFDB load map (busy A53 clusters per allocated MPSoC) summed by
+/// [`power::rack_power_map`] — idle QFDBs draw their 20 W floor.
+fn power_profile(cfg: &SystemConfig, jobs: &[JobResult]) -> (f64, f64) {
+    let idle_loads = vec![QfdbLoad::default(); cfg.num_qfdbs()];
+    let idle = power::rack_power_map(&idle_loads);
+    let mut points: Vec<SimTime> = jobs.iter().flat_map(|j| [j.start, j.finish]).collect();
+    points.sort();
+    points.dedup();
+    if points.len() < 2 {
+        return (idle, idle);
+    }
+    let total = (*points.last().unwrap() - points[0]).secs();
+    if total <= 0.0 {
+        return (idle, idle);
+    }
+    let mut weighted = 0.0f64;
+    let mut peak = idle;
+    for w in points.windows(2) {
+        let (t0, t1) = (w[0], w[1]);
+        let mut loads = vec![QfdbLoad::default(); cfg.num_qfdbs()];
+        for j in jobs {
+            if j.start <= t0 && j.finish > t0 {
+                for m in &j.mpsocs {
+                    loads[m.0 as usize / cfg.fpgas_per_qfdb].busy_cpus += 1;
+                }
+            }
+        }
+        let p = power::rack_power_map(&loads);
+        peak = peak.max(p);
+        weighted += p * (t1 - t0).secs();
+    }
+    (weighted / total, peak)
+}
+
+/// Admit and run a trace of jobs on one shared rack.
+///
+/// Jobs are admitted FCFS by arrival under `sc.policy`; admitted jobs
+/// step concurrently on one shared world, interleaved in min-clock
+/// order (the job whose ranks are furthest behind on the global
+/// timeline always steps next, so fabric resources are acquired in
+/// near-global time order and contention ordering stays causal).
+pub fn run_schedule(
+    cfg: &SystemConfig,
+    specs: &[JobSpec],
+    sc: &SchedConfig,
+) -> Result<SchedOutcome> {
+    if specs.is_empty() {
+        bail!("no jobs to schedule");
+    }
+    for spec in specs {
+        if spec.ranks == 0 {
+            bail!("job {} has zero ranks", spec.name);
+        }
+        if spec.workload.total_steps() == 0 {
+            bail!("job {} has a zero-step workload and would never complete", spec.name);
+        }
+        let need = mpsocs_needed(cfg, spec.ranks, spec.placement);
+        if need > cfg.num_mpsocs() {
+            bail!(
+                "job {} needs {need} MPSoCs but the machine has {} — it can never be admitted",
+                spec.name,
+                cfg.num_mpsocs()
+            );
+        }
+    }
+    let mut world = World::with_rank_map(
+        cfg.clone(),
+        RankMap::empty(),
+        Placement::PerCore,
+        sc.model.clone(),
+    );
+    let mut rack = RackAlloc::new(cfg);
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by_key(|&i| (specs[i].arrival, i));
+    let mut queue: VecDeque<usize> = order.into();
+    let mut running: Vec<JobRun> = Vec::new();
+    let mut finished: Vec<(JobRun, SimTime)> = Vec::new();
+    let mut frag_samples: Vec<f64> = Vec::new();
+    // The scheduler's clock: the trailing frontier of the running jobs
+    // (min group clock), jumping to the next arrival when idle.
+    // Admissions only happen once `now` has reached a job's arrival.
+    let mut now = SimTime::ZERO;
+    // Time of the last allocation-state change (admission or release).
+    let mut state_change = SimTime::ZERO;
+
+    loop {
+        if running.is_empty() && queue.is_empty() {
+            break;
+        }
+        now = if running.is_empty() {
+            // idle rack: jump to the next arrival
+            now.max(specs[*queue.front().expect("queue checked non-empty")].arrival)
+        } else {
+            let frontier = running
+                .iter()
+                .map(|j| j.clock(&world))
+                .min()
+                .expect("running checked non-empty");
+            now.max(frontier)
+        };
+        admit_wave(
+            specs,
+            sc,
+            &mut world,
+            &mut rack,
+            &mut queue,
+            &mut running,
+            &mut frag_samples,
+            now,
+            &mut state_change,
+        )?;
+        if running.is_empty() {
+            // idle rack, head arrival reached, still not admitted: a job
+            // that cannot be placed on an empty machine can never run
+            let idx = *queue.front().expect("non-empty: loop would have exited");
+            bail!("job {} cannot be placed even on an idle rack", specs[idx].name);
+        }
+        // step the job whose frontier trails the shared timeline
+        let mut i_min = 0;
+        for i in 1..running.len() {
+            let (ci, cm) = (running[i].clock(&world), running[i_min].clock(&world));
+            if ci < cm || (ci == cm && running[i].spec_idx < running[i_min].spec_idx) {
+                i_min = i;
+            }
+        }
+        if running[i_min].step(&mut world) {
+            let jr = running.swap_remove(i_min);
+            let finish = jr.clock(&world);
+            // the job's cores become reusable by later admissions, both
+            // in the allocator and in the shared world's rank map
+            world.retire_ranks(&jr.group);
+            rack.release(&Allocation { mpsocs: jr.mpsocs.clone() });
+            state_change = state_change.max(finish);
+            now = now.max(finish);
+            finished.push((jr, finish));
+        }
+    }
+
+    // Per-job results in submission order, with isolated-run baselines.
+    finished.sort_by_key(|(jr, _)| jr.spec_idx);
+    let mut jobs = Vec::with_capacity(finished.len());
+    for (jr, finish) in &finished {
+        let spec = &specs[jr.spec_idx];
+        let duration_s = (*finish - jr.start).secs();
+        let isolated_s = isolated_duration(cfg, spec, jr, sc)?;
+        jobs.push(JobResult {
+            name: spec.name.clone(),
+            workload: spec.workload.label(),
+            ranks: spec.ranks,
+            mpsocs: jr.mpsocs.clone(),
+            arrival: spec.arrival,
+            start: jr.start,
+            finish: *finish,
+            duration_s,
+            isolated_s,
+            slowdown: duration_s / isolated_s,
+            comm_fraction: if duration_s > 0.0 { jr.acc.comm_time / duration_s } else { 0.0 },
+        });
+    }
+
+    let first_start = jobs.iter().map(|j| j.start).min().unwrap_or(SimTime::ZERO);
+    let last_finish = jobs.iter().map(|j| j.finish).max().unwrap_or(SimTime::ZERO);
+    let makespan_s = (last_finish - first_start).secs();
+    let core_time: f64 = jobs
+        .iter()
+        .map(|j| j.mpsocs.len() as f64 * cfg.cores_per_fpga as f64 * j.duration_s)
+        .sum();
+    let utilization = if makespan_s > 0.0 {
+        core_time / (cfg.num_cores() as f64 * makespan_s)
+    } else {
+        0.0
+    };
+    let frag_mean = if frag_samples.is_empty() {
+        0.0
+    } else {
+        frag_samples.iter().sum::<f64>() / frag_samples.len() as f64
+    };
+    let frag_peak = frag_samples.iter().copied().fold(0.0f64, f64::max);
+    let (power_avg_w, power_peak_w) = power_profile(cfg, &jobs);
+    Ok(SchedOutcome {
+        jobs,
+        makespan_s,
+        utilization,
+        frag_mean,
+        frag_peak,
+        power_avg_w,
+        power_peak_w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::RoutePolicy;
+    use crate::sim::SimDuration;
+
+    fn halo_spec(name: &str, ranks: usize, arrival_us: f64) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement: Placement::PerCore,
+            workload: Workload::by_spec("halo:hpcg:2").unwrap(),
+        }
+    }
+
+    fn allreduce_spec(name: &str, ranks: usize, arrival_us: f64) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement: Placement::PerCore,
+            workload: Workload::by_spec("allreduce:1024x3").unwrap(),
+        }
+    }
+
+    #[test]
+    fn single_job_slowdown_is_exactly_one() {
+        // one job alone on the rack: the shared run IS the isolated run
+        let cfg = SystemConfig::two_blades();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let out = run_schedule(&cfg, &[halo_spec("solo", 16, 0.0)], &sc).unwrap();
+        assert_eq!(out.jobs.len(), 1);
+        assert!(
+            (out.jobs[0].slowdown - 1.0).abs() < 1e-12,
+            "solo slowdown {} must be exactly 1",
+            out.jobs[0].slowdown
+        );
+        assert!(out.makespan_s > 0.0);
+        assert!(out.utilization > 0.0 && out.utilization <= 1.0);
+    }
+
+    #[test]
+    fn single_allreduce_job_matches_direct_collective() {
+        // the scheduled OSU pattern reproduces the legacy contiguous
+        // World timings ps-exactly (flow model)
+        let cfg = SystemConfig::two_blades();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let out = run_schedule(&cfg, &[allreduce_spec("dots", 8, 0.0)], &sc).unwrap();
+        let mut w = World::new(cfg.clone(), 8, Placement::PerCore);
+        let mut direct = SimDuration::ZERO;
+        for _ in 0..3 {
+            direct += crate::mpi::collectives::allreduce(&mut w, 1024);
+        }
+        // compare in ps: the scheduled job's SimTime interval vs the sum
+        // of the direct blocking calls (which chain back to back)
+        assert_eq!(
+            out.jobs[0].finish - out.jobs[0].start,
+            direct,
+            "scheduled allreduce job vs direct collectives"
+        );
+    }
+
+    #[test]
+    fn concurrent_jobs_complete_and_makespan_covers_both() {
+        let cfg = SystemConfig::two_blades();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let specs =
+            [halo_spec("a", 16, 0.0), halo_spec("b", 16, 0.0), allreduce_spec("c", 8, 100.0)];
+        let out = run_schedule(&cfg, &specs, &sc).unwrap();
+        assert_eq!(out.jobs.len(), 3);
+        for j in &out.jobs {
+            assert!(j.slowdown >= 1.0 - 1e-12, "{}: slowdown {}", j.name, j.slowdown);
+            assert!(j.finish > j.start);
+        }
+        let dur_max = out.jobs.iter().map(|j| j.duration_s).fold(0.0f64, f64::max);
+        assert!(out.makespan_s >= dur_max);
+    }
+
+    #[test]
+    fn fcfs_queueing_delays_start_until_release() {
+        // two rack-filling jobs: the second must wait for the first
+        let cfg = SystemConfig::mezzanine(); // 16 MPSoCs = 64 cores
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let specs = [halo_spec("first", 64, 0.0), halo_spec("second", 64, 0.0)];
+        let out = run_schedule(&cfg, &specs, &sc).unwrap();
+        let a = &out.jobs[0];
+        let b = &out.jobs[1];
+        assert_eq!(a.start, a.arrival);
+        assert_eq!(b.start, a.finish, "second starts when the first releases the rack");
+        assert!(b.wait_s() > 0.0);
+        // serial execution: no interference, both exactly isolated
+        assert!((a.slowdown - 1.0).abs() < 1e-12);
+        assert!((b.slowdown - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_upfront() {
+        let cfg = SystemConfig::mezzanine();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let err = run_schedule(&cfg, &[halo_spec("huge", 65, 0.0)], &sc).unwrap_err();
+        assert!(err.to_string().contains("never be admitted"), "{err}");
+    }
+
+    #[test]
+    fn zero_step_workload_is_rejected_not_hung() {
+        let cfg = SystemConfig::mezzanine();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let spec = JobSpec {
+            name: "idle".to_string(),
+            ranks: 4,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: Workload::Allreduce { bytes: 64, execs: 0 },
+        };
+        let err = run_schedule(&cfg, &[spec], &sc).unwrap_err();
+        assert!(err.to_string().contains("zero-step"), "{err}");
+    }
+
+    #[test]
+    fn future_arrivals_do_not_reserve_boards_early() {
+        // jobs a (t=0) and b (t=500us) both fit the rack the whole time:
+        // b must be admitted at its arrival, not at t=0, and start
+        // exactly then (no queueing, no early reservation)
+        let cfg = SystemConfig::two_blades();
+        let sc = SchedConfig::new(Policy::Compact, NetworkModel::Flow);
+        let specs = [halo_spec("a", 16, 0.0), allreduce_spec("b", 8, 500.0)];
+        let out = run_schedule(&cfg, &specs, &sc).unwrap();
+        let b = &out.jobs[1];
+        assert_eq!(b.start, b.arrival, "free rack: b starts at its arrival");
+        assert_eq!(b.wait_s(), 0.0);
+        assert_eq!(b.start, SimTime::from_us(500.0));
+    }
+
+    #[test]
+    fn interference_scattered_exceeds_compact_on_cell_model() {
+        // The acceptance scenario: two concurrent halo-exchange jobs on
+        // the cell-level router mesh.  Compact keeps each job on its own
+        // QFDB (intra-QFDB links only); Scattered spreads both jobs
+        // across blades so their halos share torus links — per-job
+        // slowdown must be strictly worse, and never below 1.0.
+        let cfg = SystemConfig::two_blades();
+        let specs = [halo_spec("a", 16, 0.0), halo_spec("b", 16, 0.0)];
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let compact =
+            run_schedule(&cfg, &specs, &SchedConfig::new(Policy::Compact, model.clone())).unwrap();
+        let scattered =
+            run_schedule(&cfg, &specs, &SchedConfig::new(Policy::Scattered, model)).unwrap();
+        for out in [&compact, &scattered] {
+            for j in &out.jobs {
+                assert!(j.slowdown >= 1.0 - 1e-12, "{}: slowdown {}", j.name, j.slowdown);
+            }
+        }
+        for (c, s) in compact.jobs.iter().zip(&scattered.jobs) {
+            assert!(
+                s.slowdown > c.slowdown,
+                "{}: scattered {} must exceed compact {}",
+                c.name,
+                s.slowdown,
+                c.slowdown
+            );
+        }
+    }
+
+    #[test]
+    fn interference_ordering_holds_on_flow_model_too() {
+        let cfg = SystemConfig::two_blades();
+        let specs = [halo_spec("a", 16, 0.0), halo_spec("b", 16, 0.0)];
+        let compact =
+            run_schedule(&cfg, &specs, &SchedConfig::new(Policy::Compact, NetworkModel::Flow))
+                .unwrap();
+        let scattered =
+            run_schedule(&cfg, &specs, &SchedConfig::new(Policy::Scattered, NetworkModel::Flow))
+                .unwrap();
+        assert!(scattered.mean_slowdown() >= compact.mean_slowdown());
+        assert!((compact.mean_slowdown() - 1.0).abs() < 1e-9, "disjoint QFDBs: no interference");
+    }
+
+    #[test]
+    fn power_and_fragmentation_metrics_are_sane() {
+        let cfg = SystemConfig::two_blades();
+        let sc = SchedConfig::new(Policy::Scattered, NetworkModel::Flow);
+        let out = run_schedule(&cfg, &synthetic_jobs(&cfg), &sc).unwrap();
+        let idle = power::rack_power_map(&vec![QfdbLoad::default(); cfg.num_qfdbs()]);
+        assert!(out.power_avg_w >= idle, "avg {} below idle floor {idle}", out.power_avg_w);
+        assert!(out.power_peak_w >= out.power_avg_w);
+        assert!(out.power_peak_w <= power::QFDB_MAX_W * cfg.num_qfdbs() as f64);
+        assert!((0.0..=1.0).contains(&out.frag_mean));
+        assert!((0.0..=1.0).contains(&out.frag_peak));
+        assert!(out.frag_peak >= out.frag_mean);
+        assert!((0.0..=1.0).contains(&out.utilization));
+    }
+}

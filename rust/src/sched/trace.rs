@@ -1,0 +1,175 @@
+//! Job traces: the text format `repro sched --jobs <file>` reads, and
+//! the built-in synthetic stream scaled to the machine.
+//!
+//! Trace format — one job per line, whitespace-separated:
+//!
+//! ```text
+//! # name   workload                 ranks  arrival_us  [placement]
+//! jobA     halo:hpcg                16     0
+//! jobB     allreduce:1024x8         8      250         per-core
+//! jobC     halo:minife:5            16     400         per-mpsoc
+//! ```
+//!
+//! `#` starts a comment; blank lines are ignored; `placement` defaults
+//! to `per-core`.
+
+use super::job::{JobSpec, Workload};
+use crate::bail;
+use crate::errors::{Context, Result};
+use crate::mpi::Placement;
+use crate::sim::SimTime;
+use crate::topology::SystemConfig;
+
+/// Parse a trace file's contents into job specs.
+pub fn parse_trace(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 4 || fields.len() > 5 {
+            bail!(
+                "trace line {}: expected `name workload ranks arrival_us [placement]`, got {:?}",
+                lineno + 1,
+                line
+            );
+        }
+        let name = fields[0].to_string();
+        if jobs.iter().any(|j: &JobSpec| j.name == name) {
+            bail!(
+                "trace line {}: duplicate job name {name:?} (per-job metrics are keyed by name)",
+                lineno + 1
+            );
+        }
+        let workload = Workload::by_spec(fields[1])
+            .with_context(|| format!("trace line {} ({name})", lineno + 1))?;
+        let ranks: usize = fields[2]
+            .parse()
+            .with_context(|| format!("trace line {}: bad rank count {}", lineno + 1, fields[2]))?;
+        if ranks == 0 {
+            bail!("trace line {}: job {name} has zero ranks", lineno + 1);
+        }
+        let arrival_us: f64 = fields[3].parse().with_context(|| {
+            format!("trace line {}: bad arrival {}", lineno + 1, fields[3])
+        })?;
+        if !arrival_us.is_finite() || arrival_us < 0.0 {
+            bail!("trace line {}: arrival must be a finite non-negative time", lineno + 1);
+        }
+        let placement = match fields.get(4).copied() {
+            None | Some("per-core") => Placement::PerCore,
+            Some("per-mpsoc") => Placement::PerMpsoc,
+            Some(other) => bail!(
+                "trace line {}: unknown placement {other} (per-core | per-mpsoc)",
+                lineno + 1
+            ),
+        };
+        jobs.push(JobSpec {
+            name,
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement,
+            workload,
+        });
+    }
+    if jobs.is_empty() {
+        bail!("trace contains no jobs");
+    }
+    Ok(jobs)
+}
+
+/// The built-in synthetic stream: four jobs sized to the machine — two
+/// halo-exchange proxies arriving together (the interference pair), an
+/// allreduce-heavy job arriving while they run, and a late halo job that
+/// queues if the rack is still busy.
+pub fn synthetic_jobs(cfg: &SystemConfig) -> Vec<JobSpec> {
+    // A job unit of 1/8 of the rack's cores, at least one MPSoC's worth.
+    let unit = (cfg.num_cores() / 8).max(cfg.cores_per_fpga);
+    let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64| JobSpec {
+        name: name.to_string(),
+        ranks,
+        arrival: SimTime::from_us(arrival_us),
+        placement: Placement::PerCore,
+        workload: Workload::by_spec(spec).expect("synthetic workload specs are valid"),
+    };
+    vec![
+        mk("hpcg-a", "halo:hpcg", unit, 0.0),
+        mk("minife-b", "halo:minife", unit, 0.0),
+        mk("dots-c", "allreduce:1024x6", (unit / 2).max(2), 300.0),
+        mk("lammps-d", "halo:lammps", unit, 800.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_trace() {
+        let text = "\
+# a comment
+jobA halo:hpcg 16 0
+jobB allreduce:1024x8 8 250 per-core
+
+jobC halo:minife:5 16 400 per-mpsoc   # trailing comment
+";
+        let jobs = parse_trace(text).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].name, "jobA");
+        assert_eq!(jobs[1].ranks, 8);
+        assert!(matches!(jobs[1].workload, Workload::Allreduce { bytes: 1024, execs: 8 }));
+        assert_eq!(jobs[2].placement, Placement::PerMpsoc);
+        assert!(jobs[2].arrival > jobs[1].arrival);
+        match &jobs[2].workload {
+            Workload::Proxy { app, iters, .. } => {
+                assert_eq!(app.name, "minife");
+                assert_eq!(*iters, 5);
+            }
+            other => panic!("expected proxy workload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_trace("jobA halo:hpcg").is_err(), "too few fields");
+        assert!(parse_trace("jobA halo:nosuch 4 0").is_err(), "unknown app");
+        assert!(parse_trace("jobA halo:hpcg 0 0").is_err(), "zero ranks");
+        assert!(parse_trace("jobA halo:hpcg 4 -3").is_err(), "negative arrival");
+        assert!(parse_trace("jobA halo:hpcg 4 0 sideways").is_err(), "bad placement");
+        assert!(parse_trace("jobA dance:hpcg 4 0").is_err(), "unknown workload");
+        assert!(parse_trace("# only comments\n").is_err(), "empty trace");
+        assert!(
+            parse_trace("jobA halo:hpcg 4 0\njobA halo:minife 4 10\n").is_err(),
+            "duplicate job names would alias the per-job metrics"
+        );
+    }
+
+    #[test]
+    fn rejects_zero_step_and_trailing_workload_components() {
+        // zero steps would make the job driver spin forever
+        assert!(Workload::by_spec("halo:hpcg:0").is_err(), "zero iterations");
+        assert!(Workload::by_spec("allreduce:1024x0").is_err(), "zero execs");
+        // trailing components must error, not be silently dropped
+        assert!(Workload::by_spec("halo:hpcg:3:per-mpsoc").is_err(), "misplaced placement");
+        assert!(
+            Workload::by_spec("allreduce:1024:8").is_err(),
+            "':' instead of 'x' must not silently run 1 exec"
+        );
+        assert!(Workload::by_spec("allreduce:1024x8").is_ok());
+        assert!(Workload::by_spec("halo:hpcg:3").is_ok());
+    }
+
+    #[test]
+    fn synthetic_stream_fits_the_small_machine() {
+        let cfg = SystemConfig::two_blades(); // 128 cores
+        let jobs = synthetic_jobs(&cfg);
+        assert_eq!(jobs.len(), 4);
+        for j in &jobs {
+            assert!(j.ranks <= cfg.num_cores(), "{} oversubscribes", j.name);
+            assert!(j.ranks >= 2);
+        }
+        // the first two arrive together: that's the interference pair
+        assert_eq!(jobs[0].arrival, jobs[1].arrival);
+    }
+}

@@ -194,3 +194,28 @@ fn mezzanine_testbed_also_works() {
     let lat = collectives::bcast(&mut w, 1);
     assert!(lat.us() > 1.0 && lat.us() < 50.0, "{lat}");
 }
+
+#[test]
+fn scheduler_end_to_end_trace_on_shared_cell_mesh() {
+    // The multi-tenant path end to end: trace parsing → FCFS admission
+    // under a placement policy → concurrent jobs on one shared
+    // cell-level fabric → interference metrics.
+    use exanest::sched::{parse_trace, run_schedule, Policy, SchedConfig};
+    let c = SystemConfig::two_blades();
+    let specs = parse_trace(
+        "a halo:hpcg:2 16 0\n\
+         b halo:minife:2 16 0\n\
+         c allreduce:1024x2 8 200\n",
+    )
+    .unwrap();
+    let sc = SchedConfig::new(Policy::Scattered, NetworkModel::cell(RoutePolicy::Deterministic));
+    let out = run_schedule(&c, &specs, &sc).unwrap();
+    assert_eq!(out.jobs.len(), 3);
+    for j in &out.jobs {
+        assert!(j.slowdown >= 1.0 - 1e-12, "{}: slowdown {}", j.name, j.slowdown);
+        assert!(j.duration_s > 0.0 && j.isolated_s > 0.0);
+    }
+    assert!(out.makespan_s > 0.0);
+    assert!((0.0..=1.0).contains(&out.utilization));
+    assert!(out.power_peak_w >= out.power_avg_w);
+}
