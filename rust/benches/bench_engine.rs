@@ -6,8 +6,8 @@
 use std::time::Instant;
 
 use exanest::bench::{black_box, Suite};
-use exanest::mpi::{progress, Placement, World};
-use exanest::network::Fabric;
+use exanest::mpi::{collectives, progress, Backend, Placement, World};
+use exanest::network::{Fabric, NetworkModel, RoutePolicy};
 use exanest::sim::{Engine, SimTime};
 use exanest::topology::SystemConfig;
 
@@ -107,4 +107,52 @@ fn main() {
     s.metric("progress/peak_queue_depth", w.progress.peak_queue_depth() as f64, "events");
 
     s.write_json().expect("write BENCH_engine.json");
+
+    // Parallel-DES scaling (DESIGN.md §12): the same full-rack
+    // cell-level software allreduce at 1/2/4/8 workers.  Simulated
+    // latency must be bit-identical at every worker count (asserted
+    // here); what scales is wall-clock events/sec.  `null_msgs_per_op`
+    // is the conservative-synchronization overhead: time-bound
+    // broadcasts per deferred fabric operation.
+    let mut p = Suite::new("parallel");
+    p.stamp(&SystemConfig::rack());
+    let mut base_eps = 0.0f64;
+    let mut base_lat = None;
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = SystemConfig::rack();
+        cfg.sim_workers = workers;
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let t0 = Instant::now();
+        let mut w = World::with_model(cfg, 256, Placement::PerCore, model);
+        let (lat, _) = collectives::allreduce_via(&mut w, 64 * 1024, Backend::Software);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let events = w.progress.events_processed() as f64;
+        let eps = events / wall;
+        match base_lat {
+            None => {
+                base_lat = Some(lat);
+                base_eps = eps;
+                p.metric("latency_us", lat.us(), "us");
+                p.metric("events", events, "count");
+            }
+            Some(reference) => assert_eq!(
+                lat, reference,
+                "{workers} workers diverged from the single-threaded result"
+            ),
+        }
+        p.metric(&format!("w{workers}/events_per_sec"), eps, "1/s");
+        p.metric(&format!("w{workers}/wall_s"), wall, "s");
+        p.metric(&format!("w{workers}/speedup"), eps / base_eps.max(1e-9), "x");
+        if let Some(ps) = w.par_stats() {
+            p.metric(&format!("w{workers}/windows"), ps.windows as f64, "count");
+            p.metric(&format!("w{workers}/components"), ps.components as f64, "count");
+            p.metric(&format!("w{workers}/shipped_ops"), ps.shipped as f64, "count");
+            p.metric(
+                &format!("w{workers}/null_msgs_per_op"),
+                ps.bounds_sent as f64 / (ps.ops as f64).max(1.0),
+                "x",
+            );
+        }
+    }
+    p.write_json().expect("write BENCH_parallel.json");
 }

@@ -117,13 +117,25 @@ fn main() {
             std::process::exit(2);
         }
     }
-    let cfg = if small {
+    let mut cfg = if small {
         SystemConfig::two_blades()
     } else if rack {
         SystemConfig::rack()
     } else {
         SystemConfig::prototype()
     };
+    // `--workers N` shards the simulated rack across N DES worker
+    // threads (DESIGN.md §12).  Purely an execution knob: results are
+    // bit-identical to `--workers 1` at every N.
+    if let Some(w) = args.value("--workers") {
+        match w.parse::<usize>() {
+            Ok(n) if n >= 1 => cfg.sim_workers = n,
+            _ => {
+                eprintln!("--workers needs a positive integer, got {w:?}");
+                std::process::exit(2);
+            }
+        }
+    }
     let model = match args.value("--network-model").as_deref() {
         None => NetworkModel::Flow,
         Some("flow") => NetworkModel::Flow,
@@ -293,6 +305,9 @@ fn main() {
                  \t--network-model  flow | cell | cell-adaptive, for osu-latency, osu-bw, osu-mbw,\n\
                  \t                 osu-incast, osu-allreduce, scaling, sched (router-hotspot is\n\
                  \t                 always cell-level)\n\
+                 \t--workers        N simulator worker threads (parallel DES over blade-group\n\
+                 \t                 partitions; default 1 = single-threaded reference path;\n\
+                 \t                 results are bit-identical at every N)\n\
                  \t--allreduce-backend  software | accel: dot-product dispatch for scaling\n\
                  \t                 (accel degrades to software outside its §4.7 constraints)\n\
                  \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling\n\
@@ -430,6 +445,49 @@ fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
         t.row(&row);
     }
     println!("{}", t.render());
+
+    // Parallel-DES instrumentation for the cell-level run: re-execute
+    // the acceptance scenario (256-rank 1 MiB allreduce, every RDMA
+    // block simulated cell by cell) as a single measured pass and stamp
+    // wall-clock events/sec into BENCH_allreduce_w<N>.json — CI runs
+    // this at --workers 1 and --workers 4 and compares both the
+    // simulated latency (must be identical) and the speedup.
+    if !matches!(model, NetworkModel::Flow) {
+        let n = 256.min(cfg.num_cores());
+        let bytes = 1 << 20;
+        let start = std::time::Instant::now();
+        let mut w = World::with_model(cfg.clone(), n, Placement::PerCore, model.clone());
+        let (lat, _) = collectives::allreduce_via(&mut w, bytes, Backend::Software);
+        let wall = start.elapsed().as_secs_f64();
+        let events = w.progress.events_processed();
+        let mut suite = Suite::new(&format!("allreduce_w{}", cfg.sim_workers));
+        suite.stamp(cfg);
+        suite.metric("ranks", n as f64, "count");
+        suite.metric("bytes", bytes as f64, "B");
+        suite.metric("latency_us", lat.us(), "us");
+        suite.metric("workers_requested", cfg.sim_workers as f64, "count");
+        suite.metric("workers_attached", w.sim_workers() as f64, "count");
+        suite.metric("events", events as f64, "count");
+        suite.metric("wall_s", wall, "s");
+        suite.metric("events_per_sec", events as f64 / wall.max(1e-9), "ev/s");
+        if let Some(ps) = w.par_stats() {
+            suite.metric("par/ops", ps.ops as f64, "count");
+            suite.metric("par/windows", ps.windows as f64, "count");
+            suite.metric("par/components", ps.components as f64, "count");
+            suite.metric("par/shipped", ps.shipped as f64, "count");
+            suite.metric("par/bounds_sent", ps.bounds_sent as f64, "count");
+        }
+        println!(
+            "measured pass: {n}-rank {bytes} B allreduce = {:.1} us simulated, \
+             {events} events in {wall:.3} s wall ({:.0} events/sec, {} workers)\n",
+            lat.us(),
+            events as f64 / wall.max(1e-9),
+            w.sim_workers().max(1)
+        );
+        if let Err(e) = suite.write_json() {
+            eprintln!("could not write BENCH_allreduce_w{}.json: {e}", cfg.sim_workers);
+        }
+    }
 }
 
 fn osu_mbw(cfg: &SystemConfig, model: &NetworkModel) {

@@ -15,9 +15,12 @@
 //! back to software otherwise.
 
 pub mod collectives;
+pub mod parallel;
 pub mod progress;
 pub mod pt2pt;
 pub mod world;
+
+pub use parallel::{OpKind, ParStats, ParallelRuntime};
 
 pub use collectives::{
     allreduce_group, allreduce_via, allreduce_via_group, group_max_clock, sync_group_clocks,

@@ -32,6 +32,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use super::parallel::{OpKind, OpResult, ParallelRuntime};
 use super::pt2pt::{protocol_for, Protocol};
 use super::world::World;
 use crate::network::Fabric;
@@ -288,8 +289,32 @@ impl Progress {
 
     /// Process events until `req` completes; panics on a guaranteed
     /// deadlock (event queue drained with the request still pending).
-    fn drive(&mut self, fab: &mut Fabric, req: Request) -> SimTime {
-        while self.state(req).done.is_none() {
+    ///
+    /// With a parallel runtime attached (multi-worker mode, DESIGN.md
+    /// §12) the loop pops only while the next event time stays at or
+    /// below the open window's minimum conservative bound; past it the
+    /// window is flushed first, so no event that should order after a
+    /// deferred follow-up is ever popped early.
+    fn drive(
+        &mut self,
+        fab: &mut Fabric,
+        req: Request,
+        mut par: Option<&mut ParallelRuntime>,
+    ) -> SimTime {
+        loop {
+            if self.state(req).done.is_some() {
+                break;
+            }
+            if let Some(p) = par.as_deref_mut() {
+                if p.pending() {
+                    let bound = p.min_bound().expect("open window has a bound");
+                    let safe = self.engine.peek_time().is_some_and(|te| te <= bound);
+                    if !safe {
+                        self.flush(fab, p);
+                        continue;
+                    }
+                }
+            }
             let Some((t, ev)) = self.engine.next() else {
                 let r = self.state(req);
                 panic!(
@@ -299,16 +324,76 @@ impl Progress {
                     r.rank, r.dir, r.bytes, r.peer
                 );
             };
-            self.handle(fab, t, ev);
+            self.handle(fab, t, ev, par.as_deref_mut());
+        }
+        // Commit any still-open window before handing control back:
+        // deferred completions (eager cpu_free, RDMA src_done) and their
+        // follow-up events must be in place exactly as after the
+        // equivalent single-threaded call.
+        if let Some(p) = par {
+            if p.pending() {
+                self.flush(fab, p);
+            }
         }
         self.state(req).done.unwrap()
     }
 
     /// Process all events timestamped at or before `horizon` (single
-    /// queue lookup per event via [`Engine::next_before`]).
-    fn drive_until(&mut self, fab: &mut Fabric, horizon: SimTime) {
-        while let Some((t, ev)) = self.engine.next_before(horizon) {
-            self.handle(fab, t, ev);
+    /// queue lookup per event via [`Engine::next_before`]); flushes any
+    /// open parallel window both at the conservative bound and before
+    /// returning, so callers observe the same request state as in a
+    /// single-threaded run.
+    fn drive_until(
+        &mut self,
+        fab: &mut Fabric,
+        horizon: SimTime,
+        mut par: Option<&mut ParallelRuntime>,
+    ) {
+        loop {
+            if let Some(p) = par.as_deref_mut() {
+                if p.pending() {
+                    let bound = p.min_bound().expect("open window has a bound");
+                    let safe =
+                        self.engine.peek_time().is_some_and(|te| te <= bound && te <= horizon);
+                    if !safe {
+                        self.flush(fab, p);
+                        continue;
+                    }
+                }
+            }
+            let Some((t, ev)) = self.engine.next_before(horizon) else { break };
+            self.handle(fab, t, ev, par.as_deref_mut());
+        }
+    }
+
+    /// Commit the parallel runtime's open window: execute every deferred
+    /// fabric operation (concurrently across disjoint partition
+    /// components) and post each follow-up event at its *reserved*
+    /// sequence number — reproducing the single-threaded post order,
+    /// including equal-timestamp tie-breaks, exactly.
+    fn flush(&mut self, fab: &mut Fabric, par: &mut ParallelRuntime) {
+        for (op, res) in par.execute_window(fab) {
+            match (op.kind, res) {
+                (OpKind::Eager, OpResult::Eager { cpu_free, visible }) => {
+                    self.reqs[op.req].done = Some(cpu_free);
+                    self.engine.post_at_seq(visible, op.seq, MpiEvent::EagerArrive(op.req));
+                }
+                (OpKind::Rts, OpResult::Arrival(arr)) => {
+                    self.engine.post_at_seq(arr, op.seq, MpiEvent::RtsArrive(op.req));
+                }
+                (OpKind::Cts, OpResult::Arrival(arr)) => {
+                    self.engine.post_at_seq(arr, op.seq, MpiEvent::CtsArrive(op.req));
+                }
+                (OpKind::Rdma, OpResult::Rdma { src_done, notif_visible }) => {
+                    self.reqs[op.req].done = Some(src_done);
+                    self.engine.post_at_seq(
+                        notif_visible,
+                        op.seq,
+                        MpiEvent::DataDelivered(op.req),
+                    );
+                }
+                (kind, res) => unreachable!("mismatched window result {res:?} for {kind:?}"),
+            }
         }
     }
 
@@ -323,7 +408,18 @@ impl Progress {
         self.engine.peak_pending()
     }
 
-    fn handle(&mut self, fab: &mut Fabric, t: SimTime, ev: MpiEvent) {
+    /// In multi-worker mode (`par` is `Some`) the four arms that touch
+    /// the fabric do not execute it inline: they reserve the follow-up
+    /// event's sequence number and record the operation into the open
+    /// window's ledger, to be committed by [`Progress::flush`].  The
+    /// arms that only mutate request state run identically either way.
+    fn handle(
+        &mut self,
+        fab: &mut Fabric,
+        t: SimTime,
+        ev: MpiEvent,
+        par: Option<&mut ParallelRuntime>,
+    ) {
         match ev {
             MpiEvent::SendStart(id) => {
                 let (fwd, bytes, protocol) = {
@@ -333,18 +429,35 @@ impl Progress {
                 let mpi_sw = fab.calib().mpi_sw;
                 match protocol {
                     Protocol::Eager => {
-                        let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
-                        self.reqs[id].done = Some(e.cpu_free);
-                        self.engine.post(e.visible, MpiEvent::EagerArrive(id));
+                        if let Some(p) = par {
+                            let seq = self.engine.reserve_seq();
+                            p.record(OpKind::Eager, fwd, bytes, id, seq, t + mpi_sw);
+                        } else {
+                            let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
+                            self.reqs[id].done = Some(e.cpu_free);
+                            self.engine.post(e.visible, MpiEvent::EagerArrive(id));
+                        }
                     }
                     Protocol::Rendezvous => {
-                        let arr = packetizer::send_small(
-                            fab,
-                            &fwd,
-                            t + mpi_sw,
-                            rdma::HANDSHAKE_BYTES,
-                        );
-                        self.engine.post(arr, MpiEvent::RtsArrive(id));
+                        if let Some(p) = par {
+                            let seq = self.engine.reserve_seq();
+                            p.record(
+                                OpKind::Rts,
+                                fwd,
+                                rdma::HANDSHAKE_BYTES,
+                                id,
+                                seq,
+                                t + mpi_sw,
+                            );
+                        } else {
+                            let arr = packetizer::send_small(
+                                fab,
+                                &fwd,
+                                t + mpi_sw,
+                                rdma::HANDSHAKE_BYTES,
+                            );
+                            self.engine.post(arr, MpiEvent::RtsArrive(id));
+                        }
                     }
                 }
             }
@@ -371,18 +484,28 @@ impl Progress {
             MpiEvent::CtsSend(id) => {
                 let cts_sw = fab.calib().cts_sw;
                 let back = self.reqs[id].back.expect("send has a return route");
-                let arr =
-                    packetizer::send_small(fab, &back, t + cts_sw, rdma::HANDSHAKE_BYTES);
-                self.engine.post(arr, MpiEvent::CtsArrive(id));
+                if let Some(p) = par {
+                    let seq = self.engine.reserve_seq();
+                    p.record(OpKind::Cts, back, rdma::HANDSHAKE_BYTES, id, seq, t + cts_sw);
+                } else {
+                    let arr =
+                        packetizer::send_small(fab, &back, t + cts_sw, rdma::HANDSHAKE_BYTES);
+                    self.engine.post(arr, MpiEvent::CtsArrive(id));
+                }
             }
             MpiEvent::CtsArrive(id) => {
                 let fwd = self.reqs[id].fwd.expect("send has a route");
                 let bytes = self.reqs[id].bytes;
-                let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
-                // Sender may reuse sbuf once its engine is done (the final
-                // E2E ACK overlaps with the next operation).
-                self.reqs[id].done = Some(c.src_done);
-                self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                if let Some(p) = par {
+                    let seq = self.engine.reserve_seq();
+                    p.record(OpKind::Rdma, fwd, bytes, id, seq, t);
+                } else {
+                    let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
+                    // Sender may reuse sbuf once its engine is done (the final
+                    // E2E ACK overlaps with the next operation).
+                    self.reqs[id].done = Some(c.src_done);
+                    self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                }
             }
             MpiEvent::DataDelivered(id) => {
                 let mpi_sw = fab.calib().mpi_sw;
@@ -461,8 +584,8 @@ pub fn icompute_at(
 /// Block until `req` completes; advances the owning rank's clock to the
 /// completion time and returns it.
 pub fn wait(world: &mut World, req: Request) -> SimTime {
-    let World { ref mut progress, ref mut fabric, ref mut clocks, .. } = *world;
-    let done = progress.drive(fabric, req);
+    let World { ref mut progress, ref mut fabric, ref mut clocks, ref mut par, .. } = *world;
+    let done = progress.drive(fabric, req, par.as_mut());
     progress.mark_consumed(req);
     let rank = progress.rank_of(req);
     clocks[rank] = clocks[rank].max(done);
@@ -484,9 +607,9 @@ pub fn wait_all(world: &mut World, reqs: &[Request]) -> SimTime {
 /// completion stamped beyond the clock stays invisible until the rank
 /// catches up, so overlap loops polling `test` behave causally).
 pub fn test(world: &mut World, req: Request) -> Option<SimTime> {
-    let World { ref mut progress, ref mut fabric, ref mut clocks, .. } = *world;
+    let World { ref mut progress, ref mut fabric, ref mut clocks, ref mut par, .. } = *world;
     let horizon = clocks[progress.rank_of(req)];
-    progress.drive_until(fabric, horizon);
+    progress.drive_until(fabric, horizon, par.as_mut());
     let done = progress.done_time(req).filter(|&d| d <= horizon);
     if let Some(d) = done {
         progress.mark_consumed(req);

@@ -15,6 +15,7 @@
 //! layouts are [`RankMap::contiguous`], and constructing a world through
 //! [`World::new`]/[`World::with_model`] reproduces them bit-for-bit.
 
+use super::parallel::{ParStats, ParallelRuntime};
 use super::progress::Progress;
 use crate::network::{Fabric, NetworkModel};
 use crate::sim::SimTime;
@@ -186,6 +187,10 @@ pub struct World {
     /// The nonblocking progress engine (event queue + request table) all
     /// point-to-point and collective operations run on.
     pub progress: Progress,
+    /// The multi-worker DES runtime (DESIGN.md §12), attached when
+    /// `cfg.sim_workers > 1` and the machine has at least two blade
+    /// groups to shard; `None` runs the single-threaded path verbatim.
+    pub par: Option<ParallelRuntime>,
 }
 
 impl World {
@@ -224,9 +229,10 @@ impl World {
         placement: Placement,
         model: NetworkModel,
     ) -> World {
+        let par = ParallelRuntime::new(&cfg, &model);
         let fabric = Fabric::with_model(cfg, model);
         let clocks = vec![SimTime::ZERO; rank_map.len()];
-        World { fabric, placement, rank_map, clocks, progress: Progress::new() }
+        World { fabric, placement, rank_map, clocks, progress: Progress::new(), par }
     }
 
     /// Append ranks (a newly admitted job) with their clocks initialised
@@ -271,14 +277,30 @@ impl World {
             .count()
     }
 
-    /// Reset clocks, fabric occupancy and the progress engine (fresh
-    /// iteration batch).
+    /// Reset clocks, fabric occupancy, the progress engine and any open
+    /// parallel window (fresh iteration batch).
     pub fn reset(&mut self) {
         self.fabric.reset();
         self.progress.reset();
+        if let Some(p) = &mut self.par {
+            p.reset();
+        }
         for c in &mut self.clocks {
             *c = SimTime::ZERO;
         }
+    }
+
+    /// Parallel-runtime counters (windows, components, shipped ops, null
+    /// messages), or `None` in single-threaded mode.  Benches stamp
+    /// these into BENCH_parallel.json.
+    pub fn par_stats(&self) -> Option<ParStats> {
+        self.par.as_ref().map(|p| p.stats())
+    }
+
+    /// Worker threads driving this world's fabric windows (0 when the
+    /// single-threaded path is active).
+    pub fn sim_workers(&self) -> usize {
+        self.par.as_ref().map_or(0, |p| p.workers())
     }
 
     /// Synchronise all clocks to the max (an idealised barrier used by the

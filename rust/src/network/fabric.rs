@@ -16,8 +16,32 @@
 //!   to the latency path (N torus hops cross N+1 routers).
 
 use super::router::{NetworkModel, RouterMesh};
+use super::switch::CreditedLink;
+use crate::sim::partition::RegionIndex;
 use crate::sim::{RateResource, Resource, SimDuration, SimTime};
 use crate::topology::{route, Calib, LinkId, MpsocId, Path, SystemConfig, Topology};
+
+/// A snapshot of all occupancy state owned by one partition region
+/// (DESIGN.md §12): the resources a window of deferred fabric
+/// operations can touch, shipped to a worker's replica fabric over an
+/// SPSC channel and shipped back mutated.  Index/value pairs use the
+/// same flat indices as the owning arrays, so re-import is exact.
+#[derive(Debug, Clone, Default)]
+pub struct FabricSlice {
+    /// Flow-level links, by `LinkId::flat` index.
+    pub links: Vec<(usize, RateResource)>,
+    /// Control lanes, by `LinkId::flat` index.
+    pub ctrl: Vec<(usize, Resource)>,
+    /// AXI read channels, by MPSoC id.
+    pub mem_rd: Vec<(usize, RateResource)>,
+    /// AXI write channels, by MPSoC id.
+    pub mem_wr: Vec<(usize, RateResource)>,
+    /// R5 co-processors, by MPSoC id.
+    pub r5: Vec<(usize, Resource)>,
+    /// Cell-level credited links (empty on the flow model), by
+    /// `LinkId::flat` index.
+    pub mesh_links: Vec<(usize, CreditedLink)>,
+}
 
 /// The simulated rack fabric.
 #[derive(Debug)]
@@ -108,6 +132,97 @@ impl Fabric {
     pub fn set_cell_batching(&mut self, on: bool) {
         if let Some(mesh) = &mut self.mesh {
             mesh.set_batching(on);
+        }
+    }
+
+    // ---- partition state shipping (DESIGN.md §12) ------------------------
+
+    /// Snapshot every resource owned by `region`.
+    pub(crate) fn export_slice(&self, region: &RegionIndex) -> FabricSlice {
+        let mut s = FabricSlice::default();
+        for &l in &region.links {
+            s.links.push((l, self.links[l].clone()));
+            s.ctrl.push((l, self.ctrl[l].clone()));
+        }
+        for &m in &region.mpsocs {
+            s.mem_rd.push((m, self.mem_rd[m].clone()));
+            s.mem_wr.push((m, self.mem_wr[m].clone()));
+            s.r5.push((m, self.r5[m].clone()));
+        }
+        if let Some(mesh) = &self.mesh {
+            mesh.export_links(&region.links, &mut s.mesh_links);
+        }
+        s
+    }
+
+    /// Overwrite the resources named by `slice` with its values (the
+    /// inverse of [`Fabric::export_slice`]; indices outside the slice
+    /// are untouched).
+    pub(crate) fn import_slice(&mut self, slice: &FabricSlice) {
+        for (l, v) in &slice.links {
+            self.links[*l] = v.clone();
+        }
+        for (l, v) in &slice.ctrl {
+            self.ctrl[*l] = v.clone();
+        }
+        for (m, v) in &slice.mem_rd {
+            self.mem_rd[*m] = v.clone();
+        }
+        for (m, v) in &slice.mem_wr {
+            self.mem_wr[*m] = v.clone();
+        }
+        for (m, v) in &slice.r5 {
+            self.r5[*m] = v.clone();
+        }
+        if let Some(mesh) = &mut self.mesh {
+            mesh.import_links(&slice.mesh_links);
+        }
+    }
+
+    /// Refresh `slice`'s values from this fabric at the same indices
+    /// (the worker-side export after executing a window job — reuses the
+    /// job's allocation instead of rebuilding index lists).
+    pub(crate) fn refresh_slice(&self, slice: &mut FabricSlice) {
+        for (l, v) in &mut slice.links {
+            *v = self.links[*l].clone();
+        }
+        for (l, v) in &mut slice.ctrl {
+            *v = self.ctrl[*l].clone();
+        }
+        for (m, v) in &mut slice.mem_rd {
+            *v = self.mem_rd[*m].clone();
+        }
+        for (m, v) in &mut slice.mem_wr {
+            *v = self.mem_wr[*m].clone();
+        }
+        for (m, v) in &mut slice.r5 {
+            *v = self.r5[*m].clone();
+        }
+        if let Some(mesh) = &self.mesh {
+            mesh.refresh_links(&mut slice.mesh_links);
+        }
+    }
+
+    /// `(events processed, peak queue depth)` of the cell mesh's engine
+    /// — `(0, 0)` on the flow model.
+    pub(crate) fn mesh_counters(&self) -> (u64, usize) {
+        self.mesh.as_ref().map_or((0, 0), |m| (m.events_processed(), m.peak_queue_depth()))
+    }
+
+    /// Zero the mesh engine's counters (worker replicas do this before
+    /// each window so the per-window delta folds back exactly once).
+    pub(crate) fn reset_mesh_counters(&mut self) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.reset_counters();
+        }
+    }
+
+    /// Fold a replica's per-window mesh counters into this fabric's
+    /// mesh, keeping `events_processed`/`peak_queue_depth` identical to
+    /// the single-threaded run.
+    pub(crate) fn fold_mesh_counters(&mut self, processed: u64, peak: usize) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.add_external_events(processed, peak);
         }
     }
 
@@ -525,6 +640,37 @@ mod tests {
         );
         assert_eq!(fast.mesh().unwrap().events_processed(), 0);
         assert!(slow.mesh().unwrap().events_processed() > 0);
+    }
+
+    #[test]
+    fn slice_export_import_roundtrips_occupancy_state() {
+        // Ship a loaded region out and back: timing behaviour afterwards
+        // must be identical to never having exported at all.
+        use crate::sim::partition::PartitionMap;
+        let mut f = fabric();
+        let a = f.topo.mpsoc(0, 0, 0);
+        let b = f.topo.mpsoc(1, 0, 0);
+        let p = f.route(a, b);
+        f.rdma_block(&p, SimTime::ZERO, 16 * 1024, true);
+        let pm = PartitionMap::new(f.cfg(), 4);
+        let region = pm.region_for_mask(pm.parts_for(a, b, false));
+        let slice = f.export_slice(&region);
+        assert!(!slice.links.is_empty() && !slice.mem_rd.is_empty());
+        let before = f.rdma_block(&p, SimTime::ZERO, 16 * 1024, true);
+        // overwrite with the (stale) snapshot, replay the first block on
+        // a twin fabric, re-import: the next block must time identically
+        let mut twin = fabric();
+        twin.import_slice(&slice);
+        let mut refreshed = slice.clone();
+        twin.refresh_slice(&mut refreshed);
+        let mut f2 = fabric();
+        f2.rdma_block(&p, SimTime::ZERO, 16 * 1024, true);
+        f2.import_slice(&refreshed);
+        assert_eq!(
+            f2.rdma_block(&p, SimTime::ZERO, 16 * 1024, true),
+            before,
+            "re-imported slice must reproduce the original occupancy"
+        );
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod router;
 pub mod switch;
 
 pub use cell::{cell_sizes, Cell, CellKind, CellSizes, NackReason, CELL_OVERHEAD, CELL_PAYLOAD};
-pub use fabric::Fabric;
+pub use fabric::{Fabric, FabricSlice};
 pub use router::{FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
 pub use switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};

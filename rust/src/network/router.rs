@@ -367,6 +367,44 @@ impl RouterMesh {
         self.links[link.flat(&self.topo.cfg)].busy_stats()
     }
 
+    // ---- partition state shipping (DESIGN.md §12) ------------------------
+
+    /// Append `(index, link)` snapshots of the named credited links.
+    pub(crate) fn export_links(&self, idxs: &[usize], out: &mut Vec<(usize, CreditedLink)>) {
+        for &i in idxs {
+            out.push((i, self.links[i].clone()));
+        }
+    }
+
+    /// Overwrite the named credited links with the shipped snapshots.
+    pub(crate) fn import_links(&mut self, links: &[(usize, CreditedLink)]) {
+        for (i, l) in links {
+            self.links[*i] = l.clone();
+        }
+    }
+
+    /// Refresh shipped snapshots in place from this mesh's current state.
+    pub(crate) fn refresh_links(&self, links: &mut [(usize, CreditedLink)]) {
+        for (i, l) in links.iter_mut() {
+            *l = self.links[*i].clone();
+        }
+    }
+
+    /// Zero the event counters (worker replicas call this before each
+    /// window so per-window deltas fold back exactly once).
+    pub(crate) fn reset_counters(&mut self) {
+        debug_assert_eq!(self.live, 0, "counter reset with cells in flight");
+        self.engine.reset_counters();
+    }
+
+    /// Fold a replica engine's per-window counters into this mesh, so
+    /// `events_processed`/`peak_queue_depth` report the same totals as
+    /// the single-threaded run (counts add; peaks take the max — the
+    /// mesh is quiescent between calls, so per-call peaks compose).
+    pub(crate) fn add_external_events(&mut self, processed: u64, peak: usize) {
+        self.engine.fold_external(processed, peak);
+    }
+
     /// Forget all occupancy and statistics; the fault plan (scenario
     /// configuration) is preserved.
     pub fn reset(&mut self) {

@@ -181,10 +181,70 @@ impl<E> Engine<E> {
     /// popped in (time, seq) order.
     #[inline]
     pub fn post(&mut self, at: SimTime, payload: E) {
+        let seq = self.reserve_seq();
+        self.insert(Scheduled { at, seq, payload });
+    }
+
+    /// Claim the next sequence number without inserting an event.
+    ///
+    /// The parallel runtime (DESIGN.md §12) uses this to pin the *merge
+    /// order* of a deferred cross-partition event at the moment the
+    /// sequential engine would have posted it: the fabric op executes
+    /// later on a worker thread, but its follow-up event re-enters the
+    /// queue via [`Engine::post_at_seq`] with this reserved number, so
+    /// same-timestamp ties break bit-identically to the single-threaded
+    /// schedule.
+    #[inline]
+    pub fn reserve_seq(&mut self) -> u64 {
         let seq = self.seq;
         self.seq += 1;
-        let ev = Scheduled { at, seq, payload };
-        let slot = slot_of(at);
+        seq
+    }
+
+    /// Insert an event under a sequence number previously claimed with
+    /// [`Engine::reserve_seq`].
+    ///
+    /// Unlike [`Engine::post`], the timestamp must not trail the clock:
+    /// a deferred cross-partition event landing in the past means the
+    /// conservative lookahead bound was violated (events that should
+    /// have ordered after it were already popped), and silently
+    /// reordering would corrupt the simulation — so this panics loudly
+    /// instead.
+    pub fn post_at_seq(&mut self, at: SimTime, seq: u64, payload: E) {
+        assert!(
+            at >= self.now,
+            "cross-partition event posted into the past: arrival {:?} precedes the \
+             partition clock {:?} — conservative lookahead window violated",
+            at,
+            self.now
+        );
+        debug_assert!(seq < self.seq, "seq {seq} was never reserved");
+        self.insert(Scheduled { at, seq, payload });
+    }
+
+    /// Fold the event counters of an external engine (a partition
+    /// worker's replica) into this one, so `processed`/`peak_pending`
+    /// totals match the single-threaded run: counts add, high-water
+    /// marks take the max (the replica's events would have flowed
+    /// through this queue sequentially).
+    pub fn fold_external(&mut self, processed: u64, peak_pending: usize) {
+        self.processed += processed;
+        if peak_pending > self.peak_pending {
+            self.peak_pending = peak_pending;
+        }
+    }
+
+    /// Reset only the `processed`/`peak_pending` counters (the parallel
+    /// runtime zeroes a replica's counters before each window so the
+    /// per-window delta can be folded back exactly once).
+    pub fn reset_counters(&mut self) {
+        self.processed = 0;
+        self.peak_pending = 0;
+    }
+
+    #[inline]
+    fn insert(&mut self, ev: Scheduled<E>) {
+        let slot = slot_of(ev.at);
         if slot < self.cursor {
             self.near.push(Reverse(ev));
         } else if slot - self.cursor < NUM_SLOTS as u64 {
@@ -550,6 +610,45 @@ mod tests {
         let (_, Ev::Tick(a)) = e.next().unwrap();
         let (_, Ev::Tick(b)) = e.next().unwrap();
         assert_eq!((a, b), (1, 2), "seq tie-break must survive cursor advance");
+    }
+
+    #[test]
+    fn reserved_seq_breaks_same_time_ties_like_sequential_post() {
+        // Reserve a seq first (as the deferred ledger does), post a later
+        // event at the same timestamp, then land the deferred event: it
+        // must pop FIRST, exactly where a sequential post would have put it.
+        let mut e: Engine<Ev> = Engine::new();
+        let t = SimTime::from_ns(50.0);
+        let reserved = e.reserve_seq();
+        e.post(t, Ev::Tick(2));
+        e.post_at_seq(t, reserved, Ev::Tick(1));
+        let (_, Ev::Tick(a)) = e.next().unwrap();
+        let (_, Ev::Tick(b)) = e.next().unwrap();
+        assert_eq!((a, b), (1, 2), "reserved seq must reclaim its sequential slot");
+    }
+
+    #[test]
+    #[should_panic(expected = "cross-partition event posted into the past")]
+    fn post_at_seq_into_the_past_panics() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(100.0), Ev::Tick(0));
+        e.next().unwrap(); // now = 100 ns
+        let seq = e.reserve_seq();
+        e.post_at_seq(SimTime::from_ns(40.0), seq, Ev::Tick(1));
+    }
+
+    #[test]
+    fn fold_external_adds_counts_and_maxes_peaks() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule(SimTime::from_ns(1.0), Ev::Tick(0));
+        e.next().unwrap();
+        assert_eq!((e.processed(), e.peak_pending()), (1, 1));
+        e.fold_external(41, 7);
+        assert_eq!((e.processed(), e.peak_pending()), (42, 7));
+        e.fold_external(8, 3); // lower peak must not shrink the mark
+        assert_eq!((e.processed(), e.peak_pending()), (50, 7));
+        e.reset_counters();
+        assert_eq!((e.processed(), e.peak_pending()), (0, 0));
     }
 
     #[test]

@@ -16,16 +16,25 @@
 //! The two compose: event handlers call flow-level primitives, so the
 //! event layer decides *when and in what order* shared devices are
 //! requested and the flow layer decides *how long* each use takes.
+//!
+//! For multi-worker runs the substrate adds the partitioning layer of
+//! DESIGN.md §12: `partition` derives the blade-group partition graph
+//! and the conservative lookahead bound from the calibration, and
+//! `sync` provides the bounded SPSC channels that carry window jobs and
+//! time bounds between the coordinator and the partition workers.
 
 pub mod engine;
 pub mod inline;
+pub mod partition;
 pub mod resources;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod time;
 
 pub use engine::Engine;
 pub use inline::InlineVec;
+pub use partition::{lookahead, partition_rngs, PartitionMap, RegionIndex};
 pub use resources::{RateResource, Resource};
 pub use rng::Rng;
 pub use stats::{LogHistogram, OnlineStats, Samples};

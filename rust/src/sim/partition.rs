@@ -1,0 +1,340 @@
+//! Rack partitioning for the parallel DES runtime (DESIGN.md §12).
+//!
+//! The torus is sharded by *blade group*: every QFDB with the same
+//! `(y, z)` torus coordinate (one mezzanine) lands in the same
+//! partition, because X hops never leave a mezzanine
+//! ([`Dir::is_intra_mezz`](crate::topology::Dir::is_intra_mezz)) while
+//! Y/Z hops always cross one.  A partition therefore owns whole blades,
+//! all intra-QFDB links of its blades, and the torus links homed at its
+//! QFDBs; only Y/Z traffic crosses partitions, and every such crossing
+//! pays at least one inter-mezzanine wire — which is what makes the
+//! conservative [`lookahead`] bound sound.
+//!
+//! This module is deliberately topology-aware even though it lives in
+//! `sim/`: the partition graph *is* simulation infrastructure (it feeds
+//! the worker scheduler in [`crate::mpi::parallel`]), but its geometry
+//! comes from [`SystemConfig`].
+
+use super::rng::Rng;
+use super::time::SimDuration;
+use crate::topology::{Calib, MpsocId, SystemConfig};
+
+/// Partition masks are `u64` bitsets.
+pub const MAX_PARTITIONS: usize = 64;
+
+/// Conservative lookahead between partitions: the smallest latency any
+/// event can accumulate crossing a partition boundary.
+///
+/// Crossing partitions means crossing mezzanines, i.e. taking at least
+/// one Y/Z torus hop: one switch traversal plus one inter-mezzanine
+/// wire.  Serialization time is strictly positive on top (every message
+/// carries at least a cell header), so a follow-up event scheduled by a
+/// fabric operation at time `t` that crosses a partition boundary
+/// always lands *strictly after* `t + lookahead` — in both the flow
+/// model and the cell-level router mesh (whose per-hop cost is the
+/// larger router block latency).
+pub fn lookahead(calib: &Calib) -> SimDuration {
+    calib.switch_latency + calib.link_latency
+}
+
+/// Per-partition resource index sets (flat indices into the fabric's
+/// resource arrays), concatenated for a partition mask.
+#[derive(Debug, Clone, Default)]
+pub struct RegionIndex {
+    /// Flat link indices ([`LinkId::flat`](crate::topology::LinkId)
+    /// order: all intra-QFDB links, then 6 torus ports per QFDB).
+    pub links: Vec<usize>,
+    /// MPSoC ids owned by the region.
+    pub mpsocs: Vec<usize>,
+    /// QFDB ids owned by the region.
+    pub qfdbs: Vec<usize>,
+}
+
+/// The static QFDB → partition assignment for one configuration.
+#[derive(Debug, Clone)]
+pub struct PartitionMap {
+    nparts: usize,
+    ny: usize,
+    nz: usize,
+    qfdbs_per_mezz: usize,
+    fpgas_per_qfdb: usize,
+    num_qfdbs: usize,
+    /// Partition of each blade-group key `y * nz + z`.
+    part_of_group: Vec<u8>,
+}
+
+impl PartitionMap {
+    /// Partition the rack for up to `workers` workers.  The number of
+    /// partitions is capped by the blade-group count (`ny * nz`): a
+    /// mezzanine is never split, so a machine with fewer blade groups
+    /// than requested workers simply gets fewer partitions.
+    pub fn new(cfg: &SystemConfig, workers: usize) -> PartitionMap {
+        let (_, ny, nz) = cfg.torus_dims();
+        let groups = ny * nz;
+        let nparts = workers.clamp(1, groups.min(MAX_PARTITIONS));
+        // Y-major keys, contiguous key ranges per partition: on the full
+        // rack (ny = nz = 4, 4 workers) this makes partition == y, so a
+        // 256-rank PerCore job (mezzanines 0..4, z = 0) spreads 4-ways.
+        let part_of_group =
+            (0..groups).map(|key| (key * nparts / groups) as u8).collect();
+        PartitionMap {
+            nparts,
+            ny,
+            nz,
+            qfdbs_per_mezz: cfg.qfdbs_per_mezz,
+            fpgas_per_qfdb: cfg.fpgas_per_qfdb,
+            num_qfdbs: cfg.num_qfdbs(),
+            part_of_group,
+        }
+    }
+
+    /// Number of partitions (1 = parallel execution disabled).
+    pub fn nparts(&self) -> usize {
+        self.nparts
+    }
+
+    /// Mask with every partition bit set.
+    pub fn all_parts(&self) -> u64 {
+        if self.nparts == MAX_PARTITIONS { u64::MAX } else { (1u64 << self.nparts) - 1 }
+    }
+
+    #[inline]
+    fn group_key(&self, y: usize, z: usize) -> usize {
+        y * self.nz + z
+    }
+
+    /// `(y, z)` torus coordinate of a QFDB (mirrors
+    /// [`Topology::qfdb_coord`](crate::topology::Topology::qfdb_coord)).
+    #[inline]
+    fn group_of_qfdb(&self, q: usize) -> (usize, usize) {
+        let mezz = q / self.qfdbs_per_mezz;
+        (mezz % 4, mezz / 4)
+    }
+
+    /// Partition owning a QFDB.
+    pub fn part_of_qfdb(&self, q: usize) -> usize {
+        let (y, z) = self.group_of_qfdb(q);
+        self.part_of_group[self.group_key(y, z)] as usize
+    }
+
+    /// Partition owning an MPSoC.
+    pub fn part_of_mpsoc(&self, m: MpsocId) -> usize {
+        self.part_of_qfdb(m.0 as usize / self.fpgas_per_qfdb)
+    }
+
+    /// Conservative partition mask touched by any minimal route between
+    /// `src` and `dst`: the bounding box of the minimal Y-arc × minimal
+    /// Z-arc of the two endpoints' blade groups.  Dimension-order
+    /// routing breaks ring-distance ties toward `+` (so only the plus
+    /// arc is included); the minimal-adaptive policy may take either
+    /// arc on a tie, so `adaptive` widens the box to both.
+    pub fn parts_for(&self, src: MpsocId, dst: MpsocId, adaptive: bool) -> u64 {
+        let sq = src.0 as usize / self.fpgas_per_qfdb;
+        let dq = dst.0 as usize / self.fpgas_per_qfdb;
+        let (sy, sz) = self.group_of_qfdb(sq);
+        let (dy, dz) = self.group_of_qfdb(dq);
+        let ys = ring_span(sy, dy, self.ny, adaptive);
+        let zs = ring_span(sz, dz, self.nz, adaptive);
+        let mut mask = 0u64;
+        for &y in &ys {
+            for &z in &zs {
+                mask |= 1u64 << self.part_of_group[self.group_key(y, z)];
+            }
+        }
+        mask
+    }
+
+    /// Flat resource indices owned by every partition in `mask`
+    /// (disjoint across partitions, so concatenation is exact).
+    pub fn region_for_mask(&self, mask: u64) -> RegionIndex {
+        let f = self.fpgas_per_qfdb;
+        let intra_per_qfdb = f * f;
+        let torus_base = self.num_qfdbs * intra_per_qfdb;
+        let mut r = RegionIndex::default();
+        for q in 0..self.num_qfdbs {
+            if mask & (1u64 << self.part_of_qfdb(q)) == 0 {
+                continue;
+            }
+            r.qfdbs.push(q);
+            for m in q * f..(q + 1) * f {
+                r.mpsocs.push(m);
+            }
+            for l in q * intra_per_qfdb..(q + 1) * intra_per_qfdb {
+                r.links.push(l);
+            }
+            for l in torus_base + q * 6..torus_base + (q + 1) * 6 {
+                r.links.push(l);
+            }
+        }
+        r
+    }
+}
+
+/// The ring positions covered by minimal routes from `a` to `b` on a
+/// ring of `n` (inclusive of both endpoints).  Ties between the two
+/// arcs go to `+` under DOR; `adaptive` includes both arcs.
+fn ring_span(a: usize, b: usize, n: usize, adaptive: bool) -> Vec<usize> {
+    if a == b {
+        return vec![a];
+    }
+    let fwd = (b + n - a) % n;
+    let bwd = (a + n - b) % n;
+    let mut vals = Vec::with_capacity(fwd.min(bwd) + 1);
+    if fwd <= bwd {
+        for k in 0..=fwd {
+            vals.push((a + k) % n);
+        }
+    }
+    if bwd < fwd || (bwd == fwd && adaptive) {
+        for k in 0..=bwd {
+            vals.push((a + n - k) % n);
+        }
+    }
+    vals.sort_unstable();
+    vals.dedup();
+    vals
+}
+
+/// Independent per-partition RNG streams forked deterministically from
+/// one global seed, so stochastic workload generation stays
+/// reproducible regardless of worker interleaving: stream `p` is the
+/// same function of `(seed, p)` at any worker count.
+pub fn partition_rngs(seed: u64, nparts: usize) -> Vec<Rng> {
+    let mut root = Rng::new(seed);
+    (0..nparts).map(|_| root.fork()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rack_four_workers_partitions_by_y_ring() {
+        let cfg = SystemConfig::rack();
+        let pm = PartitionMap::new(&cfg, 4);
+        assert_eq!(pm.nparts(), 4);
+        // mezz = z*4 + y, qfdb = mezz*4 + x: partition must equal y
+        for q in 0..cfg.num_qfdbs() {
+            let mezz = q / cfg.qfdbs_per_mezz;
+            assert_eq!(pm.part_of_qfdb(q), mezz % 4, "qfdb {q}");
+        }
+    }
+
+    #[test]
+    fn partitions_are_balanced_and_exhaustive() {
+        for (cfg, workers) in [
+            (SystemConfig::rack(), 4),
+            (SystemConfig::rack(), 8),
+            (SystemConfig::prototype(), 4),
+            (SystemConfig::two_blades(), 2),
+        ] {
+            let pm = PartitionMap::new(&cfg, workers);
+            let mut count = vec![0usize; pm.nparts()];
+            for q in 0..cfg.num_qfdbs() {
+                count[pm.part_of_qfdb(q)] += 1;
+            }
+            let (min, max) =
+                (count.iter().min().unwrap(), count.iter().max().unwrap());
+            assert!(*min > 0, "empty partition: {count:?}");
+            assert!(
+                max - min <= cfg.qfdbs_per_mezz,
+                "imbalance beyond one blade: {count:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_group_machines_disable_parallelism() {
+        let pm = PartitionMap::new(&SystemConfig::mezzanine(), 8);
+        assert_eq!(pm.nparts(), 1);
+        assert_eq!(pm.all_parts(), 1);
+    }
+
+    #[test]
+    fn same_blade_traffic_is_single_partition() {
+        let cfg = SystemConfig::rack();
+        let pm = PartitionMap::new(&cfg, 4);
+        // MPSoCs 0 and 15 live on mezzanine 0 (QFDBs 0..4)
+        let m = pm.parts_for(MpsocId(0), MpsocId(15), false);
+        assert_eq!(m.count_ones(), 1);
+        assert_eq!(m, 1 << pm.part_of_mpsoc(MpsocId(0)));
+    }
+
+    #[test]
+    fn cross_blade_traffic_spans_the_minimal_arc() {
+        let cfg = SystemConfig::rack();
+        let pm = PartitionMap::new(&cfg, 4);
+        // mezz 0 (y=0) -> mezz 1 (y=1): partitions {0, 1}
+        let src = MpsocId(0);
+        let dst = MpsocId((cfg.qfdbs_per_mezz * cfg.fpgas_per_qfdb) as u32);
+        assert_eq!(pm.parts_for(src, dst, false), 0b11);
+        // the mask covers both endpoints by construction
+        for (a, b) in [(0u32, 200u32), (37, 11), (255, 128)] {
+            let m = pm.parts_for(MpsocId(a), MpsocId(b), false);
+            assert_ne!(m & (1 << pm.part_of_mpsoc(MpsocId(a))), 0);
+            assert_ne!(m & (1 << pm.part_of_mpsoc(MpsocId(b))), 0);
+            assert_eq!(m & !pm.all_parts(), 0);
+        }
+    }
+
+    #[test]
+    fn adaptive_box_contains_deterministic_box() {
+        let cfg = SystemConfig::rack();
+        let pm = PartitionMap::new(&cfg, 4);
+        for a in (0..256u32).step_by(7) {
+            for b in (0..256u32).step_by(11) {
+                let det = pm.parts_for(MpsocId(a), MpsocId(b), false);
+                let ada = pm.parts_for(MpsocId(a), MpsocId(b), true);
+                assert_eq!(det & !ada, 0, "{a}->{b}: det {det:b} not within adaptive {ada:b}");
+            }
+        }
+        // antipodal Y (distance 2 on the ring of 4) is a tie: adaptive
+        // must include both arcs, i.e. strictly more partitions
+        let src = MpsocId(0); // y = 0
+        let dst = MpsocId((2 * cfg.qfdbs_per_mezz * cfg.fpgas_per_qfdb) as u32); // y = 2
+        let det = pm.parts_for(src, dst, false);
+        let ada = pm.parts_for(src, dst, true);
+        assert!(ada.count_ones() > det.count_ones());
+    }
+
+    #[test]
+    fn region_indices_partition_the_resource_arrays() {
+        let cfg = SystemConfig::rack();
+        let pm = PartitionMap::new(&cfg, 4);
+        let f = cfg.fpgas_per_qfdb;
+        let all = pm.region_for_mask(pm.all_parts());
+        assert_eq!(all.qfdbs.len(), cfg.num_qfdbs());
+        assert_eq!(all.mpsocs.len(), cfg.num_mpsocs());
+        assert_eq!(all.links.len(), cfg.num_qfdbs() * f * f + cfg.num_qfdbs() * 6);
+        // disjoint across single partitions, union = whole machine
+        let mut seen_links = vec![false; all.links.len()];
+        for p in 0..pm.nparts() {
+            for &l in &pm.region_for_mask(1 << p).links {
+                assert!(!seen_links[l], "link {l} owned twice");
+                seen_links[l] = true;
+            }
+        }
+        assert!(seen_links.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn lookahead_is_switch_plus_wire() {
+        let calib = SystemConfig::prototype().calib;
+        assert_eq!(lookahead(&calib), calib.switch_latency + calib.link_latency);
+        assert!(lookahead(&calib) > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn partition_rngs_are_deterministic_and_distinct() {
+        let mut a = partition_rngs(42, 4);
+        let mut b = partition_rngs(42, 4);
+        let seq =
+            |r: &mut Rng| (0..8).map(|_| r.below(1 << 30)).collect::<Vec<_>>();
+        for p in 0..4 {
+            assert_eq!(seq(&mut a[p]), seq(&mut b[p]), "stream {p} not reproducible");
+        }
+        let s0 = seq(&mut partition_rngs(42, 4)[0]);
+        let s1 = seq(&mut partition_rngs(42, 4)[1]);
+        assert_ne!(s0, s1, "partition streams must be independent");
+    }
+}

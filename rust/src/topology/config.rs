@@ -23,6 +23,13 @@ pub struct SystemConfig {
     pub intra_qfdb_gbps: f64,
     /// Inter-QFDB torus links (SFP+): Gb/s per direction.
     pub torus_gbps: f64,
+    /// Simulator worker threads for the parallel DES runtime (DESIGN.md
+    /// §12): 1 = single-threaded (the default, reference path); N > 1
+    /// shards the rack into up to N blade-group partitions driven by N
+    /// worker threads.  Purely an execution knob — results are identical
+    /// for every value, and it does not participate in
+    /// [`SystemConfig::fingerprint`].
+    pub sim_workers: usize,
     /// Calibrated timing model.
     pub calib: Calib,
 }
@@ -44,6 +51,7 @@ impl SystemConfig {
             cores_per_fpga: 4,
             intra_qfdb_gbps: 16.0,
             torus_gbps: 10.0,
+            sim_workers: 1,
             calib: Calib::default(),
         }
     }
@@ -74,11 +82,16 @@ impl SystemConfig {
     /// rates and every calibration constant), stamped into `BENCH_*.json`
     /// so perf trajectories are only compared across identical models.
     pub fn fingerprint(&self) -> u64 {
-        // FNV-1a over the canonical Debug rendering: every field of
-        // SystemConfig and Calib participates, and f64 Debug formatting is
-        // stable for the finite values used here.
+        // FNV-1a over the canonical Debug rendering: every *model* field
+        // of SystemConfig and Calib participates, and f64 Debug
+        // formatting is stable for the finite values used here.
+        // `sim_workers` is normalized out: it changes how the simulator
+        // executes, never what it computes, and BENCH trajectories at
+        // different worker counts must stay comparable.
+        let mut canon = self.clone();
+        canon.sim_workers = 1;
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in format!("{self:?}").bytes() {
+        for b in format!("{canon:?}").bytes() {
             h ^= b as u64;
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
@@ -283,6 +296,16 @@ mod tests {
         let mut tweaked = SystemConfig::prototype();
         tweaked.calib.router_credit_cells += 1;
         assert_ne!(a.fingerprint(), tweaked.fingerprint(), "calib must participate");
+    }
+
+    #[test]
+    fn fingerprint_ignores_worker_count() {
+        // sim_workers is an execution knob, not a model parameter: BENCH
+        // results at different worker counts must share a fingerprint.
+        let a = SystemConfig::rack();
+        let mut b = SystemConfig::rack();
+        b.sim_workers = 4;
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -948,3 +948,192 @@ fn prop_concurrent_job_slowdown_at_least_one() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Parallel DES (DESIGN.md §12): multi-worker execution must be a pure
+// execution optimisation — every reported metric bit-identical to the
+// single-threaded reference path at any worker count.
+
+fn with_workers(cfg: &SystemConfig, workers: usize) -> SystemConfig {
+    let mut c = cfg.clone();
+    c.sim_workers = workers;
+    c
+}
+
+#[test]
+fn prop_parallel_hotspot_is_ps_exact() {
+    // full-rack cell-level hotspot traffic (the congestion scenario):
+    // per-pair and aggregate bandwidths identical at 1, 2 and 4 workers
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    forall("hotspot: workers 1 == 2 == 4 (ps exact)", 4, |rng| {
+        let bytes = [64 * 1024usize, 256 * 1024][rng.below(2) as usize];
+        let window = 1 + rng.below(2) as usize;
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let base = osu::osu_mbw_hotspot(&with_workers(&cfg, 1), policy, bytes, window);
+        for workers in [2usize, 4] {
+            let par =
+                osu::osu_mbw_hotspot(&with_workers(&cfg, workers), policy, bytes, window);
+            prop_assert!(
+                par.aggregate_gbps == base.aggregate_gbps
+                    && par.per_pair_gbps == base.per_pair_gbps,
+                "{policy:?} {bytes} B x{window}: {workers} workers diverged \
+                 ({:?} vs {:?} Gb/s)",
+                par.per_pair_gbps,
+                base.per_pair_gbps
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_link_fault_incast_is_ps_exact() {
+    // a torus link failure makes reroutes leave the minimal partition
+    // box, so the runtime serializes every window (full mask) — results
+    // must still be bit-identical across worker counts
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    forall("incast failover: workers 1 == 4 under link faults", 3, |rng| {
+        let bytes = 64 * 1024 * (1 + rng.below(3) as usize);
+        let nsenders = 2 + rng.below(2) as usize;
+        let (t1, g1) = osu::osu_incast_failover(&with_workers(&cfg, 1), nsenders, bytes);
+        let (t4, g4) = osu::osu_incast_failover(&with_workers(&cfg, 4), nsenders, bytes);
+        prop_assert!(
+            t1 == t4 && g1 == g4,
+            "{nsenders} senders x {bytes} B: workers 4 diverged \
+             ({:?}/{g4} vs {:?}/{g1})",
+            t4,
+            t1
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_rack_allreduce_is_ps_exact() {
+    // the acceptance scenario's family: cell-level software allreduce on
+    // the full rack, identical latency at 1, 2 and 4 workers
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    forall("rack allreduce: workers 1 == 2 == 4 (ps exact)", 3, |rng| {
+        let n = [64usize, 256][rng.below(2) as usize];
+        let bytes = [1024usize, 4096][rng.below(2) as usize];
+        let base = osu::osu_allreduce_model(
+            &with_workers(&cfg, 1),
+            &model,
+            n,
+            bytes,
+            1,
+            Placement::PerCore,
+        );
+        for workers in [2usize, 4] {
+            let t = osu::osu_allreduce_model(
+                &with_workers(&cfg, workers),
+                &model,
+                n,
+                bytes,
+                1,
+                Placement::PerCore,
+            );
+            prop_assert!(
+                t == base,
+                "{n} ranks x {bytes} B: {workers} workers gave {:?} vs {:?}",
+                t,
+                base
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_sched_multi_job_is_ps_exact() {
+    // `repro sched` traffic: concurrent jobs on one shared fabric — the
+    // per-job interference numbers and the makespan are bit-identical
+    // across worker counts
+    use exanest::sched::{run_schedule, JobSpec, Policy, SchedConfig, Workload};
+    let cfg = SystemConfig::two_blades();
+    forall("sched multi-job: workers 1 == 2 (ps exact)", 3, |rng| {
+        let policy =
+            [Policy::Compact, Policy::BestFit, Policy::Scattered][rng.below(3) as usize];
+        let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64| JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement: Placement::PerCore,
+            workload: Workload::by_spec(spec).expect("valid spec"),
+        };
+        let specs = [
+            mk("halo", "halo:hpcg:2", 16, 0.0),
+            mk("ar", "allreduce:1024x3", [8usize, 16][rng.below(2) as usize], 5.0),
+        ];
+        let sc1 = SchedConfig::new(policy, NetworkModel::Flow);
+        let seq = run_schedule(&with_workers(&cfg, 1), &specs, &sc1).map_err(|e| e.to_string())?;
+        let par = run_schedule(&with_workers(&cfg, 2), &specs, &sc1).map_err(|e| e.to_string())?;
+        prop_assert!(
+            seq.makespan_s == par.makespan_s,
+            "{policy:?}: makespan {} vs {}",
+            par.makespan_s,
+            seq.makespan_s
+        );
+        for (a, b) in seq.jobs.iter().zip(&par.jobs) {
+            prop_assert!(
+                a.duration_s == b.duration_s && a.slowdown == b.slowdown,
+                "{policy:?} job {}: {}s/{} vs {}s/{}",
+                a.name,
+                b.duration_s,
+                b.slowdown,
+                a.duration_s,
+                a.slowdown
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_world_reset_reruns_identically() {
+    // Engine/runtime reset regression: after World::reset a multi-worker
+    // world replays the same random traffic to identical clocks, and the
+    // synchronizer counters restart from zero
+    let base = SystemConfig::rack();
+    forall("parallel world reset replays ps-exactly", 5, |rng| {
+        let cfg = with_workers(&base, 4);
+        let n = 32usize;
+        let mut w = World::with_model(cfg, n, Placement::PerCore, NetworkModel::Flow);
+        let ops: Vec<(usize, usize, usize)> = (0..12)
+            .map(|_| {
+                let src = rng.below(n as u64) as usize;
+                let dst = (src + 1 + rng.below(n as u64 - 1) as usize) % n;
+                (src, dst, 1 + rng.below(1 << 16) as usize)
+            })
+            .collect();
+        let run = |w: &mut World| {
+            let mut reqs = Vec::new();
+            for &(src, dst, bytes) in &ops {
+                reqs.push(progress::isend(w, src, dst, bytes));
+                reqs.push(progress::irecv(w, dst, src, bytes));
+            }
+            progress::wait_all(w, &reqs);
+            w.clocks.clone()
+        };
+        let first = run(&mut w);
+        let stats = w.par_stats().expect("parallel runtime attached");
+        prop_assert!(stats.ops > 0, "traffic must exercise the ledger");
+        w.reset();
+        let zeroed = w.par_stats().expect("parallel runtime attached");
+        prop_assert!(
+            zeroed.ops == 0 && zeroed.windows == 0,
+            "reset must zero the synchronizer counters: {zeroed:?}"
+        );
+        let second = run(&mut w);
+        prop_assert!(first == second, "replay diverged after reset");
+        Ok(())
+    });
+}
