@@ -22,6 +22,7 @@ use crate::errors::Result;
 use crate::mpi::{Placement, World};
 use crate::runtime::Executor;
 use crate::sim::{Engine, SimDuration, SimTime};
+use crate::telemetry::{SpanKind, Track};
 use crate::topology::{MpsocId, QfdbId};
 
 /// Arithmetic operations supported by the accelerator.
@@ -220,9 +221,20 @@ impl AccelAllreduce {
                         // vectors into its own.
                         let t0 = t + calib.accel_init + calib.accel_client_dma;
                         let p = world.fabric.route_cached(clients[qfdb], servers[qfdb]);
+                        world.fabric.set_trace_flow(qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t0, BLOCK_BYTES);
                         let r = arr + SimDuration(calib.accel_reduce_per_level.0 * 3);
                         ready[qfdb] = r;
+                        // accel span: client push + server-side reduce of
+                        // the QFDB's four vectors (aux = block bytes)
+                        world.progress.record_span(
+                            Track::Rank(servers[qfdb].0),
+                            SpanKind::Accel,
+                            qfdb as u64,
+                            t,
+                            r,
+                            BLOCK_BYTES as u64,
+                        );
                         if levels == 0 {
                             engine.post(r, AccelEvent::Broadcast { qfdb });
                         } else {
@@ -232,8 +244,19 @@ impl AccelAllreduce {
                     AccelEvent::Send { qfdb, level } => {
                         let partner = qfdb ^ (1usize << level);
                         let p = world.fabric.route_cached(servers[qfdb], servers[partner]);
+                        world.fabric.set_trace_flow(qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
                         engine.post(arr, AccelEvent::Arrive { qfdb: partner, level });
+                        // accel span: one level's partial on the wire to
+                        // the XOR partner (aux = level)
+                        world.progress.record_span(
+                            Track::Rank(servers[qfdb].0),
+                            SpanKind::Accel,
+                            qfdb as u64,
+                            t,
+                            arr,
+                            level as u64,
+                        );
                     }
                     AccelEvent::Arrive { qfdb, level } => {
                         if level != next_level[qfdb] {
@@ -264,8 +287,19 @@ impl AccelAllreduce {
                     }
                     AccelEvent::Broadcast { qfdb } => {
                         let p = world.fabric.route_cached(servers[qfdb], clients[qfdb]);
+                        world.fabric.set_trace_flow(qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
                         done[qfdb] = arr + calib.accel_client_dma + calib.accel_finish;
+                        // accel span: result broadcast + client memory
+                        // update / software notify
+                        world.progress.record_span(
+                            Track::Rank(servers[qfdb].0),
+                            SpanKind::Accel,
+                            qfdb as u64,
+                            t,
+                            done[qfdb],
+                            BLOCK_BYTES as u64,
+                        );
                     }
                 }
             }

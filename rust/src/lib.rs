@@ -39,6 +39,10 @@
 //! * [`model`] — the paper's Eq. 1 analytic broadcast model;
 //! * [`power`] — QFDB power + energy-efficiency model;
 //! * [`runtime`] — PJRT loader/executor for the AOT artifacts;
+//! * [`telemetry`] — the fabric flight recorder (per-message span
+//!   tracing exported as Perfetto-loadable Chrome trace JSON), windowed
+//!   link telemetry, and the unified [`telemetry::Summary`] counters
+//!   stamped into every `BENCH_*.json`;
 //! * [`report`] — table formatting for the reproduced figures;
 //! * [`bench`] — the no-deps micro-benchmark harness used by `cargo bench`
 //!   (emits `BENCH_*.json` for perf tracking);
@@ -59,6 +63,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod topology;
 pub mod xla;

@@ -15,6 +15,7 @@ use exanest::power;
 use exanest::report::{gbps, pct, us, Table};
 use exanest::sched::{self, Policy};
 use exanest::sim::SimDuration;
+use exanest::telemetry::{self, LinkSeries, SpanRec, Summary};
 use exanest::topology::SystemConfig;
 
 /// Strict CLI arguments: every `--flag` must be consumed by the global
@@ -75,6 +76,64 @@ impl Args {
     }
 }
 
+/// Global observability options: `--trace <path>` switches the flight
+/// recorder on and exports Chrome trace-event JSON (open the file in
+/// Perfetto or `chrome://tracing`) plus `<path>.series.csv` windowed
+/// link telemetry; `--telemetry` prints the window table and the torus
+/// link-utilisation heatmap.  Both are off by default — the untraced
+/// hot path records nothing and allocates nothing.
+#[derive(Clone, Default)]
+struct TraceOpts {
+    path: Option<String>,
+    telemetry: bool,
+}
+
+impl TraceOpts {
+    /// Flight-recorder capacity when tracing is requested: 1 Mi spans
+    /// (~40 MB resident) holds the acceptance scenario without
+    /// evictions; overflow drops oldest and is reported, never fatal.
+    const CAP: usize = 1 << 20;
+
+    fn active(&self) -> bool {
+        self.path.is_some() || self.telemetry
+    }
+}
+
+/// Write `--trace` artefacts and print `--telemetry` output for a
+/// finished traced run.  `heatmap` may be empty (no fabric at hand).
+fn export_observability(
+    trace: &TraceOpts,
+    records: &[SpanRec],
+    dropped: u64,
+    series: &LinkSeries,
+    heatmap: &str,
+) {
+    if let Some(path) = &trace.path {
+        if let Err(e) = telemetry::write_chrome_trace(path, records, dropped) {
+            eprintln!("could not write trace {path}: {e}");
+            std::process::exit(1);
+        }
+        let csv_path = format!("{path}.series.csv");
+        if let Err(e) = std::fs::write(&csv_path, telemetry::series_csv(series)) {
+            eprintln!("could not write {csv_path}: {e}");
+            std::process::exit(1);
+        }
+        println!(
+            "trace: {} spans ({dropped} dropped) -> {path}; {} telemetry windows -> {csv_path}\n",
+            records.len(),
+            series.len(),
+        );
+    }
+    if trace.telemetry {
+        println!("## Link telemetry windows\n");
+        print!("{}", telemetry::series_csv(series));
+        println!();
+        if !heatmap.is_empty() {
+            println!("{heatmap}");
+        }
+    }
+}
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let cmd: String = raw.first().cloned().unwrap_or_else(|| "help".to_string());
@@ -99,11 +158,12 @@ fn main() {
         // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
         // and `sched` adapt their rank lists to the machine, so they
         // smoke at any size.
-        const SMALL_OK: [&str; 7] = [
+        const SMALL_OK: [&str; 8] = [
             "hw-pingpong",
             "osu-mbw",
             "osu-incast",
             "osu-overlap",
+            "osu-allreduce",
             "router-hotspot",
             "scaling",
             "sched",
@@ -134,6 +194,17 @@ fn main() {
                 eprintln!("--workers needs a positive integer, got {w:?}");
                 std::process::exit(2);
             }
+        }
+    }
+    // Observability flags (see [`TraceOpts`]).  Only the commands that
+    // thread a `World` end to end can trace; anywhere else the flag is
+    // a usage error, not a silent no-op.
+    let trace = TraceOpts { path: args.value("--trace"), telemetry: args.flag("--telemetry") };
+    if trace.active() {
+        const TRACE_OK: [&str; 2] = ["osu-allreduce", "sched"];
+        if !TRACE_OK.contains(&cmd) {
+            eprintln!("--trace/--telemetry apply to: {}", TRACE_OK.join(", "));
+            std::process::exit(2);
         }
     }
     let model = match args.value("--network-model").as_deref() {
@@ -190,7 +261,7 @@ fn main() {
         }
         "osu-allreduce" => {
             args.finish(cmd);
-            osu_allreduce(&cfg, &model);
+            osu_allreduce(&cfg, &model, &trace);
         }
         "osu-mbw" => {
             args.finish(cmd);
@@ -245,7 +316,7 @@ fn main() {
             };
             let jobs = args.value("--jobs").unwrap_or_else(|| "synthetic".to_string());
             args.finish(cmd);
-            sched_cmd(&cfg, &model, policy, &jobs);
+            sched_cmd(&cfg, &model, policy, &jobs, &trace);
         }
         "ip-overlay" => {
             args.finish(cmd);
@@ -263,7 +334,7 @@ fn main() {
             osu_bw(&cfg, &model, false);
             osu_bw(&cfg, &model, true);
             osu_bcast(&cfg);
-            osu_allreduce(&cfg, &model);
+            osu_allreduce(&cfg, &model, &trace);
             osu_mbw(&cfg, &model);
             osu_incast(&cfg, &model);
             osu_overlap(&cfg);
@@ -272,7 +343,7 @@ fn main() {
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
             scaling_cmd(&cfg, "all", &model, Backend::Software, scaling::HaloSchedule::DimStaged);
-            sched_cmd(&cfg, &model, Policy::Compact, "synthetic");
+            sched_cmd(&cfg, &model, Policy::Compact, "synthetic", &trace);
             matmul_accel();
         }
         _ => {
@@ -313,6 +384,11 @@ fn main() {
                  \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling\n\
                  \t--policy         compact | best-fit | scattered: sched placement policy\n\
                  \t--jobs           sched job stream: a trace file path, or `synthetic`\n\
+                 \t--trace          <path> write a Chrome/Perfetto trace of the run (plus\n\
+                 \t                 <path>.series.csv link telemetry) — osu-allreduce, sched\n\
+                 \t--telemetry      print windowed link utilisation + torus heatmap for the\n\
+                 \t                 same commands; tracing is off by default and the untraced\n\
+                 \t                 path records nothing\n\
                  unknown --flags are rejected (no silent ignoring)"
             );
             std::process::exit(2);
@@ -418,7 +494,7 @@ fn osu_bcast(cfg: &SystemConfig) {
     println!("{}", t.render());
 }
 
-fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
+fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel, trace: &TraceOpts) {
     // The flow model reproduces Fig 17 in full; the cell-level mesh runs
     // a focused rack-scale sweep (256-rank 1 MiB is the CI perf-smoke
     // acceptance scenario — every RDMA block of every round is simulated
@@ -452,13 +528,18 @@ fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
     // wall-clock events/sec into BENCH_allreduce_w<N>.json — CI runs
     // this at --workers 1 and --workers 4 and compares both the
     // simulated latency (must be identical) and the speedup.
-    if !matches!(model, NetworkModel::Flow) {
+    if !matches!(model, NetworkModel::Flow) || trace.active() {
         let n = 256.min(cfg.num_cores());
         let bytes = 1 << 20;
         let start = std::time::Instant::now();
         let mut w = World::with_model(cfg.clone(), n, Placement::PerCore, model.clone());
+        if trace.active() {
+            w.enable_tracing(TraceOpts::CAP);
+        }
         let (lat, _) = collectives::allreduce_via(&mut w, bytes, Backend::Software);
         let wall = start.elapsed().as_secs_f64();
+        // close the (single) telemetry window at the simulated end time
+        w.fabric.sample_telemetry(w.max_clock());
         let events = w.progress.events_processed();
         let mut suite = Suite::new(&format!("allreduce_w{}", cfg.sim_workers));
         suite.stamp(cfg);
@@ -470,13 +551,9 @@ fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
         suite.metric("events", events as f64, "count");
         suite.metric("wall_s", wall, "s");
         suite.metric("events_per_sec", events as f64 / wall.max(1e-9), "ev/s");
-        if let Some(ps) = w.par_stats() {
-            suite.metric("par/ops", ps.ops as f64, "count");
-            suite.metric("par/windows", ps.windows as f64, "count");
-            suite.metric("par/components", ps.components as f64, "count");
-            suite.metric("par/shipped", ps.shipped as f64, "count");
-            suite.metric("par/bounds_sent", ps.bounds_sent as f64, "count");
-        }
+        // the unified counter surface (subsumes the old ad-hoc par/*
+        // stamping; DESIGN.md §13)
+        Summary::collect(&w).stamp(&mut suite);
         println!(
             "measured pass: {n}-rank {bytes} B allreduce = {:.1} us simulated, \
              {events} events in {wall:.3} s wall ({:.0} events/sec, {} workers)\n",
@@ -486,6 +563,16 @@ fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel) {
         );
         if let Err(e) = suite.write_json() {
             eprintln!("could not write BENCH_allreduce_w{}.json: {e}", cfg.sim_workers);
+        }
+        if trace.active() {
+            let heat = telemetry::torus_heatmap(&w.fabric, SimDuration(w.max_clock().0));
+            export_observability(
+                trace,
+                &w.trace_records(),
+                w.trace_dropped(),
+                w.fabric.telemetry(),
+                &heat,
+            );
         }
     }
 }
@@ -825,7 +912,13 @@ fn accel_vs_software(cfg: &SystemConfig, model: &NetworkModel) -> Vec<(usize, us
 /// admitted jobs concurrently on one shared fabric, and report per-job
 /// interference (slowdown vs the same job alone) plus rack-level
 /// makespan/utilization/fragmentation/power.  Stamps BENCH_sched.json.
-fn sched_cmd(cfg: &SystemConfig, model: &NetworkModel, policy: Policy, jobs_arg: &str) {
+fn sched_cmd(
+    cfg: &SystemConfig,
+    model: &NetworkModel,
+    policy: Policy,
+    jobs_arg: &str,
+    trace: &TraceOpts,
+) {
     let specs = if jobs_arg == "synthetic" {
         sched::synthetic_jobs(cfg)
     } else {
@@ -838,7 +931,10 @@ fn sched_cmd(cfg: &SystemConfig, model: &NetworkModel, policy: Policy, jobs_arg:
             std::process::exit(2);
         })
     };
-    let sc = sched::SchedConfig::new(policy, model.clone());
+    let mut sc = sched::SchedConfig::new(policy, model.clone());
+    if trace.active() {
+        sc.trace_cap = TraceOpts::CAP;
+    }
     let out = sched::run_schedule(cfg, &specs, &sc).unwrap_or_else(|e| {
         eprintln!("sched failed: {e}");
         std::process::exit(1);
@@ -903,8 +999,13 @@ fn sched_cmd(cfg: &SystemConfig, model: &NetworkModel, policy: Policy, jobs_arg:
         suite.metric(&format!("job/{}/wait_s", j.name), j.wait_s(), "s");
         suite.metric(&format!("job/{}/comm_fraction", j.name), j.comm_fraction, "frac");
     }
+    // the shared world's unified counters (DESIGN.md §13)
+    out.summary.stamp(&mut suite);
     if let Err(e) = suite.write_json() {
         eprintln!("could not write BENCH_sched.json: {e}");
+    }
+    if trace.active() {
+        export_observability(trace, &out.trace_records, out.trace_dropped, &out.series, "");
     }
 }
 

@@ -13,6 +13,7 @@ use super::progress;
 use super::pt2pt;
 use super::world::World;
 use crate::sim::{SimDuration, SimTime};
+use crate::telemetry::{SpanKind, Track};
 
 /// One communication step of a schedule: concurrent (src, dst) pairs.
 pub type Step = Vec<(usize, usize)>;
@@ -60,6 +61,45 @@ pub fn recursive_doubling_schedule(nranks: usize) -> Vec<Vec<(usize, usize)>> {
 pub const BCAST_LONG_MSG: usize = 12 * 1024;
 pub const BCAST_VERY_LONG_MSG: usize = 128 * 1024;
 
+/// Close one [`SpanKind::Collective`] span per world rank: `start` → the
+/// rank's clock at return.  `flow` is the call's start instant, which is
+/// unique per call on a given world timeline, so Perfetto can group the
+/// per-rank lanes of one collective.  One branch when tracing is off.
+fn span_collective(world: &mut World, start: SimTime, bytes: usize) {
+    if !world.tracing_enabled() {
+        return;
+    }
+    for r in 0..world.nranks() {
+        let end = world.clocks[r];
+        world.progress.record_span(
+            Track::Rank(r as u32),
+            SpanKind::Collective,
+            start.0,
+            start,
+            end,
+            bytes as u64,
+        );
+    }
+}
+
+/// [`span_collective`] restricted to a communicator subgroup.
+fn span_collective_group(world: &mut World, group: &[usize], start: SimTime, bytes: usize) {
+    if !world.tracing_enabled() {
+        return;
+    }
+    for &r in group {
+        let end = world.clocks[r];
+        world.progress.record_span(
+            Track::Rank(r as u32),
+            SpanKind::Collective,
+            start.0,
+            start,
+            end,
+            bytes as u64,
+        );
+    }
+}
+
 /// Post one schedule step of one-way messages (payload chosen per pair)
 /// nonblocking, then wait for all of them.
 fn run_pair_step(world: &mut World, step: &Step, bytes_of: impl Fn(usize, usize) -> usize) {
@@ -100,6 +140,7 @@ pub fn bcast(world: &mut World, bytes: usize) -> SimDuration {
         for step in bcast_schedule(n) {
             run_pair_step(world, &step, |_, _| bytes);
         }
+        span_collective(world, start, bytes);
         return world.max_clock() - start;
     }
     // ---- scatter (binomial, halving sizes) -----------------------------
@@ -125,6 +166,7 @@ pub fn bcast(world: &mut World, bytes: usize) -> SimDuration {
             run_pair_step(world, &ring, |_, _| chunk);
         }
     }
+    span_collective(world, start, bytes);
     world.max_clock() - start
 }
 
@@ -247,6 +289,7 @@ pub fn allreduce_group(world: &mut World, group: &[usize], bytes: usize) -> SimD
     for &r in group {
         world.clocks[r] += memcpy;
     }
+    span_collective_group(world, group, start, bytes);
     group_max_clock(world, group) - start
 }
 
@@ -334,6 +377,7 @@ pub fn reduce(world: &mut World, bytes: usize) -> SimDuration {
             world.clocks[parent] += red;
         }
     }
+    span_collective(world, start, bytes);
     world.max_clock() - start
 }
 
@@ -353,6 +397,7 @@ pub fn barrier(world: &mut World) -> SimDuration {
         run_pair_step(world, &ring, |_, _| 0);
         mask <<= 1;
     }
+    span_collective(world, start, 0);
     world.max_clock() - start
 }
 
@@ -365,6 +410,7 @@ pub fn allgather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
         run_exchange_step(world, &step, chunk);
         chunk *= 2;
     }
+    span_collective(world, start, bytes_per_rank);
     world.max_clock() - start
 }
 
@@ -382,6 +428,7 @@ pub fn gather(world: &mut World, bytes_per_rank: usize) -> SimDuration {
         run_pair_step(world, &flipped, |child, _| bytes_per_rank * mask.min(n - child));
         mask >>= 1;
     }
+    span_collective(world, start, bytes_per_rank);
     world.max_clock() - start
 }
 
@@ -394,6 +441,7 @@ pub fn scatter(world: &mut World, bytes_per_rank: usize) -> SimDuration {
     for step in bcast_schedule(n) {
         run_pair_step(world, &step, |_, dst| bytes_per_rank * subtree_size(dst, n));
     }
+    span_collective(world, start, bytes_per_rank);
     world.max_clock() - start
 }
 
@@ -421,6 +469,7 @@ pub fn alltoall(world: &mut World, bytes_per_rank: usize) -> SimDuration {
         progress::wait_all(world, &reqs);
         world.progress.recycle();
     }
+    span_collective(world, start, bytes_per_rank);
     world.max_clock() - start
 }
 

@@ -61,6 +61,7 @@ use crate::ni::rdma::{self, Pacing};
 use crate::sim::partition::{self, PartitionMap};
 use crate::sim::sync::{channel, Receiver, Sender};
 use crate::sim::{SimDuration, SimTime};
+use crate::telemetry::RouteCounters;
 use crate::topology::{Path, SystemConfig};
 
 /// Which fabric operation a ledger entry defers.
@@ -138,6 +139,7 @@ struct Done {
     results: Vec<OpResult>,
     mesh_processed: u64,
     mesh_peak: usize,
+    mesh_route: RouteCounters,
 }
 
 struct WorkerHandle {
@@ -175,6 +177,7 @@ impl std::fmt::Debug for ParallelRuntime {
 }
 
 fn execute_op(fab: &mut Fabric, op: &LedgerOp) -> OpResult {
+    fab.set_trace_flow(op.req as u64);
     match op.kind {
         OpKind::Eager => {
             let e = packetizer::eager_send(fab, &op.path, op.at, op.bytes);
@@ -214,7 +217,12 @@ fn worker_loop(cfg: SystemConfig, model: NetworkModel, rx: Receiver<ToWorker>, t
                     .collect();
                 fab.refresh_slice(&mut job.slice);
                 let (mesh_processed, mesh_peak) = fab.mesh_counters();
-                if tx.send(Done { slice: job.slice, results, mesh_processed, mesh_peak }).is_err() {
+                // reset_mesh_counters above zeroed the route counters too,
+                // so the cumulative readout IS the per-window delta.
+                let mesh_route = fab.mesh_route_counters();
+                let done =
+                    Done { slice: job.slice, results, mesh_processed, mesh_peak, mesh_route };
+                if tx.send(done).is_err() {
                     break; // runtime dropped mid-window: nothing to report to
                 }
             }
@@ -419,6 +427,7 @@ impl ParallelRuntime {
                         self.workers[k].rx.recv().expect("partition worker exited mid-window");
                     fab.import_slice(&done.slice);
                     fab.fold_mesh_counters(done.mesh_processed, done.mesh_peak);
+                    fab.fold_mesh_route(done.mesh_route);
                     for (slot, &i) in members[c].iter().enumerate() {
                         results[i] = Some(done.results[slot]);
                     }

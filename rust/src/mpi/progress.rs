@@ -38,6 +38,7 @@ use super::world::World;
 use crate::network::Fabric;
 use crate::ni::{packetizer, rdma, Pacing};
 use crate::sim::{Engine, SimDuration, SimTime};
+use crate::telemetry::{Recorder, SpanKind, SpanRec, Track};
 use crate::topology::Path;
 
 /// Handle to a posted nonblocking operation.  Carries the progress
@@ -137,11 +138,46 @@ impl Progress {
         Progress::default()
     }
 
-    /// Drop all requests and pending events (fresh experiment).
+    /// Drop all requests and pending events (fresh experiment).  The
+    /// flight recorder survives — still enabled, records cleared — so a
+    /// traced world stays traced across `World::reset`.
     pub fn reset(&mut self) {
         let gen = self.gen + 1;
+        let mut trace = std::mem::take(&mut self.engine.trace);
+        trace.clear();
         *self = Progress::default();
         self.gen = gen;
+        self.engine.trace = trace;
+    }
+
+    /// Arm the flight recorder (ring of `cap` spans, drop-oldest).
+    pub fn enable_tracing(&mut self, cap: usize) {
+        self.engine.trace.enable(cap);
+    }
+
+    /// The progress engine's flight recorder (MPI / protocol spans).
+    pub fn trace(&self) -> &Recorder {
+        &self.engine.trace
+    }
+
+    /// Clone out the retained spans, oldest first (non-destructive).
+    pub fn trace_records(&self) -> Vec<SpanRec> {
+        self.engine.trace.records().copied().collect()
+    }
+
+    /// Record a span into the progress recorder — for the layers above
+    /// (collectives, accelerator dispatch, scheduler) that trace onto
+    /// the same timeline.  One branch when tracing is off.
+    pub fn record_span(
+        &mut self,
+        track: Track,
+        kind: SpanKind,
+        flow: u64,
+        t0: SimTime,
+        t1: SimTime,
+        aux: u64,
+    ) {
+        self.engine.trace.span(track, kind, flow, t0, t1, aux);
     }
 
     /// Requests posted but not yet completed.
@@ -183,7 +219,28 @@ impl Progress {
 
     fn mark_consumed(&mut self, req: Request) {
         debug_assert_eq!(req.gen, self.gen);
+        if self.reqs[req.id].consumed {
+            return;
+        }
         self.reqs[req.id].consumed = true;
+        // The whole-operation span closes here: the owner just observed
+        // the completion, so [posted_at, done] is final.
+        let r = &self.reqs[req.id];
+        if let Some(done) = r.done {
+            let kind = match r.dir {
+                DirKind::Send => SpanKind::SendOp,
+                DirKind::Recv => SpanKind::RecvOp,
+                DirKind::Compute => SpanKind::Compute,
+            };
+            self.engine.trace.span(
+                Track::Rank(r.rank as u32),
+                kind,
+                req.id as u64,
+                r.posted_at,
+                done,
+                r.bytes as u64,
+            );
+        }
     }
 
     fn done_time(&self, req: Request) -> Option<SimTime> {
@@ -256,7 +313,16 @@ impl Progress {
             // The send may already have progressed past the point where it
             // needed this receive: complete or resume it now.
             if let Some(arr) = self.reqs[sid].eager_arrival {
-                self.reqs[id].done = Some(arr.max(at) + mpi_sw);
+                let start = arr.max(at);
+                self.reqs[id].done = Some(start + mpi_sw);
+                self.engine.trace.span(
+                    Track::Rank(dst as u32),
+                    SpanKind::RecvLib,
+                    id as u64,
+                    start,
+                    start + mpi_sw,
+                    bytes as u64,
+                );
             } else if let Some(rts) = self.reqs[sid].rts_arrival {
                 self.engine.post(rts.max(at + mpi_sw), MpiEvent::CtsSend(sid));
             }
@@ -366,23 +432,87 @@ impl Progress {
         }
     }
 
+    /// NI hand-off + wire spans of one eager transfer.  Called with the
+    /// same `(hw_start, cpu_free, visible)` triple from the inline arm
+    /// and from [`Progress::flush`], so traces are identical at any
+    /// worker count.
+    fn span_eager(
+        &mut self,
+        rank: usize,
+        id: usize,
+        hw_start: SimTime,
+        cpu_free: SimTime,
+        visible: SimTime,
+        bytes: usize,
+    ) {
+        let track = Track::Rank(rank as u32);
+        self.engine.trace.span(track, SpanKind::Ni, id as u64, hw_start, cpu_free, bytes as u64);
+        self.engine.trace.span(
+            track,
+            SpanKind::EagerWire,
+            id as u64,
+            cpu_free,
+            visible,
+            bytes as u64,
+        );
+    }
+
+    /// Receiver-side library completion span of request `rid`.
+    fn span_recv_lib(&mut self, rid: usize, start: SimTime, done: SimTime) {
+        let (rank, bytes) = (self.reqs[rid].rank, self.reqs[rid].bytes);
+        self.engine.trace.span(
+            Track::Rank(rank as u32),
+            SpanKind::RecvLib,
+            rid as u64,
+            start,
+            done,
+            bytes as u64,
+        );
+    }
+
     /// Commit the parallel runtime's open window: execute every deferred
     /// fabric operation (concurrently across disjoint partition
     /// components) and post each follow-up event at its *reserved*
     /// sequence number — reproducing the single-threaded post order,
     /// including equal-timestamp tie-breaks, exactly.
+    ///
+    /// Span recording mirrors the inline arms value-for-value (the op's
+    /// `at` is the same hardware hand-off instant the inline call used),
+    /// so a trace taken at 4 workers equals the 1-worker trace except
+    /// for the [`Track::Par`] window markers.
     fn flush(&mut self, fab: &mut Fabric, par: &mut ParallelRuntime) {
-        for (op, res) in par.execute_window(fab) {
+        let window = par.execute_window(fab);
+        let (n_ops, mut last_at) = (window.len() as u64, SimTime::ZERO);
+        for (op, res) in window {
+            last_at = last_at.max(op.at);
             match (op.kind, res) {
                 (OpKind::Eager, OpResult::Eager { cpu_free, visible }) => {
                     self.reqs[op.req].done = Some(cpu_free);
                     self.engine.post_at_seq(visible, op.seq, MpiEvent::EagerArrive(op.req));
+                    let rank = self.reqs[op.req].rank;
+                    self.span_eager(rank, op.req, op.at, cpu_free, visible, op.bytes);
                 }
                 (OpKind::Rts, OpResult::Arrival(arr)) => {
                     self.engine.post_at_seq(arr, op.seq, MpiEvent::RtsArrive(op.req));
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[op.req].rank as u32),
+                        SpanKind::Rts,
+                        op.req as u64,
+                        op.at,
+                        arr,
+                        op.bytes as u64,
+                    );
                 }
                 (OpKind::Cts, OpResult::Arrival(arr)) => {
                     self.engine.post_at_seq(arr, op.seq, MpiEvent::CtsArrive(op.req));
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[op.req].peer as u32),
+                        SpanKind::Cts,
+                        op.req as u64,
+                        op.at,
+                        arr,
+                        op.bytes as u64,
+                    );
                 }
                 (OpKind::Rdma, OpResult::Rdma { src_done, notif_visible }) => {
                     self.reqs[op.req].done = Some(src_done);
@@ -391,9 +521,20 @@ impl Progress {
                         op.seq,
                         MpiEvent::DataDelivered(op.req),
                     );
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[op.req].rank as u32),
+                        SpanKind::Rdma,
+                        op.req as u64,
+                        op.at,
+                        notif_visible,
+                        op.bytes as u64,
+                    );
                 }
                 (kind, res) => unreachable!("mismatched window result {res:?} for {kind:?}"),
             }
+        }
+        if n_ops > 0 {
+            self.engine.trace.instant(Track::Par, SpanKind::ParWindow, 0, last_at, n_ops);
         }
     }
 
@@ -422,20 +563,32 @@ impl Progress {
     ) {
         match ev {
             MpiEvent::SendStart(id) => {
-                let (fwd, bytes, protocol) = {
+                let (fwd, bytes, protocol, rank) = {
                     let r = &self.reqs[id];
-                    (r.fwd.expect("send has a route"), r.bytes, r.protocol)
+                    (r.fwd.expect("send has a route"), r.bytes, r.protocol, r.rank)
                 };
                 let mpi_sw = fab.calib().mpi_sw;
+                // The library-processing span is path-independent: record
+                // it here whether the fabric op runs inline or deferred.
+                self.engine.trace.span(
+                    Track::Rank(rank as u32),
+                    SpanKind::Lib,
+                    id as u64,
+                    t,
+                    t + mpi_sw,
+                    bytes as u64,
+                );
                 match protocol {
                     Protocol::Eager => {
                         if let Some(p) = par {
                             let seq = self.engine.reserve_seq();
                             p.record(OpKind::Eager, fwd, bytes, id, seq, t + mpi_sw);
                         } else {
+                            fab.set_trace_flow(id as u64);
                             let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
                             self.reqs[id].done = Some(e.cpu_free);
                             self.engine.post(e.visible, MpiEvent::EagerArrive(id));
+                            self.span_eager(rank, id, t + mpi_sw, e.cpu_free, e.visible, bytes);
                         }
                     }
                     Protocol::Rendezvous => {
@@ -450,6 +603,7 @@ impl Progress {
                                 t + mpi_sw,
                             );
                         } else {
+                            fab.set_trace_flow(id as u64);
                             let arr = packetizer::send_small(
                                 fab,
                                 &fwd,
@@ -457,6 +611,14 @@ impl Progress {
                                 rdma::HANDSHAKE_BYTES,
                             );
                             self.engine.post(arr, MpiEvent::RtsArrive(id));
+                            self.engine.trace.span(
+                                Track::Rank(rank as u32),
+                                SpanKind::Rts,
+                                id as u64,
+                                t + mpi_sw,
+                                arr,
+                                rdma::HANDSHAKE_BYTES as u64,
+                            );
                         }
                     }
                 }
@@ -466,7 +628,9 @@ impl Progress {
                 match self.reqs[id].partner {
                     Some(rid) => {
                         let tr = self.reqs[rid].posted_at;
-                        self.reqs[rid].done = Some(t.max(tr) + mpi_sw);
+                        let start = t.max(tr);
+                        self.reqs[rid].done = Some(start + mpi_sw);
+                        self.span_recv_lib(rid, start, start + mpi_sw);
                     }
                     None => self.reqs[id].eager_arrival = Some(t),
                 }
@@ -488,9 +652,19 @@ impl Progress {
                     let seq = self.engine.reserve_seq();
                     p.record(OpKind::Cts, back, rdma::HANDSHAKE_BYTES, id, seq, t + cts_sw);
                 } else {
+                    fab.set_trace_flow(id as u64);
                     let arr =
                         packetizer::send_small(fab, &back, t + cts_sw, rdma::HANDSHAKE_BYTES);
                     self.engine.post(arr, MpiEvent::CtsArrive(id));
+                    // the CTS runs on the receiver's timeline
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[id].peer as u32),
+                        SpanKind::Cts,
+                        id as u64,
+                        t + cts_sw,
+                        arr,
+                        rdma::HANDSHAKE_BYTES as u64,
+                    );
                 }
             }
             MpiEvent::CtsArrive(id) => {
@@ -500,11 +674,20 @@ impl Progress {
                     let seq = self.engine.reserve_seq();
                     p.record(OpKind::Rdma, fwd, bytes, id, seq, t);
                 } else {
+                    fab.set_trace_flow(id as u64);
                     let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
                     // Sender may reuse sbuf once its engine is done (the final
                     // E2E ACK overlaps with the next operation).
                     self.reqs[id].done = Some(c.src_done);
                     self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[id].rank as u32),
+                        SpanKind::Rdma,
+                        id as u64,
+                        t,
+                        c.notif_visible,
+                        bytes as u64,
+                    );
                 }
             }
             MpiEvent::DataDelivered(id) => {
@@ -513,7 +696,9 @@ impl Progress {
                     .partner
                     .expect("rendez-vous data delivered without a matched receive");
                 let tr = self.reqs[rid].posted_at;
-                self.reqs[rid].done = Some(t.max(tr) + mpi_sw);
+                let start = t.max(tr);
+                self.reqs[rid].done = Some(start + mpi_sw);
+                self.span_recv_lib(rid, start, start + mpi_sw);
             }
             MpiEvent::ComputeDone(id) => {
                 self.reqs[id].done = Some(t);

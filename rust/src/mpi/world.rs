@@ -290,6 +290,39 @@ impl World {
         }
     }
 
+    /// Arm the fabric flight recorder: MPI/protocol spans on the
+    /// progress engine, per-hop spans on the cell mesh (if any), and the
+    /// windowed link-telemetry series.  `cap` is the per-recorder ring
+    /// capacity (drop-oldest on overflow).  Off by default; the disabled
+    /// path costs one branch per span site and allocates nothing.
+    pub fn enable_tracing(&mut self, cap: usize) {
+        self.progress.enable_tracing(cap);
+        self.fabric.enable_tracing(cap);
+    }
+
+    /// Is the flight recorder armed?
+    pub fn tracing_enabled(&self) -> bool {
+        self.progress.trace().is_enabled()
+    }
+
+    /// All retained spans — progress-engine records merged with the cell
+    /// mesh's hop records — sorted by `(t0, t1, track, kind, ...)` for a
+    /// deterministic export order.  Non-destructive.
+    pub fn trace_records(&self) -> Vec<crate::telemetry::SpanRec> {
+        let mut recs = self.progress.trace_records();
+        if let Some(mesh) = self.fabric.mesh() {
+            recs.extend(mesh.trace().records().copied());
+        }
+        recs.sort_unstable();
+        recs
+    }
+
+    /// Spans evicted across all recorders (history lost to the rings).
+    pub fn trace_dropped(&self) -> u64 {
+        self.progress.trace().dropped()
+            + self.fabric.mesh().map_or(0, |m| m.trace().dropped())
+    }
+
     /// Parallel-runtime counters (windows, components, shipped ops, null
     /// messages), or `None` in single-threaded mode.  Benches stamp
     /// these into BENCH_parallel.json.

@@ -19,6 +19,7 @@ use super::router::{NetworkModel, RouterMesh};
 use super::switch::CreditedLink;
 use crate::sim::partition::RegionIndex;
 use crate::sim::{RateResource, Resource, SimDuration, SimTime};
+use crate::telemetry::{LinkSeries, RouteCounters};
 use crate::topology::{route, Calib, LinkId, MpsocId, Path, SystemConfig, Topology};
 
 /// A snapshot of all occupancy state owned by one partition region
@@ -67,6 +68,9 @@ pub struct Fabric {
     /// resources (memory channels and R5 stay shared — they model the
     /// endpoints, not the interconnect).
     mesh: Option<RouterMesh>,
+    /// Windowed link telemetry (off by default; sampled by diffing the
+    /// cumulative busy counters above, so it cannot perturb timing).
+    series: LinkSeries,
 }
 
 impl Fabric {
@@ -105,7 +109,17 @@ impl Fabric {
                 Some(RouterMesh::new(topo.clone(), policy, faults))
             }
         };
-        Fabric { topo, links, mem_rd, mem_wr, r5, ctrl, path_cache, mesh }
+        Fabric {
+            topo,
+            links,
+            mem_rd,
+            mem_wr,
+            r5,
+            ctrl,
+            path_cache,
+            mesh,
+            series: LinkSeries::disabled(),
+        }
     }
 
     pub fn cfg(&self) -> &SystemConfig {
@@ -209,6 +223,20 @@ impl Fabric {
         self.mesh.as_ref().map_or((0, 0), |m| (m.events_processed(), m.peak_queue_depth()))
     }
 
+    /// The mesh's cumulative routing/stall counters — all zeros on the
+    /// flow model.
+    pub(crate) fn mesh_route_counters(&self) -> RouteCounters {
+        self.mesh.as_ref().map_or_else(RouteCounters::default, |m| m.route_counters())
+    }
+
+    /// Fold a replica's per-window routing/stall counters into this
+    /// fabric's mesh (no-op on the flow model).
+    pub(crate) fn fold_mesh_route(&mut self, rc: RouteCounters) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.add_external_route(rc);
+        }
+    }
+
     /// Zero the mesh engine's counters (worker replicas do this before
     /// each window so the per-window delta folds back exactly once).
     pub(crate) fn reset_mesh_counters(&mut self) {
@@ -224,6 +252,61 @@ impl Fabric {
         if let Some(mesh) = &mut self.mesh {
             mesh.add_external_events(processed, peak);
         }
+    }
+
+    // ---- flight recorder / link telemetry --------------------------------
+
+    /// Arm per-hop span tracing on the cell mesh (`cap` = ring-buffer
+    /// capacity) and windowed link telemetry.  No-op parts degrade
+    /// gracefully: the flow model has no hop spans, only windows.
+    pub fn enable_tracing(&mut self, cap: usize) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.enable_tracing(cap);
+        }
+        self.enable_telemetry();
+    }
+
+    /// Arm only the windowed link-utilization series.
+    pub fn enable_telemetry(&mut self) {
+        self.series.enable(LinkId::slots(&self.topo.cfg));
+    }
+
+    /// The sampled link-telemetry series (empty unless armed).
+    pub fn telemetry(&self) -> &LinkSeries {
+        &self.series
+    }
+
+    /// Tag subsequent mesh hop spans with the MPI request id that is
+    /// driving them (no-op on the flow model or when tracing is off).
+    pub fn set_trace_flow(&mut self, flow: u64) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.set_trace_flow(flow);
+        }
+    }
+
+    /// Close a telemetry window at `now`: diff the cumulative per-link
+    /// busy counters (bulk + ctrl lanes) against the previous sample and
+    /// append a [`telemetry::WindowRow`](crate::telemetry::WindowRow).
+    /// Reads counters the simulation maintains anyway, so sampling can
+    /// never perturb timing; no-op (and alloc-free) unless armed.
+    pub fn sample_telemetry(&mut self, now: SimTime) {
+        if !self.series.is_enabled() {
+            return;
+        }
+        let n = LinkId::slots(&self.topo.cfg);
+        let mut busy = vec![SimDuration::ZERO; n];
+        let mut ctrl = vec![SimDuration::ZERO; n];
+        for (i, (b, c)) in busy.iter_mut().zip(ctrl.iter_mut()).enumerate() {
+            let (bt, ct) = match &self.mesh {
+                Some(m) => m.link_stats_flat(i),
+                None => (self.links[i].busy_time(), self.ctrl[i].busy_time()),
+            };
+            *b = bt;
+            *c = ct;
+        }
+        let route = self.mesh_route_counters();
+        let peak = self.mesh.as_ref().map_or(0, |m| m.peak_queue_depth());
+        self.series.sample(now, &busy, &ctrl, route, peak);
     }
 
     /// Reset all occupancy (fresh experiment, same hardware).  Busy/use
@@ -250,6 +333,10 @@ impl Fabric {
         if let Some(mesh) = &mut self.mesh {
             mesh.reset();
         }
+        // The window baselines mirror the cumulative busy counters just
+        // zeroed above: clear them together or the next sampled window
+        // would diff against pre-reset occupancy.
+        self.series.clear();
     }
 
     /// Every cached path still equals a fresh route computation (the

@@ -76,11 +76,13 @@
 //! instead of store-and-forwarding per hop — see DESIGN.md §8 for the
 //! calibration table.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use super::cell::CellSizes;
 use super::switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};
 use crate::sim::{Engine, InlineVec, SimDuration, SimTime};
+use crate::telemetry::{Recorder, RouteCounters, SpanKind, Track};
 use crate::topology::{Dir, LinkId, MpsocId, QfdbId, Topology, NETWORK_FPGA};
 
 /// How the mesh routes bulk cells.
@@ -285,6 +287,19 @@ pub struct RouterMesh {
     /// across calls; entry h holds the downstream dequeue times that free
     /// hop h's buffer slots, in cell order).
     rel_rings: Vec<VecDeque<SimTime>>,
+    /// Flow id stamped onto hop spans recorded from this call on
+    /// (threaded down from the MPI layer via
+    /// [`crate::network::Fabric::set_trace_flow`]).
+    trace_flow: u64,
+    /// Routing-decision counters (always on — plain integer increments;
+    /// `Cell` because the shared decision helpers take `&self`).
+    route_adaptive: Cell<u64>,
+    route_dor: Cell<u64>,
+    route_reroutes: Cell<u64>,
+    /// Credit-stall counters (cells that found their output out of
+    /// credits, and the total time spent blocked waiting for one).
+    credit_stalls: u64,
+    stall_time: SimDuration,
     // Calibration scalars (copied out of Calib; see the module docs).
     sw_lat: SimDuration,
     rt_lat: SimDuration,
@@ -322,6 +337,12 @@ impl RouterMesh {
             inject_links: Vec::new(),
             batching: true,
             rel_rings: Vec::new(),
+            trace_flow: 0,
+            route_adaptive: Cell::new(0),
+            route_dor: Cell::new(0),
+            route_reroutes: Cell::new(0),
+            credit_stalls: 0,
+            stall_time: SimDuration::ZERO,
             sw_lat: calib.switch_latency,
             rt_lat: calib.router_latency,
             ln_lat: calib.link_latency,
@@ -367,6 +388,48 @@ impl RouterMesh {
         self.links[link.flat(&self.topo.cfg)].busy_stats()
     }
 
+    /// Bulk-wire and control-lane busy time of a link by flat index (the
+    /// windowed-telemetry sampler walks every flat slot).
+    pub fn link_stats_flat(&self, flat: usize) -> (SimDuration, SimDuration) {
+        (self.links[flat].busy_stats().0, self.links[flat].ctrl_stats().0)
+    }
+
+    /// Cumulative routing-decision and credit-stall counters.  The
+    /// per-cell event path counts exactly; a batched cell train books its
+    /// forced decisions as `cells × torus hops` dimension-order picks
+    /// (the decisions the event path would have made).  Diagnostic
+    /// [`RouterMesh::probe_route`] walks are not counted.
+    pub fn route_counters(&self) -> RouteCounters {
+        RouteCounters {
+            adaptive: self.route_adaptive.get(),
+            dor: self.route_dor.get(),
+            reroutes: self.route_reroutes.get(),
+            credit_stalls: self.credit_stalls,
+            stall_time: self.stall_time,
+        }
+    }
+
+    /// The mesh's flight recorder (per-hop link-occupancy spans).
+    pub fn trace(&self) -> &Recorder {
+        &self.engine.trace
+    }
+
+    /// Start recording per-hop spans into a ring of `cap` records.
+    pub fn enable_tracing(&mut self, cap: usize) {
+        self.engine.trace.enable(cap);
+    }
+
+    /// Move the retained hop spans out (oldest first).
+    pub fn take_trace_records(&mut self) -> Vec<crate::telemetry::SpanRec> {
+        self.engine.trace.take_records()
+    }
+
+    /// Stamp hop spans recorded from here on with `flow` (the MPI
+    /// request id driving the current transfer).
+    pub fn set_trace_flow(&mut self, flow: u64) {
+        self.trace_flow = flow;
+    }
+
     // ---- partition state shipping (DESIGN.md §12) ------------------------
 
     /// Append `(index, link)` snapshots of the named credited links.
@@ -390,11 +453,16 @@ impl RouterMesh {
         }
     }
 
-    /// Zero the event counters (worker replicas call this before each
-    /// window so per-window deltas fold back exactly once).
+    /// Zero the event and routing counters (worker replicas call this
+    /// before each window so per-window deltas fold back exactly once).
     pub(crate) fn reset_counters(&mut self) {
         debug_assert_eq!(self.live, 0, "counter reset with cells in flight");
         self.engine.reset_counters();
+        self.route_adaptive.set(0);
+        self.route_dor.set(0);
+        self.route_reroutes.set(0);
+        self.credit_stalls = 0;
+        self.stall_time = SimDuration::ZERO;
     }
 
     /// Fold a replica engine's per-window counters into this mesh, so
@@ -405,6 +473,17 @@ impl RouterMesh {
         self.engine.fold_external(processed, peak);
     }
 
+    /// Fold a replica's per-window routing/stall counters into this mesh
+    /// (all additive), so [`RouterMesh::route_counters`] reports the same
+    /// totals as the single-threaded run.
+    pub(crate) fn add_external_route(&mut self, rc: RouteCounters) {
+        self.route_adaptive.set(self.route_adaptive.get() + rc.adaptive);
+        self.route_dor.set(self.route_dor.get() + rc.dor);
+        self.route_reroutes.set(self.route_reroutes.get() + rc.reroutes);
+        self.credit_stalls += rc.credit_stalls;
+        self.stall_time += rc.stall_time;
+    }
+
     /// Forget all occupancy and statistics; the fault plan (scenario
     /// configuration) is preserved.
     pub fn reset(&mut self) {
@@ -412,12 +491,20 @@ impl RouterMesh {
         for l in &mut self.links {
             l.reset();
         }
+        // `Engine::clear` also clears the flight recorder (keeping it
+        // enabled), so a reset mesh never reports a previous run's spans.
         self.engine.clear();
         self.cells.clear();
         self.inject_links.clear();
         for r in &mut self.rel_rings {
             r.clear();
         }
+        self.trace_flow = 0;
+        self.route_adaptive.set(0);
+        self.route_dor.set(0);
+        self.route_reroutes.set(0);
+        self.credit_stalls = 0;
+        self.stall_time = SimDuration::ZERO;
     }
 
     // ---- public transfer API --------------------------------------------
@@ -465,6 +552,7 @@ impl RouterMesh {
         }
         if self.batching && self.faults_static_at(at) {
             if let Some((plan, crossed)) = self.plan_forced_route(src, dst, at) {
+                self.count_train_decisions(&plan, bytes);
                 return self.run_train(&plan, crossed, bytes, start, pipelined);
             }
         }
@@ -563,6 +651,14 @@ impl RouterMesh {
             let pre = self.pre_latency(is_torus, cell.first_hop);
             let flat = link.flat(&self.topo.cfg);
             let (start, ser) = self.links[flat].grant_ctrl(t + pre, wire_bytes, full_cell);
+            self.engine.trace.span(
+                Track::Link(flat as u32),
+                SpanKind::Hop,
+                self.trace_flow,
+                start,
+                start + ser,
+                wire_bytes,
+            );
             cell.first_hop = false;
             cell.crossed_torus |= is_torus;
             cell.hops += 1;
@@ -678,6 +774,19 @@ impl RouterMesh {
         Some((dir, Some((dim, way))))
     }
 
+    /// Book a batched train's routing decisions: the per-cell event path
+    /// would have made one forced (dimension-order-equivalent) decision
+    /// per cell at every torus router on the planned route.
+    fn count_train_decisions(&self, plan: &InlineVec<PlannedHop, MAX_PLAN>, bytes: usize) {
+        let f = self.topo.cfg.fpgas_per_qfdb;
+        let torus_base = self.topo.cfg.num_qfdbs() * f * f;
+        let torus_hops = plan.iter().filter(|h| h.link >= torus_base).count() as u64;
+        if torus_hops > 0 {
+            let cells = self.topo.cfg.calib.cells(bytes) as u64;
+            self.route_dor.set(self.route_dor.get() + cells * torus_hops);
+        }
+    }
+
     /// Run a planned train of `bytes` through the mesh with plain scalar
     /// sweeps (no events).  Reproduces the per-cell event path exactly:
     /// cell i's grant on hop h starts at
@@ -726,9 +835,21 @@ impl RouterMesh {
                     // the train waits for its own credit round-trip —
                     // cell i-cap's downstream dequeue frees the slot
                     let rel = self.rel_rings[h].pop_front().expect("release schedule underflow");
+                    if rel > ready {
+                        self.credit_stalls += 1;
+                        self.stall_time += rel.since(ready);
+                    }
                     ready = ready.max(rel);
                 }
                 let (s, ser) = self.links[hop.link].grant_bulk(ready, wire_bytes);
+                self.engine.trace.span(
+                    Track::Link(hop.link as u32),
+                    SpanKind::Hop,
+                    self.trace_flow,
+                    s,
+                    s + ser,
+                    wire_bytes,
+                );
                 if h > 0 {
                     // cut-through: starting on hop h dequeues hop h-1
                     self.rel_rings[h - 1].push_back(s);
@@ -851,6 +972,8 @@ impl RouterMesh {
         // decision.
         if let Some(p) = self.cells[id].pending.take() {
             let ready = p.ready.max(t);
+            // telemetry: time this cell sat blocked on a credit
+            self.stall_time += t.since(p.ready);
             if self.links[p.link].is_up(ready) {
                 self.start_on(id, p.link, ready, p.is_torus, p.next_loc);
                 return;
@@ -883,6 +1006,18 @@ impl RouterMesh {
                 cell.dst
             )
         });
+        // Decision accounting (telemetry): a detour is a reroute; a
+        // productive pick is adaptive when the policy had a real choice.
+        if lock.is_some() {
+            self.route_reroutes.set(self.route_reroutes.get() + 1);
+        } else if !cell.ctrl
+            && self.policy == RoutePolicy::Adaptive
+            && self.torus_candidates(cell, q, t).0.len() > 1
+        {
+            self.route_adaptive.set(self.route_adaptive.get() + 1);
+        } else {
+            self.route_dor.set(self.route_dor.get() + 1);
+        }
         let next = self.topo.qfdb_neighbor(q, dir);
         (LinkId::Torus { qfdb: q, dir }, true, Loc::Router(next), lock)
     }
@@ -984,6 +1119,7 @@ impl RouterMesh {
     fn try_start(&mut self, id: usize, link: usize, ready: SimTime, is_torus: bool, next_loc: Loc) {
         let vc = if self.cells[id].ctrl { VC_CTRL } else { VC_BULK };
         if !self.links[link].try_take_credit(vc) {
+            self.credit_stalls += 1;
             self.links[link].enqueue_waiter(vc, id);
             self.cells[id].pending = Some(Pending { link, ready, next_loc, is_torus });
             return;
@@ -1003,6 +1139,14 @@ impl RouterMesh {
         } else {
             self.links[link].grant_bulk(ready, wire_bytes)
         };
+        self.engine.trace.span(
+            Track::Link(link as u32),
+            SpanKind::Hop,
+            self.trace_flow,
+            start,
+            start + ser,
+            wire_bytes,
+        );
         // Cut-through dequeue: the upstream buffer slot frees the moment
         // this cell starts on the next wire.
         if let Some(prev) = self.cells[id].in_link.take() {

@@ -1,6 +1,8 @@
 //! Plain-text table formatting for the reproduced figures and tables
 //! (no external crates; aligned columns, GitHub-style markdown).
 
+use std::fmt::Write as _;
+
 /// A simple column-aligned table builder.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -100,6 +102,41 @@ impl Table {
     }
 }
 
+/// Shade ramp for [`ascii_heatmap`], darkest last.
+const SHADES: &[u8] = b" .:-=+*#%@";
+
+/// Render named 2-D grids of 0..1 values as ASCII heatmaps (one block
+/// per plane, rows top-to-bottom).  Values are clamped to [0, 1]; each
+/// cell prints two copies of its shade character so the grid is roughly
+/// square in a terminal.  A legend maps the ramp back to utilisation.
+pub fn ascii_heatmap(title: &str, planes: &[(String, Vec<Vec<f64>>)]) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (name, grid) in planes {
+        out.push_str(name);
+        out.push('\n');
+        for row in grid {
+            out.push_str("  ");
+            for &v in row {
+                let v = v.clamp(0.0, 1.0);
+                let idx = ((v * (SHADES.len() - 1) as f64).round() as usize)
+                    .min(SHADES.len() - 1);
+                let c = SHADES[idx] as char;
+                out.push(c);
+                out.push(c);
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str("legend: ");
+    for (i, &s) in SHADES.iter().enumerate() {
+        let _ = write!(out, "'{}'={:.1} ", s as char, i as f64 / (SHADES.len() - 1) as f64);
+    }
+    out.push('\n');
+    out
+}
+
 /// Format microseconds with 3 decimals.
 pub fn us(x: f64) -> String {
     format!("{x:.3}")
@@ -163,6 +200,22 @@ mod tests {
         assert!(lines[3].contains("|    - |"), "{s}");
         // text column stays flush left
         assert!(lines[2].starts_with("| halo-a "), "{s}");
+    }
+
+    #[test]
+    fn heatmap_shades_scale_with_value() {
+        let planes = vec![(
+            "z=0".to_string(),
+            vec![vec![0.0, 0.5], vec![1.0, 2.0 /* clamped */]],
+        )];
+        let map = ascii_heatmap("util", &planes);
+        let lines: Vec<&str> = map.lines().collect();
+        assert_eq!(lines[0], "util");
+        assert_eq!(lines[1], "z=0");
+        // 0.0 -> ' ', 0.5 -> index 5 ('+'); 1.0 and the clamped 2.0 -> '@'
+        assert_eq!(lines[2], "    ++");
+        assert_eq!(lines[3], "  @@@@");
+        assert!(lines[4].starts_with("legend:"));
     }
 
     #[test]

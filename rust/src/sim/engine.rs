@@ -52,6 +52,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::time::{SimDuration, SimTime};
+use crate::telemetry::Recorder;
 
 /// log2 of the wheel slot width in picoseconds (2^16 ps ≈ 65.5 ns — wide
 /// enough that a cell serialization (≥ 144 ns) always crosses slots, so
@@ -111,6 +112,11 @@ pub struct Engine<E> {
     seq: u64,
     processed: u64,
     peak_pending: usize,
+    /// The flight recorder riding this engine (disabled by default: no
+    /// allocation, one branch per record call).  Handlers driving the
+    /// engine record spans here; [`Engine::clear`] clears it too, so a
+    /// reset experiment never reports a previous run's spans.
+    pub trace: Recorder,
 }
 
 impl<E> Default for Engine<E> {
@@ -133,6 +139,7 @@ impl<E> Engine<E> {
             seq: 0,
             processed: 0,
             peak_pending: 0,
+            trace: Recorder::disabled(),
         }
     }
 
@@ -341,6 +348,7 @@ impl<E> Engine<E> {
         self.in_wheel = 0;
         self.now = SimTime::ZERO;
         self.processed = 0;
+        self.trace.clear();
     }
 
     /// Pop the next event, advancing the clock (monotonically: an event
@@ -497,6 +505,25 @@ mod tests {
         e.schedule(SimTime::from_ns(1.0), Ev::Tick(3));
         let (t, Ev::Tick(i)) = e.next().unwrap();
         assert_eq!((t.ns() as u32, i), (1, 3));
+    }
+
+    #[test]
+    fn clear_also_clears_the_flight_recorder() {
+        use crate::telemetry::{SpanKind, Track};
+        let mut e: Engine<Ev> = Engine::new();
+        e.trace.enable(16);
+        e.trace.span(
+            Track::Rank(0),
+            SpanKind::Lib,
+            1,
+            SimTime::ZERO,
+            SimTime::from_ns(420.0),
+            0,
+        );
+        assert_eq!(e.trace.len(), 1);
+        e.clear();
+        assert_eq!(e.trace.len(), 0, "a reset engine must not report stale spans");
+        assert!(e.trace.is_enabled(), "clear keeps tracing armed for the next run");
     }
 
     #[test]

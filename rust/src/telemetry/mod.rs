@@ -1,0 +1,41 @@
+//! Observability for the whole stack: the fabric flight recorder, windowed
+//! link telemetry, and the exporters that make both inspectable
+//! (DESIGN.md §13).
+//!
+//! Three pieces, all **off by default** and structurally incapable of
+//! changing timing:
+//!
+//! * [`Recorder`] — a bounded ring buffer of *complete spans*
+//!   ([`SpanRec`]: one record carries both endpoints, so there is no
+//!   begin/end pairing to break when the ring drops its oldest entry).
+//!   One recorder lives on every [`crate::sim::Engine`]; the MPI progress
+//!   engine records protocol-stage spans, the cell-level router mesh
+//!   records per-hop link occupancy, the scheduler records job state
+//!   transitions.  Disabled recorders hold an unallocated ring and every
+//!   record call is a single branch — the hot paths stay zero-alloc and
+//!   the simulated timestamps are computed either way, so traced and
+//!   untraced runs are ps-identical (property-tested).
+//! * [`LinkSeries`] — windowed per-link utilisation (bulk wire and
+//!   control/VC lane separately), plus per-window routing-decision,
+//!   credit-stall and queue-depth counters, sampled by diffing the
+//!   fabric's cumulative occupancy statistics at application-chosen
+//!   boundaries (no timer events are injected).
+//! * [`export`] — Chrome trace-event JSON (loadable in Perfetto /
+//!   `chrome://tracing`; one track per rank, per router lane, per
+//!   scheduler job), a CSV time-series dump, and the ASCII torus
+//!   heatmap assembled on top of [`crate::report`].
+//!
+//! [`Summary`] is the single aggregation point for the previously
+//! scattered counters (progress-engine events, mesh routing/stall
+//! counters, parallel-runtime window statistics) and is stamped into
+//! every `BENCH_*.json`.
+
+pub mod export;
+pub mod recorder;
+pub mod series;
+pub mod summary;
+
+pub use export::{chrome_trace_json, series_csv, torus_heatmap, write_chrome_trace};
+pub use recorder::{Recorder, SpanKind, SpanRec, Track};
+pub use series::{LinkSeries, RouteCounters, WindowRow};
+pub use summary::Summary;

@@ -1,0 +1,326 @@
+//! The flight recorder: a drop-oldest ring of complete spans.
+//!
+//! Records are *complete spans* — one [`SpanRec`] holds both endpoints —
+//! rather than separate begin/end markers.  That choice makes the
+//! overflow policy trivial to reason about: dropping the oldest record
+//! loses one whole span, never an unmatched half, so any exported trace
+//! is well-formed regardless of how far the ring wrapped (the
+//! [`Recorder::dropped`] counter reports how much history was lost).
+
+use std::collections::VecDeque;
+
+use crate::sim::SimTime;
+
+/// Which timeline a span belongs to.  Exported as a Perfetto track:
+/// [`Track::pid`] selects the process group, [`Track::tid`] the lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Track {
+    /// An MPI rank's timeline (pid 1, tid = rank).
+    Rank(u32),
+    /// One unidirectional router lane, by `LinkId::flat` index
+    /// (pid 2, tid = flat link index).
+    Link(u32),
+    /// A scheduler job (pid 3, tid = job index in submission order).
+    Job(u32),
+    /// The parallel DES runtime's coordinator (pid 4).
+    Par,
+}
+
+impl Track {
+    pub fn pid(self) -> u32 {
+        match self {
+            Track::Rank(_) => 1,
+            Track::Link(_) => 2,
+            Track::Job(_) => 3,
+            Track::Par => 4,
+        }
+    }
+
+    pub fn tid(self) -> u32 {
+        match self {
+            Track::Rank(i) | Track::Link(i) | Track::Job(i) => i,
+            Track::Par => 0,
+        }
+    }
+}
+
+/// The lifecycle stage a span covers (paper Fig. 11 plus the layers
+/// around it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// A whole send: posted → owner observed completion.
+    SendOp,
+    /// A whole receive: posted → owner observed completion.
+    RecvOp,
+    /// A local compute phase ([`crate::mpi::progress::icompute`]).
+    Compute,
+    /// Sender-side MPI library processing (`mpi_sw`).
+    Lib,
+    /// NI handoff: library done → sending CPU free (packetizer/RDMA
+    /// engine owns the transfer from here).
+    Ni,
+    /// Eager payload on the wire: injection → receiver mailbox visible.
+    EagerWire,
+    /// RTS control cell: injection → receiver NI.
+    Rts,
+    /// CTS build + control cell back to the sender.
+    Cts,
+    /// RDMA bulk write: CTS arrival → completion notification visible.
+    Rdma,
+    /// Receiver-side library completion processing (`mpi_sw`).
+    RecvLib,
+    /// One cell (or cell train) occupying one link hop.
+    Hop,
+    /// A collective call on one rank (call → rank clock at return).
+    Collective,
+    /// An allreduce-accelerator pipeline phase.
+    Accel,
+    /// Scheduler job waiting in the admission queue.
+    JobQueued,
+    /// Scheduler job running (placed → retired).
+    JobRun,
+    /// One committed parallel-DES window (instant; aux = deferred ops).
+    ParWindow,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::SendOp => "send",
+            SpanKind::RecvOp => "recv",
+            SpanKind::Compute => "compute",
+            SpanKind::Lib => "lib",
+            SpanKind::Ni => "ni",
+            SpanKind::EagerWire => "eager-wire",
+            SpanKind::Rts => "rts",
+            SpanKind::Cts => "cts",
+            SpanKind::Rdma => "rdma",
+            SpanKind::RecvLib => "recv-lib",
+            SpanKind::Hop => "hop",
+            SpanKind::Collective => "collective",
+            SpanKind::Accel => "accel",
+            SpanKind::JobQueued => "queued",
+            SpanKind::JobRun => "running",
+            SpanKind::ParWindow => "window",
+        }
+    }
+
+    /// Perfetto category.
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::SendOp
+            | SpanKind::RecvOp
+            | SpanKind::Compute
+            | SpanKind::Lib
+            | SpanKind::RecvLib
+            | SpanKind::Collective => "mpi",
+            SpanKind::Ni | SpanKind::EagerWire | SpanKind::Rts | SpanKind::Cts
+            | SpanKind::Rdma => "ni",
+            SpanKind::Hop => "net",
+            SpanKind::Accel => "accel",
+            SpanKind::JobQueued | SpanKind::JobRun => "sched",
+            SpanKind::ParWindow => "par",
+        }
+    }
+}
+
+/// One complete span.  `flow` threads a request/transfer identity across
+/// layers (MPI request id for protocol stages and the hops they cause);
+/// `aux` is a kind-specific payload (bytes for transfers, counts for
+/// instants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpanRec {
+    pub t0: SimTime,
+    pub t1: SimTime,
+    pub track: Track,
+    pub kind: SpanKind,
+    pub flow: u64,
+    pub aux: u64,
+}
+
+/// The ring buffer.  Disabled (the default) it owns no allocation and
+/// every [`Recorder::span`] call is one branch; enabling preallocates the
+/// full ring so recording never allocates either.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    enabled: bool,
+    cap: usize,
+    buf: VecDeque<SpanRec>,
+    dropped: u64,
+}
+
+impl Recorder {
+    /// The zero-cost default: records nothing, allocates nothing.
+    pub fn disabled() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Start recording into a ring of `cap` spans (drop-oldest on
+    /// overflow).  Preallocates the whole ring up front.
+    pub fn enable(&mut self, cap: usize) {
+        assert!(cap > 0, "flight recorder needs a non-zero capacity");
+        self.enabled = true;
+        self.cap = cap;
+        if self.buf.capacity() < cap {
+            self.buf.reserve_exact(cap - self.buf.len());
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Ring capacity (0 while disabled).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record a complete span.  A single branch when disabled.
+    #[inline]
+    pub fn span(
+        &mut self,
+        track: Track,
+        kind: SpanKind,
+        flow: u64,
+        t0: SimTime,
+        t1: SimTime,
+        aux: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(SpanRec { t0, t1, track, kind, flow, aux });
+    }
+
+    /// Record an instant (a zero-duration span).
+    #[inline]
+    pub fn instant(&mut self, track: Track, kind: SpanKind, flow: u64, t: SimTime, aux: u64) {
+        self.span(track, kind, flow, t, t, aux);
+    }
+
+    fn push(&mut self, rec: SpanRec) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans evicted by the drop-oldest policy since the last clear.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained spans, oldest first.
+    pub fn records(&self) -> impl Iterator<Item = &SpanRec> {
+        self.buf.iter()
+    }
+
+    /// Drop all records (and the dropped counter) but keep the
+    /// enablement and the ring allocation — a fresh experiment on the
+    /// same engine keeps tracing.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.dropped = 0;
+    }
+
+    /// Move the retained records out (oldest first), leaving an empty
+    /// but still-enabled ring.
+    pub fn take_records(&mut self) -> Vec<SpanRec> {
+        let v: Vec<SpanRec> = self.buf.drain(..).collect();
+        self.dropped = 0;
+        v
+    }
+
+    /// Append a batch of foreign records (e.g. an accelerator's local
+    /// engine draining into the world's recorder).  No-op when disabled.
+    pub fn absorb(&mut self, recs: &[SpanRec]) {
+        if !self.enabled {
+            return;
+        }
+        for r in recs {
+            self.push(*r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(at: u64) -> (SimTime, SimTime) {
+        (SimTime(at), SimTime(at + 10))
+    }
+
+    #[test]
+    fn disabled_recorder_stores_nothing_and_allocates_nothing() {
+        let mut r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        let (a, b) = rec(5);
+        r.span(Track::Rank(0), SpanKind::Lib, 1, a, b, 0);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.buf.capacity(), 0, "disabled ring must not allocate");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = Recorder::disabled();
+        r.enable(3);
+        for i in 0..5u64 {
+            let (a, b) = rec(i * 100);
+            r.span(Track::Rank(0), SpanKind::Hop, i, a, b, i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let flows: Vec<u64> = r.records().map(|s| s.flow).collect();
+        assert_eq!(flows, vec![2, 3, 4], "oldest records must go first");
+    }
+
+    #[test]
+    fn enable_preallocates_so_recording_never_grows() {
+        let mut r = Recorder::disabled();
+        r.enable(64);
+        let cap = r.buf.capacity();
+        assert!(cap >= 64);
+        for i in 0..200u64 {
+            let (a, b) = rec(i);
+            r.span(Track::Link(1), SpanKind::Hop, i, a, b, 0);
+        }
+        assert_eq!(r.buf.capacity(), cap, "ring must not reallocate");
+    }
+
+    #[test]
+    fn clear_keeps_enablement_and_capacity() {
+        let mut r = Recorder::disabled();
+        r.enable(4);
+        let (a, b) = rec(0);
+        r.span(Track::Par, SpanKind::ParWindow, 0, a, b, 3);
+        r.clear();
+        assert!(r.is_enabled());
+        assert_eq!(r.capacity(), 4);
+        assert_eq!((r.len(), r.dropped()), (0, 0));
+    }
+
+    #[test]
+    fn absorb_merges_foreign_records() {
+        let mut a = Recorder::disabled();
+        let mut b = Recorder::disabled();
+        a.enable(8);
+        b.enable(8);
+        let (t0, t1) = rec(7);
+        b.span(Track::Rank(2), SpanKind::Accel, 9, t0, t1, 64);
+        a.absorb(&b.take_records());
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 0);
+        assert_eq!(a.records().next().unwrap().kind, SpanKind::Accel);
+    }
+}

@@ -1,0 +1,234 @@
+//! Windowed link telemetry: per-link utilisation and routing/stall
+//! counters sampled by *diffing cumulative fabric statistics* at
+//! application-chosen boundaries.
+//!
+//! No timer events are injected — a sample reads the occupancy counters
+//! the fabric maintains anyway, so the time-series layer cannot perturb
+//! the simulation.  Windows are therefore as wide as the caller's
+//! sampling cadence (the CLI samples once per benchmark iteration).
+
+use crate::sim::{SimDuration, SimTime};
+
+/// Cumulative routing-decision and credit-stall counters maintained by
+/// the cell-level router mesh (always on — plain integer increments on
+/// paths that already hold `&mut`/`&Cell` access).  All zeros on the
+/// flow-level model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RouteCounters {
+    /// Torus routing decisions where the minimal-adaptive policy had a
+    /// real choice (> 1 productive candidate).
+    pub adaptive: u64,
+    /// Torus routing decisions with a forced (dimension-order) output.
+    pub dor: u64,
+    /// Decisions that took a non-minimal detour or a fault reroute.
+    pub reroutes: u64,
+    /// Times a cell found its output VC out of credits and had to wait.
+    pub credit_stalls: u64,
+    /// Total time cells spent blocked on credits.
+    pub stall_time: SimDuration,
+}
+
+impl RouteCounters {
+    /// Counter delta `self - earlier` (both cumulative snapshots).
+    pub fn since(self, earlier: RouteCounters) -> RouteCounters {
+        RouteCounters {
+            adaptive: self.adaptive - earlier.adaptive,
+            dor: self.dor - earlier.dor,
+            reroutes: self.reroutes - earlier.reroutes,
+            credit_stalls: self.credit_stalls - earlier.credit_stalls,
+            stall_time: SimDuration(self.stall_time.0 - earlier.stall_time.0),
+        }
+    }
+}
+
+/// One sampled window.
+#[derive(Debug, Clone)]
+pub struct WindowRow {
+    pub t0: SimTime,
+    pub t1: SimTime,
+    /// Bulk-wire (VC_BULK) utilisation per flat link index, 0..1.
+    pub util: Vec<f32>,
+    /// Control-lane (VC_CTRL) utilisation per flat link index, 0..1.
+    pub ctrl_util: Vec<f32>,
+    /// Routing/stall counter deltas within this window.
+    pub route: RouteCounters,
+    /// Event-queue high-water mark of the mesh engine at sample time.
+    pub queue_peak: usize,
+}
+
+impl WindowRow {
+    /// (mean, max, argmax) of the bulk utilisation across links.
+    pub fn util_stats(&self) -> (f64, f64, usize) {
+        let mut max = 0.0f64;
+        let mut arg = 0usize;
+        let mut sum = 0.0f64;
+        for (i, &u) in self.util.iter().enumerate() {
+            let u = u as f64;
+            sum += u;
+            if u > max {
+                max = u;
+                arg = i;
+            }
+        }
+        let mean = if self.util.is_empty() { 0.0 } else { sum / self.util.len() as f64 };
+        (mean, max, arg)
+    }
+}
+
+/// The window accumulator: cumulative-counter baselines plus the rows
+/// sampled so far.  Owned by the fabric so `Fabric::reset` clears it
+/// together with the occupancy it mirrors.
+#[derive(Debug, Clone, Default)]
+pub struct LinkSeries {
+    enabled: bool,
+    last_t: SimTime,
+    last_busy: Vec<SimDuration>,
+    last_ctrl: Vec<SimDuration>,
+    last_route: RouteCounters,
+    rows: Vec<WindowRow>,
+}
+
+impl LinkSeries {
+    pub fn disabled() -> LinkSeries {
+        LinkSeries::default()
+    }
+
+    /// Start accumulating windows over `n_links` flat link slots.
+    pub fn enable(&mut self, n_links: usize) {
+        self.enabled = true;
+        self.last_busy = vec![SimDuration::ZERO; n_links];
+        self.last_ctrl = vec![SimDuration::ZERO; n_links];
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Close the current window at `now`.  `busy`/`ctrl` are the
+    /// *cumulative* per-link busy times at `now`; `route` the cumulative
+    /// routing counters.  A sample at (or before) the previous boundary
+    /// is a no-op.
+    pub fn sample(
+        &mut self,
+        now: SimTime,
+        busy: &[SimDuration],
+        ctrl: &[SimDuration],
+        route: RouteCounters,
+        queue_peak: usize,
+    ) {
+        if !self.enabled || now <= self.last_t {
+            return;
+        }
+        let dt = (now.0 - self.last_t.0) as f64;
+        let util: Vec<f32> = busy
+            .iter()
+            .zip(&self.last_busy)
+            .map(|(b, p)| ((b.0 - p.0) as f64 / dt) as f32)
+            .collect();
+        let ctrl_util: Vec<f32> = ctrl
+            .iter()
+            .zip(&self.last_ctrl)
+            .map(|(b, p)| ((b.0 - p.0) as f64 / dt) as f32)
+            .collect();
+        self.rows.push(WindowRow {
+            t0: self.last_t,
+            t1: now,
+            util,
+            ctrl_util,
+            route: route.since(self.last_route),
+            queue_peak,
+        });
+        self.last_t = now;
+        self.last_busy.copy_from_slice(busy);
+        self.last_ctrl.copy_from_slice(ctrl);
+        self.last_route = route;
+    }
+
+    pub fn rows(&self) -> &[WindowRow] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Drop all windows and re-zero the baselines (the fabric occupancy
+    /// they mirror was just reset); stays enabled.
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.last_t = SimTime::ZERO;
+        for b in &mut self.last_busy {
+            *b = SimDuration::ZERO;
+        }
+        for b in &mut self.last_ctrl {
+            *b = SimDuration::ZERO;
+        }
+        self.last_route = RouteCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_diff_cumulative_counters() {
+        let mut s = LinkSeries::disabled();
+        s.enable(2);
+        let route1 = RouteCounters { adaptive: 3, dor: 5, ..Default::default() };
+        s.sample(
+            SimTime(1000),
+            &[SimDuration(500), SimDuration(0)],
+            &[SimDuration(100), SimDuration(0)],
+            route1,
+            7,
+        );
+        let route2 = RouteCounters { adaptive: 4, dor: 9, ..Default::default() };
+        s.sample(
+            SimTime(2000),
+            &[SimDuration(500), SimDuration(800)],
+            &[SimDuration(100), SimDuration(200)],
+            route2,
+            9,
+        );
+        assert_eq!(s.len(), 2);
+        let r0 = &s.rows()[0];
+        assert!((r0.util[0] - 0.5).abs() < 1e-6);
+        assert_eq!(r0.route.adaptive, 3);
+        let r1 = &s.rows()[1];
+        assert!((r1.util[0] - 0.0).abs() < 1e-6, "second window sees only the delta");
+        assert!((r1.util[1] - 0.8).abs() < 1e-6);
+        assert_eq!(r1.route.dor, 4);
+        let (mean, max, arg) = r1.util_stats();
+        assert!((max - 0.8).abs() < 1e-6 && arg == 1 && mean > 0.0);
+    }
+
+    #[test]
+    fn sample_at_same_instant_is_a_noop_and_clear_rezeroes() {
+        let mut s = LinkSeries::disabled();
+        s.enable(1);
+        s.sample(SimTime::ZERO, &[SimDuration(1)], &[SimDuration(0)], Default::default(), 0);
+        assert!(s.is_empty(), "zero-width window must be skipped");
+        s.sample(SimTime(10), &[SimDuration(5)], &[SimDuration(0)], Default::default(), 0);
+        assert_eq!(s.len(), 1);
+        s.clear();
+        assert!(s.is_empty() && s.is_enabled());
+        // after a fabric reset the cumulative counters restart at zero:
+        // the baselines must too, or the next delta underflows
+        s.sample(SimTime(10), &[SimDuration(5)], &[SimDuration(0)], Default::default(), 0);
+        assert_eq!(s.len(), 1);
+        assert!((s.rows()[0].util[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disabled_series_ignores_samples() {
+        let mut s = LinkSeries::disabled();
+        s.sample(SimTime(10), &[], &[], Default::default(), 0);
+        assert!(s.is_empty());
+    }
+}

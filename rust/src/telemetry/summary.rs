@@ -1,0 +1,130 @@
+//! The unified stats surface: one struct gathering the counters that
+//! used to be scattered across `par_stats()`, the router mesh internals
+//! and ad-hoc BENCH metrics, stamped into every `BENCH_*.json`.
+
+use crate::bench::Suite;
+use crate::mpi::parallel::ParStats;
+use crate::mpi::world::World;
+
+use super::series::RouteCounters;
+
+/// A snapshot of every observability counter a world accumulates.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    /// Events handled by the MPI progress engine.
+    pub events: u64,
+    /// Events handled by the cell-level mesh engine (0 on the flow model).
+    pub mesh_events: u64,
+    /// High-water mark across the progress and mesh event queues.
+    pub peak_queue: usize,
+    /// Cumulative routing-decision / credit-stall counters (mesh only).
+    pub route: RouteCounters,
+    /// Parallel-runtime window statistics (`None` single-threaded).
+    pub par: Option<ParStats>,
+    /// Worker threads driving the fabric windows.
+    pub sim_workers: usize,
+    /// Flight-recorder records retained / evicted (0/0 untraced).
+    pub trace_records: usize,
+    pub trace_dropped: u64,
+    /// Telemetry windows sampled.
+    pub windows: usize,
+}
+
+impl Summary {
+    /// Snapshot a world's counters.
+    pub fn collect(w: &World) -> Summary {
+        let (mesh_events, mesh_peak, route) = match w.fabric.mesh() {
+            Some(m) => (m.events_processed(), m.peak_queue_depth(), m.route_counters()),
+            None => (0, 0, RouteCounters::default()),
+        };
+        let (trace_records, trace_dropped) = {
+            let p = w.progress.trace();
+            let mesh_trace = w.fabric.mesh().map(|m| m.trace());
+            (
+                p.len() + mesh_trace.map_or(0, |t| t.len()),
+                p.dropped() + mesh_trace.map_or(0, |t| t.dropped()),
+            )
+        };
+        Summary {
+            events: w.progress.events_processed(),
+            mesh_events,
+            peak_queue: w.progress.peak_queue_depth().max(mesh_peak),
+            route,
+            par: w.par_stats(),
+            sim_workers: w.sim_workers(),
+            trace_records,
+            trace_dropped,
+            windows: w.fabric.telemetry().len(),
+        }
+    }
+
+    /// Stamp every counter as a metric into `suite` (the `par/*` names
+    /// predate this struct and are kept stable for perf tracking).
+    pub fn stamp(&self, suite: &mut Suite) {
+        suite.metric("telemetry/events", self.events as f64, "events");
+        suite.metric("telemetry/mesh_events", self.mesh_events as f64, "events");
+        suite.metric("telemetry/peak_queue_depth", self.peak_queue as f64, "events");
+        suite.metric("telemetry/route_adaptive", self.route.adaptive as f64, "decisions");
+        suite.metric("telemetry/route_dor", self.route.dor as f64, "decisions");
+        suite.metric("telemetry/reroutes", self.route.reroutes as f64, "decisions");
+        suite.metric("telemetry/credit_stalls", self.route.credit_stalls as f64, "stalls");
+        suite.metric(
+            "telemetry/credit_stall_us",
+            self.route.stall_time.us(),
+            "us",
+        );
+        suite.metric("sim_workers", self.sim_workers as f64, "threads");
+        if let Some(p) = self.par {
+            suite.metric("par/ops", p.ops as f64, "ops");
+            suite.metric("par/windows", p.windows as f64, "windows");
+            suite.metric("par/components", p.components as f64, "components");
+            suite.metric("par/shipped", p.shipped as f64, "ops");
+            suite.metric("par/bounds_sent", p.bounds_sent as f64, "msgs");
+        }
+        if self.trace_records > 0 || self.trace_dropped > 0 {
+            suite.metric("telemetry/trace_records", self.trace_records as f64, "spans");
+            suite.metric("telemetry/trace_dropped", self.trace_dropped as f64, "spans");
+        }
+        if self.windows > 0 {
+            suite.metric("telemetry/windows", self.windows as f64, "windows");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::world::Placement;
+    use crate::mpi::{progress, world::World};
+    use crate::topology::SystemConfig;
+
+    #[test]
+    fn collect_snapshots_progress_and_trace_counters() {
+        let mut w = World::new(SystemConfig::prototype(), 8, Placement::PerCore);
+        w.enable_tracing(1024);
+        let s = progress::isend(&mut w, 0, 4, 64);
+        let r = progress::irecv(&mut w, 4, 0, 64);
+        progress::wait_all(&mut w, &[s, r]);
+        let sum = Summary::collect(&w);
+        assert!(sum.events > 0);
+        assert!(sum.trace_records > 0, "traced run must retain spans");
+        assert_eq!(sum.trace_dropped, 0);
+        assert!(sum.par.is_none(), "single-threaded world has no par stats");
+    }
+
+    #[test]
+    fn stamp_writes_unified_metrics() {
+        let w = World::new(SystemConfig::prototype(), 4, Placement::PerCore);
+        let sum = Summary::collect(&w);
+        let dir = std::env::temp_dir().join("exanest_telemetry_stamp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut suite = Suite::new("telemetry_selftest");
+        sum.stamp(&mut suite);
+        let path = suite.write_json_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"name\":\"telemetry/events\""));
+        assert!(text.contains("\"name\":\"telemetry/route_dor\""));
+        assert!(text.contains("\"name\":\"sim_workers\""));
+        std::fs::remove_file(path).unwrap();
+    }
+}

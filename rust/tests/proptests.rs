@@ -387,6 +387,155 @@ fn prop_route_cached_valid_after_reset() {
     });
 }
 
+#[test]
+fn prop_tracing_is_timing_invisible() {
+    // Tentpole acceptance: the flight recorder is a pure observer.
+    // Identical worlds with tracing on and off must produce ps-identical
+    // timings under cell-level traffic — deterministic and adaptive
+    // routing, healthy and faulty fabrics, point-to-point and
+    // collective patterns.  (`sched::tests` covers the scheduler side.)
+    let cfg = SystemConfig::two_blades();
+    forall("trace on == trace off (ps)", 20, |rng| {
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let model = if rng.below(2) == 0 {
+            NetworkModel::cell(policy)
+        } else {
+            NetworkModel::cell_with_faults(
+                policy,
+                FaultPlan::none().fail_torus(QfdbId(1), Dir::XMinus, SimTime::ZERO),
+            )
+        };
+        let n = 8usize;
+        let mut plain = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model.clone());
+        let mut traced = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model);
+        traced.enable_tracing(1 << 16);
+        for _ in 0..3 {
+            let a = rng.below(n as u64) as usize;
+            let mut b = rng.below(n as u64) as usize;
+            if a == b {
+                b = (b + 1) % n;
+            }
+            let bytes = [64usize, 4096, 64 * 1024][rng.below(3) as usize];
+            let p = pt2pt::message(&mut plain, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let t = pt2pt::message(&mut traced, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            prop_assert!(
+                p.recv_done == t.recv_done,
+                "{a}->{b} {bytes} B: traced {:?} != plain {:?}",
+                t.recv_done,
+                p.recv_done
+            );
+        }
+        let cp = exanest::mpi::collectives::allreduce(&mut plain, 1024);
+        let ct = exanest::mpi::collectives::allreduce(&mut traced, 1024);
+        prop_assert!(cp == ct, "allreduce traced {ct:?} != plain {cp:?}");
+        prop_assert!(!traced.trace_records().is_empty(), "traced run must retain spans");
+        prop_assert!(plain.trace_records().is_empty(), "untraced run must record nothing");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_spans_balanced_and_worker_invariant() {
+    // Every recorded span is well formed (t1 >= t0, i.e. no negative
+    // `dur` in the exported JSON), and the rank-level trace is identical
+    // at 1 and 4 DES workers.  Only the par-runtime window markers
+    // (`Track::Par`) and the mesh hop spans depend on the execution
+    // strategy — worker replicas run with their recorders off — so those
+    // are excluded from the equality.
+    use exanest::telemetry::{SpanKind, Track};
+    forall("trace spans balanced + worker invariant", 8, |rng| {
+        let bytes = [1024usize, 4096, 1 << 16][rng.below(3) as usize];
+        let n = [4usize, 8][rng.below(2) as usize];
+        let mut runs = Vec::new();
+        for workers in [1usize, 4] {
+            let mut cfg = SystemConfig::two_blades();
+            cfg.sim_workers = workers;
+            let mut w = World::with_model(
+                cfg,
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            w.enable_tracing(1 << 16);
+            let lat = exanest::mpi::collectives::allreduce(&mut w, bytes);
+            let recs = w.trace_records();
+            prop_assert!(!recs.is_empty(), "w={workers}: no spans recorded");
+            prop_assert!(w.trace_dropped() == 0, "w={workers}: ring overflowed");
+            for r in &recs {
+                prop_assert!(
+                    r.t1 >= r.t0,
+                    "w={workers}: unbalanced span {:?} [{:?}, {:?}]",
+                    r.kind,
+                    r.t0,
+                    r.t1
+                );
+            }
+            let ranks: Vec<_> = recs
+                .into_iter()
+                .filter(|r| !matches!(r.track, Track::Par) && r.kind != SpanKind::Hop)
+                .collect();
+            runs.push((lat, ranks));
+        }
+        prop_assert!(
+            runs[0].0 == runs[1].0,
+            "traced latency differs across workers: {:?} vs {:?}",
+            runs[0].0,
+            runs[1].0
+        );
+        prop_assert!(
+            runs[0].1 == runs[1].1,
+            "rank-level trace differs across workers ({} vs {} spans)",
+            runs[0].1.len(),
+            runs[1].1.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_telemetry_cleared_but_enabled_across_reset() {
+    // Satellite regression, twin of the route-cache test above:
+    // `World::reset` (→ `Engine::clear` / `Fabric::reset`) must empty the
+    // flight recorder and the telemetry windows while keeping both
+    // enabled, and a re-run on the reset world must trace identically.
+    let cfg = SystemConfig::two_blades();
+    forall("telemetry reset: empty but enabled", 15, |rng| {
+        let n = 8usize;
+        let mut w = World::with_model(
+            cfg.clone(),
+            n,
+            Placement::PerMpsoc,
+            NetworkModel::cell(RoutePolicy::Deterministic),
+        );
+        w.enable_tracing(1 << 14);
+        let bytes = [256usize, 4096][rng.below(2) as usize];
+        let first = exanest::mpi::collectives::allreduce(&mut w, bytes);
+        w.fabric.sample_telemetry(w.max_clock());
+        let recs_before = w.trace_records();
+        prop_assert!(!recs_before.is_empty(), "traced run records spans");
+        prop_assert!(w.fabric.telemetry().len() > 0, "sampled run has a telemetry window");
+        w.reset();
+        prop_assert!(w.tracing_enabled(), "reset must keep the recorder enabled");
+        prop_assert!(w.trace_records().is_empty(), "reset must clear recorded spans");
+        prop_assert!(w.trace_dropped() == 0, "reset must clear the eviction count");
+        prop_assert!(w.fabric.telemetry().is_empty(), "reset must clear telemetry windows");
+        let second = exanest::mpi::collectives::allreduce(&mut w, bytes);
+        prop_assert!(first == second, "reset world re-times differently: {second:?} vs {first:?}");
+        let recs_after = w.trace_records();
+        prop_assert!(
+            recs_after == recs_before,
+            "post-reset trace diverges: {} vs {} spans",
+            recs_after.len(),
+            recs_before.len()
+        );
+        Ok(())
+    });
+}
+
 /// Reference event-queue model for the timing-wheel proptest: a flat
 /// list popped by minimum (time, seq) — the semantics of the original
 /// `BinaryHeap` engine.

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Validate a `repro --trace` export against the Chrome trace-event schema.
+
+The flight recorder (DESIGN.md §13) exports complete-span ("X") events
+plus process_name ("M") metadata for the four fixed tracks.  This check
+is what CI runs on the perf-smoke trace artifact before uploading it:
+it guarantees the file is Perfetto-loadable and internally consistent
+without needing Perfetto itself.  Stdlib only — no pip installs.
+
+Usage: trace_check.py <trace.json>
+"""
+
+import json
+import sys
+
+# Track -> pid mapping fixed by telemetry::export (DESIGN.md §13).
+REQUIRED_PROCESSES = {
+    1: "mpi-ranks",
+    2: "router-lanes",
+    3: "sched-jobs",
+    4: "par-runtime",
+}
+
+SPAN_FIELDS = ("name", "cat", "ph", "ts", "dur", "pid", "tid")
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot parse {path}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level is not a JSON object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing, not a list, or empty")
+
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        fail("otherData missing")
+    for key in ("records", "dropped"):
+        if not isinstance(other.get(key), int) or other[key] < 0:
+            fail(f"otherData.{key} missing or not a non-negative integer")
+
+    spans = [e for e in events if e.get("ph") == "X"]
+    meta = [e for e in events if e.get("ph") == "M"]
+    if len(spans) + len(meta) != len(events):
+        phases = sorted({e.get("ph") for e in events} - {"X", "M"})
+        fail(f"unexpected event phases {phases} (only X and M are emitted)")
+
+    # Every declared track must carry process_name metadata so Perfetto
+    # shows named lanes, and every span's pid must be one of them.
+    named = {}
+    for e in meta:
+        if e.get("name") != "process_name":
+            fail(f"unexpected metadata event {e.get('name')!r}")
+        named[e.get("pid")] = e.get("args", {}).get("name")
+    for pid, want in REQUIRED_PROCESSES.items():
+        if named.get(pid) != want:
+            fail(f"pid {pid} process_name is {named.get(pid)!r}, want {want!r}")
+
+    if other["records"] != len(spans):
+        fail(f"otherData.records = {other['records']} but {len(spans)} X events")
+
+    last_ts = {}
+    for i, e in enumerate(spans):
+        for key in SPAN_FIELDS:
+            if key not in e:
+                fail(f"span {i} missing field {key!r}")
+        if not isinstance(e["name"], str) or not e["name"]:
+            fail(f"span {i} has an empty name")
+        if not isinstance(e["ts"], (int, float)) or e["ts"] < 0:
+            fail(f"span {i} has invalid ts {e['ts']!r}")
+        if not isinstance(e["dur"], (int, float)) or e["dur"] < 0:
+            fail(f"span {i} has negative dur {e['dur']!r}")
+        if e["pid"] not in REQUIRED_PROCESSES:
+            fail(f"span {i} pid {e['pid']!r} has no process_name metadata")
+        args = e.get("args")
+        if not isinstance(args, dict) or "flow" not in args:
+            fail(f"span {i} args missing the flow id")
+        # Export sorts records; Perfetto tolerates disorder but the
+        # exporter promises per-file monotone start times.
+        if e["ts"] < last_ts.get("all", 0):
+            fail(f"span {i} ts {e['ts']} not monotone non-decreasing")
+        last_ts["all"] = e["ts"]
+
+    print(
+        f"trace_check: OK: {len(spans)} spans on {len(named)} tracks, "
+        f"{other['dropped']} dropped ({path})"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        sys.exit(2)
+    check(sys.argv[1])
