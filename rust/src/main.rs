@@ -10,13 +10,13 @@ use exanest::bench::Suite;
 use exanest::ip::{iperf, rtt, IpMode, Scenario, TunnelConfig};
 use exanest::mpi::{collectives, Backend, Placement, World};
 use exanest::ni::hw_pingpong;
-use exanest::network::{Fabric, NetworkModel, RoutePolicy};
+use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy};
 use exanest::power;
 use exanest::report::{gbps, pct, us, Table};
 use exanest::sched::{self, Policy};
-use exanest::sim::SimDuration;
+use exanest::sim::{SimDuration, SimTime};
 use exanest::telemetry::{self, LinkSeries, SpanRec, Summary};
-use exanest::topology::SystemConfig;
+use exanest::topology::{Dir, LinkId, QfdbId, SystemConfig, Topology};
 
 /// Strict CLI arguments: every `--flag` must be consumed by the global
 /// or per-command parsing below, and [`Args::finish`] rejects whatever
@@ -134,6 +134,112 @@ fn export_observability(
     }
 }
 
+/// Parse a torus direction token of the fault-injection flags.
+fn parse_dir(s: &str) -> Result<Dir, String> {
+    Ok(match s {
+        "x+" => Dir::XPlus,
+        "x-" => Dir::XMinus,
+        "y+" => Dir::YPlus,
+        "y-" => Dir::YMinus,
+        "z+" => Dir::ZPlus,
+        "z-" => Dir::ZMinus,
+        _ => return Err(format!("bad torus direction {s:?} (x+ | x- | y+ | y- | z+ | z-)")),
+    })
+}
+
+fn parse_qfdb(cfg: &SystemConfig, s: &str) -> Result<QfdbId, String> {
+    let q: u32 = s.parse().map_err(|_| format!("bad QFDB index {s:?}"))?;
+    if q as usize >= cfg.num_qfdbs() {
+        return Err(format!("QFDB {q} out of range (machine has {})", cfg.num_qfdbs()));
+    }
+    Ok(QfdbId(q))
+}
+
+fn parse_us(s: &str) -> Result<SimTime, String> {
+    let t: f64 = s.parse().map_err(|_| format!("bad time {s:?} (microseconds)"))?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!("time must be a finite non-negative microsecond count, got {s:?}"));
+    }
+    Ok(SimTime::from_us(t))
+}
+
+/// `--faults <qfdb>:<dir>:<down_us>[,...]` — permanent link deaths.
+fn parse_fail_list(cfg: &SystemConfig, mut plan: FaultPlan, list: &str) -> Result<FaultPlan, String> {
+    for item in list.split(',') {
+        let parts: Vec<&str> = item.split(':').collect();
+        let [q, d, at] = parts[..] else {
+            return Err(format!("bad --faults item {item:?} (want <qfdb>:<dir>:<down_us>)"));
+        };
+        let link = LinkId::Torus { qfdb: parse_qfdb(cfg, q)?, dir: parse_dir(d)? };
+        plan = plan.try_fail_link(link, parse_us(at)?)?;
+    }
+    Ok(plan)
+}
+
+/// `--flap <qfdb>:<dir>:<down_us>:<up_us>[,...]` — transient link flaps.
+fn parse_flap_list(cfg: &SystemConfig, mut plan: FaultPlan, list: &str) -> Result<FaultPlan, String> {
+    for item in list.split(',') {
+        let parts: Vec<&str> = item.split(':').collect();
+        let [q, d, down, up] = parts[..] else {
+            return Err(format!("bad --flap item {item:?} (want <qfdb>:<dir>:<down_us>:<up_us>)"));
+        };
+        let link = LinkId::Torus { qfdb: parse_qfdb(cfg, q)?, dir: parse_dir(d)? };
+        plan = plan.try_flap_link(link, parse_us(down)?, parse_us(up)?)?;
+    }
+    Ok(plan)
+}
+
+/// `--ber <rate>[@<seed>]` — seeded per-link bit-error process.
+fn parse_ber(plan: FaultPlan, spec: &str) -> Result<FaultPlan, String> {
+    let (rate_s, seed_s) = spec.split_once('@').unwrap_or((spec, "42"));
+    let rate: f64 = rate_s.parse().map_err(|_| format!("bad bit-error rate {rate_s:?}"))?;
+    let seed: u64 = seed_s.parse().map_err(|_| format!("bad BER seed {seed_s:?}"))?;
+    plan.try_with_ber(rate, seed)
+}
+
+/// Combine the three fault-injection flags into one [`FaultPlan`].
+fn build_fault_plan(
+    cfg: &SystemConfig,
+    fail: Option<&str>,
+    flap: Option<&str>,
+    ber: Option<&str>,
+) -> Result<FaultPlan, String> {
+    let mut plan = FaultPlan::default();
+    if let Some(list) = fail {
+        plan = parse_fail_list(cfg, plan, list)?;
+    }
+    if let Some(list) = flap {
+        plan = parse_flap_list(cfg, plan, list)?;
+    }
+    if let Some(spec) = ber {
+        plan = parse_ber(plan, spec)?;
+    }
+    Ok(plan)
+}
+
+/// Cut one QFDB off the torus: fail all six of its outgoing links plus
+/// every neighbour's link back into it (each direction is its own
+/// unidirectional link, so both sides of each cable must go down).
+/// `up` = `None` makes the cut permanent; `Some(t)` heals it at `t`.
+fn isolate_qfdb(cfg: &SystemConfig, q: QfdbId, down: SimTime, up: Option<SimTime>) -> FaultPlan {
+    let topo = Topology::new(cfg.clone());
+    let mut plan = FaultPlan::default();
+    for dir in Dir::all() {
+        let peer = topo.qfdb_neighbor(q, dir);
+        if peer == q {
+            continue; // ring of size 1: the link is a self-loop
+        }
+        let out = LinkId::Torus { qfdb: q, dir };
+        let back = LinkId::Torus { qfdb: peer, dir: dir.opposite() };
+        plan = match up {
+            Some(u) => plan.flap_torus(q, dir, down, u).flap_torus(peer, dir.opposite(), down, u),
+            None => plan.fail_torus(q, dir, down).fail_torus(peer, dir.opposite(), down),
+        };
+        debug_assert!(!plan.link_up(out, down) && !plan.link_up(back, down));
+    }
+    plan
+}
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let cmd: String = raw.first().cloned().unwrap_or_else(|| "help".to_string());
@@ -158,13 +264,14 @@ fn main() {
         // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
         // and `sched` adapt their rank lists to the machine, so they
         // smoke at any size.
-        const SMALL_OK: [&str; 8] = [
+        const SMALL_OK: [&str; 9] = [
             "hw-pingpong",
             "osu-mbw",
             "osu-incast",
             "osu-overlap",
             "osu-allreduce",
             "router-hotspot",
+            "faults",
             "scaling",
             "sched",
         ];
@@ -217,6 +324,36 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Fault-injection flags (DESIGN.md §14): attach a FaultPlan to the
+    // cell-level model.  `--faults` kills torus links permanently,
+    // `--flap` takes them down and back up, `--ber` enables the seeded
+    // per-link bit-error process.  They only make sense where cells
+    // exist, so the flow model rejects them up front.
+    let fail_spec = args.value("--faults");
+    let flap_spec = args.value("--flap");
+    let ber_spec = args.value("--ber");
+    let model = if fail_spec.is_some() || flap_spec.is_some() || ber_spec.is_some() {
+        let NetworkModel::Cell { policy, .. } = model else {
+            eprintln!(
+                "--faults/--flap/--ber need a cell-level model \
+                 (add --network-model cell or cell-adaptive)"
+            );
+            std::process::exit(2);
+        };
+        let plan = build_fault_plan(
+            &cfg,
+            fail_spec.as_deref(),
+            flap_spec.as_deref(),
+            ber_spec.as_deref(),
+        )
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        NetworkModel::cell_with_faults(policy, plan)
+    } else {
+        model
+    };
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
@@ -231,7 +368,7 @@ fn main() {
         ];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
-                "--network-model applies to: {} (router-hotspot is always cell-level)",
+                "--network-model applies to: {} (router-hotspot and faults are always cell-level)",
                 MODEL_OK.join(", ")
             );
             std::process::exit(2);
@@ -278,6 +415,10 @@ fn main() {
         "router-hotspot" => {
             args.finish(cmd);
             router_hotspot(&cfg);
+        }
+        "faults" => {
+            args.finish(cmd);
+            faults_cmd(&cfg);
         }
         "bcast-model" => {
             args.finish(cmd);
@@ -339,6 +480,7 @@ fn main() {
             osu_incast(&cfg, &model);
             osu_overlap(&cfg);
             router_hotspot(&cfg);
+            faults_cmd(&cfg);
             bcast_model(&cfg);
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
@@ -360,6 +502,8 @@ fn main() {
                  \tosu-incast       fan-in congestion: N senders into one QFDB\n\
                  \tosu-overlap      communication/computation overlap (nonblocking API)\n\
                  \trouter-hotspot   cell-level router: adaptive vs DOR + link failure\n\
+                 \tfaults           §4.4 fault-tolerance sweep: bit errors, link flap, permanent\n\
+                 \t                 partition — retransmissions, job recoveries, goodput degradation\n\
                  \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
                  \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
@@ -382,6 +526,11 @@ fn main() {
                  \t--allreduce-backend  software | accel: dot-product dispatch for scaling\n\
                  \t                 (accel degrades to software outside its §4.7 constraints)\n\
                  \t--halo           dim-staged | all-faces: halo-exchange schedule for scaling\n\
+                 \t--faults         <qfdb>:<dir>:<down_us>[,...] permanent torus-link deaths\n\
+                 \t                 (dir: x+ x- y+ y- z+ z-); needs --network-model cell\n\
+                 \t--flap           <qfdb>:<dir>:<down_us>:<up_us>[,...] transient link flaps\n\
+                 \t--ber            <rate>[@<seed>] seeded per-link bit-error process (cells are\n\
+                 \t                 corrupted, dropped and retransmitted end to end)\n\
                  \t--policy         compact | best-fit | scattered: sched placement policy\n\
                  \t--jobs           sched job stream: a trace file path, or `synthetic`\n\
                  \t--trace          <path> write a Chrome/Perfetto trace of the run (plus\n\
@@ -1009,6 +1158,118 @@ fn sched_cmd(
     }
 }
 
+/// §4.4 fault-tolerance sweep: one fixed two-job trace run under four
+/// fault scenarios of increasing severity.  Every scenario must finish
+/// every job — the reliable transport retransmits corrupted cells and
+/// the scheduler kills/re-queues jobs whose placement a partition cuts
+/// in half — so the interesting output is the *cost*: retransmissions,
+/// recoveries and goodput degradation (makespan vs the fault-free run).
+fn faults_cmd(cfg: &SystemConfig) {
+    let specs = [
+        sched::JobSpec {
+            name: "span".to_string(),
+            ranks: 16,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: sched::Workload::by_spec("halo:hpcg:2").expect("static spec"),
+        },
+        sched::JobSpec {
+            name: "local".to_string(),
+            ranks: 8,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: sched::Workload::by_spec("allreduce:4096x3").expect("static spec"),
+        },
+    ];
+    // The victim QFDB: first board-set of the second blade — scattered
+    // placement puts one MPSoC of every job there, so every scenario
+    // that isolates it dooms both jobs' initial placements.
+    let victim = QfdbId(cfg.qfdbs_per_mezz as u32);
+    let down = SimTime::from_us(50.0);
+    let up = SimTime::from_us(600.0);
+    let scenarios: [(&str, FaultPlan); 4] = [
+        ("fault-free", FaultPlan::default()),
+        ("bit-errors", FaultPlan::default().with_ber(1e-6, 42)),
+        ("link-flap", isolate_qfdb(cfg, victim, down, Some(up))),
+        ("partition", isolate_qfdb(cfg, victim, down, None)),
+    ];
+    println!(
+        "## §4.4 fault tolerance — {} jobs, scattered placement, victim QFDB {}\n",
+        specs.len(),
+        victim.0
+    );
+    let mut t = Table::new(&[
+        "scenario",
+        "jobs done",
+        "recoveries",
+        "corrupted cells",
+        "retransmissions",
+        "dup drops",
+        "makespan (ms)",
+        "goodput degradation",
+    ]);
+    let mut suite = Suite::new("faults");
+    suite.stamp(cfg);
+    let mut baseline_makespan = 0.0f64;
+    for (name, plan) in scenarios {
+        let model = NetworkModel::cell_with_faults(RoutePolicy::Deterministic, plan);
+        let sc = sched::SchedConfig::new(Policy::Scattered, model);
+        let out = sched::run_schedule(cfg, &specs, &sc).unwrap_or_else(|e| {
+            eprintln!("faults scenario {name} failed: {e}");
+            std::process::exit(1);
+        });
+        assert_eq!(out.jobs.len(), specs.len(), "{name}: every job must complete");
+        if name == "fault-free" {
+            baseline_makespan = out.makespan_s;
+        }
+        // makespan relative to the fault-free run: >= 1, the end-to-end
+        // price of the scenario's faults (retransmission latency + the
+        // restart-from-arrival recoveries)
+        let degradation = out.makespan_s / baseline_makespan;
+        let recoveries: u32 = out.jobs.iter().map(|j| j.recoveries).sum();
+        t.row(&[
+            name.to_string(),
+            out.jobs.len().to_string(),
+            recoveries.to_string(),
+            out.summary.cells_corrupted.to_string(),
+            out.summary.retransmissions.to_string(),
+            out.summary.dup_drops.to_string(),
+            format!("{:.3}", out.makespan_s * 1e3),
+            format!("{degradation:.3}x"),
+        ]);
+        for r in &out.recoveries {
+            println!(
+                "  [{name}] recovered {:?}: doomed at {} us, {}",
+                r.name,
+                us(r.doomed_at.us()),
+                match r.healed_at {
+                    Some(h) => format!("re-eligible at {} us", us(h.us())),
+                    None => "stranded boards quarantined".to_string(),
+                }
+            );
+        }
+        suite.metric(&format!("scenario/{name}/makespan_s"), out.makespan_s, "s");
+        suite.metric(&format!("scenario/{name}/mean_slowdown"), out.mean_slowdown(), "x");
+        suite.metric(&format!("scenario/{name}/recoveries"), recoveries as f64, "restarts");
+        suite.metric(
+            &format!("scenario/{name}/cells_corrupted"),
+            out.summary.cells_corrupted as f64,
+            "cells",
+        );
+        suite.metric(
+            &format!("scenario/{name}/retransmissions"),
+            out.summary.retransmissions as f64,
+            "retries",
+        );
+        suite.metric(&format!("scenario/{name}/goodput_degradation"), degradation, "x");
+    }
+    println!();
+    println!("{}", t.render());
+    if let Err(e) = suite.write_json() {
+        eprintln!("could not write BENCH_faults.json: {e}");
+    }
+}
+
 fn matmul_accel() {
     println!("## §7 — matrix-multiplication accelerator\n");
     let m = MatmulAccel::default();
@@ -1035,4 +1296,68 @@ fn matmul_accel() {
         power::QFDB_IDLE_W,
         power::qfdb_power(power::QfdbLoad { busy_cpus: 4, matmul_accels: 4 })
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_flag_parsing_round_trips() {
+        let cfg = SystemConfig::two_blades();
+        let plan =
+            build_fault_plan(&cfg, Some("4:y+:50"), Some("0:x-:10:20,1:z+:5:9"), Some("1e-9@7"))
+                .unwrap();
+        assert!(!plan.link_up(LinkId::Torus { qfdb: QfdbId(4), dir: Dir::YPlus }, SimTime::from_us(60.0)));
+        let (down, up) = plan.window(LinkId::Torus { qfdb: QfdbId(0), dir: Dir::XMinus }).unwrap();
+        assert_eq!((down, up), (SimTime::from_us(10.0), Some(SimTime::from_us(20.0))));
+        assert!(plan.is_lossy());
+        assert_eq!(plan.seed(), 7);
+    }
+
+    #[test]
+    fn fault_flag_parsing_rejects_malformed_specs() {
+        let cfg = SystemConfig::two_blades();
+        // bad direction token
+        assert!(parse_fail_list(&cfg, FaultPlan::default(), "0:q+:50").is_err());
+        // QFDB out of range (two blades have 8)
+        assert!(parse_fail_list(&cfg, FaultPlan::default(), "8:x+:50").is_err());
+        // wrong field count
+        assert!(parse_fail_list(&cfg, FaultPlan::default(), "0:x+").is_err());
+        assert!(parse_flap_list(&cfg, FaultPlan::default(), "0:x+:50").is_err());
+        // flap must heal after it fails (surfaced from try_flap_link)
+        assert!(parse_flap_list(&cfg, FaultPlan::default(), "0:x+:50:50").is_err());
+        // negative time, non-numeric rate, out-of-range rate
+        assert!(parse_us("-3").is_err());
+        assert!(parse_ber(FaultPlan::default(), "lots").is_err());
+        assert!(parse_ber(FaultPlan::default(), "1.5").is_err());
+    }
+
+    #[test]
+    fn isolate_qfdb_cuts_every_incident_direction_both_ways() {
+        let cfg = SystemConfig::two_blades();
+        let topo = Topology::new(cfg.clone());
+        let q = QfdbId(4);
+        let t = SimTime::from_us(100.0);
+        let plan = isolate_qfdb(&cfg, q, SimTime::from_us(50.0), None);
+        for dir in Dir::all() {
+            let peer = topo.qfdb_neighbor(q, dir);
+            if peer == q {
+                continue;
+            }
+            assert!(!plan.link_up(LinkId::Torus { qfdb: q, dir }, t));
+            assert!(!plan.link_up(LinkId::Torus { qfdb: peer, dir: dir.opposite() }, t));
+        }
+        // healed variant restores both sides
+        let heal = SimTime::from_us(200.0);
+        let flap = isolate_qfdb(&cfg, q, SimTime::from_us(50.0), Some(heal));
+        for dir in Dir::all() {
+            let peer = topo.qfdb_neighbor(q, dir);
+            if peer == q {
+                continue;
+            }
+            assert!(flap.link_up(LinkId::Torus { qfdb: q, dir }, heal));
+            assert!(flap.link_up(LinkId::Torus { qfdb: peer, dir: dir.opposite() }, heal));
+        }
+    }
 }

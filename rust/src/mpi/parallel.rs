@@ -278,10 +278,22 @@ fn components(ops: &[LedgerOp]) -> (Vec<u64>, Vec<Vec<usize>>) {
 impl ParallelRuntime {
     /// Build the runtime for `cfg.sim_workers` workers, or `None` when
     /// parallel execution is disabled (fewer than 2 workers requested,
-    /// or the machine has a single blade group so there is nothing to
-    /// shard).
+    /// the machine has a single blade group so there is nothing to
+    /// shard, or the network model is lossy).
+    ///
+    /// The lossy bail-out is what makes fault scenarios invariant
+    /// across `--workers` counts: end-to-end retransmission timers
+    /// create cross-partition causal chains (a NACK on one blade group
+    /// re-arms a send on another within the ACK-timeout horizon, well
+    /// inside the conservative lookahead), so a lossy run executes on
+    /// the single-threaded reference path regardless of the requested
+    /// worker count — `--workers 1/2/4` produce bit-identical results
+    /// by construction.
     pub fn new(cfg: &SystemConfig, model: &NetworkModel) -> Option<ParallelRuntime> {
         if cfg.sim_workers < 2 {
+            return None;
+        }
+        if model.is_lossy() {
             return None;
         }
         let pmap = PartitionMap::new(cfg, cfg.sim_workers);
@@ -503,6 +515,35 @@ mod tests {
         let mut single = SystemConfig::mezzanine();
         single.sim_workers = 8;
         assert!(ParallelRuntime::new(&single, &NetworkModel::Flow).is_none());
+    }
+
+    #[test]
+    fn runtime_disabled_on_lossy_models_but_not_flaps() {
+        use crate::network::FaultPlan;
+        use crate::topology::{Dir, QfdbId};
+        let mut cfg = SystemConfig::rack();
+        cfg.sim_workers = 4;
+        // BER > 0: retransmission timers break partition lookahead, so a
+        // lossy run stays on the single-threaded reference path — that is
+        // the worker-invariance guarantee for fault sweeps.
+        let lossy = NetworkModel::cell_with_faults(
+            RoutePolicy::Deterministic,
+            FaultPlan::none().with_ber(1e-6, 1),
+        );
+        assert!(ParallelRuntime::new(&cfg, &lossy).is_none());
+        // Flaps alone are not lossy: they serialize windows onto the full
+        // partition mask (like permanent faults) but keep the runtime.
+        let flappy = NetworkModel::cell_with_faults(
+            RoutePolicy::Deterministic,
+            FaultPlan::none().flap_torus(
+                QfdbId(0),
+                Dir::XPlus,
+                SimTime::from_us(1.0),
+                SimTime::from_us(2.0),
+            ),
+        );
+        let rt = ParallelRuntime::new(&cfg, &flappy).expect("flaps keep the runtime");
+        drop(rt);
     }
 
     #[test]

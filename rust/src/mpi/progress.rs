@@ -80,6 +80,20 @@ enum MpiEvent {
     DataDelivered(usize),
     /// A local compute phase finished on its rank ([`icompute`]).
     ComputeDone(usize),
+    /// End-to-end ACK timer for one transport stage of request `.0`
+    /// (lossy models only, §4.4): the destination NI's CRC rejected the
+    /// stage's injection (`.1`, see [`Stage`]), no ACK came back, and the
+    /// sender's hardware timer fires to relaunch attempt `.2 + 1`.
+    AckTimer(usize, u8, u32),
+}
+
+/// Transport stages of a send request, as carried by
+/// [`MpiEvent::AckTimer`] and the per-stage arrival dedup bitmask.
+mod stage {
+    pub const EAGER: u8 = 0;
+    pub const RTS: u8 = 1;
+    pub const CTS: u8 = 2;
+    pub const RDMA: u8 = 3;
 }
 
 #[derive(Debug)]
@@ -106,6 +120,12 @@ struct ReqState {
     /// caller still holds un-waited are never recycled, so handles stay
     /// valid across interleaved blocking calls.
     consumed: bool,
+    /// Per-stage arrival dedup bitmask (`1 << stage::*`): the receiver's
+    /// sequence check.  A stage arrival whose bit is already set is a
+    /// retransmitted duplicate and is dropped without a second
+    /// user-buffer write — delivery is exactly-once.  Stays zero-cost on
+    /// the zero-fault path (bits are set but never hit).
+    seen: u8,
 }
 
 /// The per-world progress engine: event queue + request table + per-pair
@@ -119,6 +139,17 @@ pub struct Progress {
     /// Bumped on every [`Progress::recycle`]/[`Progress::reset`];
     /// stamped into each [`Request`] to detect stale handles.
     gen: u64,
+    /// Transport retransmissions triggered by ACK timeouts (lossy models
+    /// only; zero on a fault-free run).
+    retransmissions: u64,
+    /// Stage injections rejected by the destination CRC (corrupted cells
+    /// on the wire — each also appears as a [`SpanKind::Drop`] span).
+    corrupt_drops: u64,
+    /// Duplicate stage arrivals suppressed by the receiver sequence
+    /// check (defense in depth: the flow-level model decides corruption
+    /// at injection, so genuine duplicates only arise in the cell-exact
+    /// reference transport, `crate::ni::protocol`).
+    dup_drops: u64,
 }
 
 fn pop_front(
@@ -272,6 +303,7 @@ impl Progress {
             eager_arrival: None,
             done: None,
             consumed: false,
+            seen: 0,
         });
         if let Some(rid) = pop_front(&mut self.unmatched_recvs, (src, dst)) {
             self.reqs[id].partner = Some(rid);
@@ -306,6 +338,7 @@ impl Progress {
             eager_arrival: None,
             done: None,
             consumed: false,
+            seen: 0,
         });
         if let Some(sid) = pop_front(&mut self.unmatched_sends, (src, dst)) {
             self.reqs[id].partner = Some(sid);
@@ -348,6 +381,7 @@ impl Progress {
             eager_arrival: None,
             done: None,
             consumed: false,
+            seen: 0,
         });
         self.engine.post(at + dur, MpiEvent::ComputeDone(id));
         Request { id, gen: self.gen }
@@ -549,6 +583,138 @@ impl Progress {
         self.engine.peak_pending()
     }
 
+    /// Transport retransmissions driven by ACK timeouts so far.
+    pub fn retransmissions(&self) -> u64 {
+        self.retransmissions
+    }
+
+    /// Stage injections the destination CRC rejected so far.
+    pub fn corrupt_drops(&self) -> u64 {
+        self.corrupt_drops
+    }
+
+    /// Duplicate arrivals suppressed by the receiver sequence check.
+    pub fn dup_drops(&self) -> u64 {
+        self.dup_drops
+    }
+
+    /// Capped exponential backoff for transport retransmissions (§4.4):
+    /// `pktz_timeout · 2^min(attempt, 6)`.  Retries are unbounded — the
+    /// per-attempt corruption draws are independent (each retransmission
+    /// advances the links' crossing counters), so for any BER < 1 every
+    /// stage eventually lands and delivery is live; the cap keeps the
+    /// wait bounded at 64 timeout periods.
+    fn backoff(timeout: SimDuration, attempt: u32) -> SimDuration {
+        timeout.times(1u64 << attempt.min(6))
+    }
+
+    /// Launch one transport stage of send request `id` against a lossy
+    /// fabric: run the stage's NI primitive, compare the mesh's corrupted
+    /// cell count across the call, and either post the arrival follow-up
+    /// (clean — identical values to the fault-free inline arm) or arm
+    /// the end-to-end ACK timer that will retransmit (any cell of the
+    /// transfer corrupted: the destination CRC rejects the whole stage;
+    /// the wire time was still spent).  The sender holds its buffer —
+    /// `done` is only stamped by a clean launch.
+    fn lossy_launch(
+        &mut self,
+        fab: &mut Fabric,
+        id: usize,
+        stg: u8,
+        at: SimTime,
+        attempt: u32,
+    ) {
+        fab.set_trace_flow(id as u64);
+        let before = fab.cells_corrupted();
+        let (rank, bytes) = (self.reqs[id].rank, self.reqs[id].bytes);
+        match stg {
+            stage::EAGER => {
+                let fwd = self.reqs[id].fwd.expect("send has a route");
+                let e = packetizer::eager_send(fab, &fwd, at, bytes);
+                if fab.cells_corrupted() == before {
+                    self.reqs[id].done = Some(e.cpu_free);
+                    self.engine.post(e.visible, MpiEvent::EagerArrive(id));
+                    self.span_eager(rank, id, at, e.cpu_free, e.visible, bytes);
+                    return;
+                }
+            }
+            stage::RTS => {
+                let fwd = self.reqs[id].fwd.expect("send has a route");
+                let arr = packetizer::send_small(fab, &fwd, at, rdma::HANDSHAKE_BYTES);
+                if fab.cells_corrupted() == before {
+                    self.engine.post(arr, MpiEvent::RtsArrive(id));
+                    self.engine.trace.span(
+                        Track::Rank(rank as u32),
+                        SpanKind::Rts,
+                        id as u64,
+                        at,
+                        arr,
+                        rdma::HANDSHAKE_BYTES as u64,
+                    );
+                    return;
+                }
+            }
+            stage::CTS => {
+                let back = self.reqs[id].back.expect("send has a return route");
+                let arr = packetizer::send_small(fab, &back, at, rdma::HANDSHAKE_BYTES);
+                if fab.cells_corrupted() == before {
+                    self.engine.post(arr, MpiEvent::CtsArrive(id));
+                    // the CTS runs on the receiver's timeline
+                    self.engine.trace.span(
+                        Track::Rank(self.reqs[id].peer as u32),
+                        SpanKind::Cts,
+                        id as u64,
+                        at,
+                        arr,
+                        rdma::HANDSHAKE_BYTES as u64,
+                    );
+                    return;
+                }
+            }
+            stage::RDMA => {
+                let fwd = self.reqs[id].fwd.expect("send has a route");
+                let c = rdma::rdma_write(fab, &fwd, at, bytes, Pacing::Sequential);
+                if fab.cells_corrupted() == before {
+                    self.reqs[id].done = Some(c.src_done);
+                    self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                    self.engine.trace.span(
+                        Track::Rank(rank as u32),
+                        SpanKind::Rdma,
+                        id as u64,
+                        at,
+                        c.notif_visible,
+                        bytes as u64,
+                    );
+                    return;
+                }
+            }
+            _ => unreachable!("unknown transport stage {stg}"),
+        }
+        // Corrupted: no arrival, no ACK — the hardware timer detects the
+        // loss and relaunches the stage with the next backoff step.
+        self.corrupt_drops += 1;
+        let wait = Self::backoff(fab.calib().pktz_timeout, attempt);
+        self.engine.schedule(at + wait, MpiEvent::AckTimer(id, stg, attempt));
+    }
+
+    /// The rank whose timeline owns transport stage `stg` of request
+    /// `id`: the CTS is built and injected by the receiver.
+    fn stage_owner(&self, id: usize, stg: u8) -> u32 {
+        if stg == stage::CTS { self.reqs[id].peer as u32 } else { self.reqs[id].rank as u32 }
+    }
+
+    /// Receiver sequence check for a stage arrival: `true` if this is a
+    /// duplicate (already accepted once) that must be dropped.
+    fn dedup(&mut self, id: usize, stg: u8) -> bool {
+        let bit = 1u8 << stg;
+        if self.reqs[id].seen & bit != 0 {
+            self.dup_drops += 1;
+            return true;
+        }
+        self.reqs[id].seen |= bit;
+        false
+    }
+
     /// In multi-worker mode (`par` is `Some`) the four arms that touch
     /// the fabric do not execute it inline: they reserve the follow-up
     /// event's sequence number and record the operation into the open
@@ -583,6 +749,8 @@ impl Progress {
                         if let Some(p) = par {
                             let seq = self.engine.reserve_seq();
                             p.record(OpKind::Eager, fwd, bytes, id, seq, t + mpi_sw);
+                        } else if fab.is_lossy() {
+                            self.lossy_launch(fab, id, stage::EAGER, t + mpi_sw, 0);
                         } else {
                             fab.set_trace_flow(id as u64);
                             let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
@@ -602,6 +770,8 @@ impl Progress {
                                 seq,
                                 t + mpi_sw,
                             );
+                        } else if fab.is_lossy() {
+                            self.lossy_launch(fab, id, stage::RTS, t + mpi_sw, 0);
                         } else {
                             fab.set_trace_flow(id as u64);
                             let arr = packetizer::send_small(
@@ -624,6 +794,9 @@ impl Progress {
                 }
             }
             MpiEvent::EagerArrive(id) => {
+                if self.dedup(id, stage::EAGER) {
+                    return;
+                }
                 let mpi_sw = fab.calib().mpi_sw;
                 match self.reqs[id].partner {
                     Some(rid) => {
@@ -636,6 +809,9 @@ impl Progress {
                 }
             }
             MpiEvent::RtsArrive(id) => {
+                if self.dedup(id, stage::RTS) {
+                    return;
+                }
                 let mpi_sw = fab.calib().mpi_sw;
                 match self.reqs[id].partner {
                     Some(rid) => {
@@ -651,6 +827,8 @@ impl Progress {
                 if let Some(p) = par {
                     let seq = self.engine.reserve_seq();
                     p.record(OpKind::Cts, back, rdma::HANDSHAKE_BYTES, id, seq, t + cts_sw);
+                } else if fab.is_lossy() {
+                    self.lossy_launch(fab, id, stage::CTS, t + cts_sw, 0);
                 } else {
                     fab.set_trace_flow(id as u64);
                     let arr =
@@ -668,11 +846,16 @@ impl Progress {
                 }
             }
             MpiEvent::CtsArrive(id) => {
+                if self.dedup(id, stage::CTS) {
+                    return;
+                }
                 let fwd = self.reqs[id].fwd.expect("send has a route");
                 let bytes = self.reqs[id].bytes;
                 if let Some(p) = par {
                     let seq = self.engine.reserve_seq();
                     p.record(OpKind::Rdma, fwd, bytes, id, seq, t);
+                } else if fab.is_lossy() {
+                    self.lossy_launch(fab, id, stage::RDMA, t, 0);
                 } else {
                     fab.set_trace_flow(id as u64);
                     let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
@@ -691,6 +874,9 @@ impl Progress {
                 }
             }
             MpiEvent::DataDelivered(id) => {
+                if self.dedup(id, stage::RDMA) {
+                    return;
+                }
                 let mpi_sw = fab.calib().mpi_sw;
                 let rid = self.reqs[id]
                     .partner
@@ -702,6 +888,20 @@ impl Progress {
             }
             MpiEvent::ComputeDone(id) => {
                 self.reqs[id].done = Some(t);
+            }
+            MpiEvent::AckTimer(id, stg, attempt) => {
+                if self.reqs[id].seen & (1 << stg) != 0 {
+                    return; // stale: the stage landed after all
+                }
+                self.retransmissions += 1;
+                self.engine.trace.instant(
+                    Track::Rank(self.stage_owner(id, stg)),
+                    SpanKind::Retransmit,
+                    id as u64,
+                    t,
+                    (attempt + 1) as u64,
+                );
+                self.lossy_launch(fab, id, stg, t, attempt + 1);
             }
         }
     }

@@ -140,6 +140,20 @@ impl Fabric {
         self.mesh.is_some()
     }
 
+    /// Cells can arrive corrupted on this fabric (the mesh's seeded
+    /// bit-error process is armed) — the MPI layer must run its
+    /// reliable transport (ACK timers, NACK, retransmission, dedup).
+    pub fn is_lossy(&self) -> bool {
+        self.mesh.as_ref().map_or(false, |m| m.ber_active())
+    }
+
+    /// Cells corrupted by the bit-error process so far (monotone; 0 on
+    /// the flow model).  The transport layer reads deltas around each
+    /// transfer to learn whether the payload arrived dirty.
+    pub fn cells_corrupted(&self) -> u64 {
+        self.mesh.as_ref().map_or(0, |m| m.cells_corrupted())
+    }
+
     /// Toggle the mesh's cell-train fast path (no-op on the flow model).
     /// Parity tests and benches use this to force the per-cell event
     /// reference path.

@@ -107,10 +107,21 @@ impl RoutePolicy {
     }
 }
 
-/// Links taken down at configurable times (fault injection scenarios).
+/// Transient and permanent link faults plus a seeded bit-error process
+/// (fault injection scenarios): permanent link deaths, link *flaps*
+/// (down-at/up-at intervals), and a per-link cell-corruption draw
+/// derived from a bit-error rate.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     down: Vec<(LinkId, SimTime)>,
+    flaps: Vec<(LinkId, SimTime, SimTime)>,
+    /// Per-bit error probability on torus wires (0 = error-free).  The
+    /// mesh converts it to a per-cell corruption probability,
+    /// `1 - (1 - ber)^cell_bits`.
+    ber: f64,
+    /// Seed of the corruption draw (`sim::rng::hash_unit` over
+    /// (seed, link, crossing) — a pure function of the traffic order).
+    seed: u64,
 }
 
 impl FaultPlan {
@@ -122,13 +133,22 @@ impl FaultPlan {
     /// (inter-QFDB SFP+) links can fail: an intra-QFDB hard link has no
     /// alternative route (traffic funnels F_src → F1 over a fixed mesh),
     /// so a fault there could only be ignored — reject it loudly instead.
-    pub fn fail_link(mut self, link: LinkId, at: SimTime) -> FaultPlan {
-        assert!(
-            link.is_torus(),
-            "FaultPlan supports torus links only; {link:?} has no alternative route"
-        );
+    /// Panics on a non-torus link; fault specs parsed from user input
+    /// should go through [`FaultPlan::try_fail_link`] instead.
+    pub fn fail_link(self, link: LinkId, at: SimTime) -> FaultPlan {
+        self.try_fail_link(link, at).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`FaultPlan::fail_link`] for specs that come
+    /// from user flags: a non-torus link is a usage error, not a panic.
+    pub fn try_fail_link(mut self, link: LinkId, at: SimTime) -> Result<FaultPlan, String> {
+        if !link.is_torus() {
+            return Err(format!(
+                "FaultPlan supports torus links only; {link:?} has no alternative route"
+            ));
+        }
         self.down.push((link, at));
-        self
+        Ok(self)
     }
 
     /// Mark the torus link leaving `qfdb` in `dir` failed from `at` on.
@@ -136,12 +156,127 @@ impl FaultPlan {
         self.fail_link(LinkId::Torus { qfdb, dir }, at)
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.down.is_empty()
+    /// Take `link` down over `[down, up)` and bring it back (a flap).
+    /// Panics on a non-torus link or an empty window; user-flag specs
+    /// should go through [`FaultPlan::try_flap_link`].
+    pub fn flap_link(self, link: LinkId, down: SimTime, up: SimTime) -> FaultPlan {
+        self.try_flap_link(link, down, up).unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Fallible form of [`FaultPlan::flap_link`] for user-flag specs.
+    pub fn try_flap_link(
+        mut self,
+        link: LinkId,
+        down: SimTime,
+        up: SimTime,
+    ) -> Result<FaultPlan, String> {
+        if !link.is_torus() {
+            return Err(format!(
+                "FaultPlan supports torus links only; {link:?} has no alternative route"
+            ));
+        }
+        if up <= down {
+            return Err(format!(
+                "flap window is empty: link comes back at {up} but goes down at {down}"
+            ));
+        }
+        self.flaps.push((link, down, up));
+        Ok(self)
+    }
+
+    /// Flap the torus link leaving `qfdb` in `dir` over `[down, up)`.
+    pub fn flap_torus(self, qfdb: QfdbId, dir: Dir, down: SimTime, up: SimTime) -> FaultPlan {
+        self.flap_link(LinkId::Torus { qfdb, dir }, down, up)
+    }
+
+    /// Enable the seeded bit-error process on every torus wire.  Panics
+    /// on an out-of-range rate; user-flag specs should go through
+    /// [`FaultPlan::try_with_ber`].
+    pub fn with_ber(self, ber: f64, seed: u64) -> FaultPlan {
+        self.try_with_ber(ber, seed).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`FaultPlan::with_ber`] for user-flag specs.
+    pub fn try_with_ber(mut self, ber: f64, seed: u64) -> Result<FaultPlan, String> {
+        if !(0.0..1.0).contains(&ber) || !ber.is_finite() {
+            return Err(format!("bit-error rate must be in [0, 1), got {ber}"));
+        }
+        self.ber = ber;
+        self.seed = seed;
+        Ok(self)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.down.is_empty() && self.flaps.is_empty() && self.ber == 0.0
+    }
+
+    /// Cells can arrive corrupted under this plan (the reliable
+    /// transport must be armed).  Flaps and permanent deaths alone are
+    /// not lossy: the mesh reroutes around a down link, it never drops.
+    pub fn is_lossy(&self) -> bool {
+        self.ber > 0.0
+    }
+
+    /// Per-bit error probability (0 = error-free).
+    pub fn ber(&self) -> f64 {
+        self.ber
+    }
+
+    /// Seed of the corruption draw.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Permanent link deaths, `(link, down_at)`.
     pub fn entries(&self) -> impl Iterator<Item = &(LinkId, SimTime)> {
         self.down.iter()
+    }
+
+    /// Link flaps, `(link, down_at, up_at)`.
+    pub fn flap_entries(&self) -> impl Iterator<Item = &(LinkId, SimTime, SimTime)> {
+        self.flaps.iter()
+    }
+
+    /// Every up/down transition time of the plan (unsorted, with
+    /// duplicates) — the instants at which the link-state graph changes.
+    pub fn transitions(&self) -> impl Iterator<Item = SimTime> + '_ {
+        self.down
+            .iter()
+            .map(|&(_, t)| t)
+            .chain(self.flaps.iter().flat_map(|&(_, d, u)| [d, u]))
+    }
+
+    /// The merged outage window of `link`, or `None` if the plan never
+    /// touches it.  Same merge rule as `CreditedLink::fail_interval`:
+    /// the earliest down time wins, the restore is the latest flap
+    /// restore, and any permanent entry makes the outage permanent.
+    pub fn window(&self, link: LinkId) -> Option<(SimTime, Option<SimTime>)> {
+        let mut down: Option<SimTime> = None;
+        let mut up: Option<SimTime> = None;
+        let mut permanent = false;
+        for &(l, at) in &self.down {
+            if l == link {
+                down = Some(down.map_or(at, |d| d.min(at)));
+                permanent = true;
+            }
+        }
+        for &(l, d, u) in &self.flaps {
+            if l == link {
+                down = Some(down.map_or(d, |x| x.min(d)));
+                up = Some(up.map_or(u, |x| x.max(u)));
+            }
+        }
+        down.map(|d| (d, if permanent { None } else { up }))
+    }
+
+    /// Is `link` usable at `at` under this plan (bit errors aside)?
+    /// Mirrors `CreditedLink::is_up` so the scheduler's routability
+    /// analysis sees exactly the link state the mesh routes against.
+    pub fn link_up(&self, link: LinkId, at: SimTime) -> bool {
+        match self.window(link) {
+            None => true,
+            Some((d, u)) => at < d || u.map_or(false, |u| at >= u),
+        }
     }
 }
 
@@ -174,6 +309,31 @@ impl NetworkModel {
             NetworkModel::Flow => "flow",
             NetworkModel::Cell { policy: RoutePolicy::Deterministic, .. } => "cell/dimension-order",
             NetworkModel::Cell { policy: RoutePolicy::Adaptive, .. } => "cell/adaptive",
+        }
+    }
+
+    /// Cells can arrive corrupted under this model (see
+    /// [`FaultPlan::is_lossy`]): the reliable transport must be armed.
+    pub fn is_lossy(&self) -> bool {
+        matches!(self, NetworkModel::Cell { faults, .. } if faults.is_lossy())
+    }
+
+    /// The model's fault plan, if it carries one.
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        match self {
+            NetworkModel::Flow => None,
+            NetworkModel::Cell { faults, .. } => Some(faults),
+        }
+    }
+
+    /// The same model with fault injection stripped.  Isolated-baseline
+    /// runs (the scheduler's slowdown denominator) measure each job
+    /// under ideal conditions, so the scenario's faults must not bleed
+    /// into the reference timing.
+    pub fn without_faults(&self) -> NetworkModel {
+        match self {
+            NetworkModel::Flow => NetworkModel::Flow,
+            NetworkModel::Cell { policy, .. } => NetworkModel::cell(*policy),
         }
     }
 }
@@ -219,6 +379,11 @@ struct MeshCell {
     crossed_torus: bool,
     hops: u32,
     delivered: Option<SimTime>,
+    /// A bit-error draw hit one of this cell's torus crossings: the
+    /// payload still arrives (and occupies every wire it crosses), but
+    /// the destination NI's CRC check fails and the transport layer
+    /// must retransmit end to end.
+    corrupted: bool,
 }
 
 impl MeshCell {
@@ -236,6 +401,7 @@ impl MeshCell {
             crossed_torus: false,
             hops: 0,
             delivered: None,
+            corrupted: false,
         }
     }
 }
@@ -300,6 +466,14 @@ pub struct RouterMesh {
     /// credits, and the total time spent blocked waiting for one).
     credit_stalls: u64,
     stall_time: SimDuration,
+    /// Per-cell corruption probability derived from the plan's BER
+    /// (`1 - (1 - ber)^cell_bits`; 0 disables the draw entirely).
+    ber_cell: f64,
+    /// Seed of the per-link corruption streams.
+    ber_seed: u64,
+    /// Cells whose CRC check fails at the destination (monotone; the
+    /// transport layer reads deltas around each transfer).
+    cells_corrupted: u64,
     // Calibration scalars (copied out of Calib; see the module docs).
     sw_lat: SimDuration,
     rt_lat: SimDuration,
@@ -327,6 +501,16 @@ impl RouterMesh {
         for &(link, at) in faults.entries() {
             links[link.flat(cfg)].fail_at(at);
         }
+        for &(link, down, up) in faults.flap_entries() {
+            links[link.flat(cfg)].fail_interval(down, Some(up));
+        }
+        let ber_cell = if faults.ber() > 0.0 {
+            let cell_bits = 8.0 * (calib.cell_payload + calib.cell_overhead) as f64;
+            1.0 - (1.0 - faults.ber()).powf(cell_bits)
+        } else {
+            0.0
+        };
+        let ber_seed = faults.seed();
         RouterMesh {
             policy,
             faults,
@@ -343,6 +527,9 @@ impl RouterMesh {
             route_reroutes: Cell::new(0),
             credit_stalls: 0,
             stall_time: SimDuration::ZERO,
+            ber_cell,
+            ber_seed,
+            cells_corrupted: 0,
             sw_lat: calib.switch_latency,
             rt_lat: calib.router_latency,
             ln_lat: calib.link_latency,
@@ -407,6 +594,19 @@ impl RouterMesh {
             credit_stalls: self.credit_stalls,
             stall_time: self.stall_time,
         }
+    }
+
+    /// Cells whose CRC check fails at the destination NI under the
+    /// seeded bit-error process (monotone).  The transport layer reads
+    /// deltas around each transfer to learn whether the payload arrived
+    /// dirty and must be retransmitted end to end.
+    pub fn cells_corrupted(&self) -> u64 {
+        self.cells_corrupted
+    }
+
+    /// The seeded bit-error process is armed (cells can corrupt).
+    pub fn ber_active(&self) -> bool {
+        self.ber_cell > 0.0
     }
 
     /// The mesh's flight recorder (per-hop link-occupancy spans).
@@ -505,6 +705,7 @@ impl RouterMesh {
         self.route_reroutes.set(0);
         self.credit_stalls = 0;
         self.stall_time = SimDuration::ZERO;
+        self.cells_corrupted = 0;
     }
 
     // ---- public transfer API --------------------------------------------
@@ -518,11 +719,13 @@ impl RouterMesh {
         if src == dst {
             return at + self.sw_lat;
         }
-        if self.batching {
+        if self.batching && self.ber_cell == 0.0 {
             // A lone cell's event chain is a deterministic sequential
             // walk — replay it without the queue (ps-identical; a single
             // cell can never contend with itself, and calls drain fully
-            // before the next injects).
+            // before the next injects).  With the bit-error process
+            // armed the call takes the event path instead, so the
+            // corruption draw lives in exactly one place (`start_on`).
             return self.walk_single(src, dst, at + self.sw_lat, payload);
         }
         let id = self.spawn(dst, payload, true, Loc::At(src));
@@ -611,10 +814,14 @@ impl RouterMesh {
 
     // ---- cell-train fast path -------------------------------------------
 
-    /// No link changes up/down state strictly after `at` (every fault
-    /// either already happened or never does within this call).
+    /// No link changes up/down state strictly after `at` (every down
+    /// *and* flap-restore transition either already happened or never
+    /// does within this call), and no bit-error process is armed.  A
+    /// lossy window — any pending transition, or BER at all — forces
+    /// the per-cell reference path, so corruption draws and mid-call
+    /// link-state changes are only ever handled by the event machinery.
     fn faults_static_at(&self, at: SimTime) -> bool {
-        self.faults.entries().all(|&(_, t)| t <= at)
+        self.ber_cell == 0.0 && self.faults.transitions().all(|t| t <= at)
     }
 
     /// Crossing latency charged before a cell's wire slot: L_ER ahead of
@@ -1147,6 +1354,29 @@ impl RouterMesh {
             start + ser,
             wire_bytes,
         );
+        // Seeded bit-error draw, torus wires only (intra-QFDB hard links
+        // are on-package and modelled error-free).  A hit corrupts the
+        // cell but the cell still crosses every remaining wire — bit
+        // errors are detected by the destination NI's CRC, not by the
+        // routers — so occupancy and timing are unchanged and only the
+        // delivery is dirty.
+        if is_torus && self.ber_cell > 0.0 {
+            let n = self.links[link].next_crossing();
+            if crate::sim::rng::hash_unit(self.ber_seed, link as u64, n) < self.ber_cell {
+                if !self.cells[id].corrupted {
+                    self.cells[id].corrupted = true;
+                    self.cells_corrupted += 1;
+                }
+                self.engine.trace.span(
+                    Track::Link(link as u32),
+                    SpanKind::Drop,
+                    self.trace_flow,
+                    start,
+                    start + ser,
+                    wire_bytes,
+                );
+            }
+        }
         // Cut-through dequeue: the upstream buffer slot frees the moment
         // this cell starts on the next wire.
         if let Some(prev) = self.cells[id].in_link.take() {
@@ -1514,6 +1744,131 @@ mod tests {
             adaptive < dor,
             "adaptive {adaptive} must beat dimension-order {dor} past a hot link"
         );
+    }
+
+    #[test]
+    fn flap_reroutes_during_the_window_and_restores_after() {
+        let t = topo();
+        let faults = FaultPlan::none().flap_torus(
+            QfdbId(0),
+            Dir::XPlus,
+            SimTime::from_us(10.0),
+            SimTime::from_us(30.0),
+        );
+        let m = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults.clone());
+        let direct = vec![Dir::XPlus];
+        let detour = vec![Dir::XMinus, Dir::XMinus, Dir::XMinus];
+        assert_eq!(m.probe_route(QfdbId(0), QfdbId(1), SimTime::ZERO), direct);
+        assert_eq!(m.probe_route(QfdbId(0), QfdbId(1), SimTime::from_us(10.0)), detour);
+        assert_eq!(m.probe_route(QfdbId(0), QfdbId(1), SimTime::from_us(29.9)), detour);
+        assert_eq!(
+            m.probe_route(QfdbId(0), QfdbId(1), SimTime::from_us(30.0)),
+            direct,
+            "flap restore must bring the direct route back"
+        );
+        // the plan-level mirror agrees with the mesh's link state
+        let link = LinkId::Torus { qfdb: QfdbId(0), dir: Dir::XPlus };
+        assert!(faults.link_up(link, SimTime::from_us(9.9)));
+        assert!(!faults.link_up(link, SimTime::from_us(10.0)));
+        assert!(faults.link_up(link, SimTime::from_us(30.0)));
+        assert_eq!(
+            faults.window(link),
+            Some((SimTime::from_us(10.0), Some(SimTime::from_us(30.0))))
+        );
+    }
+
+    #[test]
+    fn flap_is_a_train_split_point_until_it_resolves() {
+        // Inside and before the flap window the train fast path must
+        // stand down (per-cell reference path); after the restore the
+        // state is static again and trains re-engage.  Timing stays
+        // identical to a mesh forced onto the event path throughout.
+        let t = topo();
+        let faults = FaultPlan::none().flap_torus(
+            QfdbId(0),
+            Dir::XPlus,
+            SimTime::from_us(50.0),
+            SimTime::from_us(80.0),
+        );
+        let mut fast = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults.clone());
+        let mut slow = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, faults);
+        slow.set_batching(false);
+        let a = t.network_mpsoc(QfdbId(0));
+        let b = t.network_mpsoc(QfdbId(1));
+        for at_us in [0.0, 49.0, 55.0, 79.0] {
+            let at = SimTime::from_us(at_us);
+            assert_eq!(fast.block(a, b, at, 4096, false), slow.block(a, b, at, 4096, false));
+        }
+        assert!(fast.events_processed() > 0, "pending transitions must force the event path");
+        let before = fast.events_processed();
+        let f = fast.block(a, b, SimTime::from_us(100.0), 4096, false);
+        let s = slow.block(a, b, SimTime::from_us(100.0), 4096, false);
+        assert_eq!(f, s);
+        assert_eq!(fast.events_processed(), before, "post-restore call must batch again");
+    }
+
+    #[test]
+    fn ber_draw_is_deterministic_and_forces_the_event_path() {
+        let t = topo();
+        let plan = FaultPlan::none().with_ber(1e-4, 42);
+        let mut m1 = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, plan.clone());
+        let mut m2 = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, plan);
+        let a = t.network_mpsoc(QfdbId(0));
+        let b = t.network_mpsoc(QfdbId(1));
+        let mut at = SimTime::ZERO;
+        for _ in 0..8 {
+            let r1 = m1.block(a, b, at, 16 * 1024, false);
+            let r2 = m2.block(a, b, at, 16 * 1024, false);
+            assert_eq!(r1, r2, "identical seeds must corrupt identically");
+            at = r1.1;
+        }
+        assert_eq!(m1.cells_corrupted(), m2.cells_corrupted());
+        assert!(
+            m1.cells_corrupted() > 0,
+            "1e-4 BER over 512 torus cells should corrupt some (p_cell ~ 0.2)"
+        );
+        assert!(m1.events_processed() > 0, "BER must force the per-cell path");
+        // corruption never alters timing: a corrupted run matches a
+        // clean event-path run tick for tick
+        let mut clean = RouterMesh::new(t.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+        clean.set_batching(false);
+        let mut at2 = SimTime::ZERO;
+        let mut m3 =
+            RouterMesh::new(t.clone(), RoutePolicy::Deterministic, FaultPlan::none().with_ber(1e-4, 7));
+        for _ in 0..4 {
+            let c = clean.block(a, b, at2, 16 * 1024, false);
+            let d = m3.block(a, b, at2, 16 * 1024, false);
+            assert_eq!(c, d, "corruption is CRC-at-endpoint, timing must not move");
+            at2 = c.1;
+        }
+        // small cells draw from the same stream (event path under BER)
+        let before = m1.events_processed();
+        m1.small_cell(a, b, at, 8);
+        assert!(m1.events_processed() > before, "lossy small cells take the event path");
+    }
+
+    #[test]
+    fn try_builders_reject_bad_specs_without_panicking() {
+        let intra = LinkId::Intra { qfdb: QfdbId(0), from: 0, to: 1 };
+        let torus = LinkId::Torus { qfdb: QfdbId(0), dir: Dir::XPlus };
+        assert!(FaultPlan::none().try_fail_link(intra, SimTime::ZERO).is_err());
+        assert!(FaultPlan::none()
+            .try_flap_link(intra, SimTime::ZERO, SimTime::from_us(1.0))
+            .is_err());
+        assert!(FaultPlan::none()
+            .try_flap_link(torus, SimTime::from_us(2.0), SimTime::from_us(1.0))
+            .is_err(), "empty flap window");
+        assert!(FaultPlan::none().try_with_ber(1.5, 0).is_err());
+        assert!(FaultPlan::none().try_with_ber(-0.1, 0).is_err());
+        let ok = FaultPlan::none()
+            .try_fail_link(torus, SimTime::ZERO)
+            .and_then(|p| p.try_flap_link(torus, SimTime::from_us(1.0), SimTime::from_us(2.0)))
+            .and_then(|p| p.try_with_ber(1e-6, 3));
+        let plan = ok.expect("valid spec");
+        assert!(!plan.is_empty());
+        assert!(plan.is_lossy());
+        // permanent death overrides the flap restore in the merged window
+        assert_eq!(plan.window(torus), Some((SimTime::ZERO, None)));
     }
 
     #[test]

@@ -21,7 +21,12 @@
 //!   the FIFO head (strictly in-order acquisition — no younger cell can
 //!   grab a freed slot ahead of a queued waiter);
 //! * a **fault switch**: a link can be marked down from a configurable
-//!   time, after which the routing policies steer around it.
+//!   time — permanently, or as a *flap* with a restore time after which
+//!   the link carries traffic again — and the routing policies steer
+//!   around it while it is down;
+//! * a **crossing counter** feeding the seeded per-link bit-error draw
+//!   of the mesh: on a lossy run every wire grant consumes one index of
+//!   the link's deterministic corruption stream.
 //!
 //! Timing constants (link rates, cell gap) come from
 //! [`crate::topology::Calib`]; this file only owns the occupancy and
@@ -72,6 +77,14 @@ pub struct CreditedLink {
     ctrl: Resource,
     /// The link is down from this time on (fault injection).
     down_at: Option<SimTime>,
+    /// The link comes back up at this time (flap restore).  `None` with
+    /// `down_at` set means the outage is permanent.
+    up_at: Option<SimTime>,
+    /// Wire grants taken on this link so far — the index into the
+    /// link's seeded corruption stream (bit-error draws hash
+    /// (seed, link, crossing), so the stream is a pure function of the
+    /// traffic order, not of wall-clock or worker count).
+    crossings: u64,
 }
 
 impl CreditedLink {
@@ -86,21 +99,51 @@ impl CreditedLink {
             wire: Resource::new(),
             ctrl: Resource::new(),
             down_at: None,
+            up_at: None,
+            crossings: 0,
         }
     }
 
-    /// Mark the link failed from `at` on.
+    /// Mark the link failed from `at` on (permanent outage).
     pub fn fail_at(&mut self, at: SimTime) {
+        self.fail_interval(at, None);
+    }
+
+    /// Mark the link down over `[down, up)` — `up = None` makes the
+    /// outage permanent.  Multiple fault entries on one link merge into
+    /// a single window spanning all of them: the earliest down time
+    /// wins, and the restore time is the latest of the restores (or
+    /// never, if any entry was permanent).
+    pub fn fail_interval(&mut self, down: SimTime, up: Option<SimTime>) {
+        let had_fault = self.down_at.is_some();
         self.down_at = Some(match self.down_at {
-            Some(prev) => prev.min(at),
-            None => at,
+            Some(prev) => prev.min(down),
+            None => down,
         });
+        self.up_at = match (had_fault, self.up_at, up) {
+            (false, _, u) => u,
+            (true, Some(a), Some(b)) => Some(a.max(b)),
+            // either the existing or the new outage is permanent
+            _ => None,
+        };
     }
 
     /// Is the link usable for a cell departing at `at`?
     #[inline]
     pub fn is_up(&self, at: SimTime) -> bool {
-        self.down_at.map_or(true, |d| at < d)
+        match self.down_at {
+            None => true,
+            Some(d) => at < d || self.up_at.map_or(false, |u| at >= u),
+        }
+    }
+
+    /// Consume the next index of this link's corruption stream (the
+    /// mesh hashes it against the fault-plan seed on lossy runs).
+    #[inline]
+    pub fn next_crossing(&mut self) -> u64 {
+        let c = self.crossings;
+        self.crossings += 1;
+        c
     }
 
     /// Free downstream buffer slots on `vc`.
@@ -216,6 +259,9 @@ impl CreditedLink {
         for q in &mut self.waiting {
             q.clear();
         }
+        // The corruption stream restarts with the experiment; the fault
+        // window (scenario configuration) stays.
+        self.crossings = 0;
     }
 }
 
@@ -287,6 +333,34 @@ mod tests {
         // earliest failure wins
         l.fail_at(SimTime::from_us(10.0));
         assert!(!l.is_up(SimTime::from_us(4.0)));
+    }
+
+    #[test]
+    fn flap_window_restores_the_link() {
+        let mut l = link();
+        l.fail_interval(SimTime::from_us(3.0), Some(SimTime::from_us(7.0)));
+        assert!(l.is_up(SimTime::from_us(2.9)));
+        assert!(!l.is_up(SimTime::from_us(3.0)));
+        assert!(!l.is_up(SimTime::from_us(6.9)));
+        assert!(l.is_up(SimTime::from_us(7.0)), "flap restores at up_at");
+        // merging with a second flap widens the window
+        l.fail_interval(SimTime::from_us(1.0), Some(SimTime::from_us(5.0)));
+        assert!(!l.is_up(SimTime::from_us(1.0)));
+        assert!(!l.is_up(SimTime::from_us(6.5)));
+        assert!(l.is_up(SimTime::from_us(7.0)));
+        // a permanent failure overrides any restore
+        l.fail_at(SimTime::from_us(2.0));
+        assert!(!l.is_up(SimTime::from_us(100.0)));
+    }
+
+    #[test]
+    fn crossing_counter_is_sequential_and_resets() {
+        let mut l = link();
+        assert_eq!(l.next_crossing(), 0);
+        assert_eq!(l.next_crossing(), 1);
+        assert_eq!(l.next_crossing(), 2);
+        l.reset();
+        assert_eq!(l.next_crossing(), 0, "corruption stream restarts with the experiment");
     }
 
     #[test]

@@ -192,7 +192,9 @@ mod tests {
             m.deliver(v, 1, msg(999)),
             Delivery::Nack(NackReason::MailboxFull)
         );
-        // runtime drains one; delivery works again (sender retransmits)
+        // runtime drains one; delivery works again — the sender-side
+        // retransmission loop is exercised end-to-end in
+        // `protocol::tests::mailbox_full_nack_backoff_drain_then_redelivery`
         m.poll(v).unwrap();
         assert_eq!(m.deliver(v, 1, msg(999)), Delivery::Ack);
     }

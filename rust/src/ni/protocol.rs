@@ -38,6 +38,11 @@ struct Msg {
     ch: usize,
     attempt: u32,
     done: bool,
+    /// The destination mailbox has already enqueued this message once.
+    /// Models the receiver-side sequence check of §4.4: a retransmitted
+    /// copy (the original ACK was lost) is re-ACKed but *not* written a
+    /// second time into the user buffer — delivery is exactly-once.
+    enqueued: bool,
     /// Cells of this message the harness should drop (fault injection):
     /// attempt indices whose data cell is lost in the network.
     drop_attempts: Vec<u32>,
@@ -53,6 +58,8 @@ pub struct ProtocolSim {
     msgs: Vec<Msg>,
     pub delivered: Vec<(usize, SimTime)>,
     pub failed: Vec<usize>,
+    /// Duplicate data cells suppressed by the receiver sequence check.
+    pub dup_drops: u64,
     max_retries: u32,
 }
 
@@ -66,6 +73,7 @@ impl ProtocolSim {
             msgs: Vec::new(),
             delivered: Vec::new(),
             failed: Vec::new(),
+            dup_drops: 0,
             max_retries: 4,
         }
     }
@@ -99,6 +107,7 @@ impl ProtocolSim {
             ch,
             attempt: 0,
             done: false,
+            enqueued: false,
             drop_attempts,
             drop_ack_attempts,
         });
@@ -131,15 +140,27 @@ impl ProtocolSim {
         let calib = self.fabric.calib().clone();
         match ev {
             NiEvent::DataArrive { msg_id } => {
-                let (dst, dst_vif, pdid, src, payload, attempt) = {
+                let (dst, dst_vif, pdid, src, payload, attempt, enqueued) = {
                     let m = &self.msgs[msg_id];
-                    (m.dst, m.dst_vif, m.pdid, m.src, m.payload.clone(), m.attempt)
+                    (m.dst, m.dst_vif, m.pdid, m.src, m.payload.clone(), m.attempt, m.enqueued)
                 };
-                let delivery = self.mailboxes[dst.0 as usize].deliver(
-                    dst_vif,
-                    pdid,
-                    MbxMessage { src_node: src.0, payload },
-                );
+                let delivery = if enqueued {
+                    // Receiver sequence dedup: this message was already
+                    // enqueued once (its ACK was lost in transit).  The
+                    // mailbox re-ACKs without a second user-buffer write.
+                    self.dup_drops += 1;
+                    Delivery::Ack
+                } else {
+                    let d = self.mailboxes[dst.0 as usize].deliver(
+                        dst_vif,
+                        pdid,
+                        MbxMessage { src_node: src.0, payload },
+                    );
+                    if d == Delivery::Ack {
+                        self.msgs[msg_id].enqueued = true;
+                    }
+                    d
+                };
                 // ACK/NACK routed back to the source.
                 let back = self.fabric.route(dst, src);
                 let drop_ack = self.msgs[msg_id].drop_ack_attempts.contains(&attempt);
@@ -269,14 +290,53 @@ mod tests {
     }
 
     #[test]
-    fn lost_ack_causes_duplicate_but_single_completion() {
+    fn lost_ack_retransmission_is_deduplicated() {
         let (mut sim, mut eng, a, b, va, vb) = setup();
         sim.submit(&mut eng, SimTime::ZERO, a, va, b, vb, 7, vec![3; 8], vec![], vec![0]);
         sim.run(&mut eng);
         assert_eq!(sim.delivered.len(), 1);
-        // the message was received twice (the mailbox saw a duplicate) —
-        // the transport is at-least-once; dedup is the runtime's job
-        assert_eq!(sim.mailboxes[b.0 as usize].depth(vb), 2);
+        // the retransmitted copy reached the mailbox but the sequence
+        // check suppressed the second user-buffer write: exactly-once
+        assert_eq!(sim.mailboxes[b.0 as usize].depth(vb), 1);
+        assert_eq!(sim.dup_drops, 1);
+    }
+
+    #[test]
+    fn mailbox_full_nack_backoff_drain_then_redelivery() {
+        // End-to-end version of the mailbox `full_queue_nacks` unit test:
+        // the sender really does retransmit after the runtime drains.
+        let (mut sim, mut eng, a, b, va, vb) = setup();
+        use super::super::mailbox::{MbxMessage, QUEUE_CAPACITY};
+        for _ in 0..QUEUE_CAPACITY {
+            assert_eq!(
+                sim.mailboxes[b.0 as usize].deliver(
+                    vb,
+                    7,
+                    MbxMessage { src_node: 99, payload: vec![0; 4] }
+                ),
+                Delivery::Ack
+            );
+        }
+        sim.submit(&mut eng, SimTime::ZERO, a, va, b, vb, 7, vec![42; 8], vec![], vec![]);
+        // Step until the MailboxFull NACK has been processed (the sender
+        // has scheduled its backed-off relaunch), then drain one slot —
+        // the runtime catching up while the retransmission is in flight.
+        while sim.packetizers[a.0 as usize].retransmissions == 0 {
+            let (t, ev) = eng.next().expect("NACK before the event queue drains");
+            sim.handle(&mut eng, t, ev);
+        }
+        assert_eq!(sim.mailboxes[b.0 as usize].nacks, 1);
+        sim.mailboxes[b.0 as usize].poll(vb).unwrap();
+        sim.run(&mut eng);
+        assert_eq!(sim.delivered.len(), 1);
+        assert!(sim.failed.is_empty());
+        // capacity - 1 old messages + the redelivered one
+        assert_eq!(sim.mailboxes[b.0 as usize].depth(vb), QUEUE_CAPACITY);
+        let mut last = None;
+        while let Some(m) = sim.mailboxes[b.0 as usize].poll(vb) {
+            last = Some(m);
+        }
+        assert_eq!(last.unwrap().payload, vec![42; 8]);
     }
 
     #[test]

@@ -91,6 +91,9 @@ pub struct RackAlloc {
     cfg: SystemConfig,
     /// `free[m]` — MPSoC `m` is unallocated.
     free: Vec<bool>,
+    /// `quarantined[m]` — MPSoC `m` sits behind a permanent torus
+    /// partition and must never be granted again.
+    quarantined: Vec<bool>,
     /// Rotating blade cursor for [`Policy::Scattered`].
     cursor: usize,
 }
@@ -98,7 +101,7 @@ pub struct RackAlloc {
 impl RackAlloc {
     pub fn new(cfg: &SystemConfig) -> RackAlloc {
         let n = cfg.num_mpsocs();
-        RackAlloc { cfg: cfg.clone(), free: vec![true; n], cursor: 0 }
+        RackAlloc { cfg: cfg.clone(), free: vec![true; n], quarantined: vec![false; n], cursor: 0 }
     }
 
     /// MPSoCs per blade (mezzanine).
@@ -166,12 +169,36 @@ impl RackAlloc {
         Some(Allocation { mpsocs: picked })
     }
 
-    /// Return an allocation's MPSoCs to the free pool.
+    /// Return an allocation's MPSoCs to the free pool.  Quarantined
+    /// boards stay out of the pool permanently.
     pub fn release(&mut self, alloc: &Allocation) {
         for &id in &alloc.mpsocs {
             debug_assert!(!self.free[id.0 as usize], "double release");
-            self.free[id.0 as usize] = true;
+            if !self.quarantined[id.0 as usize] {
+                self.free[id.0 as usize] = true;
+            }
         }
+    }
+
+    /// Permanently remove MPSoCs from the free pool: the boards sit on
+    /// the wrong side of an unhealable torus partition and granting them
+    /// again would doom every spanning job that lands there.  Boards
+    /// must be free (the recovery path releases a killed job's
+    /// allocation before quarantining its stranded subset).
+    pub fn quarantine(&mut self, mpsocs: &[MpsocId]) {
+        for &id in mpsocs {
+            if self.quarantined[id.0 as usize] {
+                continue; // two jobs doomed by the same cut share stranded boards
+            }
+            debug_assert!(self.free[id.0 as usize], "quarantining an allocated MPSoC");
+            self.free[id.0 as usize] = false;
+            self.quarantined[id.0 as usize] = true;
+        }
+    }
+
+    /// Boards permanently removed by [`RackAlloc::quarantine`].
+    pub fn quarantined_mpsocs(&self) -> usize {
+        self.quarantined.iter().filter(|&&q| q).count()
     }
 
     /// First free contiguous run of `m` MPSoCs starting at `start`?
@@ -330,6 +357,24 @@ mod tests {
         assert_eq!(s.len(), 6);
         assert_eq!(s[5].core, 1);
         assert_eq!(s[5].mpsoc, per_core.mpsocs[1]);
+    }
+
+    #[test]
+    fn quarantined_boards_never_come_back() {
+        let c = SystemConfig::mezzanine(); // 16 MPSoCs
+        let mut a = RackAlloc::new(&c);
+        let g = a.allocate(16, Placement::PerCore, Policy::Compact).unwrap();
+        assert_eq!(g.mpsocs, (0..4).map(MpsocId).collect::<Vec<_>>());
+        a.release(&g);
+        a.quarantine(&[MpsocId(0), MpsocId(1)]);
+        assert_eq!(a.quarantined_mpsocs(), 2);
+        assert_eq!(a.free_mpsocs(), 14);
+        // the next compact fit skips the quarantined prefix
+        let h = a.allocate(8, Placement::PerCore, Policy::Compact).unwrap();
+        assert_eq!(h.mpsocs[0], MpsocId(2));
+        // releasing an allocation never resurrects a quarantined board
+        a.release(&h);
+        assert_eq!(a.free_mpsocs(), 14);
     }
 
     #[test]

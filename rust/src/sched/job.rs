@@ -234,9 +234,14 @@ pub struct JobResult {
     /// slots, seconds.
     pub isolated_s: f64,
     /// `duration_s / isolated_s`: ≥ 1.0 under occupancy-only contention.
+    /// The baseline is always fault-free, so under a fault plan this is
+    /// the job's goodput degradation (interference + fault recovery).
     pub slowdown: f64,
     /// Fraction of the shared wall time spent communicating.
     pub comm_fraction: f64,
+    /// Times the scheduler killed and re-queued this job because a fault
+    /// partitioned its placement (restart-from-arrival recoveries).
+    pub recoveries: u32,
 }
 
 impl JobResult {

@@ -32,10 +32,12 @@
 
 pub mod alloc;
 pub mod job;
+pub mod recovery;
 pub mod trace;
 
 pub use alloc::{mpsocs_needed, Allocation, Policy, RackAlloc};
 pub use job::{JobResult, JobRun, JobSpec, Workload, DEFAULT_JOB_ITERS};
+pub use recovery::{FaultEpochs, Recovery};
 pub use trace::{parse_trace, synthetic_jobs};
 
 use std::collections::VecDeque;
@@ -96,6 +98,10 @@ pub struct SchedOutcome {
     /// Windowed link telemetry, sampled at each job completion
     /// (disabled unless `trace_cap > 0`).
     pub series: LinkSeries,
+    /// Every fault-driven kill + restart-from-arrival the scheduler
+    /// performed, in the order they happened (empty without a fault
+    /// plan that partitions a placement).
+    pub recoveries: Vec<Recovery>,
 }
 
 impl SchedOutcome {
@@ -115,7 +121,9 @@ impl SchedOutcome {
 /// allocation-state change (previous admission start or release): the
 /// free-set is piecewise constant between such events, so a job that
 /// had to wait starts at `max(arrival, state_change)`; it is advanced
-/// to each admitted job's start.
+/// to each admitted job's start.  `eligible` is the per-spec earliest
+/// re-admission time — the arrival for fresh jobs, the heal instant of
+/// the partition that killed a recovered job.
 #[allow(clippy::too_many_arguments)]
 fn admit_wave(
     specs: &[JobSpec],
@@ -127,16 +135,17 @@ fn admit_wave(
     frag_samples: &mut Vec<f64>,
     now: SimTime,
     state_change: &mut SimTime,
+    eligible: &[SimTime],
 ) -> Result<()> {
     while let Some(&idx) = queue.front() {
         let spec = &specs[idx];
-        if spec.arrival > now {
-            break; // not arrived yet: no reservation ahead of time
+        if spec.arrival > now || eligible[idx] > now {
+            break; // not arrived (or not healed) yet: no early reservation
         }
         let Some(allocation) = rack.allocate(spec.ranks, spec.placement, sc.policy) else {
             break; // strict FCFS: the head waits, everyone behind it too
         };
-        let start = spec.arrival.max(*state_change);
+        let start = spec.arrival.max(*state_change).max(eligible[idx]);
         if world.tracing_enabled() {
             // queue-wait span: arrival → admission (zero-length when the
             // job was placed immediately)
@@ -169,13 +178,19 @@ fn admit_wave(
 }
 
 /// Run the identical job alone on an empty rack (same MPSoC slots, same
-/// network model) and return its wall time in seconds — the denominator
-/// of the slowdown metric.
+/// network model *minus the fault plan*) and return its wall time in
+/// seconds — the denominator of the slowdown metric.  The baseline is
+/// always fault-free: a solo rerun cannot meaningfully replay a fault
+/// plan whose windows are anchored to absolute rack time (the job
+/// started later in the shared run), and measuring against ideal
+/// conditions is what makes the ratio a goodput-degradation metric
+/// under fault scenarios.  Without a fault plan this is byte-identical
+/// to cloning the model.
 fn isolated_duration(cfg: &SystemConfig, spec: &JobSpec, run: &JobRun, sc: &SchedConfig) -> Result<f64> {
     let allocation = Allocation { mpsocs: run.mpsocs.clone() };
     let slots = allocation.slots(cfg, spec.ranks, spec.placement);
     let map = RankMap::from_slots(cfg, slots)?;
-    let mut world = World::with_rank_map(cfg.clone(), map, spec.placement, sc.model.clone());
+    let mut world = World::with_rank_map(cfg.clone(), map, spec.placement, sc.model.without_faults());
     let group: Vec<usize> = (0..spec.ranks).collect();
     let mut jr = JobRun::new(
         run.spec_idx,
@@ -271,12 +286,21 @@ pub fn run_schedule(
         world.enable_tracing(sc.trace_cap);
     }
     let mut rack = RackAlloc::new(cfg);
+    // The fault plan's connectivity timeline (None without link faults):
+    // fault scenarios are scripted, so the scheduler's health monitor
+    // knows upfront which placements a partition will doom.
+    let epochs = sc.model.faults().and_then(|f| FaultEpochs::new(cfg, f));
     let mut order: Vec<usize> = (0..specs.len()).collect();
     order.sort_by_key(|&i| (specs[i].arrival, i));
     let mut queue: VecDeque<usize> = order.into();
     let mut running: Vec<JobRun> = Vec::new();
     let mut finished: Vec<(JobRun, SimTime)> = Vec::new();
     let mut frag_samples: Vec<f64> = Vec::new();
+    let mut recoveries: Vec<Recovery> = Vec::new();
+    let mut kill_counts = vec![0u32; specs.len()];
+    // Earliest (re-)admission time per spec: the arrival for fresh jobs,
+    // pushed to the heal instant when a transient partition kills one.
+    let mut eligible: Vec<SimTime> = specs.iter().map(|s| s.arrival).collect();
     // The scheduler's clock: the trailing frontier of the running jobs
     // (min group clock), jumping to the next arrival when idle.
     // Admissions only happen once `now` has reached a job's arrival.
@@ -289,8 +313,10 @@ pub fn run_schedule(
             break;
         }
         now = if running.is_empty() {
-            // idle rack: jump to the next arrival
-            now.max(specs[*queue.front().expect("queue checked non-empty")].arrival)
+            // idle rack: jump to the next arrival (or, for a recovered
+            // head waiting out a flap window, its heal instant)
+            let head = *queue.front().expect("queue checked non-empty");
+            now.max(specs[head].arrival).max(eligible[head])
         } else {
             let frontier = running
                 .iter()
@@ -299,6 +325,7 @@ pub fn run_schedule(
                 .expect("running checked non-empty");
             now.max(frontier)
         };
+        let admitted_from = running.len();
         admit_wave(
             specs,
             sc,
@@ -309,12 +336,75 @@ pub fn run_schedule(
             &mut frag_samples,
             now,
             &mut state_change,
+            &eligible,
         )?;
         if running.is_empty() {
             // idle rack, head arrival reached, still not admitted: a job
             // that cannot be placed on an empty machine can never run
             let idx = *queue.front().expect("non-empty: loop would have exited");
+            let quarantined = rack.quarantined_mpsocs();
+            if quarantined > 0 {
+                bail!(
+                    "job {} cannot be placed: {quarantined} of {} MPSoCs are \
+                     quarantined behind a permanent torus partition",
+                    specs[idx].name,
+                    cfg.num_mpsocs()
+                );
+            }
             bail!("job {} cannot be placed even on an idle rack", specs[idx].name);
+        }
+        // Preemptive fault recovery: a placement the fault plan will
+        // partition is never stepped at all.  Stepping is iteration-
+        // granular — an iteration spanning the cut instant would inject
+        // unroutable traffic into the mesh (fatal) — and recovery is
+        // restart-from-arrival, so any partial progress would be
+        // discarded anyway.  Kill the job at admission, release its
+        // boards, and re-queue it: past the heal instant of a transient
+        // window, or immediately on the surviving side of a permanent
+        // cut with the stranded boards quarantined.
+        if let Some(ep) = &epochs {
+            let mut j = admitted_from;
+            let mut requeued = false;
+            while j < running.len() {
+                let qset = ep.qfdbs_of(&running[j].mpsocs);
+                let Some(doom) = ep.doom(&qset, running[j].start) else {
+                    j += 1;
+                    continue;
+                };
+                let jr = running.remove(j);
+                world.retire_ranks(&jr.group);
+                rack.release(&Allocation { mpsocs: jr.mpsocs.clone() });
+                let healed_at = ep.heal(&qset, doom);
+                match healed_at {
+                    Some(heal) => eligible[jr.spec_idx] = eligible[jr.spec_idx].max(heal),
+                    None => {
+                        // heal=None guarantees a non-empty stranded set:
+                        // quarantine shrinks the machine, so repeated
+                        // recoveries of one job always terminate
+                        rack.quarantine(&ep.mpsocs_of(&ep.stranded(&qset)));
+                    }
+                }
+                kill_counts[jr.spec_idx] += 1;
+                recoveries.push(Recovery {
+                    name: specs[jr.spec_idx].name.clone(),
+                    spec_idx: jr.spec_idx,
+                    killed_at: jr.start,
+                    doomed_at: doom,
+                    healed_at,
+                });
+                queue.push_back(jr.spec_idx);
+                requeued = true;
+            }
+            if requeued {
+                // restart-from-arrival: the recovered job keeps its
+                // original arrival, so FCFS order is by arrival again
+                let mut order: Vec<usize> = queue.drain(..).collect();
+                order.sort_by_key(|&i| (specs[i].arrival, i));
+                queue = order.into();
+                if running.is_empty() {
+                    continue; // everything admitted this wave was doomed
+                }
+            }
         }
         // step the job whose frontier trails the shared timeline
         let mut i_min = 0;
@@ -369,6 +459,7 @@ pub fn run_schedule(
             isolated_s,
             slowdown: duration_s / isolated_s,
             comm_fraction: if duration_s > 0.0 { jr.acc.comm_time / duration_s } else { 0.0 },
+            recoveries: kill_counts[jr.spec_idx],
         });
     }
 
@@ -407,14 +498,16 @@ pub fn run_schedule(
         trace_records,
         trace_dropped,
         series,
+        recoveries,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::RoutePolicy;
+    use crate::network::{FaultPlan, RoutePolicy};
     use crate::sim::SimDuration;
+    use crate::topology::{Dir, QfdbId};
 
     fn halo_spec(name: &str, ranks: usize, arrival_us: f64) -> JobSpec {
         JobSpec {
@@ -630,6 +723,86 @@ mod tests {
         // link telemetry windowed at each job completion
         assert!(traced.series.len() >= 1, "series sampled at job boundaries");
         assert!(traced.summary.events > 0);
+    }
+
+    /// Cut every Y (inter-blade) torus link: the two blades of
+    /// `two_blades()` become mutually unreachable from `down` on
+    /// (until `up`, when given).
+    fn blade_cut(c: &SystemConfig, down: SimTime, up: Option<SimTime>) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        for q in 0..c.num_qfdbs() as u32 {
+            for dir in [Dir::YPlus, Dir::YMinus] {
+                plan = match up {
+                    Some(u) => plan.flap_torus(QfdbId(q), dir, down, u),
+                    None => plan.fail_torus(QfdbId(q), dir, down),
+                };
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn transient_partition_kills_and_restarts_after_heal() {
+        // a scattered job spans both blades; a flap window severs them:
+        // the scheduler kills the doomed placement preemptively and
+        // re-admits the job once the links heal
+        let cfg = SystemConfig::two_blades();
+        let (down, up) = (SimTime::from_us(5.0), SimTime::from_us(400.0));
+        let model = NetworkModel::cell_with_faults(
+            RoutePolicy::Deterministic,
+            blade_cut(&cfg, down, Some(up)),
+        );
+        let sc = SchedConfig::new(Policy::Scattered, model);
+        let out = run_schedule(&cfg, &[halo_spec("span", 16, 0.0)], &sc).unwrap();
+        assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+        let r = &out.recoveries[0];
+        assert_eq!(r.doomed_at, down);
+        assert_eq!(r.healed_at, Some(up));
+        let j = &out.jobs[0];
+        assert_eq!(j.recoveries, 1);
+        assert!(j.start >= up, "restart waits out the flap window, got {:?}", j.start);
+        assert!(j.finish > j.start, "the recovered job must complete");
+        assert!(j.slowdown >= 1.0 - 1e-12);
+        assert!(j.wait_s() > 0.0, "restart-from-arrival accounts the lost time as waiting");
+    }
+
+    #[test]
+    fn permanent_partition_quarantines_and_restarts_on_surviving_side() {
+        let cfg = SystemConfig::two_blades();
+        let model = NetworkModel::cell_with_faults(
+            RoutePolicy::Deterministic,
+            blade_cut(&cfg, SimTime::from_us(2.0), None),
+        );
+        let sc = SchedConfig::new(Policy::Scattered, model);
+        let out = run_schedule(&cfg, &[halo_spec("span", 16, 0.0)], &sc).unwrap();
+        let j = &out.jobs[0];
+        assert!(j.recoveries >= 1, "the spanning placement must be recovered at least once");
+        assert_eq!(out.recoveries.len() as u32, j.recoveries);
+        assert!(
+            out.recoveries.iter().all(|r| r.healed_at.is_none()),
+            "a permanent cut never heals: {:?}",
+            out.recoveries
+        );
+        // the job finally ran on a routable placement: one blade only
+        let blade_mpsocs = (cfg.qfdbs_per_mezz * cfg.fpgas_per_qfdb) as u32;
+        let blades: std::collections::HashSet<u32> =
+            j.mpsocs.iter().map(|m| m.0 / blade_mpsocs).collect();
+        assert_eq!(blades.len(), 1, "surviving placement spans a cut: {:?}", j.mpsocs);
+        assert!(j.finish > j.start);
+        assert!(j.slowdown >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn fault_free_cell_schedule_is_unchanged_by_recovery_machinery() {
+        // an empty fault plan must leave the whole scheduler path
+        // ps-identical (no epochs, no eligibility gates, no recoveries)
+        let cfg = SystemConfig::two_blades();
+        let specs = [halo_spec("a", 16, 0.0), halo_spec("b", 16, 0.0)];
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let out =
+            run_schedule(&cfg, &specs, &SchedConfig::new(Policy::Scattered, model)).unwrap();
+        assert!(out.recoveries.is_empty());
+        assert!(out.jobs.iter().all(|j| j.recoveries == 0));
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Fault-aware job recovery: doom detection and restart-from-arrival.
+//!
+//! The cell-level router mesh treats an *unroutable* fault plan as fatal:
+//! when every productive torus direction out of a QFDB is down, in-flight
+//! cells have nowhere to go and the mesh aborts (there is no store-and-
+//! forward buffering to park them in).  The scheduler therefore never
+//! lets a job run into a partition.  At admission it consults the fault
+//! plan — fault scenarios are scripted, so the health monitor knows the
+//! full timeline — and computes the job's *doom*: the earliest epoch at
+//! which the QFDBs it was placed on stop being mutually routable.
+//!
+//! A doomed job is killed preemptively (its boards are released, its
+//! ranks retired from the shared [`RankMap`](crate::mpi::RankMap)) and
+//! re-queued with **restart-from-arrival** semantics: the spec keeps its
+//! original arrival time — so its queueing delay honestly accounts the
+//! lost work — and is re-admitted on whatever boards are free once the
+//! partition heals (a transient flap window) or, for a permanent cut,
+//! immediately on the surviving side, with the stranded boards
+//! quarantined so no later job is placed onto them.
+//!
+//! Connectivity is evaluated on the *directed* up-link graph (each torus
+//! direction is its own unidirectional link and may fail alone): a QFDB
+//! set is mutually routable iff it lies inside one strongly connected
+//! component, checked as `set ⊆ fwd-reach(s₀) ∩ bwd-reach(s₀)`.  Link
+//! state is piecewise constant between fault-plan transitions, so only
+//! the transition instants need checking.
+
+use crate::network::FaultPlan;
+use crate::sim::SimTime;
+use crate::topology::{Dir, LinkId, MpsocId, QfdbId, SystemConfig, Topology};
+
+/// One job kill + re-queue performed by the scheduler.
+#[derive(Debug, Clone)]
+pub struct Recovery {
+    /// Name of the recovered job.
+    pub name: String,
+    /// Index of the spec in the submitted trace.
+    pub spec_idx: usize,
+    /// When the job was killed and its boards released.
+    pub killed_at: SimTime,
+    /// The epoch at which its QFDB set became unroutable.
+    pub doomed_at: SimTime,
+    /// When the set becomes routable again — `None` for a permanent
+    /// partition (the stranded boards were quarantined instead).
+    pub healed_at: Option<SimTime>,
+}
+
+/// The fault plan's connectivity timeline, precomputed for doom queries.
+#[derive(Debug, Clone)]
+pub struct FaultEpochs {
+    topo: Topology,
+    plan: FaultPlan,
+    /// Sorted, deduplicated link up/down transition instants.
+    times: Vec<SimTime>,
+}
+
+impl FaultEpochs {
+    /// Build the timeline from a scripted fault plan.  Returns `None`
+    /// when the plan kills no links (a BER-only plan never partitions
+    /// the torus — corrupted cells are retransmitted, not rerouted).
+    pub fn new(cfg: &SystemConfig, plan: &FaultPlan) -> Option<FaultEpochs> {
+        let mut times: Vec<SimTime> = plan.transitions().collect();
+        if times.is_empty() {
+            return None;
+        }
+        times.sort();
+        times.dedup();
+        Some(FaultEpochs { topo: Topology::new(cfg.clone()), plan: plan.clone(), times })
+    }
+
+    /// QFDBs reachable from `from` over up torus links at `at`.
+    /// `reverse` traverses edges backwards (who can reach `from`).
+    fn reach(&self, from: QfdbId, at: SimTime, reverse: bool) -> Vec<bool> {
+        let n = self.topo.cfg.num_qfdbs();
+        let mut seen = vec![false; n];
+        seen[from.0 as usize] = true;
+        let mut stack = vec![from];
+        while let Some(q) = stack.pop() {
+            for dir in Dir::all() {
+                let peer = self.topo.qfdb_neighbor(q, dir);
+                if peer == q || seen[peer.0 as usize] {
+                    continue; // degenerate ring of one, or already visited
+                }
+                // forward: the edge q -> peer is q's `dir` link; reverse:
+                // the edge peer -> q is peer's `dir.opposite()` link
+                let link = if reverse {
+                    LinkId::Torus { qfdb: peer, dir: dir.opposite() }
+                } else {
+                    LinkId::Torus { qfdb: q, dir }
+                };
+                if self.plan.link_up(link, at) {
+                    seen[peer.0 as usize] = true;
+                    stack.push(peer);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Is every QFDB of `set` mutually routable at `at`?  (All members
+    /// inside one strongly connected component of the up-link graph.)
+    pub fn connected(&self, set: &[QfdbId], at: SimTime) -> bool {
+        let Some(&s0) = set.first() else { return true };
+        if set.iter().all(|&q| q == s0) {
+            return true; // single-QFDB jobs never cross the torus
+        }
+        let fwd = self.reach(s0, at, false);
+        let bwd = self.reach(s0, at, true);
+        set.iter().all(|q| fwd[q.0 as usize] && bwd[q.0 as usize])
+    }
+
+    /// The earliest epoch ≥ `from` at which `set` stops being mutually
+    /// routable, or `None` if the placement survives the whole plan.
+    pub fn doom(&self, set: &[QfdbId], from: SimTime) -> Option<SimTime> {
+        if !self.connected(set, from) {
+            return Some(from);
+        }
+        self.times.iter().copied().filter(|&t| t > from).find(|&t| !self.connected(set, t))
+    }
+
+    /// The earliest transition after `doomed_at` at which `set` is
+    /// mutually routable again (`None`: the cut persists through the
+    /// plan's end state — quarantine the stranded boards instead).
+    pub fn heal(&self, set: &[QfdbId], doomed_at: SimTime) -> Option<SimTime> {
+        self.times.iter().copied().filter(|&t| t > doomed_at).find(|&t| self.connected(set, t))
+    }
+
+    /// A time at or after the last transition — the torus's end state.
+    fn end_state(&self) -> SimTime {
+        *self.times.last().expect("FaultEpochs::new rejects empty timelines")
+    }
+
+    /// The members of `set` outside the largest mutually-routable
+    /// component of the end-state torus: the boards to quarantine after
+    /// a permanent partition.
+    pub fn stranded(&self, set: &[QfdbId]) -> Vec<QfdbId> {
+        let at = self.end_state();
+        let n = self.topo.cfg.num_qfdbs();
+        // label strongly connected components: fwd ∩ bwd closure from
+        // each still-unlabelled QFDB (n ≤ a few hundred; O(n²) is fine)
+        let mut comp = vec![usize::MAX; n];
+        let mut sizes = Vec::new();
+        for q in 0..n {
+            if comp[q] != usize::MAX {
+                continue;
+            }
+            let fwd = self.reach(QfdbId(q as u32), at, false);
+            let bwd = self.reach(QfdbId(q as u32), at, true);
+            let id = sizes.len();
+            let mut size = 0usize;
+            for v in 0..n {
+                if comp[v] == usize::MAX && fwd[v] && bwd[v] {
+                    comp[v] = id;
+                    size += 1;
+                }
+            }
+            sizes.push(size);
+        }
+        let largest = sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &s)| (s, usize::MAX - i)) // ties: lowest id
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        set.iter().copied().filter(|q| comp[q.0 as usize] != largest).collect()
+    }
+
+    /// All MPSoCs hosted by the given QFDBs (board granularity of a
+    /// quarantine).
+    pub fn mpsocs_of(&self, qfdbs: &[QfdbId]) -> Vec<MpsocId> {
+        let per = self.topo.cfg.fpgas_per_qfdb as u32;
+        qfdbs.iter().flat_map(|q| (0..per).map(move |f| MpsocId(q.0 * per + f))).collect()
+    }
+
+    /// The distinct QFDBs a set of MPSoCs lives on, ascending.
+    pub fn qfdbs_of(&self, mpsocs: &[MpsocId]) -> Vec<QfdbId> {
+        let mut v: Vec<QfdbId> = mpsocs.iter().map(|&m| self.topo.qfdb_of(m)).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::prototype() // 4x4x2 torus, 32 QFDBs
+    }
+
+    fn all_qfdbs(c: &SystemConfig) -> Vec<QfdbId> {
+        (0..c.num_qfdbs() as u32).map(QfdbId).collect()
+    }
+
+    /// Fail every torus link out of and into `q` from `at` (permanently):
+    /// a total cut in both directions.
+    fn isolate(mut plan: FaultPlan, c: &SystemConfig, q: QfdbId, at: SimTime) -> FaultPlan {
+        let topo = Topology::new(c.clone());
+        for dir in Dir::all() {
+            plan = plan.fail_torus(q, dir, at);
+            let peer = topo.qfdb_neighbor(q, dir);
+            plan = plan.fail_torus(peer, dir.opposite(), at);
+        }
+        plan
+    }
+
+    #[test]
+    fn healthy_torus_is_fully_connected() {
+        let c = cfg();
+        let plan = FaultPlan::default().fail_torus(QfdbId(0), Dir::XPlus, SimTime::from_us(50.0));
+        let ep = FaultEpochs::new(&c, &plan).unwrap();
+        assert!(ep.connected(&all_qfdbs(&c), SimTime::ZERO));
+        // one dead link out of six: still routable around the ring
+        assert!(ep.connected(&all_qfdbs(&c), SimTime::from_us(60.0)));
+        assert_eq!(ep.doom(&all_qfdbs(&c), SimTime::ZERO), None);
+    }
+
+    #[test]
+    fn ber_only_plan_yields_no_epochs() {
+        let c = cfg();
+        let plan = FaultPlan::default().with_ber(1e-7, 7);
+        assert!(FaultEpochs::new(&c, &plan).is_none());
+    }
+
+    #[test]
+    fn isolated_qfdb_dooms_only_sets_that_span_the_cut() {
+        let c = cfg();
+        let t = SimTime::from_us(100.0);
+        let plan = isolate(FaultPlan::default(), &c, QfdbId(5), t);
+        let ep = FaultEpochs::new(&c, &plan).unwrap();
+        // a set spanning the cut is doomed at exactly the cut instant
+        let spanning = [QfdbId(4), QfdbId(5)];
+        assert_eq!(ep.doom(&spanning, SimTime::ZERO), Some(t));
+        // permanent: never heals; the stranded side is QFDB 5
+        assert_eq!(ep.heal(&spanning, t), None);
+        assert_eq!(ep.stranded(&spanning), vec![QfdbId(5)]);
+        // a set avoiding QFDB 5 survives the whole plan
+        let safe = [QfdbId(0), QfdbId(1), QfdbId(2)];
+        assert_eq!(ep.doom(&safe, SimTime::ZERO), None);
+        // admission after the cut sees the doom immediately
+        assert_eq!(ep.doom(&spanning, SimTime::from_us(200.0)), Some(SimTime::from_us(200.0)));
+        // single-QFDB jobs never cross the torus, even on the dead board
+        assert_eq!(ep.doom(&[QfdbId(5)], SimTime::ZERO), None);
+    }
+
+    #[test]
+    fn flap_window_heals() {
+        let c = cfg();
+        let mut plan = FaultPlan::default();
+        let (down, up) = (SimTime::from_us(40.0), SimTime::from_us(90.0));
+        let topo = Topology::new(c.clone());
+        for dir in Dir::all() {
+            plan = plan.flap_torus(QfdbId(7), dir, down, up);
+            let peer = topo.qfdb_neighbor(QfdbId(7), dir);
+            plan = plan.flap_torus(peer, dir.opposite(), down, up);
+        }
+        let ep = FaultEpochs::new(&c, &plan).unwrap();
+        let set = [QfdbId(6), QfdbId(7)];
+        assert_eq!(ep.doom(&set, SimTime::ZERO), Some(down));
+        assert_eq!(ep.heal(&set, down), Some(up));
+        // after the window the placement is safe again
+        assert_eq!(ep.doom(&set, up), None);
+        assert!(ep.stranded(&set).is_empty(), "everything healed: nothing stranded");
+    }
+
+    #[test]
+    fn mpsoc_qfdb_mapping_roundtrip() {
+        let c = cfg();
+        let plan = FaultPlan::default().fail_torus(QfdbId(0), Dir::XPlus, SimTime::ZERO);
+        let ep = FaultEpochs::new(&c, &plan).unwrap();
+        let boards = ep.mpsocs_of(&[QfdbId(3)]);
+        assert_eq!(boards.len(), c.fpgas_per_qfdb);
+        assert_eq!(ep.qfdbs_of(&boards), vec![QfdbId(3)]);
+    }
+}

@@ -72,6 +72,20 @@ impl Rng {
     }
 }
 
+/// Stateless uniform draw in [0, 1) from a `(seed, stream, index)`
+/// triple — the SplitMix64 mix applied to a combined key.  Seeded fault
+/// processes (per-link bit-error draws in the router mesh) use this
+/// instead of a stateful generator: the result is a pure function of
+/// *which* crossing is being drawn, so it cannot depend on event
+/// interleaving, worker count or call history.
+#[inline]
+pub fn hash_unit(seed: u64, stream: u64, index: u64) -> f64 {
+    let key = seed
+        ^ stream.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ index.wrapping_mul(0xBF58476D1CE4E5B9);
+    Rng::new(key).f64()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +133,18 @@ mod tests {
             / n as f64;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn hash_unit_is_pure_and_spread() {
+        assert_eq!(hash_unit(1, 2, 3), hash_unit(1, 2, 3));
+        assert_ne!(hash_unit(1, 2, 3), hash_unit(1, 2, 4));
+        assert_ne!(hash_unit(1, 2, 3), hash_unit(1, 3, 3));
+        assert_ne!(hash_unit(1, 2, 3), hash_unit(2, 2, 3));
+        // roughly uniform: mean of a coarse sweep near 0.5
+        let n = 4096;
+        let m = (0..n).map(|i| hash_unit(42, 7, i)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.03, "mean {m}");
     }
 
     #[test]

@@ -71,6 +71,14 @@ pub enum SpanKind {
     RecvLib,
     /// One cell (or cell train) occupying one link hop.
     Hop,
+    /// A cell corrupted on a torus link (bit-error process): the cell
+    /// still occupied the wire, but the destination NI's CRC will reject
+    /// the transfer it belongs to.
+    Drop,
+    /// A transport-level retransmission instant: an end-to-end ACK timer
+    /// fired and the stage relaunches, on the owning rank's timeline
+    /// (aux = the attempt number being launched).
+    Retransmit,
     /// A collective call on one rank (call → rank clock at return).
     Collective,
     /// An allreduce-accelerator pipeline phase.
@@ -97,6 +105,8 @@ impl SpanKind {
             SpanKind::Rdma => "rdma",
             SpanKind::RecvLib => "recv-lib",
             SpanKind::Hop => "hop",
+            SpanKind::Drop => "drop",
+            SpanKind::Retransmit => "retransmit",
             SpanKind::Collective => "collective",
             SpanKind::Accel => "accel",
             SpanKind::JobQueued => "queued",
@@ -115,8 +125,8 @@ impl SpanKind {
             | SpanKind::RecvLib
             | SpanKind::Collective => "mpi",
             SpanKind::Ni | SpanKind::EagerWire | SpanKind::Rts | SpanKind::Cts
-            | SpanKind::Rdma => "ni",
-            SpanKind::Hop => "net",
+            | SpanKind::Rdma | SpanKind::Retransmit => "ni",
+            SpanKind::Hop | SpanKind::Drop => "net",
             SpanKind::Accel => "accel",
             SpanKind::JobQueued | SpanKind::JobRun => "sched",
             SpanKind::ParWindow => "par",

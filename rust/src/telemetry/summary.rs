@@ -28,6 +28,16 @@ pub struct Summary {
     pub trace_dropped: u64,
     /// Telemetry windows sampled.
     pub windows: usize,
+    /// Cells corrupted by the seeded bit-error process (0 fault-free).
+    pub cells_corrupted: u64,
+    /// Transport-level retransmissions (end-to-end ACK timers fired).
+    pub retransmissions: u64,
+    /// Stage launches the corruption draw dirtied (each is later
+    /// retransmitted; `retransmissions` counts the relaunches).
+    pub corrupt_drops: u64,
+    /// Stage arrivals discarded by the receiver's sequence check
+    /// (exactly-once dedup; 0 under the timer-on-corruption transport).
+    pub dup_drops: u64,
 }
 
 impl Summary {
@@ -55,6 +65,10 @@ impl Summary {
             trace_records,
             trace_dropped,
             windows: w.fabric.telemetry().len(),
+            cells_corrupted: w.fabric.cells_corrupted(),
+            retransmissions: w.progress.retransmissions(),
+            corrupt_drops: w.progress.corrupt_drops(),
+            dup_drops: w.progress.dup_drops(),
         }
     }
 
@@ -88,6 +102,12 @@ impl Summary {
         if self.windows > 0 {
             suite.metric("telemetry/windows", self.windows as f64, "windows");
         }
+        // fault/retransmission totals: stamped unconditionally so every
+        // BENCH_*.json states its loss exposure, zero or not
+        suite.metric("faults/cells_corrupted", self.cells_corrupted as f64, "cells");
+        suite.metric("faults/retransmissions", self.retransmissions as f64, "retries");
+        suite.metric("faults/corrupt_drops", self.corrupt_drops as f64, "launches");
+        suite.metric("faults/dup_drops", self.dup_drops as f64, "arrivals");
     }
 }
 
@@ -125,6 +145,8 @@ mod tests {
         assert!(text.contains("\"name\":\"telemetry/events\""));
         assert!(text.contains("\"name\":\"telemetry/route_dor\""));
         assert!(text.contains("\"name\":\"sim_workers\""));
+        assert!(text.contains("\"name\":\"faults/retransmissions\""));
+        assert!(text.contains("\"name\":\"faults/cells_corrupted\""));
         std::fs::remove_file(path).unwrap();
     }
 }

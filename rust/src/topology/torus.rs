@@ -69,6 +69,24 @@ impl Dir {
     pub fn is_intra_mezz(self) -> bool {
         matches!(self, Dir::XPlus | Dir::XMinus)
     }
+
+    /// The reverse direction: taking `dir` then `dir.opposite()` returns
+    /// to the starting QFDB on every ring size.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::XPlus => Dir::XMinus,
+            Dir::XMinus => Dir::XPlus,
+            Dir::YPlus => Dir::YMinus,
+            Dir::YMinus => Dir::YPlus,
+            Dir::ZPlus => Dir::ZMinus,
+            Dir::ZMinus => Dir::ZPlus,
+        }
+    }
+
+    /// All six torus directions, in [`Dir::index`] order.
+    pub fn all() -> [Dir; 6] {
+        [Dir::XPlus, Dir::XMinus, Dir::YPlus, Dir::YMinus, Dir::ZPlus, Dir::ZMinus]
+    }
 }
 
 /// Topology math for a given system configuration.
@@ -267,6 +285,17 @@ mod tests {
         // QFDB 0 and QFDB 4 (next blade): all-Y
         for d in t.qfdb_route(QfdbId(0), QfdbId(4)) {
             assert!(!d.is_intra_mezz());
+        }
+    }
+
+    #[test]
+    fn opposite_direction_returns_home() {
+        let t = topo();
+        for q in 0..t.cfg.num_qfdbs() as u32 {
+            for d in Dir::all() {
+                let there = t.qfdb_neighbor(QfdbId(q), d);
+                assert_eq!(t.qfdb_neighbor(there, d.opposite()), QfdbId(q), "{q} {d:?}");
+            }
         }
     }
 
