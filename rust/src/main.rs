@@ -16,7 +16,7 @@ use exanest::report::{gbps, pct, us, Table};
 use exanest::sched::{self, Policy};
 use exanest::sim::{SimDuration, SimTime};
 use exanest::telemetry::{self, LinkSeries, SpanRec, Summary};
-use exanest::topology::{Dir, LinkId, QfdbId, SystemConfig, Topology};
+use exanest::topology::{Dir, LinkId, QfdbId, SystemConfig, Topology, NUM_CLASSES};
 
 /// Strict CLI arguments: every `--flag` must be consumed by the global
 /// or per-command parsing below, and [`Args::finish`] rejects whatever
@@ -217,6 +217,60 @@ fn build_fault_plan(
     Ok(plan)
 }
 
+/// Consume the `--qos*` flags into `cfg.qos`.  Any of them enables the
+/// layer; returns whether one was given at all (so `repro qos` can fall
+/// back to its default suite profile when the user set nothing).
+fn parse_qos_flags(args: &mut Args, cfg: &mut SystemConfig) -> bool {
+    let mut touched = false;
+    if args.flag("--qos") {
+        cfg.qos.enabled = true;
+        touched = true;
+    }
+    if let Some(list) = args.value("--qos-weights") {
+        let parts: Vec<&str> = list.split(',').collect();
+        if parts.len() != NUM_CLASSES {
+            eprintln!(
+                "--qos-weights needs {NUM_CLASSES} comma-separated class weights, got {list:?}"
+            );
+            std::process::exit(2);
+        }
+        for (i, p) in parts.iter().enumerate() {
+            match p.parse::<u32>() {
+                Ok(w) if w >= 1 => cfg.qos.weights[i] = w,
+                _ => {
+                    eprintln!("--qos-weights: bad weight {p:?} (want a positive integer)");
+                    std::process::exit(2);
+                }
+            }
+        }
+        cfg.qos.enabled = true;
+        touched = true;
+    }
+    if let Some(v) = args.value("--qos-window") {
+        match v.parse::<u64>() {
+            Ok(b) => cfg.qos.window_bytes = b,
+            Err(_) => {
+                eprintln!("--qos-window: bad byte count {v:?}");
+                std::process::exit(2);
+            }
+        }
+        cfg.qos.enabled = true;
+        touched = true;
+    }
+    if let Some(v) = args.value("--qos-mark") {
+        match v.parse::<u32>() {
+            Ok(n) => cfg.qos.mark_threshold = n,
+            Err(_) => {
+                eprintln!("--qos-mark: bad threshold {v:?} (want full-cell serialization times)");
+                std::process::exit(2);
+            }
+        }
+        cfg.qos.enabled = true;
+        touched = true;
+    }
+    touched
+}
+
 /// Cut one QFDB off the torus: fail all six of its outgoing links plus
 /// every neighbour's link back into it (each direction is its own
 /// unidirectional link, so both sides of each cable must go down).
@@ -264,7 +318,7 @@ fn main() {
         // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
         // and `sched` adapt their rank lists to the machine, so they
         // smoke at any size.
-        const SMALL_OK: [&str; 9] = [
+        const SMALL_OK: [&str; 10] = [
             "hw-pingpong",
             "osu-mbw",
             "osu-incast",
@@ -272,6 +326,7 @@ fn main() {
             "osu-allreduce",
             "router-hotspot",
             "faults",
+            "qos",
             "scaling",
             "sched",
         ];
@@ -354,6 +409,18 @@ fn main() {
     } else {
         model
     };
+    // Per-tenant QoS flags (DESIGN.md §15): any of them switches the
+    // layer on in `cfg.qos`.  They only matter where traffic classes
+    // exist — the scheduler's multi-tenant commands — so anywhere else
+    // they are a usage error, not a silent no-op.
+    let qos_flagged = parse_qos_flags(&mut args, &mut cfg);
+    if qos_flagged {
+        const QOS_OK: [&str; 2] = ["sched", "qos"];
+        if !QOS_OK.contains(&cmd) {
+            eprintln!("--qos/--qos-weights/--qos-window/--qos-mark apply to: {}", QOS_OK.join(", "));
+            std::process::exit(2);
+        }
+    }
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
@@ -368,7 +435,8 @@ fn main() {
         ];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
-                "--network-model applies to: {} (router-hotspot and faults are always cell-level)",
+                "--network-model applies to: {} (router-hotspot, faults and qos are always \
+                 cell-level)",
                 MODEL_OK.join(", ")
             );
             std::process::exit(2);
@@ -419,6 +487,10 @@ fn main() {
         "faults" => {
             args.finish(cmd);
             faults_cmd(&cfg);
+        }
+        "qos" => {
+            args.finish(cmd);
+            qos_cmd(&cfg, qos_flagged);
         }
         "bcast-model" => {
             args.finish(cmd);
@@ -481,6 +553,7 @@ fn main() {
             osu_overlap(&cfg);
             router_hotspot(&cfg);
             faults_cmd(&cfg);
+            qos_cmd(&cfg, qos_flagged);
             bcast_model(&cfg);
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
@@ -504,6 +577,9 @@ fn main() {
                  \trouter-hotspot   cell-level router: adaptive vs DOR + link failure\n\
                  \tfaults           §4.4 fault-tolerance sweep: bit errors, link flap, permanent\n\
                  \t                 partition — retransmissions, job recoveries, goodput degradation\n\
+                 \tqos              adversarial-tenant isolation suite: incast/alltoall bullies vs\n\
+                 \t                 victims with and without per-tenant QoS (WRR arbitration + ECN\n\
+                 \t                 injection throttling); victim slowdown, Jain fairness index\n\
                  \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
                  \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
@@ -533,6 +609,11 @@ fn main() {
                  \t                 corrupted, dropped and retransmitted end to end)\n\
                  \t--policy         compact | best-fit | scattered: sched placement policy\n\
                  \t--jobs           sched job stream: a trace file path, or `synthetic`\n\
+                 \t--qos            enable per-tenant QoS (WRR arbitration + marking + throttling)\n\
+                 \t                 for sched/qos; jobs carry a traffic class (trace `class=<n>`)\n\
+                 \t--qos-weights    <w0,w1,w2,w3> per-class WRR weights (positive integers)\n\
+                 \t--qos-window     <bytes> per-tenant injection window (0 = arbitration only)\n\
+                 \t--qos-mark       <n> ECN mark threshold in full-cell serialization times\n\
                  \t--trace          <path> write a Chrome/Perfetto trace of the run (plus\n\
                  \t                 <path>.series.csv link telemetry) — osu-allreduce, sched\n\
                  \t--telemetry      print windowed link utilisation + torus heatmap for the\n\
@@ -1172,6 +1253,7 @@ fn faults_cmd(cfg: &SystemConfig) {
             arrival: SimTime::ZERO,
             placement: Placement::PerCore,
             workload: sched::Workload::by_spec("halo:hpcg:2").expect("static spec"),
+            class: 0,
         },
         sched::JobSpec {
             name: "local".to_string(),
@@ -1179,6 +1261,7 @@ fn faults_cmd(cfg: &SystemConfig) {
             arrival: SimTime::ZERO,
             placement: Placement::PerCore,
             workload: sched::Workload::by_spec("allreduce:4096x3").expect("static spec"),
+            class: 0,
         },
     ];
     // The victim QFDB: first board-set of the second blade — scattered
@@ -1267,6 +1350,78 @@ fn faults_cmd(cfg: &SystemConfig) {
     println!("{}", t.render());
     if let Err(e) = suite.write_json() {
         eprintln!("could not write BENCH_faults.json: {e}");
+    }
+}
+
+/// `repro qos`: the adversarial-tenant isolation suite (DESIGN.md §15).
+/// Each scenario runs its trace on the shared cell-level rack with QoS
+/// off and on and reports victim slowdown, excess-interference ratio
+/// and the Jain fairness index.  `qos_flagged` = the user set `--qos*`
+/// flags: use `cfg.qos` as given; otherwise run the suite's default
+/// profile (victim-weighted WRR + throttling).  Stamps BENCH_qos.json.
+fn qos_cmd(cfg: &SystemConfig, qos_flagged: bool) {
+    let qos = if qos_flagged { cfg.qos.clone() } else { sched::suite_profile() };
+    println!(
+        "## Per-tenant QoS — adversarial-tenant isolation (weights {:?}, window {} KiB, \
+         mark threshold {})\n",
+        qos.weights,
+        qos.window_bytes / 1024,
+        qos.mark_threshold
+    );
+    let mut t = Table::new(&[
+        "scenario",
+        "victim",
+        "slowdown off",
+        "slowdown on",
+        "isolation gain",
+        "jain off",
+        "jain on",
+        "marks",
+        "halvings",
+        "parks",
+    ]);
+    let mut suite = Suite::new("qos");
+    suite.stamp(cfg);
+    for s in sched::QosScenario::all() {
+        let r = sched::qos_report(cfg, s, &qos).unwrap_or_else(|e| {
+            eprintln!("qos scenario {} failed: {e}", s.name());
+            std::process::exit(1);
+        });
+        t.row(&[
+            r.scenario.to_string(),
+            r.victim.clone().unwrap_or_else(|| "(all)".to_string()),
+            format!("{:.3}", r.slowdown_off),
+            format!("{:.3}", r.slowdown_on),
+            format!("{:.2}x", r.isolation_gain),
+            format!("{:.3}", r.jain_off),
+            format!("{:.3}", r.jain_on),
+            r.cells_marked.to_string(),
+            r.window_halvings.to_string(),
+            r.throttle_parks.to_string(),
+        ]);
+        suite.metric(&format!("scenario/{}/victim_slowdown_off", r.scenario), r.slowdown_off, "x");
+        suite.metric(&format!("scenario/{}/victim_slowdown_on", r.scenario), r.slowdown_on, "x");
+        suite.metric(&format!("scenario/{}/isolation_gain", r.scenario), r.isolation_gain, "x");
+        suite.metric(&format!("scenario/{}/jain_off", r.scenario), r.jain_off, "index");
+        suite.metric(&format!("scenario/{}/jain_on", r.scenario), r.jain_on, "index");
+        suite.metric(&format!("scenario/{}/makespan_off_s", r.scenario), r.makespan_off_s, "s");
+        suite.metric(&format!("scenario/{}/makespan_on_s", r.scenario), r.makespan_on_s, "s");
+        suite.metric(&format!("scenario/{}/cells_marked", r.scenario), r.cells_marked as f64, "cells");
+        suite.metric(&format!("scenario/{}/ecn_echoes", r.scenario), r.ecn_echoes as f64, "marks");
+        suite.metric(
+            &format!("scenario/{}/window_halvings", r.scenario),
+            r.window_halvings as f64,
+            "halvings",
+        );
+        suite.metric(
+            &format!("scenario/{}/throttle_parks", r.scenario),
+            r.throttle_parks as f64,
+            "sends",
+        );
+    }
+    println!("{}", t.render());
+    if let Err(e) = suite.write_json() {
+        eprintln!("could not write BENCH_qos.json: {e}");
     }
 }
 

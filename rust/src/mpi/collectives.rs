@@ -473,6 +473,50 @@ pub fn alltoall(world: &mut World, bytes_per_rank: usize) -> SimDuration {
     world.max_clock() - start
 }
 
+/// [`alltoall`] over a communicator subgroup: pairwise exchange among the
+/// global ranks listed in `group` (local rank *i* is `group[i]`).  For
+/// the identity group this is exactly the whole-world schedule — same
+/// rounds, same turnaround — keeping a single scheduled job ps-identical
+/// to a direct run.
+pub fn alltoall_group(world: &mut World, group: &[usize], bytes_per_rank: usize) -> SimDuration {
+    assert!(!group.is_empty(), "alltoall needs at least one rank");
+    sync_group_clocks(world, group);
+    let start = group_max_clock(world, group);
+    let n = group.len();
+    let turnaround = pt2pt::recv_turnaround(world);
+    for k in 1..n {
+        let mut reqs = Vec::with_capacity(n * 2);
+        for (i, &r) in group.iter().enumerate() {
+            let dst = group[(i + k) % n];
+            let src = group[(i + n - k) % n];
+            let tr = world.clocks[r];
+            reqs.push(progress::isend_at(world, r, dst, bytes_per_rank, tr));
+            reqs.push(progress::irecv_at(world, r, src, bytes_per_rank, tr + turnaround));
+        }
+        progress::wait_all(world, &reqs);
+        world.progress.recycle();
+    }
+    span_collective_group(world, group, start, bytes_per_rank);
+    group_max_clock(world, group) - start
+}
+
+/// An incast step over a communicator subgroup: every non-root rank sends
+/// `bytes` to the group's root (`group[0]`) concurrently — the
+/// many-to-one bully pattern of the QoS isolation suite.  Returns the
+/// osu-style latency (group max-clock delta, clocks synced beforehand).
+pub fn incast_group(world: &mut World, group: &[usize], bytes: usize) -> SimDuration {
+    assert!(!group.is_empty(), "incast needs at least one rank");
+    sync_group_clocks(world, group);
+    let start = group_max_clock(world, group);
+    let root = group[0];
+    let step: Step = group.iter().skip(1).map(|&src| (src, root)).collect();
+    if !step.is_empty() {
+        run_pair_step(world, &step, |_, _| bytes);
+    }
+    span_collective_group(world, group, start, bytes);
+    group_max_clock(world, group) - start
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -774,5 +818,31 @@ mod tests {
         let mut w = world(6);
         let d = alltoall(&mut w, 256);
         assert!(d > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn alltoall_identity_group_is_ps_exact() {
+        let mut wa = world(8);
+        let direct = alltoall(&mut wa, 1024);
+        let mut wb = world(8);
+        let group: Vec<usize> = (0..8).collect();
+        let via_group = alltoall_group(&mut wb, &group, 1024);
+        assert_eq!(direct, via_group, "identity group must be the whole-world path");
+        assert_eq!(wa.clocks, wb.clocks);
+    }
+
+    #[test]
+    fn incast_concentrates_on_the_group_root() {
+        let mut w = world(8);
+        let group: Vec<usize> = (0..8).collect();
+        let many = incast_group(&mut w, &group, 4096);
+        let mut w2 = world(8);
+        let pair = incast_group(&mut w2, &[0, 1], 4096);
+        assert!(many > pair, "8-way incast {many} should exceed a single send {pair}");
+        // subgroup incast leaves outside ranks untouched
+        let mut w3 = world(8);
+        incast_group(&mut w3, &[2, 3, 4], 4096);
+        assert_eq!(w3.clocks[0], SimTime::ZERO);
+        assert!(w3.clocks[2] > SimTime::ZERO);
     }
 }

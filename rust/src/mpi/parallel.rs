@@ -94,6 +94,10 @@ pub struct LedgerOp {
     pub parts: u64,
     /// Latest event time that may pop before this op must commit.
     pub bound: SimTime,
+    /// QoS traffic class of the sending tenant (stamped onto the mesh
+    /// before the op executes, so per-class byte accounting and ECN
+    /// marks are worker-invariant).
+    pub class: u8,
 }
 
 /// Timing outcome of one executed ledger operation (plain `SimTime`s so
@@ -178,6 +182,7 @@ impl std::fmt::Debug for ParallelRuntime {
 
 fn execute_op(fab: &mut Fabric, op: &LedgerOp) -> OpResult {
     fab.set_trace_flow(op.req as u64);
+    fab.set_qos_class(op.class);
     match op.kind {
         OpKind::Eager => {
             let e = packetizer::eager_send(fab, &op.path, op.at, op.bytes);
@@ -296,6 +301,16 @@ impl ParallelRuntime {
         if model.is_lossy() {
             return None;
         }
+        // End-to-end injection throttling creates the same kind of
+        // cross-partition causal chain as retransmission timers (an ECN
+        // echo on one blade group re-opens a sender's window on
+        // another), so a throttled run stays on the single-threaded
+        // reference path — worker-invariant by construction.
+        // Arbitration-only QoS (window_bytes == 0) keeps the runtime:
+        // marking is detect-only and folds back through route counters.
+        if cfg.qos.enabled && cfg.qos.window_bytes > 0 {
+            return None;
+        }
         let pmap = PartitionMap::new(cfg, cfg.sim_workers);
         if pmap.nparts() < 2 {
             return None;
@@ -367,6 +382,7 @@ impl ParallelRuntime {
     }
 
     /// Defer one fabric operation into the open window.
+    #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
         kind: OpKind,
@@ -375,6 +391,7 @@ impl ParallelRuntime {
         req: usize,
         seq: u64,
         at: SimTime,
+        class: u8,
     ) {
         let parts = if self.full_mask {
             self.pmap.all_parts()
@@ -384,7 +401,7 @@ impl ParallelRuntime {
         // Cross-partition consequences pay at least the lookahead before
         // re-entering the queue; same-partition ones only guarantee > at.
         let bound = if parts.count_ones() >= 2 { at + self.lookahead } else { at };
-        self.ledger.push(LedgerOp { at, path, bytes, kind, req, seq, parts, bound });
+        self.ledger.push(LedgerOp { at, path, bytes, kind, req, seq, parts, bound, class });
         self.min_bound = Some(self.min_bound.map_or(bound, |b| b.min(bound)));
     }
 
@@ -492,6 +509,7 @@ mod tests {
             seq,
             parts,
             bound: SimTime::from_ns(at_ns),
+            class: 0,
         }
     }
 
@@ -547,6 +565,22 @@ mod tests {
     }
 
     #[test]
+    fn runtime_disabled_on_throttling_qos_but_not_arbitration_only() {
+        use crate::topology::QosConfig;
+        let mut cfg = SystemConfig::rack();
+        cfg.sim_workers = 4;
+        // A live injection window creates cross-partition causal chains
+        // (echo → window reopen) inside the lookahead: serial path only.
+        cfg.qos = QosConfig::throttled();
+        assert!(ParallelRuntime::new(&cfg, &NetworkModel::Flow).is_none());
+        // Arbitration + detect-only marking keeps the runtime.
+        cfg.qos = QosConfig::arbitration_only();
+        let rt = ParallelRuntime::new(&cfg, &NetworkModel::Flow)
+            .expect("arbitration-only QoS keeps the runtime");
+        drop(rt);
+    }
+
+    #[test]
     fn window_execution_matches_sequential_execution_exactly() {
         // Two cross-partition RDMA ops on disjoint blade pairs: the
         // threaded window commit must produce bit-identical results and
@@ -576,7 +610,7 @@ mod tests {
         ];
         let mut seq_results = Vec::new();
         for (i, (kind, path, bytes)) in ops.iter().enumerate() {
-            par.record(*kind, *path, *bytes, i, i as u64, t);
+            par.record(*kind, *path, *bytes, i, i as u64, t, 0);
             let lop = LedgerOp {
                 at: t,
                 path: *path,
@@ -586,6 +620,7 @@ mod tests {
                 seq: i as u64,
                 parts: 0,
                 bound: t,
+                class: 0,
             };
             seq_results.push(execute_op(&mut seq_fab, &lop));
         }
@@ -611,6 +646,7 @@ mod tests {
             seq: 9,
             parts: 0,
             bound: t,
+            class: 0,
         };
         assert_eq!(
             format!("{:?}", execute_op(&mut fab, &extra)),
@@ -631,9 +667,9 @@ mod tests {
         let mut par = ParallelRuntime::new(&cfg, &model).unwrap();
         let mut fab = Fabric::with_model(cfg.clone(), model);
         let path = fab.route(fab.topo.mpsoc(0, 0, 0), fab.topo.mpsoc(1, 0, 0));
-        par.record(OpKind::Rts, path, 32, 0, 0, SimTime::from_ns(5.0));
+        par.record(OpKind::Rts, path, 32, 0, 0, SimTime::from_ns(5.0), 0);
         par.execute_window(&mut fab);
-        par.record(OpKind::Rts, path, 32, 1, 1, SimTime::from_ns(9.0));
+        par.record(OpKind::Rts, path, 32, 1, 1, SimTime::from_ns(9.0), 0);
         assert!(par.pending());
         assert!(par.stats().windows > 0);
         par.reset();

@@ -39,7 +39,7 @@ use crate::network::Fabric;
 use crate::ni::{packetizer, rdma, Pacing};
 use crate::sim::{Engine, SimDuration, SimTime};
 use crate::telemetry::{Recorder, SpanKind, SpanRec, Track};
-use crate::topology::Path;
+use crate::topology::{Path, NUM_CLASSES};
 
 /// Handle to a posted nonblocking operation.  Carries the progress
 /// engine's generation, so a handle that survives a [`Progress::recycle`]
@@ -126,6 +126,33 @@ struct ReqState {
     /// user-buffer write — delivery is exactly-once.  Stays zero-cost on
     /// the zero-fault path (bits are set but never hit).
     seen: u8,
+    /// QoS traffic class of the tenant that posted this request
+    /// (DESIGN.md §15); 0 unless the world's rank was admitted with one.
+    class: u8,
+    /// The fabric's ECN rule marked at least one cell of this request's
+    /// traffic (the NI echo): the sender's window halves on completion.
+    marked: bool,
+}
+
+/// Injection-throttle parameters, copied from
+/// [`crate::topology::QosConfig`] when the world arms end-to-end
+/// throttling ([`Progress::arm_throttle`]).
+#[derive(Debug, Clone, Copy)]
+struct Throttle {
+    /// Initial and maximum per-class outstanding-bytes window.
+    window_bytes: u64,
+    /// Floor the multiplicative decrease never goes below.
+    min_window: u64,
+    /// Additive recovery per clean (unmarked) send completion.
+    recover: u64,
+}
+
+/// One traffic class's congestion-window state (rustasim-TCP-style
+/// AIMD over *outstanding send bytes* instead of segments).
+#[derive(Debug, Clone, Copy, Default)]
+struct ClassWindow {
+    window: u64,
+    outstanding: u64,
 }
 
 /// The per-world progress engine: event queue + request table + per-pair
@@ -150,6 +177,22 @@ pub struct Progress {
     /// at injection, so genuine duplicates only arise in the cell-exact
     /// reference transport, `crate::ni::protocol`).
     dup_drops: u64,
+    /// End-to-end injection throttling (DESIGN.md §15), armed only when
+    /// the world's QoS config sets a nonzero window; `None` keeps every
+    /// send on the unthrottled path at zero cost.
+    throttle: Option<Throttle>,
+    /// Per-class AIMD window state (meaningful only with `throttle`).
+    windows: [ClassWindow; NUM_CLASSES],
+    /// Sends parked at the gate because their class's window was full,
+    /// FIFO per class; released as in-flight sends complete.
+    parked: [VecDeque<usize>; NUM_CLASSES],
+    /// Send launches whose fabric traffic came back ECN-marked (the NI
+    /// echo events).
+    ecn_echoes: u64,
+    /// Multiplicative window decreases applied on marked completions.
+    window_halvings: u64,
+    /// Times a send found its class window full and had to park.
+    throttle_parks: u64,
 }
 
 fn pop_front(
@@ -174,11 +217,112 @@ impl Progress {
     /// traced world stays traced across `World::reset`.
     pub fn reset(&mut self) {
         let gen = self.gen + 1;
+        let throttle = self.throttle;
         let mut trace = std::mem::take(&mut self.engine.trace);
         trace.clear();
         *self = Progress::default();
         self.gen = gen;
         self.engine.trace = trace;
+        // Like the recorder, the throttle config survives reset — the
+        // windows themselves restart at the configured size.
+        if let Some(th) = throttle {
+            self.arm_throttle(th.window_bytes, th.min_window, th.recover);
+        }
+    }
+
+    /// Arm per-tenant end-to-end injection throttling (DESIGN.md §15):
+    /// each class may keep at most its current window of send bytes
+    /// outstanding; ECN echoes halve the window (floor `min_window`),
+    /// clean completions recover it additively by `recover` (cap
+    /// `window_bytes`).
+    pub fn arm_throttle(&mut self, window_bytes: u64, min_window: u64, recover: u64) {
+        let window_bytes = window_bytes.max(1);
+        let th = Throttle {
+            window_bytes,
+            min_window: min_window.clamp(1, window_bytes),
+            recover: recover.max(1),
+        };
+        self.throttle = Some(th);
+        self.windows = [ClassWindow { window: th.window_bytes, outstanding: 0 }; NUM_CLASSES];
+    }
+
+    /// Is the injection throttle armed?
+    pub fn throttle_armed(&self) -> bool {
+        self.throttle.is_some()
+    }
+
+    /// A class's current congestion window in bytes (`None` when the
+    /// throttle is not armed).
+    pub fn window_of(&self, class: u8) -> Option<u64> {
+        self.throttle.map(|_| self.windows[class as usize % NUM_CLASSES].window)
+    }
+
+    /// Gate a send against its class window.  Admission is granted when
+    /// the class has nothing in flight (liveness: a send larger than the
+    /// window must still go) or when it fits; otherwise the send parks
+    /// FIFO and is relaunched as in-flight bytes drain.
+    fn try_admit(&mut self, id: usize) -> bool {
+        let c = self.reqs[id].class as usize % NUM_CLASSES;
+        let bytes = self.reqs[id].bytes as u64;
+        let w = self.windows[c];
+        if w.outstanding > 0 && w.outstanding + bytes > w.window {
+            self.throttle_parks += 1;
+            self.parked[c].push_back(id);
+            return false;
+        }
+        self.windows[c].outstanding += bytes;
+        true
+    }
+
+    /// A throttled send completed (its buffer freed at `done`): drain its
+    /// bytes from the class window, apply the AIMD update (halve if any
+    /// of its traffic came back marked, recover otherwise), and relaunch
+    /// parked sends that now fit.
+    fn throttle_complete(&mut self, id: usize, done: SimTime) {
+        let Some(th) = self.throttle else { return };
+        let c = self.reqs[id].class as usize % NUM_CLASSES;
+        let bytes = self.reqs[id].bytes as u64;
+        let marked = self.reqs[id].marked;
+        let w = &mut self.windows[c];
+        w.outstanding = w.outstanding.saturating_sub(bytes);
+        if marked {
+            self.window_halvings += 1;
+            w.window = (w.window / 2).max(th.min_window);
+        } else {
+            w.window = (w.window + th.recover).min(th.window_bytes);
+        }
+        // Wake the longest-parked sends that fit the projected load; the
+        // gate re-checks on relaunch, so a race with an already-queued
+        // SendStart just re-parks.
+        let mut projected = w.outstanding;
+        let cap = w.window;
+        while let Some(&pid) = self.parked[c].front() {
+            let pb = self.reqs[pid].bytes as u64;
+            if projected > 0 && projected + pb > cap {
+                break;
+            }
+            projected += pb;
+            self.parked[c].pop_front();
+            self.engine.post(done, MpiEvent::SendStart(pid));
+        }
+    }
+
+    /// Point the fabric's trace-flow and QoS-class stamps at request
+    /// `id` and snapshot the mesh's mark counter; every launch site pairs
+    /// this with [`Progress::echo_marks`] after the NI primitive.
+    fn launch_prologue(&mut self, fab: &mut Fabric, id: usize) -> u64 {
+        fab.set_trace_flow(id as u64);
+        fab.set_qos_class(self.reqs[id].class);
+        fab.cells_marked()
+    }
+
+    /// The NI echo: if the fabric marked any cell since `before`, flag
+    /// the request so its completion halves the class window.
+    fn echo_marks(&mut self, fab: &Fabric, id: usize, before: u64) {
+        if fab.cells_marked() > before {
+            self.ecn_echoes += 1;
+            self.reqs[id].marked = true;
+        }
     }
 
     /// Arm the flight recorder (ring of `cap` spans, drop-oldest).
@@ -278,6 +422,7 @@ impl Progress {
         self.state(req).done
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn post_send(
         &mut self,
         src: usize,
@@ -287,6 +432,7 @@ impl Progress {
         at: SimTime,
         fwd: Path,
         back: Path,
+        class: u8,
     ) -> Request {
         let id = self.reqs.len();
         self.reqs.push(ReqState {
@@ -304,6 +450,8 @@ impl Progress {
             done: None,
             consumed: false,
             seen: 0,
+            class,
+            marked: false,
         });
         if let Some(rid) = pop_front(&mut self.unmatched_recvs, (src, dst)) {
             self.reqs[id].partner = Some(rid);
@@ -339,6 +487,8 @@ impl Progress {
             done: None,
             consumed: false,
             seen: 0,
+            class: 0, // stages are stamped with the *send* request's class
+            marked: false,
         });
         if let Some(sid) = pop_front(&mut self.unmatched_sends, (src, dst)) {
             self.reqs[id].partner = Some(sid);
@@ -382,6 +532,8 @@ impl Progress {
             done: None,
             consumed: false,
             seen: 0,
+            class: 0,
+            marked: false,
         });
         self.engine.post(at + dur, MpiEvent::ComputeDone(id));
         Request { id, gen: self.gen }
@@ -598,6 +750,21 @@ impl Progress {
         self.dup_drops
     }
 
+    /// Send launches whose fabric traffic came back ECN-marked.
+    pub fn ecn_echoes(&self) -> u64 {
+        self.ecn_echoes
+    }
+
+    /// Multiplicative window decreases applied on marked completions.
+    pub fn window_halvings(&self) -> u64 {
+        self.window_halvings
+    }
+
+    /// Times a send found its class window full and parked at the gate.
+    pub fn throttle_parks(&self) -> u64 {
+        self.throttle_parks
+    }
+
     /// Capped exponential backoff for transport retransmissions (§4.4):
     /// `pktz_timeout · 2^min(attempt, 6)`.  Retries are unbounded — the
     /// per-attempt corruption draws are independent (each retransmission
@@ -624,23 +791,26 @@ impl Progress {
         at: SimTime,
         attempt: u32,
     ) {
-        fab.set_trace_flow(id as u64);
+        let marks_before = self.launch_prologue(fab, id);
         let before = fab.cells_corrupted();
         let (rank, bytes) = (self.reqs[id].rank, self.reqs[id].bytes);
         match stg {
             stage::EAGER => {
                 let fwd = self.reqs[id].fwd.expect("send has a route");
                 let e = packetizer::eager_send(fab, &fwd, at, bytes);
+                self.echo_marks(fab, id, marks_before);
                 if fab.cells_corrupted() == before {
                     self.reqs[id].done = Some(e.cpu_free);
                     self.engine.post(e.visible, MpiEvent::EagerArrive(id));
                     self.span_eager(rank, id, at, e.cpu_free, e.visible, bytes);
+                    self.throttle_complete(id, e.cpu_free);
                     return;
                 }
             }
             stage::RTS => {
                 let fwd = self.reqs[id].fwd.expect("send has a route");
                 let arr = packetizer::send_small(fab, &fwd, at, rdma::HANDSHAKE_BYTES);
+                self.echo_marks(fab, id, marks_before);
                 if fab.cells_corrupted() == before {
                     self.engine.post(arr, MpiEvent::RtsArrive(id));
                     self.engine.trace.span(
@@ -657,6 +827,7 @@ impl Progress {
             stage::CTS => {
                 let back = self.reqs[id].back.expect("send has a return route");
                 let arr = packetizer::send_small(fab, &back, at, rdma::HANDSHAKE_BYTES);
+                self.echo_marks(fab, id, marks_before);
                 if fab.cells_corrupted() == before {
                     self.engine.post(arr, MpiEvent::CtsArrive(id));
                     // the CTS runs on the receiver's timeline
@@ -674,6 +845,7 @@ impl Progress {
             stage::RDMA => {
                 let fwd = self.reqs[id].fwd.expect("send has a route");
                 let c = rdma::rdma_write(fab, &fwd, at, bytes, Pacing::Sequential);
+                self.echo_marks(fab, id, marks_before);
                 if fab.cells_corrupted() == before {
                     self.reqs[id].done = Some(c.src_done);
                     self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
@@ -685,6 +857,7 @@ impl Progress {
                         c.notif_visible,
                         bytes as u64,
                     );
+                    self.throttle_complete(id, c.src_done);
                     return;
                 }
             }
@@ -729,6 +902,12 @@ impl Progress {
     ) {
         match ev {
             MpiEvent::SendStart(id) => {
+                // Injection gate (armed worlds only): a send that does
+                // not fit its class window parks here, before any
+                // library processing, and relaunches when space drains.
+                if self.throttle.is_some() && !self.try_admit(id) {
+                    return;
+                }
                 let (fwd, bytes, protocol, rank) = {
                     let r = &self.reqs[id];
                     (r.fwd.expect("send has a route"), r.bytes, r.protocol, r.rank)
@@ -748,20 +927,24 @@ impl Progress {
                     Protocol::Eager => {
                         if let Some(p) = par {
                             let seq = self.engine.reserve_seq();
-                            p.record(OpKind::Eager, fwd, bytes, id, seq, t + mpi_sw);
+                            let class = self.reqs[id].class;
+                            p.record(OpKind::Eager, fwd, bytes, id, seq, t + mpi_sw, class);
                         } else if fab.is_lossy() {
                             self.lossy_launch(fab, id, stage::EAGER, t + mpi_sw, 0);
                         } else {
-                            fab.set_trace_flow(id as u64);
+                            let marks = self.launch_prologue(fab, id);
                             let e = packetizer::eager_send(fab, &fwd, t + mpi_sw, bytes);
+                            self.echo_marks(fab, id, marks);
                             self.reqs[id].done = Some(e.cpu_free);
                             self.engine.post(e.visible, MpiEvent::EagerArrive(id));
                             self.span_eager(rank, id, t + mpi_sw, e.cpu_free, e.visible, bytes);
+                            self.throttle_complete(id, e.cpu_free);
                         }
                     }
                     Protocol::Rendezvous => {
                         if let Some(p) = par {
                             let seq = self.engine.reserve_seq();
+                            let class = self.reqs[id].class;
                             p.record(
                                 OpKind::Rts,
                                 fwd,
@@ -769,17 +952,19 @@ impl Progress {
                                 id,
                                 seq,
                                 t + mpi_sw,
+                                class,
                             );
                         } else if fab.is_lossy() {
                             self.lossy_launch(fab, id, stage::RTS, t + mpi_sw, 0);
                         } else {
-                            fab.set_trace_flow(id as u64);
+                            let marks = self.launch_prologue(fab, id);
                             let arr = packetizer::send_small(
                                 fab,
                                 &fwd,
                                 t + mpi_sw,
                                 rdma::HANDSHAKE_BYTES,
                             );
+                            self.echo_marks(fab, id, marks);
                             self.engine.post(arr, MpiEvent::RtsArrive(id));
                             self.engine.trace.span(
                                 Track::Rank(rank as u32),
@@ -826,13 +1011,15 @@ impl Progress {
                 let back = self.reqs[id].back.expect("send has a return route");
                 if let Some(p) = par {
                     let seq = self.engine.reserve_seq();
-                    p.record(OpKind::Cts, back, rdma::HANDSHAKE_BYTES, id, seq, t + cts_sw);
+                    let class = self.reqs[id].class;
+                    p.record(OpKind::Cts, back, rdma::HANDSHAKE_BYTES, id, seq, t + cts_sw, class);
                 } else if fab.is_lossy() {
                     self.lossy_launch(fab, id, stage::CTS, t + cts_sw, 0);
                 } else {
-                    fab.set_trace_flow(id as u64);
+                    let marks = self.launch_prologue(fab, id);
                     let arr =
                         packetizer::send_small(fab, &back, t + cts_sw, rdma::HANDSHAKE_BYTES);
+                    self.echo_marks(fab, id, marks);
                     self.engine.post(arr, MpiEvent::CtsArrive(id));
                     // the CTS runs on the receiver's timeline
                     self.engine.trace.span(
@@ -853,12 +1040,14 @@ impl Progress {
                 let bytes = self.reqs[id].bytes;
                 if let Some(p) = par {
                     let seq = self.engine.reserve_seq();
-                    p.record(OpKind::Rdma, fwd, bytes, id, seq, t);
+                    let class = self.reqs[id].class;
+                    p.record(OpKind::Rdma, fwd, bytes, id, seq, t, class);
                 } else if fab.is_lossy() {
                     self.lossy_launch(fab, id, stage::RDMA, t, 0);
                 } else {
-                    fab.set_trace_flow(id as u64);
+                    let marks = self.launch_prologue(fab, id);
                     let c = rdma::rdma_write(fab, &fwd, t, bytes, Pacing::Sequential);
+                    self.echo_marks(fab, id, marks);
                     // Sender may reuse sbuf once its engine is done (the final
                     // E2E ACK overlaps with the next operation).
                     self.reqs[id].done = Some(c.src_done);
@@ -871,6 +1060,7 @@ impl Progress {
                         c.notif_visible,
                         bytes as u64,
                     );
+                    self.throttle_complete(id, c.src_done);
                 }
             }
             MpiEvent::DataDelivered(id) => {
@@ -926,7 +1116,8 @@ pub fn isend_at(
     let b = world.node_of(dst);
     let fwd = world.fabric.route_cached(a, b);
     let back = world.fabric.route_cached(b, a);
-    world.progress.post_send(src, dst, bytes, protocol, at, fwd, back)
+    let class = world.class_of(src);
+    world.progress.post_send(src, dst, bytes, protocol, at, fwd, back, class)
 }
 
 /// Post a nonblocking receive (from `src`) at the receiver's current clock.
@@ -1095,6 +1286,72 @@ mod tests {
         let s2 = isend(&mut w, 0, 4, 8);
         let r2 = irecv(&mut w, 4, 0, 8);
         assert!(wait_all(&mut w, &[s2, r2]) > SimTime::ZERO);
+    }
+
+    #[test]
+    fn throttle_gate_parks_and_releases_sends() {
+        let mut w = world(8);
+        w.progress.arm_throttle(4096, 1024, 1024);
+        assert!(w.progress.throttle_armed());
+        assert_eq!(w.progress.window_of(0), Some(4096));
+        // three window-sized rendez-vous sends: the first fills the
+        // class-0 window, the rest must park and drain one at a time
+        let sends: Vec<Request> = (0..3).map(|_| isend(&mut w, 0, 4, 4096)).collect();
+        let recvs: Vec<Request> = (0..3).map(|_| irecv(&mut w, 4, 0, 4096)).collect();
+        wait_all(&mut w, &sends);
+        wait_all(&mut w, &recvs);
+        assert!(w.progress.throttle_parks() >= 2, "parks: {}", w.progress.throttle_parks());
+        assert_eq!(w.progress.outstanding(), 0);
+        // the flow model never ECN-marks, so the window only recovered
+        assert_eq!(w.progress.window_halvings(), 0);
+        assert_eq!(w.progress.window_of(0), Some(4096));
+        // serialised drain: strictly later than the unthrottled overlap
+        let mut free = world(8);
+        let fs: Vec<Request> = (0..3).map(|_| isend(&mut free, 0, 4, 4096)).collect();
+        let fr: Vec<Request> = (0..3).map(|_| irecv(&mut free, 4, 0, 4096)).collect();
+        wait_all(&mut free, &fs);
+        let free_done = wait_all(&mut free, &fr);
+        assert!(w.max_clock() >= free_done, "throttling cannot speed traffic up");
+    }
+
+    #[test]
+    fn oversized_send_passes_an_empty_window() {
+        // Liveness: a send larger than the whole window must still go
+        // when nothing is in flight, or it could never be admitted.
+        let mut w = world(8);
+        w.progress.arm_throttle(4096, 1024, 1024);
+        let s = isend(&mut w, 0, 4, 1 << 20);
+        let r = irecv(&mut w, 4, 0, 1 << 20);
+        wait_all(&mut w, &[s, r]);
+        assert_eq!(w.progress.throttle_parks(), 0);
+        assert_eq!(w.progress.outstanding(), 0);
+    }
+
+    #[test]
+    fn idle_throttle_is_timing_transparent() {
+        // A window no workload ever fills must not move a single
+        // completion time relative to the unthrottled engine.
+        for bytes in [8usize, 4096, 1 << 20] {
+            let mut plain = world(8);
+            let mut gated = world(8);
+            gated.progress.arm_throttle(1 << 30, 1024, 1024);
+            let ps = isend(&mut plain, 0, 4, bytes);
+            let pr = irecv(&mut plain, 4, 0, bytes);
+            let gs = isend(&mut gated, 0, 4, bytes);
+            let gr = irecv(&mut gated, 4, 0, bytes);
+            assert_eq!(wait(&mut plain, pr), wait(&mut gated, gr), "{bytes} B recv");
+            assert_eq!(wait(&mut plain, ps), wait(&mut gated, gs), "{bytes} B send");
+        }
+    }
+
+    #[test]
+    fn throttle_config_survives_reset() {
+        let mut w = world(8);
+        w.progress.arm_throttle(100, 10, 5);
+        w.reset();
+        assert!(w.progress.throttle_armed());
+        assert_eq!(w.progress.window_of(3), Some(100));
+        assert_eq!(w.progress.throttle_parks(), 0);
     }
 
     #[test]

@@ -182,6 +182,9 @@ pub struct World {
     /// Explicit rank → (MPSoC, core) mapping (mutate only through
     /// [`World::add_ranks`], which validates injectivity and capacity).
     pub(crate) rank_map: RankMap,
+    /// Per-rank QoS traffic class (parallel to `rank_map`; all zeros
+    /// unless jobs were admitted through [`World::add_ranks_classed`]).
+    rank_class: Vec<u8>,
     /// Per-rank local completion clocks.
     pub clocks: Vec<SimTime>,
     /// The nonblocking progress engine (event queue + request table) all
@@ -230,9 +233,15 @@ impl World {
         model: NetworkModel,
     ) -> World {
         let par = ParallelRuntime::new(&cfg, &model);
+        let qos = cfg.qos.clone();
         let fabric = Fabric::with_model(cfg, model);
         let clocks = vec![SimTime::ZERO; rank_map.len()];
-        World { fabric, placement, rank_map, clocks, progress: Progress::new(), par }
+        let rank_class = vec![0u8; rank_map.len()];
+        let mut progress = Progress::new();
+        if qos.enabled && qos.window_bytes > 0 {
+            progress.arm_throttle(qos.window_bytes, qos.min_window_bytes, qos.recover_bytes);
+        }
+        World { fabric, placement, rank_map, rank_class, clocks, progress, par }
     }
 
     /// Append ranks (a newly admitted job) with their clocks initialised
@@ -241,10 +250,29 @@ impl World {
     /// slots are validated against the machine and against every rank
     /// already mapped.
     pub fn add_ranks(&mut self, slots: &[RankSlot], at: SimTime) -> crate::errors::Result<usize> {
+        self.add_ranks_classed(slots, at, 0)
+    }
+
+    /// [`World::add_ranks`] with an explicit QoS traffic class for the
+    /// appended ranks (the scheduler threads `JobSpec::class` through
+    /// here so every message a job's ranks send is stamped with it).
+    pub fn add_ranks_classed(
+        &mut self,
+        slots: &[RankSlot],
+        at: SimTime,
+        class: u8,
+    ) -> crate::errors::Result<usize> {
         let cfg = self.fabric.cfg().clone();
         let base = self.rank_map.extend_validated(&cfg, slots)?;
         self.clocks.resize(base + slots.len(), at);
+        self.rank_class.resize(base + slots.len(), class % crate::topology::NUM_CLASSES as u8);
         Ok(base)
+    }
+
+    /// The QoS traffic class of a rank (0 unless its job was admitted
+    /// with one).
+    pub fn class_of(&self, rank: usize) -> u8 {
+        self.rank_class.get(rank).copied().unwrap_or(0)
     }
 
     pub fn nranks(&self) -> usize {
@@ -467,6 +495,26 @@ mod tests {
         // a second job claiming the same cores must be rejected
         assert!(w.add_ranks(&a, SimTime::ZERO).is_err());
         assert_eq!(w.nranks(), 8, "failed add must not grow the world");
+    }
+
+    #[test]
+    fn classed_ranks_thread_through_add_ranks() {
+        let cfg = SystemConfig::prototype();
+        let mut w = World::with_rank_map(
+            cfg,
+            RankMap::empty(),
+            Placement::PerCore,
+            NetworkModel::Flow,
+        );
+        let a: Vec<RankSlot> =
+            (0..4).map(|c| RankSlot { mpsoc: MpsocId(0), core: c as u8 }).collect();
+        let b: Vec<RankSlot> =
+            (0..4).map(|c| RankSlot { mpsoc: MpsocId(1), core: c as u8 }).collect();
+        w.add_ranks(&a, SimTime::ZERO).unwrap();
+        w.add_ranks_classed(&b, SimTime::ZERO, 2).unwrap();
+        assert_eq!(w.class_of(0), 0, "plain add_ranks is class 0");
+        assert_eq!(w.class_of(5), 2);
+        assert_eq!(w.class_of(99), 0, "out-of-range rank defaults to class 0");
     }
 
     #[test]

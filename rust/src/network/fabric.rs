@@ -154,6 +154,21 @@ impl Fabric {
         self.mesh.as_ref().map_or(0, |m| m.cells_corrupted())
     }
 
+    /// Bulk grants the routers' ECN rule has marked so far (monotone; 0
+    /// on the flow model or with QoS off).  The NI reads deltas around
+    /// each transfer to learn whether its class was flagged congested.
+    pub fn cells_marked(&self) -> u64 {
+        self.mesh.as_ref().map_or(0, |m| m.cells_marked())
+    }
+
+    /// Stamp cells injected from here on with a QoS traffic class
+    /// (no-op on the flow model; class 0 when never called).
+    pub fn set_qos_class(&mut self, class: u8) {
+        if let Some(mesh) = &mut self.mesh {
+            mesh.set_qos_class(class);
+        }
+    }
+
     /// Toggle the mesh's cell-train fast path (no-op on the flow model).
     /// Parity tests and benches use this to force the per-cell event
     /// reference path.

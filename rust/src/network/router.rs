@@ -83,7 +83,7 @@ use super::cell::CellSizes;
 use super::switch::{CreditedLink, MAX_CELL_HOPS, NUM_VCS, VC_BULK, VC_CTRL};
 use crate::sim::{Engine, InlineVec, SimDuration, SimTime};
 use crate::telemetry::{Recorder, RouteCounters, SpanKind, Track};
-use crate::topology::{Dir, LinkId, MpsocId, QfdbId, Topology, NETWORK_FPGA};
+use crate::topology::{Dir, LinkId, MpsocId, QfdbId, Topology, NETWORK_FPGA, NUM_CLASSES};
 
 /// How the mesh routes bulk cells.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -384,6 +384,9 @@ struct MeshCell {
     /// the destination NI's CRC check fails and the transport layer
     /// must retransmit end to end.
     corrupted: bool,
+    /// QoS traffic class (DESIGN.md §15): selects the WRR arbitration
+    /// queue and the ECN mark accounting.  0 = default class.
+    class: u8,
 }
 
 impl MeshCell {
@@ -402,6 +405,7 @@ impl MeshCell {
             hops: 0,
             delivered: None,
             corrupted: false,
+            class: 0,
         }
     }
 }
@@ -474,6 +478,20 @@ pub struct RouterMesh {
     /// Cells whose CRC check fails at the destination (monotone; the
     /// transport layer reads deltas around each transfer).
     cells_corrupted: u64,
+    /// QoS (DESIGN.md §15): WRR arbitration + ECN marking armed.
+    qos_enabled: bool,
+    /// ECN mark threshold in weight-scaled full-cell times.
+    qos_mark_threshold: u32,
+    /// Class stamped onto cells injected from here on (threaded down
+    /// from the MPI layer via [`crate::network::Fabric::set_qos_class`]).
+    cur_class: u8,
+    /// Bulk wire grants the ECN rule marked (monotone like
+    /// `cells_corrupted`; the NI reads deltas around each transfer to
+    /// echo congestion to the sender).
+    ecn_marks: u64,
+    /// Bulk wire bytes granted per traffic class (per-class utilisation
+    /// telemetry; all of it lands in class 0 when QoS is off).
+    class_bytes: [u64; NUM_CLASSES],
     // Calibration scalars (copied out of Calib; see the module docs).
     sw_lat: SimDuration,
     rt_lat: SimDuration,
@@ -498,6 +516,12 @@ impl RouterMesh {
             links.push(CreditedLink::new(cfg.torus_gbps, calib.torus_cell_gap, credits));
         }
         debug_assert_eq!(links.len(), n_links);
+        if cfg.qos.enabled {
+            let full_cell = (calib.cell_payload + calib.cell_overhead) as u64;
+            for l in &mut links {
+                l.set_qos(cfg.qos.weights, full_cell);
+            }
+        }
         for &(link, at) in faults.entries() {
             links[link.flat(cfg)].fail_at(at);
         }
@@ -530,6 +554,11 @@ impl RouterMesh {
             ber_cell,
             ber_seed,
             cells_corrupted: 0,
+            qos_enabled: cfg.qos.enabled,
+            qos_mark_threshold: cfg.qos.mark_threshold,
+            cur_class: 0,
+            ecn_marks: 0,
+            class_bytes: [0; NUM_CLASSES],
             sw_lat: calib.switch_latency,
             rt_lat: calib.router_latency,
             ln_lat: calib.link_latency,
@@ -593,7 +622,21 @@ impl RouterMesh {
             reroutes: self.route_reroutes.get(),
             credit_stalls: self.credit_stalls,
             stall_time: self.stall_time,
+            ecn_marks: self.ecn_marks,
+            class_bytes: self.class_bytes,
         }
+    }
+
+    /// Bulk grants the ECN rule has marked so far (monotone, like
+    /// [`RouterMesh::cells_corrupted`]).  The NI reads deltas around a
+    /// transfer to learn whether the fabric flagged its class congested.
+    pub fn cells_marked(&self) -> u64 {
+        self.ecn_marks
+    }
+
+    /// Stamp cells injected from here on with a QoS traffic class.
+    pub fn set_qos_class(&mut self, class: u8) {
+        self.cur_class = class % NUM_CLASSES as u8;
     }
 
     /// Cells whose CRC check fails at the destination NI under the
@@ -663,6 +706,8 @@ impl RouterMesh {
         self.route_reroutes.set(0);
         self.credit_stalls = 0;
         self.stall_time = SimDuration::ZERO;
+        self.ecn_marks = 0;
+        self.class_bytes = [0; NUM_CLASSES];
     }
 
     /// Fold a replica engine's per-window counters into this mesh, so
@@ -682,6 +727,10 @@ impl RouterMesh {
         self.route_reroutes.set(self.route_reroutes.get() + rc.reroutes);
         self.credit_stalls += rc.credit_stalls;
         self.stall_time += rc.stall_time;
+        self.ecn_marks += rc.ecn_marks;
+        for (mine, theirs) in self.class_bytes.iter_mut().zip(rc.class_bytes) {
+            *mine += theirs;
+        }
     }
 
     /// Forget all occupancy and statistics; the fault plan (scenario
@@ -706,6 +755,9 @@ impl RouterMesh {
         self.credit_stalls = 0;
         self.stall_time = SimDuration::ZERO;
         self.cells_corrupted = 0;
+        self.cur_class = 0;
+        self.ecn_marks = 0;
+        self.class_bytes = [0; NUM_CLASSES];
     }
 
     // ---- public transfer API --------------------------------------------
@@ -1048,7 +1100,21 @@ impl RouterMesh {
                     }
                     ready = ready.max(rel);
                 }
-                let (s, ser) = self.links[hop.link].grant_bulk(ready, wire_bytes);
+                let (s, ser) = if self.qos_enabled {
+                    let (s, ser, marked) = self.links[hop.link].grant_bulk_classed(
+                        ready,
+                        wire_bytes,
+                        self.cur_class,
+                        self.qos_mark_threshold,
+                    );
+                    if marked {
+                        self.ecn_marks += 1;
+                    }
+                    (s, ser)
+                } else {
+                    self.links[hop.link].grant_bulk(ready, wire_bytes)
+                };
+                self.class_bytes[self.cur_class as usize % NUM_CLASSES] += wire_bytes;
                 self.engine.trace.span(
                     Track::Link(hop.link as u32),
                     SpanKind::Hop,
@@ -1086,7 +1152,9 @@ impl RouterMesh {
     }
 
     fn spawn(&mut self, dst: MpsocId, payload: usize, ctrl: bool, loc: Loc) -> usize {
-        self.cells.push(MeshCell::probe(dst, payload, ctrl, loc));
+        let mut cell = MeshCell::probe(dst, payload, ctrl, loc);
+        cell.class = self.cur_class;
+        self.cells.push(cell);
         self.cells.len() - 1
     }
 
@@ -1327,7 +1395,12 @@ impl RouterMesh {
         let vc = if self.cells[id].ctrl { VC_CTRL } else { VC_BULK };
         if !self.links[link].try_take_credit(vc) {
             self.credit_stalls += 1;
-            self.links[link].enqueue_waiter(vc, id);
+            if self.qos_enabled && vc == VC_BULK {
+                let wire_bytes = (self.cells[id].payload + self.cell_overhead) as u64;
+                self.links[link].enqueue_waiter_classed(id, self.cells[id].class, wire_bytes);
+            } else {
+                self.links[link].enqueue_waiter(vc, id);
+            }
             self.cells[id].pending = Some(Pending { link, ready, next_loc, is_torus });
             return;
         }
@@ -1343,7 +1416,21 @@ impl RouterMesh {
         let full_cell = (self.cell_payload + self.cell_overhead) as u64;
         let (start, ser) = if ctrl {
             self.links[link].grant_ctrl(ready, wire_bytes, full_cell)
+        } else if self.qos_enabled {
+            let class = self.cells[id].class;
+            let (start, ser, marked) = self.links[link].grant_bulk_classed(
+                ready,
+                wire_bytes,
+                class,
+                self.qos_mark_threshold,
+            );
+            if marked {
+                self.ecn_marks += 1;
+            }
+            self.class_bytes[class as usize % NUM_CLASSES] += wire_bytes;
+            (start, ser)
         } else {
+            self.class_bytes[self.cells[id].class as usize % NUM_CLASSES] += wire_bytes;
             self.links[link].grant_bulk(ready, wire_bytes)
         };
         self.engine.trace.span(
@@ -1890,5 +1977,80 @@ mod tests {
             m.probe_route(QfdbId(0), QfdbId(1), SimTime::ZERO),
             vec![Dir::XMinus, Dir::XMinus, Dir::XMinus]
         );
+    }
+
+    fn qos_mesh(qos: crate::topology::QosConfig) -> RouterMesh {
+        let mut cfg = SystemConfig::prototype();
+        cfg.qos = qos;
+        RouterMesh::new(Topology::new(cfg), RoutePolicy::Deterministic, FaultPlan::none())
+    }
+
+    #[test]
+    fn qos_single_class_is_ps_identical_to_plain_mesh() {
+        // The work-conservation contract at mesh level: with every cell in
+        // one class, the classed grant/arbitration path must reproduce the
+        // plain mesh to the picosecond and never mark — on the train fast
+        // path, the event path, and through credit backpressure.
+        let t = topo();
+        let cases = [
+            (t.mpsoc(0, 0, 0), t.mpsoc(0, 0, 1)), // intra-QFDB
+            (t.mpsoc(0, 0, 1), t.mpsoc(0, 1, 0)), // 16G into 10G (credits)
+            (t.mpsoc(0, 0, 1), t.mpsoc(6, 1, 2)), // 6 hops, fan in/out
+        ];
+        for batching in [true, false] {
+            for &(a, b) in &cases {
+                let mut plain = mesh(RoutePolicy::Deterministic);
+                let mut qos = qos_mesh(crate::topology::QosConfig::throttled());
+                qos.set_qos_class(2);
+                plain.set_batching(batching);
+                qos.set_batching(batching);
+                let mut at = SimTime::ZERO;
+                for bytes in [16 * 1024usize, 300, 4096] {
+                    let p = plain.block(a, b, at, bytes, false);
+                    let q = qos.block(a, b, at, bytes, false);
+                    assert_eq!(p, q, "{a:?}->{b:?} {bytes} B (batching {batching})");
+                    at = p.1;
+                }
+                assert_eq!(qos.cells_marked(), 0, "single-class traffic must never mark");
+                assert_eq!(qos.route_counters().class_bytes[0], 0);
+                assert!(qos.route_counters().class_bytes[2] > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_class_contention_marks_without_moving_grants() {
+        // Two tenants hammer the same intra-QFDB wire back to back: the
+        // trailing class queues behind the leader's busy period, so the
+        // ECN rule fires — but marking is detect-only, so every timestamp
+        // still equals the plain mesh running the same sequence.
+        let t = topo();
+        let a = t.mpsoc(0, 0, 0);
+        let b = t.mpsoc(0, 0, 1);
+        let mut plain = mesh(RoutePolicy::Deterministic);
+        let mut qos = qos_mesh(crate::topology::QosConfig::throttled());
+        qos.set_qos_class(0);
+        let p0 = plain.block(a, b, SimTime::ZERO, 16 * 1024, false);
+        let q0 = qos.block(a, b, SimTime::ZERO, 16 * 1024, false);
+        assert_eq!(p0, q0);
+        assert_eq!(qos.cells_marked(), 0, "leader rides an idle wire");
+        // the second tenant injects while the wire is still busy
+        qos.set_qos_class(1);
+        let p1 = plain.block(a, b, SimTime::ZERO, 4096, false);
+        let q1 = qos.block(a, b, SimTime::ZERO, 4096, false);
+        assert_eq!(p1, q1, "marking must not move a single grant");
+        assert!(qos.cells_marked() > 0, "cross-class queueing must mark");
+        let rc = qos.route_counters();
+        assert!(rc.class_bytes[0] > rc.class_bytes[1]);
+        assert!(rc.class_bytes[1] > 0);
+        // a fresh busy period long after the wire drained is clean again
+        let before = qos.cells_marked();
+        qos.set_qos_class(2);
+        qos.block(a, b, SimTime::from_us(500.0), 4096, false);
+        assert_eq!(qos.cells_marked(), before, "idle wire resets the busy period");
+        // reset clears the QoS counters with everything else
+        qos.reset();
+        assert_eq!(qos.cells_marked(), 0);
+        assert_eq!(qos.route_counters().class_bytes, [0; NUM_CLASSES]);
     }
 }

@@ -35,6 +35,7 @@
 use std::collections::VecDeque;
 
 use crate::sim::{Resource, SimDuration, SimTime};
+use crate::topology::config::NUM_CLASSES;
 
 /// Virtual channels per link.  VC0 carries bulk RDMA cells (routed
 /// dimension-order or minimal-adaptive); VC1 is the control lane used by
@@ -68,8 +69,32 @@ pub struct CreditedLink {
     pub capacity: u32,
     /// Cells currently holding a downstream buffer slot, per VC.
     in_flight: [u32; NUM_VCS],
-    /// Cells waiting for a credit, FIFO per VC (mesh cell ids).
+    /// Cells waiting for a credit, FIFO per VC (mesh cell ids).  With
+    /// QoS arbitration active, *bulk* waiters instead queue per class in
+    /// `class_waiting` and this FIFO stays empty on [`VC_BULK`].
     waiting: [VecDeque<usize>; NUM_VCS],
+    /// Bulk cells waiting for a credit under QoS arbitration, one FIFO
+    /// per traffic class: `(mesh cell id, wire bytes)`.  Drained by the
+    /// deficit-round-robin scheduler in [`CreditedLink::give_credit`].
+    class_waiting: [VecDeque<(usize, u64)>; NUM_CLASSES],
+    /// DRR deficit per class, in wire bytes (DESIGN.md §15).
+    deficit: [u64; NUM_CLASSES],
+    /// DRR cursor: the class currently being served.
+    rr: usize,
+    /// The cursor just moved onto `rr` and the class has not yet
+    /// received this round's quantum.
+    rr_fresh: bool,
+    /// WRR weight per class (quantum = weight x one full cell's wire
+    /// bytes).  All-ones unless the mesh configures QoS.
+    qos_weights: [u32; NUM_CLASSES],
+    /// Wire bytes of one full (maximum-payload) cell — the DRR quantum
+    /// unit and the ECN mark-threshold time base.
+    full_cell_bytes: u64,
+    /// Wire bytes granted per class inside the current wire busy period
+    /// (resets when the wire goes idle).  Feeds the ECN mark decision:
+    /// a class is only marked while *other* classes are sharing the
+    /// busy period, which keeps single-tenant traffic mark-free.
+    busy_bytes: [u64; NUM_CLASSES],
     /// The bulk serializer (its busy/uses match the flow model's
     /// `link_busy` scope; the control lane is tracked separately).
     wire: Resource,
@@ -96,6 +121,13 @@ impl CreditedLink {
             capacity,
             in_flight: [0; NUM_VCS],
             waiting: Default::default(),
+            class_waiting: Default::default(),
+            deficit: [0; NUM_CLASSES],
+            rr: 0,
+            rr_fresh: true,
+            qos_weights: [1; NUM_CLASSES],
+            full_cell_bytes: 288,
+            busy_bytes: [0; NUM_CLASSES],
             wire: Resource::new(),
             ctrl: Resource::new(),
             down_at: None,
@@ -177,6 +209,11 @@ impl CreditedLink {
         if let Some(w) = self.waiting[vc].pop_front() {
             return Some(w);
         }
+        if vc == VC_BULK {
+            if let Some(w) = self.drr_pop() {
+                return Some(w);
+            }
+        }
         self.in_flight[vc] -= 1;
         None
     }
@@ -186,16 +223,77 @@ impl CreditedLink {
         self.waiting[vc].push_back(cell);
     }
 
+    /// Queue a *bulk* cell under QoS arbitration: it joins its class's
+    /// FIFO and will be woken by the deficit-round-robin scheduler when
+    /// a credit returns.  Control cells keep the plain per-VC FIFO.
+    pub fn enqueue_waiter_classed(&mut self, cell: usize, class: u8, wire_bytes: u64) {
+        self.class_waiting[class as usize % NUM_CLASSES].push_back((cell, wire_bytes));
+    }
+
+    /// Configure WRR weights and the quantum unit (one full cell's wire
+    /// bytes).  Pure arbitration state: setting it never changes timing
+    /// until classed waiters actually queue.
+    pub fn set_qos(&mut self, weights: [u32; NUM_CLASSES], full_cell_bytes: u64) {
+        self.qos_weights = weights;
+        self.full_cell_bytes = full_cell_bytes.max(1);
+    }
+
+    /// One DRR round (DESIGN.md §15): serve the cursor class while its
+    /// deficit covers the head cell's wire bytes; a class gets one
+    /// quantum (`weight x full_cell_bytes`) when the cursor arrives, an
+    /// empty class forfeits its deficit.  Exactly one cell is popped per
+    /// call (one credit = one cell).  With a single non-empty class this
+    /// degenerates to plain FIFO — the pop order is identical to the
+    /// un-classed `waiting` queue, which is the work-conservation /
+    /// single-tenant ps-identity argument.
+    fn drr_pop(&mut self) -> Option<usize> {
+        if self.class_waiting.iter().all(|q| q.is_empty()) {
+            return None;
+        }
+        loop {
+            let c = self.rr;
+            let Some(&(_, need)) = self.class_waiting[c].front() else {
+                self.deficit[c] = 0;
+                self.rr = (self.rr + 1) % NUM_CLASSES;
+                self.rr_fresh = true;
+                continue;
+            };
+            if self.rr_fresh {
+                self.deficit[c] += self.qos_weights[c].max(1) as u64 * self.full_cell_bytes;
+                self.rr_fresh = false;
+            }
+            if self.deficit[c] >= need {
+                self.deficit[c] -= need;
+                return self.class_waiting[c].pop_front().map(|(w, _)| w);
+            }
+            self.rr = (self.rr + 1) % NUM_CLASSES;
+            self.rr_fresh = true;
+        }
+    }
+
     /// Pop a waiter without touching the credit count (used to evacuate
     /// the queue of a failed link — those cells reroute, so no credit of
-    /// this link is involved).
+    /// this link is involved).  On the bulk VC this drains the classed
+    /// queues too (class order; evacuated cells re-route anyway).
     pub fn pop_waiter(&mut self, vc: usize) -> Option<usize> {
-        self.waiting[vc].pop_front()
+        if let Some(w) = self.waiting[vc].pop_front() {
+            return Some(w);
+        }
+        if vc == VC_BULK {
+            for q in &mut self.class_waiting {
+                if let Some((w, _)) = q.pop_front() {
+                    return Some(w);
+                }
+            }
+        }
+        None
     }
 
     /// Any cell still queued or buffered (used to assert the mesh drained).
     pub fn is_quiescent(&self) -> bool {
-        self.in_flight == [0; NUM_VCS] && self.waiting.iter().all(|q| q.is_empty())
+        self.in_flight == [0; NUM_VCS]
+            && self.waiting.iter().all(|q| q.is_empty())
+            && self.class_waiting.iter().all(|q| q.is_empty())
     }
 
     /// When the bulk serializer frees (congestion signal for adaptive
@@ -212,6 +310,41 @@ impl CreditedLink {
         let ser = SimDuration::serialize(wire_bytes, self.gbps);
         let (start, _) = self.wire.acquire(ready, ser + self.cell_gap);
         (start, ser)
+    }
+
+    /// [`CreditedLink::grant_bulk`] with QoS accounting: identical wire
+    /// timing (the acquire is the same call — marking is detect-only and
+    /// can never move a grant), plus an ECN mark decision.  A cell of
+    /// `class` is marked iff
+    ///
+    /// 1. other classes contributed bytes to the wire's current busy
+    ///    period (cross-class contention — a single-tenant run never
+    ///    satisfies this, so QoS-on is mark-free and ps-identical), and
+    /// 2. the cell waited at least `mark_threshold x weight` full-cell
+    ///    serialization times behind the busy wire.
+    ///
+    /// Returns `(start, serialization, marked)`.
+    pub fn grant_bulk_classed(
+        &mut self,
+        ready: SimTime,
+        wire_bytes: u64,
+        class: u8,
+        mark_threshold: u32,
+    ) -> (SimTime, SimDuration, bool) {
+        let c = class as usize % NUM_CLASSES;
+        if self.wire.next_free() <= ready {
+            // idle wire: a new busy period starts with this cell
+            self.busy_bytes = [0; NUM_CLASSES];
+        }
+        let (start, ser) = self.grant_bulk(ready, wire_bytes);
+        let cross: u64 =
+            self.busy_bytes.iter().enumerate().filter(|&(k, _)| k != c).map(|(_, b)| b).sum();
+        let full_cell = SimDuration::serialize(self.full_cell_bytes, self.gbps);
+        let threshold =
+            full_cell.times(mark_threshold as u64 * self.qos_weights[c].max(1) as u64);
+        let marked = cross > 0 && start.since(ready) >= threshold;
+        self.busy_bytes[c] += wire_bytes;
+        (start, ser, marked)
     }
 
     /// Serialize one small cell on the control lane.  If the bulk wire is
@@ -259,6 +392,15 @@ impl CreditedLink {
         for q in &mut self.waiting {
             q.clear();
         }
+        for q in &mut self.class_waiting {
+            q.clear();
+        }
+        // Arbitration state restarts with the experiment; the QoS
+        // weights (scenario configuration, like the fault window) stay.
+        self.deficit = [0; NUM_CLASSES];
+        self.rr = 0;
+        self.rr_fresh = true;
+        self.busy_bytes = [0; NUM_CLASSES];
         // The corruption stream restarts with the experiment; the fault
         // window (scenario configuration) stays.
         self.crossings = 0;
@@ -321,6 +463,95 @@ mod tests {
         // VCs are independent pools
         assert!(l.try_take_credit(VC_CTRL));
         assert_eq!(l.credit_free(VC_BULK), 2);
+    }
+
+    #[test]
+    fn wrr_serves_classes_by_weight() {
+        let mut l = link();
+        l.set_qos([2, 1, 1, 1], 288);
+        l.try_take_credit(VC_BULK);
+        l.try_take_credit(VC_BULK);
+        for cell in [10, 11, 12, 13] {
+            l.enqueue_waiter_classed(cell, 0, 288);
+        }
+        for cell in [20, 21] {
+            l.enqueue_waiter_classed(cell, 1, 288);
+        }
+        // weight 2:1 over equal-size cells: class 0 gets two grants per
+        // round, class 1 one, until a queue drains
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            order.push(l.give_credit(VC_BULK).expect("a waiter is queued"));
+        }
+        assert_eq!(order, [10, 11, 20, 12, 13, 21]);
+        // every pop handed the slot off: the pool is still exhausted
+        assert_eq!(l.credit_free(VC_BULK), 0);
+    }
+
+    #[test]
+    fn single_class_drr_degenerates_to_fifo() {
+        // the work-conservation / ps-identity anchor: with one tenant the
+        // classed path pops in exactly the order a plain FIFO would
+        let mut l = link();
+        l.set_qos([3, 1, 1, 1], 288);
+        l.try_take_credit(VC_BULK);
+        for cell in [30, 31, 32, 33, 34] {
+            l.enqueue_waiter_classed(cell, 2, 288);
+        }
+        for expect in [30, 31, 32, 33, 34] {
+            assert_eq!(l.give_credit(VC_BULK), Some(expect));
+        }
+        assert_eq!(l.give_credit(VC_BULK), None);
+        assert!(l.is_quiescent());
+    }
+
+    #[test]
+    fn classed_waiters_count_against_quiescence_and_evacuate() {
+        let mut l = link();
+        l.try_take_credit(VC_BULK);
+        l.enqueue_waiter_classed(5, 1, 288);
+        assert!(!l.is_quiescent());
+        assert_eq!(l.pop_waiter(VC_BULK), Some(5), "evacuation drains class queues");
+        assert_eq!(l.pop_waiter(VC_BULK), None);
+    }
+
+    #[test]
+    fn marks_require_cross_class_busy_bytes() {
+        let mut l = link();
+        l.set_qos([1; NUM_CLASSES], 288);
+        // first cell of a busy period: no wait, no cross bytes -> clean
+        let (s, _, m) = l.grant_bulk_classed(SimTime::ZERO, 288, 0, 0);
+        assert_eq!(s, SimTime::ZERO);
+        assert!(!m);
+        // same class queuing behind itself never marks (single tenant)
+        let (_, _, m) = l.grant_bulk_classed(SimTime::ZERO, 288, 0, 0);
+        assert!(!m, "single-tenant backlog is mark-free");
+        // another class waiting behind class-0 bytes is marked
+        let (_, _, m) = l.grant_bulk_classed(SimTime::ZERO, 288, 1, 0);
+        assert!(m, "cross-class wait marks");
+        // a fresh busy period forgets the old contention
+        let (_, _, m) = l.grant_bulk_classed(SimTime::from_us(100.0), 288, 1, 0);
+        assert!(!m, "idle wire resets the busy period");
+    }
+
+    #[test]
+    fn mark_threshold_scales_with_weight() {
+        let mut l = link();
+        l.set_qos([1, 4, 1, 1], 288);
+        l.grant_bulk_classed(SimTime::ZERO, 288, 0, 1);
+        // class 1 (weight 4, threshold 1): needs >= 4 full-cell waits to
+        // mark; one cell of backlog (305.4 ns < 921.6 ns) stays clean
+        let (_, _, m) = l.grant_bulk_classed(SimTime::ZERO, 288, 1, 1);
+        assert!(!m, "weighted threshold not yet crossed");
+        // class 2 (weight 1, threshold 1): the same backlog marks
+        let (_, _, m) = l.grant_bulk_classed(SimTime::ZERO, 288, 2, 1);
+        assert!(m);
+        // detect-only: grants land exactly where grant_bulk would put them
+        let mut plain = link();
+        for _ in 0..3 {
+            plain.grant_bulk(SimTime::ZERO, 288);
+        }
+        assert_eq!(l.wire_free(), plain.wire_free());
     }
 
     #[test]

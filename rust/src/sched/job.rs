@@ -31,11 +31,30 @@ pub enum Workload {
     Proxy { app: AppParams, mode: Mode, iters: usize },
     /// An osu_allreduce pattern: `execs` software allreduces of `bytes`.
     Allreduce { bytes: usize, execs: usize },
+    /// A many-to-one incast: `execs` rounds where every non-root rank
+    /// sends `bytes` to the job's rank 0 at once (the QoS bully pattern).
+    Incast { bytes: usize, execs: usize },
+    /// An osu_alltoall pattern: `execs` pairwise-exchange alltoalls of
+    /// `bytes` per rank (the densest all-pairs bully pattern).
+    Alltoall { bytes: usize, execs: usize },
+}
+
+/// Parse the `<bytes>x<execs>` argument shared by the collective-style
+/// workloads (`x<execs>` optional, defaulting to 1).
+fn parse_bytes_execs(kind: &str, arg: &str) -> Result<(usize, usize)> {
+    let (bytes_s, execs_s) = arg.split_once('x').unwrap_or((arg, "1"));
+    let bytes = bytes_s.parse().with_context(|| format!("bad {kind} byte count {bytes_s}"))?;
+    let execs = execs_s.parse().with_context(|| format!("bad {kind} exec count {execs_s}"))?;
+    if execs == 0 {
+        bail!("{kind} workload needs at least one execution");
+    }
+    Ok((bytes, execs))
 }
 
 impl Workload {
-    /// Parse a workload spec: `halo:<lammps|hpcg|minife>[:<iters>]` or
-    /// `allreduce:<bytes>x<execs>`.
+    /// Parse a workload spec: `halo:<lammps|hpcg|minife>[:<iters>]`,
+    /// `allreduce:<bytes>x<execs>`, `incast:<bytes>x<execs>` or
+    /// `alltoall:<bytes>x<execs>`.
     pub fn by_spec(spec: &str) -> Result<Workload> {
         let mut parts = spec.split(':');
         let kind = parts.next().unwrap_or("");
@@ -58,20 +77,23 @@ impl Workload {
             "allreduce" => {
                 let arg =
                     parts.next().context("allreduce needs a size: allreduce:<bytes>x<execs>")?;
-                let (bytes_s, execs_s) = arg.split_once('x').unwrap_or((arg, "1"));
-                let bytes = bytes_s
-                    .parse()
-                    .with_context(|| format!("bad allreduce byte count {bytes_s}"))?;
-                let execs = execs_s
-                    .parse()
-                    .with_context(|| format!("bad allreduce exec count {execs_s}"))?;
-                if execs == 0 {
-                    bail!("allreduce workload needs at least one execution");
-                }
+                let (bytes, execs) = parse_bytes_execs("allreduce", arg)?;
                 Workload::Allreduce { bytes, execs }
             }
+            "incast" => {
+                let arg = parts.next().context("incast needs a size: incast:<bytes>x<execs>")?;
+                let (bytes, execs) = parse_bytes_execs("incast", arg)?;
+                Workload::Incast { bytes, execs }
+            }
+            "alltoall" => {
+                let arg =
+                    parts.next().context("alltoall needs a size: alltoall:<bytes>x<execs>")?;
+                let (bytes, execs) = parse_bytes_execs("alltoall", arg)?;
+                Workload::Alltoall { bytes, execs }
+            }
             other => bail!(
-                "unknown workload {other} (halo:<app>[:<iters>] | allreduce:<bytes>x<execs>)"
+                "unknown workload {other} (halo:<app>[:<iters>] | allreduce:<bytes>x<execs> \
+                 | incast:<bytes>x<execs> | alltoall:<bytes>x<execs>)"
             ),
         };
         // reject trailing components instead of silently dropping them
@@ -86,6 +108,8 @@ impl Workload {
         match self {
             Workload::Proxy { app, iters, .. } => format!("halo:{}:{}", app.name, iters),
             Workload::Allreduce { bytes, execs } => format!("allreduce:{bytes}x{execs}"),
+            Workload::Incast { bytes, execs } => format!("incast:{bytes}x{execs}"),
+            Workload::Alltoall { bytes, execs } => format!("alltoall:{bytes}x{execs}"),
         }
     }
 
@@ -96,7 +120,9 @@ impl Workload {
     pub fn total_steps(&self) -> usize {
         match self {
             Workload::Proxy { iters, .. } => *iters,
-            Workload::Allreduce { execs, .. } => *execs,
+            Workload::Allreduce { execs, .. }
+            | Workload::Incast { execs, .. }
+            | Workload::Alltoall { execs, .. } => *execs,
         }
     }
 }
@@ -110,6 +136,11 @@ pub struct JobSpec {
     /// Placement style hint (MPSoCs are allocated accordingly).
     pub placement: Placement,
     pub workload: Workload,
+    /// QoS traffic class of the tenant (mod [`crate::topology::NUM_CLASSES`]):
+    /// every cell the job's ranks inject carries this class through the
+    /// NI into the router arbitration and marking machinery.  Class 0 with
+    /// QoS disabled is the pre-QoS behaviour.
+    pub class: u8,
 }
 
 /// A running (admitted) job on the shared rack world.
@@ -141,6 +172,12 @@ enum RunKind {
     Allreduce {
         bytes: usize,
     },
+    Incast {
+        bytes: usize,
+    },
+    Alltoall {
+        bytes: usize,
+    },
 }
 
 impl JobRun {
@@ -168,6 +205,8 @@ impl JobRun {
                 }
             }
             Workload::Allreduce { bytes, .. } => RunKind::Allreduce { bytes: *bytes },
+            Workload::Incast { bytes, .. } => RunKind::Incast { bytes: *bytes },
+            Workload::Alltoall { bytes, .. } => RunKind::Alltoall { bytes: *bytes },
         };
         JobRun {
             spec_idx,
@@ -208,6 +247,16 @@ impl JobRun {
             RunKind::Allreduce { bytes } => {
                 let lat = collectives::allreduce_group(world, &self.group, *bytes);
                 self.acc.allreduce_time += lat.secs();
+                self.acc.comm_time += lat.secs();
+                world.progress.recycle();
+            }
+            RunKind::Incast { bytes } => {
+                let lat = collectives::incast_group(world, &self.group, *bytes);
+                self.acc.comm_time += lat.secs();
+                world.progress.recycle();
+            }
+            RunKind::Alltoall { bytes } => {
+                let lat = collectives::alltoall_group(world, &self.group, *bytes);
                 self.acc.comm_time += lat.secs();
                 world.progress.recycle();
             }

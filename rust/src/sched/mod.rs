@@ -32,11 +32,13 @@
 
 pub mod alloc;
 pub mod job;
+pub mod qos;
 pub mod recovery;
 pub mod trace;
 
 pub use alloc::{mpsocs_needed, Allocation, Policy, RackAlloc};
 pub use job::{JobResult, JobRun, JobSpec, Workload, DEFAULT_JOB_ITERS};
+pub use qos::{jain_index, qos_report, suite_profile, QosReport, QosScenario};
 pub use recovery::{FaultEpochs, Recovery};
 pub use trace::{parse_trace, synthetic_jobs};
 
@@ -159,7 +161,7 @@ fn admit_wave(
             );
         }
         let slots = allocation.slots(world.fabric.cfg(), spec.ranks, spec.placement);
-        let base = world.add_ranks(&slots, start)?;
+        let base = world.add_ranks_classed(&slots, start, spec.class)?;
         let group: Vec<usize> = (base..base + spec.ranks).collect();
         running.push(JobRun::new(
             idx,
@@ -516,6 +518,7 @@ mod tests {
             arrival: SimTime::from_us(arrival_us),
             placement: Placement::PerCore,
             workload: Workload::by_spec("halo:hpcg:2").unwrap(),
+            class: 0,
         }
     }
 
@@ -526,6 +529,7 @@ mod tests {
             arrival: SimTime::from_us(arrival_us),
             placement: Placement::PerCore,
             workload: Workload::by_spec("allreduce:1024x3").unwrap(),
+            class: 0,
         }
     }
 
@@ -617,6 +621,7 @@ mod tests {
             arrival: SimTime::ZERO,
             placement: Placement::PerCore,
             workload: Workload::Allreduce { bytes: 64, execs: 0 },
+            class: 0,
         };
         let err = run_schedule(&cfg, &[spec], &sc).unwrap_err();
         assert!(err.to_string().contains("zero-step"), "{err}");

@@ -1,0 +1,315 @@
+//! The adversarial-tenant QoS isolation suite (`repro qos`).
+//!
+//! Each scenario runs a fixed multi-tenant trace on the *shared*
+//! cell-level rack twice — once with QoS disabled (plain FIFO
+//! arbitration, no marking, no windows) and once with the requested
+//! [`QosConfig`] — and quantifies what the per-tenant machinery buys:
+//!
+//! * **incast-bully vs. halo-victim** — a many-to-one incast tenant
+//!   hammers the torus links a latency-sensitive halo-exchange job
+//!   shares under scattered placement;
+//! * **alltoall-bully vs. allreduce-victim** — the densest all-pairs
+//!   pattern against a bandwidth-bound collective;
+//! * **N-way fair-share** — one identical allreduce tenant per traffic
+//!   class, equal weights: isolation must not come at the price of
+//!   fairness (Jain index stays high).
+//!
+//! The interesting numbers are relative: the victim's slowdown (shared
+//! wall time over its isolated-run wall time, the scheduler's standard
+//! interference metric) with and without QoS, their excess-interference
+//! ratio, and the Jain fairness index over the tenants' goodput shares.
+//! All of it lands in `BENCH_qos.json` via [`crate::telemetry::Summary`]
+//! plus the per-scenario metrics stamped by `repro qos`.
+
+use crate::errors::Result;
+use crate::network::{NetworkModel, RoutePolicy};
+use crate::sim::SimTime;
+use crate::topology::{QosConfig, SystemConfig, NUM_CLASSES};
+
+use super::job::{JobSpec, Workload};
+use super::{run_schedule, Policy, SchedConfig, SchedOutcome};
+use crate::mpi::Placement;
+
+/// Excess-interference floor: slowdowns within 1% of 1.0 are treated as
+/// "no interference" so the off/on ratio never divides by noise.
+const EXCESS_FLOOR: f64 = 0.01;
+
+/// The three adversarial-tenant scenarios of the suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosScenario {
+    /// Many-to-one incast bully (class 1) vs. halo-exchange victim
+    /// (class 0), scattered placement.
+    IncastBully,
+    /// Pairwise-exchange alltoall bully (class 1) vs. allreduce victim
+    /// (class 0).
+    AlltoallBully,
+    /// One identical allreduce tenant per traffic class, equal weights.
+    FairShare,
+}
+
+impl QosScenario {
+    pub fn all() -> [QosScenario; 3] {
+        [QosScenario::IncastBully, QosScenario::AlltoallBully, QosScenario::FairShare]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosScenario::IncastBully => "incast-bully",
+            QosScenario::AlltoallBully => "alltoall-bully",
+            QosScenario::FairShare => "fair-share",
+        }
+    }
+
+    /// Index of the victim job in [`QosScenario::specs`] (`None` for the
+    /// symmetric fair-share mix, where every tenant is its own victim).
+    pub fn victim(&self) -> Option<usize> {
+        match self {
+            QosScenario::IncastBully | QosScenario::AlltoallBully => Some(0),
+            QosScenario::FairShare => None,
+        }
+    }
+
+    /// The scenario's job trace, sized to the machine the way
+    /// [`super::synthetic_jobs`] is: a tenant unit of 1/8 of the rack's
+    /// cores, at least one MPSoC's worth.
+    pub fn specs(&self, cfg: &SystemConfig) -> Vec<JobSpec> {
+        let unit = (cfg.num_cores() / 8).max(cfg.cores_per_fpga);
+        let mk = |name: &str, spec: &str, ranks: usize, class: u8| JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: Workload::by_spec(spec).expect("static scenario specs are valid"),
+            class,
+        };
+        match self {
+            // 15+ senders converging 32 KiB blocks on one root, six
+            // rounds: the sustained many-to-one pattern that floods the
+            // victim's shared torus links with bulk cells.
+            QosScenario::IncastBully => vec![
+                mk("halo-victim", "halo:hpcg:2", unit, 0),
+                mk("incast-bully", "incast:32768x6", unit, 1),
+            ],
+            QosScenario::AlltoallBully => vec![
+                mk("allreduce-victim", "allreduce:4096x4", (unit / 2).max(2), 0),
+                mk("alltoall-bully", "alltoall:16384x4", unit, 1),
+            ],
+            QosScenario::FairShare => (0..NUM_CLASSES as u8)
+                .map(|c| {
+                    mk(&format!("tenant-{c}"), "allreduce:8192x4", (unit / 2).max(2), c)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The QoS profile `repro qos` runs the bully scenarios under: the
+/// throttling window of [`QosConfig::throttled`] plus a 4x arbitration
+/// weight for class 0, the victim class of both bully scenarios.  (The
+/// fair-share scenario always runs equal weights — see [`qos_report`].)
+pub fn suite_profile() -> QosConfig {
+    QosConfig { weights: [4, 1, 1, 1], ..QosConfig::throttled() }
+}
+
+/// Jain's fairness index over the tenants' shares: `(Σx)² / (n·Σx²)`.
+/// 1.0 = perfectly equal, `1/n` = one tenant holds everything.
+pub fn jain_index(shares: &[f64]) -> f64 {
+    if shares.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = shares.iter().sum();
+    let s2: f64 = shares.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (shares.len() as f64 * s2)
+}
+
+/// One scenario's off-vs-on comparison.
+#[derive(Debug, Clone)]
+pub struct QosReport {
+    pub scenario: &'static str,
+    /// Victim job name (`None` for the symmetric fair-share mix).
+    pub victim: Option<String>,
+    /// Victim slowdown (mean slowdown for fair-share) without QoS.
+    pub slowdown_off: f64,
+    /// Same, with QoS enabled.
+    pub slowdown_on: f64,
+    /// Excess-interference ratio `(off−1)/(on−1)`, both floored at
+    /// [`EXCESS_FLOOR`]: ≥ 2 means QoS at least halved the victim's
+    /// interference.
+    pub isolation_gain: f64,
+    /// Jain index over the tenants' goodput shares (`isolated/shared`
+    /// wall time per job), without / with QoS.
+    pub jain_off: f64,
+    pub jain_on: f64,
+    pub makespan_off_s: f64,
+    pub makespan_on_s: f64,
+    /// QoS counters of the QoS-enabled run (the off run has none by
+    /// construction — asserted by [`qos_report`]).
+    pub cells_marked: u64,
+    pub ecn_echoes: u64,
+    pub window_halvings: u64,
+    pub throttle_parks: u64,
+}
+
+fn victim_slowdown(out: &SchedOutcome, victim: Option<usize>) -> f64 {
+    match victim {
+        Some(i) => out.jobs[i].slowdown,
+        None => out.mean_slowdown(),
+    }
+}
+
+fn goodput_shares(out: &SchedOutcome) -> Vec<f64> {
+    out.jobs.iter().map(|j| if j.slowdown > 0.0 { 1.0 / j.slowdown } else { 0.0 }).collect()
+}
+
+fn excess(slowdown: f64) -> f64 {
+    (slowdown - 1.0).max(EXCESS_FLOOR)
+}
+
+/// Run `scenario` twice on the cell-level mesh — QoS off, then QoS
+/// `qos` — and compare.  The fair-share scenario always runs with equal
+/// weights (its point is that equal weights yield equal shares); the
+/// bully scenarios use `qos` as given.
+pub fn qos_report(
+    cfg: &SystemConfig,
+    scenario: QosScenario,
+    qos: &QosConfig,
+) -> Result<QosReport> {
+    let specs = scenario.specs(cfg);
+    let mut qos_on = qos.clone();
+    qos_on.enabled = true;
+    if scenario == QosScenario::FairShare {
+        qos_on.weights = [1; NUM_CLASSES];
+    }
+    let mut cfg_off = cfg.clone();
+    cfg_off.qos = QosConfig::default();
+    let mut cfg_on = cfg.clone();
+    cfg_on.qos = qos_on;
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    let sc = SchedConfig::new(Policy::Scattered, model);
+    let off = run_schedule(&cfg_off, &specs, &sc)?;
+    let on = run_schedule(&cfg_on, &specs, &sc)?;
+    debug_assert_eq!(off.summary.cells_marked, 0, "QoS off never marks");
+    let victim = scenario.victim();
+    let slowdown_off = victim_slowdown(&off, victim);
+    let slowdown_on = victim_slowdown(&on, victim);
+    Ok(QosReport {
+        scenario: scenario.name(),
+        victim: victim.map(|i| specs[i].name.clone()),
+        slowdown_off,
+        slowdown_on,
+        isolation_gain: excess(slowdown_off) / excess(slowdown_on),
+        jain_off: jain_index(&goodput_shares(&off)),
+        jain_on: jain_index(&goodput_shares(&on)),
+        makespan_off_s: off.makespan_s,
+        makespan_on_s: on.makespan_s,
+        cells_marked: on.summary.cells_marked,
+        ecn_echoes: on.summary.ecn_echoes,
+        window_halvings: on.summary.window_halvings,
+        throttle_parks: on.summary.throttle_parks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance criterion: the incast bully's victim keeps at most
+    /// half its QoS-off interference once QoS is on, and the routers
+    /// actually marked the bully (the isolation is earned, not
+    /// incidental).
+    #[test]
+    fn incast_bully_isolation_meets_the_2x_bound() {
+        let cfg = SystemConfig::two_blades();
+        let r = qos_report(&cfg, QosScenario::IncastBully, &suite_profile()).unwrap();
+        assert!(
+            r.slowdown_off > 1.0 + EXCESS_FLOOR,
+            "the bully must actually hurt the victim without QoS: {}",
+            r.slowdown_off
+        );
+        assert!(
+            r.slowdown_on <= r.slowdown_off,
+            "QoS must not worsen the victim: {} vs {}",
+            r.slowdown_on,
+            r.slowdown_off
+        );
+        assert!(
+            r.isolation_gain >= 2.0,
+            "victim interference must at least halve: off {} on {} gain {}",
+            r.slowdown_off,
+            r.slowdown_on,
+            r.isolation_gain
+        );
+        assert!(r.cells_marked > 0, "isolation without marks would be incidental");
+    }
+
+    #[test]
+    fn alltoall_bully_victim_never_worse_under_qos() {
+        let cfg = SystemConfig::two_blades();
+        let r = qos_report(&cfg, QosScenario::AlltoallBully, &suite_profile()).unwrap();
+        assert!(
+            r.slowdown_on <= r.slowdown_off + 1e-9,
+            "QoS must not worsen the allreduce victim: {} vs {}",
+            r.slowdown_on,
+            r.slowdown_off
+        );
+        assert!(r.slowdown_on >= 1.0 - 1e-9);
+    }
+
+    /// Acceptance criterion: equal-weight tenants split the fabric
+    /// near-evenly — Jain index over goodput shares ≥ 0.9 with QoS on,
+    /// and no worse than the FIFO baseline.
+    #[test]
+    fn fair_share_jain_index_stays_high() {
+        let cfg = SystemConfig::two_blades();
+        let r = qos_report(&cfg, QosScenario::FairShare, &suite_profile()).unwrap();
+        assert!(r.jain_on >= 0.9, "equal-weight mix must stay fair: jain {}", r.jain_on);
+        assert!(
+            r.jain_on >= r.jain_off - 0.05,
+            "QoS must not degrade fairness: {} vs {}",
+            r.jain_on,
+            r.jain_off
+        );
+    }
+
+    /// Acceptance criterion (scheduler level): a single-tenant trace is
+    /// ps-identical with QoS enabled — work-conserving arbitration and
+    /// an idle window change nothing when there is no contender.
+    #[test]
+    fn single_tenant_schedule_is_ps_identical_with_qos_on() {
+        let cfg = SystemConfig::two_blades();
+        let spec = vec![JobSpec {
+            name: "solo".to_string(),
+            ranks: 16,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: Workload::by_spec("halo:hpcg:2").unwrap(),
+            class: 2,
+        }];
+        let model = NetworkModel::cell(RoutePolicy::Deterministic);
+        let mut cfg_on = cfg.clone();
+        cfg_on.qos = QosConfig::throttled();
+        let off = run_schedule(&cfg, &spec, &SchedConfig::new(Policy::Compact, model.clone()))
+            .unwrap();
+        let on =
+            run_schedule(&cfg_on, &spec, &SchedConfig::new(Policy::Compact, model)).unwrap();
+        assert_eq!(off.jobs[0].start, on.jobs[0].start);
+        assert_eq!(off.jobs[0].finish, on.jobs[0].finish, "single tenant must be ps-identical");
+        assert_eq!(on.summary.cells_marked, 0, "no cross-class traffic, no marks");
+        assert_eq!(on.summary.window_halvings, 0);
+        // per-class accounting runs regardless of the QoS switch: both
+        // runs moved the same class-2 bytes
+        assert!(on.summary.route.class_bytes[2] > 0, "{:?}", on.summary.route.class_bytes);
+        assert_eq!(off.summary.route.class_bytes, on.summary.route.class_bytes);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let skew = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12, "{skew}");
+        assert_eq!(jain_index(&[]), 1.0);
+    }
+}

@@ -4,14 +4,16 @@
 //! Trace format — one job per line, whitespace-separated:
 //!
 //! ```text
-//! # name   workload                 ranks  arrival_us  [placement]
+//! # name   workload                 ranks  arrival_us  [placement]  [class=<n>]
 //! jobA     halo:hpcg                16     0
-//! jobB     allreduce:1024x8         8      250         per-core
+//! jobB     allreduce:1024x8         8      250         per-core     class=1
 //! jobC     halo:minife:5            16     400         per-mpsoc
 //! ```
 //!
 //! `#` starts a comment; blank lines are ignored; `placement` defaults
-//! to `per-core`.
+//! to `per-core`; `class=<n>` assigns the tenant's QoS traffic class
+//! (default 0, taken mod [`crate::topology::NUM_CLASSES`] downstream —
+//! a no-op unless the run enables QoS).
 
 use super::job::{JobSpec, Workload};
 use crate::bail;
@@ -28,10 +30,20 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobSpec>> {
         if line.is_empty() {
             continue;
         }
-        let fields: Vec<&str> = line.split_whitespace().collect();
+        let mut fields: Vec<&str> = line.split_whitespace().collect();
+        // the optional `class=<n>` suffix is keyword-style: peel it off
+        // before the positional check so it composes with [placement]
+        let mut class = 0u8;
+        if let Some(last) = fields.last().and_then(|f| f.strip_prefix("class=")) {
+            class = last.parse().with_context(|| {
+                format!("trace line {}: bad class {last:?} (class=<0..255>)", lineno + 1)
+            })?;
+            fields.pop();
+        }
         if fields.len() < 4 || fields.len() > 5 {
             bail!(
-                "trace line {}: expected `name workload ranks arrival_us [placement]`, got {:?}",
+                "trace line {}: expected `name workload ranks arrival_us [placement] \
+                 [class=<n>]`, got {:?}",
                 lineno + 1,
                 line
             );
@@ -71,6 +83,7 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobSpec>> {
             arrival: SimTime::from_us(arrival_us),
             placement,
             workload,
+            class,
         });
     }
     if jobs.is_empty() {
@@ -86,18 +99,20 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobSpec>> {
 pub fn synthetic_jobs(cfg: &SystemConfig) -> Vec<JobSpec> {
     // A job unit of 1/8 of the rack's cores, at least one MPSoC's worth.
     let unit = (cfg.num_cores() / 8).max(cfg.cores_per_fpga);
-    let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64| JobSpec {
+    let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64, class: u8| JobSpec {
         name: name.to_string(),
         ranks,
         arrival: SimTime::from_us(arrival_us),
         placement: Placement::PerCore,
         workload: Workload::by_spec(spec).expect("synthetic workload specs are valid"),
+        class,
     };
+    // one traffic class per tenant, so a QoS-enabled run separates them
     vec![
-        mk("hpcg-a", "halo:hpcg", unit, 0.0),
-        mk("minife-b", "halo:minife", unit, 0.0),
-        mk("dots-c", "allreduce:1024x6", (unit / 2).max(2), 300.0),
-        mk("lammps-d", "halo:lammps", unit, 800.0),
+        mk("hpcg-a", "halo:hpcg", unit, 0.0, 0),
+        mk("minife-b", "halo:minife", unit, 0.0, 1),
+        mk("dots-c", "allreduce:1024x6", (unit / 2).max(2), 300.0, 2),
+        mk("lammps-d", "halo:lammps", unit, 800.0, 3),
     ]
 }
 
@@ -110,14 +125,16 @@ mod tests {
         let text = "\
 # a comment
 jobA halo:hpcg 16 0
-jobB allreduce:1024x8 8 250 per-core
+jobB allreduce:1024x8 8 250 per-core class=1
 
 jobC halo:minife:5 16 400 per-mpsoc   # trailing comment
 ";
         let jobs = parse_trace(text).unwrap();
         assert_eq!(jobs.len(), 3);
         assert_eq!(jobs[0].name, "jobA");
+        assert_eq!(jobs[0].class, 0, "class defaults to 0");
         assert_eq!(jobs[1].ranks, 8);
+        assert_eq!(jobs[1].class, 1);
         assert!(matches!(jobs[1].workload, Workload::Allreduce { bytes: 1024, execs: 8 }));
         assert_eq!(jobs[2].placement, Placement::PerMpsoc);
         assert!(jobs[2].arrival > jobs[1].arrival);
@@ -138,6 +155,9 @@ jobC halo:minife:5 16 400 per-mpsoc   # trailing comment
         assert!(parse_trace("jobA halo:hpcg 4 -3").is_err(), "negative arrival");
         assert!(parse_trace("jobA halo:hpcg 4 0 sideways").is_err(), "bad placement");
         assert!(parse_trace("jobA dance:hpcg 4 0").is_err(), "unknown workload");
+        assert!(parse_trace("jobA halo:hpcg 4 0 class=zero").is_err(), "bad class value");
+        assert!(parse_trace("jobA halo:hpcg 4 0 class=1 extra").is_err(), "class must be last");
+        assert!(parse_trace("jobA incast:4096x2 4 0 class=3").is_ok(), "incast with class");
         assert!(parse_trace("# only comments\n").is_err(), "empty trace");
         assert!(
             parse_trace("jobA halo:hpcg 4 0\njobA halo:minife 4 10\n").is_err(),

@@ -72,14 +72,21 @@ pub fn write_chrome_trace(path: &str, recs: &[SpanRec], dropped: u64) -> std::io
 pub fn series_csv(series: &LinkSeries) -> String {
     let mut out = String::from(
         "window,t0_us,t1_us,util_mean,util_max,util_max_link,ctrl_util_max,\
-         adaptive,dor,reroutes,credit_stalls,stall_us,queue_peak\n",
+         adaptive,dor,reroutes,credit_stalls,stall_us,queue_peak,ecn_marks,class_bytes\n",
     );
     for (i, w) in series.rows().iter().enumerate() {
         let (mean, max, arg) = w.util_stats();
         let cmax = w.ctrl_util.iter().copied().fold(0.0f32, f32::max);
+        let class_bytes = w
+            .route
+            .class_bytes
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join("|");
         let _ = writeln!(
             out,
-            "{},{},{},{:.4},{:.4},{},{:.4},{},{},{},{},{},{}",
+            "{},{},{},{:.4},{:.4},{},{:.4},{},{},{},{},{},{},{},{}",
             i,
             us(w.t0.0),
             us(w.t1.0),
@@ -92,7 +99,9 @@ pub fn series_csv(series: &LinkSeries) -> String {
             w.route.reroutes,
             w.route.credit_stalls,
             us(w.route.stall_time.0),
-            w.queue_peak
+            w.queue_peak,
+            w.route.ecn_marks,
+            class_bytes
         );
     }
     out
@@ -188,14 +197,17 @@ mod tests {
             SimTime(1_000_000),
             &[SimDuration(500_000)],
             &[SimDuration(0)],
-            RouteCounters { dor: 2, ..Default::default() },
+            RouteCounters { dor: 2, ecn_marks: 5, class_bytes: [9, 8, 0, 0], ..Default::default() },
             3,
         );
         let csv = series_csv(&s);
         let mut lines = csv.lines();
-        assert!(lines.next().unwrap().starts_with("window,t0_us"));
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("window,t0_us"));
+        assert!(header.ends_with("ecn_marks,class_bytes"), "{header}");
         let row = lines.next().unwrap();
         assert!(row.starts_with("0,0.000000,1.000000,0.5000,"), "{row}");
+        assert!(row.ends_with(",5,9|8|0|0"), "{row}");
         assert_eq!(lines.next(), None);
     }
 

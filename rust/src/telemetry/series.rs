@@ -8,6 +8,7 @@
 //! sampling cadence (the CLI samples once per benchmark iteration).
 
 use crate::sim::{SimDuration, SimTime};
+use crate::topology::NUM_CLASSES;
 
 /// Cumulative routing-decision and credit-stall counters maintained by
 /// the cell-level router mesh (always on — plain integer increments on
@@ -26,6 +27,11 @@ pub struct RouteCounters {
     pub credit_stalls: u64,
     /// Total time cells spent blocked on credits.
     pub stall_time: SimDuration,
+    /// Bulk grants the ECN rule flagged congested (QoS meshes only).
+    pub ecn_marks: u64,
+    /// Bulk wire bytes granted per QoS traffic class (class 0 carries
+    /// everything when QoS is off).
+    pub class_bytes: [u64; NUM_CLASSES],
 }
 
 impl RouteCounters {
@@ -37,6 +43,14 @@ impl RouteCounters {
             reroutes: self.reroutes - earlier.reroutes,
             credit_stalls: self.credit_stalls - earlier.credit_stalls,
             stall_time: SimDuration(self.stall_time.0 - earlier.stall_time.0),
+            ecn_marks: self.ecn_marks - earlier.ecn_marks,
+            class_bytes: {
+                let mut d = [0u64; NUM_CLASSES];
+                for (i, slot) in d.iter_mut().enumerate() {
+                    *slot = self.class_bytes[i] - earlier.class_bytes[i];
+                }
+                d
+            },
         }
     }
 }
@@ -180,7 +194,13 @@ mod tests {
     fn windows_diff_cumulative_counters() {
         let mut s = LinkSeries::disabled();
         s.enable(2);
-        let route1 = RouteCounters { adaptive: 3, dor: 5, ..Default::default() };
+        let route1 = RouteCounters {
+            adaptive: 3,
+            dor: 5,
+            ecn_marks: 2,
+            class_bytes: [10, 0, 0, 0],
+            ..Default::default()
+        };
         s.sample(
             SimTime(1000),
             &[SimDuration(500), SimDuration(0)],
@@ -188,7 +208,13 @@ mod tests {
             route1,
             7,
         );
-        let route2 = RouteCounters { adaptive: 4, dor: 9, ..Default::default() };
+        let route2 = RouteCounters {
+            adaptive: 4,
+            dor: 9,
+            ecn_marks: 6,
+            class_bytes: [10, 40, 0, 0],
+            ..Default::default()
+        };
         s.sample(
             SimTime(2000),
             &[SimDuration(500), SimDuration(800)],
@@ -204,6 +230,8 @@ mod tests {
         assert!((r1.util[0] - 0.0).abs() < 1e-6, "second window sees only the delta");
         assert!((r1.util[1] - 0.8).abs() < 1e-6);
         assert_eq!(r1.route.dor, 4);
+        assert_eq!(r1.route.ecn_marks, 4, "mark deltas are per-window");
+        assert_eq!(r1.route.class_bytes, [0, 40, 0, 0]);
         let (mean, max, arg) = r1.util_stats();
         assert!((max - 0.8).abs() < 1e-6 && arg == 1 && mean > 0.0);
     }

@@ -38,6 +38,15 @@ pub struct Summary {
     /// Stage arrivals discarded by the receiver's sequence check
     /// (exactly-once dedup; 0 under the timer-on-corruption transport).
     pub dup_drops: u64,
+    /// Cells the routers ECN-marked under cross-class occupancy (always
+    /// 0 with QoS disabled or on the flow model).
+    pub cells_marked: u64,
+    /// Marks the NI echoed back into the originating send request.
+    pub ecn_echoes: u64,
+    /// AIMD halvings of a tenant's injection window (marked completions).
+    pub window_halvings: u64,
+    /// Sends parked at the per-tenant injection gate.
+    pub throttle_parks: u64,
 }
 
 impl Summary {
@@ -69,6 +78,10 @@ impl Summary {
             retransmissions: w.progress.retransmissions(),
             corrupt_drops: w.progress.corrupt_drops(),
             dup_drops: w.progress.dup_drops(),
+            cells_marked: w.fabric.cells_marked(),
+            ecn_echoes: w.progress.ecn_echoes(),
+            window_halvings: w.progress.window_halvings(),
+            throttle_parks: w.progress.throttle_parks(),
         }
     }
 
@@ -108,6 +121,15 @@ impl Summary {
         suite.metric("faults/retransmissions", self.retransmissions as f64, "retries");
         suite.metric("faults/corrupt_drops", self.corrupt_drops as f64, "launches");
         suite.metric("faults/dup_drops", self.dup_drops as f64, "arrivals");
+        // QoS totals: also unconditional, so every BENCH_*.json states
+        // its marking/throttling exposure, zero or not
+        suite.metric("qos/cells_marked", self.cells_marked as f64, "cells");
+        suite.metric("qos/ecn_echoes", self.ecn_echoes as f64, "marks");
+        suite.metric("qos/window_halvings", self.window_halvings as f64, "halvings");
+        suite.metric("qos/throttle_parks", self.throttle_parks as f64, "sends");
+        for (c, b) in self.route.class_bytes.iter().enumerate() {
+            suite.metric(&format!("qos/class{c}_bytes"), *b as f64, "bytes");
+        }
     }
 }
 
@@ -147,6 +169,9 @@ mod tests {
         assert!(text.contains("\"name\":\"sim_workers\""));
         assert!(text.contains("\"name\":\"faults/retransmissions\""));
         assert!(text.contains("\"name\":\"faults/cells_corrupted\""));
+        assert!(text.contains("\"name\":\"qos/cells_marked\""));
+        assert!(text.contains("\"name\":\"qos/throttle_parks\""));
+        assert!(text.contains("\"name\":\"qos/class0_bytes\""));
         std::fs::remove_file(path).unwrap();
     }
 }

@@ -1,8 +1,9 @@
 //! Tiny property-testing helpers (the offline vendor set has no proptest):
-//! seeded random-case generation with failure reporting.  Used by the
-//! `proptests` integration suite.
+//! seeded random-case generation with failure reporting, plus the shared
+//! config builders used across the per-subsystem `proptests_*` suites.
 
 use crate::sim::Rng;
+use crate::topology::SystemConfig;
 
 /// Run `cases` random cases of `prop`, reporting the failing seed.
 /// Panics with the seed on the first failure so the case can be replayed.
@@ -14,6 +15,14 @@ pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result
             panic!("property {name} failed at case {case} (seed {seed:#x}): {msg}");
         }
     }
+}
+
+/// Clone `cfg` with `sim_workers` overridden — the standard builder for
+/// worker-invariance properties ("workers 1 == 2 == 4, ps exact").
+pub fn with_workers(cfg: &SystemConfig, workers: usize) -> SystemConfig {
+    let mut c = cfg.clone();
+    c.sim_workers = workers;
+    c
 }
 
 /// Assert helper for property bodies.
@@ -47,5 +56,15 @@ mod tests {
     #[should_panic(expected = "property always-fails failed")]
     fn failing_property_reports_seed() {
         forall("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn with_workers_only_touches_the_worker_count() {
+        let cfg = SystemConfig::prototype();
+        let c = with_workers(&cfg, 4);
+        assert_eq!(c.sim_workers, 4);
+        let mut back = c.clone();
+        back.sim_workers = cfg.sim_workers;
+        assert_eq!(back.fingerprint(), cfg.fingerprint());
     }
 }

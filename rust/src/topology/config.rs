@@ -7,6 +7,72 @@
 
 use crate::sim::time::SimDuration;
 
+/// Number of QoS traffic classes the fabric distinguishes (DESIGN.md
+/// §15).  Class 0 is the default: every rank not claimed by a classed
+/// job injects there, so a QoS-off world is an all-class-0 world.
+pub const NUM_CLASSES: usize = 4;
+
+/// Per-tenant QoS knobs (DESIGN.md §15): weighted-round-robin output
+/// arbitration on the torus routers plus ECN-style end-to-end injection
+/// throttling in the NI/progress engine.  Disabled by default — the
+/// arbitration degenerates to FIFO and the mark/window machinery never
+/// engages, so a default config is ps-identical to the pre-QoS model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosConfig {
+    /// Master switch.  `false` = plain FIFO arbitration, no marking,
+    /// no windows; the whole layer is timing-invisible.
+    pub enabled: bool,
+    /// WRR weight per traffic class (deficit quantum = weight x one
+    /// full cell's wire bytes).  All-equal weights are a fair share.
+    pub weights: [u32; NUM_CLASSES],
+    /// Mark a class's cells when its backlog behind a busy link exceeds
+    /// this many full-cell serialization times (weight-scaled), i.e. an
+    /// ECN-style congestion signal.  0 marks on any cross-class wait.
+    pub mark_threshold: u32,
+    /// Per-tenant outstanding-bytes window ceiling once throttling has
+    /// engaged (first echoed mark).  0 disables throttling: marks are
+    /// still counted but senders are never gated.
+    pub window_bytes: u64,
+    /// Floor the multiplicative-decrease never goes below (keeps every
+    /// tenant live: at least one message stays admissible).
+    pub min_window_bytes: u64,
+    /// Additive-increase credit per cleanly (unmarked) completed send.
+    pub recover_bytes: u64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: false,
+            weights: [1; NUM_CLASSES],
+            mark_threshold: 4,
+            window_bytes: 0,
+            min_window_bytes: 16 * 1024,
+            recover_bytes: 16 * 1024,
+        }
+    }
+}
+
+impl QosConfig {
+    /// A throttling profile for the adversarial-tenant scenarios: tight
+    /// enough that a marked bully drops to a small number of outstanding
+    /// blocks, generous enough that an unmarked tenant never stalls.
+    pub fn throttled() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            mark_threshold: 1,
+            window_bytes: 256 * 1024,
+            ..QosConfig::default()
+        }
+    }
+
+    /// Arbitration-only profile: WRR + marking, no injection windows.
+    /// Parallel-DES compatible (no cross-partition echo causality).
+    pub fn arbitration_only() -> QosConfig {
+        QosConfig { enabled: true, window_bytes: 0, ..QosConfig::default() }
+    }
+}
+
 /// Shape and link rates of the ExaNeSt prototype.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -30,6 +96,10 @@ pub struct SystemConfig {
     /// for every value, and it does not participate in
     /// [`SystemConfig::fingerprint`].
     pub sim_workers: usize,
+    /// Per-tenant QoS (DESIGN.md §15).  Unlike `sim_workers` this is a
+    /// *model* parameter — it changes simulated timing when enabled —
+    /// so it participates in [`SystemConfig::fingerprint`].
+    pub qos: QosConfig,
     /// Calibrated timing model.
     pub calib: Calib,
 }
@@ -52,6 +122,7 @@ impl SystemConfig {
             intra_qfdb_gbps: 16.0,
             torus_gbps: 10.0,
             sim_workers: 1,
+            qos: QosConfig::default(),
             calib: Calib::default(),
         }
     }
@@ -306,6 +377,30 @@ mod tests {
         let mut b = SystemConfig::rack();
         b.sim_workers = 4;
         assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_qos() {
+        // QoS is a model parameter: enabling it or reweighting a class
+        // changes simulated timing, so the fingerprint must move.
+        let a = SystemConfig::prototype();
+        let mut b = SystemConfig::prototype();
+        b.qos = QosConfig::throttled();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = SystemConfig::prototype();
+        c.qos.weights[1] = 3;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn qos_profiles() {
+        let off = QosConfig::default();
+        assert!(!off.enabled);
+        let t = QosConfig::throttled();
+        assert!(t.enabled && t.window_bytes > 0 && t.min_window_bytes > 0);
+        assert!(t.min_window_bytes <= t.window_bytes);
+        let a = QosConfig::arbitration_only();
+        assert!(a.enabled && a.window_bytes == 0);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod path;
 pub mod torus;
 
 pub use address::{Gvas, GvasError};
-pub use config::{Calib, SystemConfig};
+pub use config::{Calib, QosConfig, SystemConfig, NUM_CLASSES};
 pub use path::{route, Hop, LinkId, Path, PathClass};
 pub use torus::{Dir, MpsocCoord, MpsocId, QfdbId, Topology, TorusCoord, NETWORK_FPGA, STORAGE_FPGA};

@@ -1,0 +1,189 @@
+//! CLI-level tests driving the built `repro` binary: the strict-parser
+//! error matrix (every malformed flag exits 2 and names the offender)
+//! and the seeded-determinism regression (same subcommand + flags twice
+//! ⇒ byte-identical BENCH JSON metrics).
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro")
+}
+
+fn repro_bench(args: &[&str], dir: &std::path::Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .env("BENCH_JSON_DIR", dir)
+        .output()
+        .expect("spawn repro")
+}
+
+/// Assert `repro args` is rejected as a usage error (exit 2) and that
+/// the diagnostic names the offending flag, not some generic panic.
+fn assert_usage_error(args: &[&str], names: &str) {
+    let out = repro(args);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "`repro {}` must exit 2, got {:?}\nstderr: {stderr}",
+        args.join(" "),
+        out.status.code()
+    );
+    assert!(
+        stderr.contains(names),
+        "`repro {}` stderr must name {names:?}:\n{stderr}",
+        args.join(" ")
+    );
+}
+
+#[test]
+fn unknown_flag_is_rejected_by_every_subcommand() {
+    // `Args::finish` runs before any subcommand does real work, so this
+    // matrix is cheap: each spawn dies at argument parsing.
+    let cmds = [
+        "table1",
+        "hw-pingpong",
+        "osu-latency",
+        "osu-bw",
+        "osu-bcast",
+        "osu-allreduce",
+        "osu-mbw",
+        "osu-incast",
+        "osu-overlap",
+        "router-hotspot",
+        "faults",
+        "qos",
+        "bcast-model",
+        "allreduce-accel",
+        "scaling",
+        "sched",
+        "ip-overlay",
+        "matmul-accel",
+        "all",
+    ];
+    for cmd in cmds {
+        assert_usage_error(&[cmd, "--bogus"], "--bogus");
+        assert_usage_error(&[cmd, "--bidirektional"], "--bidirektional");
+    }
+}
+
+#[test]
+fn unknown_subcommand_prints_usage() {
+    let out = repro(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage: repro"), "usage text expected:\n{stderr}");
+}
+
+#[test]
+fn malformed_global_flags_exit_2_naming_the_flag() {
+    assert_usage_error(&["osu-latency", "--network-model", "sideways"], "unknown network model");
+    assert_usage_error(&["sched", "--workers", "0"], "--workers");
+    assert_usage_error(&["sched", "--workers", "many"], "--workers");
+    assert_usage_error(&["table1", "--small", "--rack"], "--small and --rack");
+    // --small only covers the scenarios that fit two blades
+    assert_usage_error(&["table1", "--small"], "--small");
+    // a value flag with its value missing
+    assert_usage_error(&["sched", "--policy"], "--policy needs a value");
+    // observability flags outside the traceable commands
+    assert_usage_error(&["table1", "--telemetry"], "--trace/--telemetry apply to");
+}
+
+#[test]
+fn malformed_fault_flags_exit_2_naming_the_flag() {
+    // fault flags demand a cell-level model up front
+    assert_usage_error(&["sched", "--ber", "1e-6"], "--faults/--flap/--ber need a cell-level");
+    // malformed values behind a valid model
+    assert_usage_error(
+        &["sched", "--network-model", "cell", "--ber", "garbage"],
+        "bad bit-error rate",
+    );
+    assert_usage_error(
+        &["sched", "--network-model", "cell", "--flap", "0:x+:50"],
+        "bad --flap item",
+    );
+    assert_usage_error(
+        &["sched", "--network-model", "cell", "--faults", "0:q+:50"],
+        "bad torus direction",
+    );
+    assert_usage_error(
+        &["sched", "--network-model", "cell", "--faults", "9999:x+:50"],
+        "out of range",
+    );
+}
+
+#[test]
+fn malformed_qos_flags_exit_2_naming_the_flag() {
+    // QoS flags only apply where traffic classes exist
+    assert_usage_error(&["table1", "--qos"], "--qos");
+    assert_usage_error(&["osu-latency", "--qos-weights", "4,1,1,1"], "--qos");
+    // wrong arity, non-numeric and zero weights
+    assert_usage_error(&["qos", "--qos-weights", "garbage"], "--qos-weights");
+    assert_usage_error(&["qos", "--qos-weights", "1,2,3"], "--qos-weights");
+    assert_usage_error(&["qos", "--qos-weights", "1,2,3,oops"], "--qos-weights");
+    assert_usage_error(&["qos", "--qos-weights", "1,2,3,0"], "--qos-weights");
+    // malformed window / mark threshold
+    assert_usage_error(&["qos", "--qos-window", "lots"], "--qos-window");
+    assert_usage_error(&["qos", "--qos-mark", "-1"], "--qos-mark");
+}
+
+/// Pull the `"metrics":[...]` array out of a BENCH JSON file: the
+/// deterministic payload (provenance keys like `config_hash` legitimately
+/// change with `--workers`).
+fn metrics_of(path: &PathBuf) -> String {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    text.split("\"metrics\":[")
+        .nth(1)
+        .and_then(|rest| rest.split("\n]").next())
+        .unwrap_or_else(|| panic!("no metrics array in {path:?}"))
+        .to_string()
+}
+
+fn run_to_dir(args: &[&str], tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("exanest_cli_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = repro_bench(args, &dir);
+    assert!(
+        out.status.success(),
+        "`repro {}` failed: {}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    dir
+}
+
+#[test]
+fn sched_bench_json_is_deterministic_across_runs() {
+    // The seeded-determinism regression: the same subcommand with the
+    // same flags must write byte-identical BENCH metric values — no
+    // wall-clock or iteration noise leaks into the tracked numbers.
+    let a = run_to_dir(&["sched", "--small"], "sched_det_a");
+    let b = run_to_dir(&["sched", "--small"], "sched_det_b");
+    let ma = metrics_of(&a.join("BENCH_sched.json"));
+    let mb = metrics_of(&b.join("BENCH_sched.json"));
+    assert!(!ma.is_empty() && ma.contains("makespan_s"), "metrics missing: {ma}");
+    assert_eq!(ma, mb, "repro sched --small is not run-to-run deterministic");
+}
+
+#[test]
+fn qos_bench_json_is_deterministic_and_worker_invariant() {
+    // Twice with identical flags: byte-identical metrics.  Then at
+    // --workers 4: still identical metrics (worker count is a pure
+    // execution knob; only the config fingerprint may differ).
+    let a = run_to_dir(&["qos", "--small"], "qos_det_a");
+    let b = run_to_dir(&["qos", "--small"], "qos_det_b");
+    let ma = metrics_of(&a.join("BENCH_qos.json"));
+    let mb = metrics_of(&b.join("BENCH_qos.json"));
+    assert!(
+        ma.contains("scenario/incast-bully/isolation_gain"),
+        "qos suite must stamp per-scenario metrics: {ma}"
+    );
+    assert_eq!(ma, mb, "repro qos --small is not run-to-run deterministic");
+    let w4 = run_to_dir(&["qos", "--small", "--workers", "4"], "qos_det_w4");
+    let mw = metrics_of(&w4.join("BENCH_qos.json"));
+    assert_eq!(ma, mw, "repro qos --small diverges at --workers 4");
+}

@@ -1,0 +1,456 @@
+//! Property tests over the simulation core: GVAS packing, the
+//! timing-wheel event queue, resources, the flight recorder, and the
+//! parallel DES runtime (DESIGN.md §12) — multi-worker execution must be
+//! a pure execution optimisation, bit-identical to the single-threaded
+//! reference path.  Shared harness: `exanest::testing`.
+
+use exanest::mpi::{progress, pt2pt, Placement, World};
+use exanest::network::{FaultPlan, NetworkModel, RoutePolicy};
+use exanest::prop_assert;
+use exanest::sim::{Engine, Resource, SimDuration, SimTime};
+use exanest::testing::{forall, with_workers};
+use exanest::topology::{Dir, Gvas, QfdbId, SystemConfig};
+
+#[test]
+fn prop_gvas_roundtrip() {
+    forall("gvas pack/unpack roundtrip", 500, |rng| {
+        let g = Gvas::new(
+            rng.below(1 << 16) as u16,
+            rng.below(1 << 22) as u32,
+            rng.below(1 << 3) as u8,
+            rng.below(1 << 39),
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(Gvas::unpack(g.pack()) == Ok(g), "u128 roundtrip {g}");
+        prop_assert!(Gvas::from_bytes(g.to_bytes()) == g, "byte roundtrip {g}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resource_fifo_and_conservation() {
+    forall("resource occupancy is FIFO + work conserving", 200, |rng| {
+        let mut r = Resource::new();
+        let mut total = 0u64;
+        let mut last_end = SimTime::ZERO;
+        for _ in 0..20 {
+            let at = SimTime(rng.below(1_000_000));
+            let dur = SimDuration(rng.below(10_000) + 1);
+            let (start, end) = r.acquire(at, dur);
+            prop_assert!(start >= at, "start before request");
+            prop_assert!(start >= last_end, "overlapping grants");
+            prop_assert!(end.0 - start.0 == dur.0, "duration mangled");
+            last_end = end;
+            total += dur.0;
+        }
+        prop_assert!(r.busy_time().0 == total, "busy time drifted");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracing_is_timing_invisible() {
+    // Flight-recorder acceptance: the recorder is a pure observer.
+    // Identical worlds with tracing on and off must produce ps-identical
+    // timings under cell-level traffic — deterministic and adaptive
+    // routing, healthy and faulty fabrics, point-to-point and
+    // collective patterns.  (`sched::tests` covers the scheduler side.)
+    let cfg = SystemConfig::two_blades();
+    forall("trace on == trace off (ps)", 20, |rng| {
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let model = if rng.below(2) == 0 {
+            NetworkModel::cell(policy)
+        } else {
+            NetworkModel::cell_with_faults(
+                policy,
+                FaultPlan::none().fail_torus(QfdbId(1), Dir::XMinus, SimTime::ZERO),
+            )
+        };
+        let n = 8usize;
+        let mut plain = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model.clone());
+        let mut traced = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model);
+        traced.enable_tracing(1 << 16);
+        for _ in 0..3 {
+            let a = rng.below(n as u64) as usize;
+            let mut b = rng.below(n as u64) as usize;
+            if a == b {
+                b = (b + 1) % n;
+            }
+            let bytes = [64usize, 4096, 64 * 1024][rng.below(3) as usize];
+            let p = pt2pt::message(&mut plain, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let t = pt2pt::message(&mut traced, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            prop_assert!(
+                p.recv_done == t.recv_done,
+                "{a}->{b} {bytes} B: traced {:?} != plain {:?}",
+                t.recv_done,
+                p.recv_done
+            );
+        }
+        let cp = exanest::mpi::collectives::allreduce(&mut plain, 1024);
+        let ct = exanest::mpi::collectives::allreduce(&mut traced, 1024);
+        prop_assert!(cp == ct, "allreduce traced {ct:?} != plain {cp:?}");
+        prop_assert!(!traced.trace_records().is_empty(), "traced run must retain spans");
+        prop_assert!(plain.trace_records().is_empty(), "untraced run must record nothing");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_spans_balanced_and_worker_invariant() {
+    // Every recorded span is well formed (t1 >= t0, i.e. no negative
+    // `dur` in the exported JSON), and the rank-level trace is identical
+    // at 1 and 4 DES workers.  Only the par-runtime window markers
+    // (`Track::Par`) and the mesh hop spans depend on the execution
+    // strategy — worker replicas run with their recorders off — so those
+    // are excluded from the equality.
+    use exanest::telemetry::{SpanKind, Track};
+    forall("trace spans balanced + worker invariant", 8, |rng| {
+        let bytes = [1024usize, 4096, 1 << 16][rng.below(3) as usize];
+        let n = [4usize, 8][rng.below(2) as usize];
+        let mut runs = Vec::new();
+        for workers in [1usize, 4] {
+            let mut cfg = SystemConfig::two_blades();
+            cfg.sim_workers = workers;
+            let mut w = World::with_model(
+                cfg,
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            w.enable_tracing(1 << 16);
+            let lat = exanest::mpi::collectives::allreduce(&mut w, bytes);
+            let recs = w.trace_records();
+            prop_assert!(!recs.is_empty(), "w={workers}: no spans recorded");
+            prop_assert!(w.trace_dropped() == 0, "w={workers}: ring overflowed");
+            for r in &recs {
+                prop_assert!(
+                    r.t1 >= r.t0,
+                    "w={workers}: unbalanced span {:?} [{:?}, {:?}]",
+                    r.kind,
+                    r.t0,
+                    r.t1
+                );
+            }
+            let ranks: Vec<_> = recs
+                .into_iter()
+                .filter(|r| !matches!(r.track, Track::Par) && r.kind != SpanKind::Hop)
+                .collect();
+            runs.push((lat, ranks));
+        }
+        prop_assert!(
+            runs[0].0 == runs[1].0,
+            "traced latency differs across workers: {:?} vs {:?}",
+            runs[0].0,
+            runs[1].0
+        );
+        prop_assert!(
+            runs[0].1 == runs[1].1,
+            "rank-level trace differs across workers ({} vs {} spans)",
+            runs[0].1.len(),
+            runs[1].1.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_telemetry_cleared_but_enabled_across_reset() {
+    // Satellite regression, twin of the route-cache test in the router
+    // suite: `World::reset` (→ `Engine::clear` / `Fabric::reset`) must
+    // empty the flight recorder and the telemetry windows while keeping
+    // both enabled, and a re-run on the reset world must trace
+    // identically.
+    let cfg = SystemConfig::two_blades();
+    forall("telemetry reset: empty but enabled", 15, |rng| {
+        let n = 8usize;
+        let mut w = World::with_model(
+            cfg.clone(),
+            n,
+            Placement::PerMpsoc,
+            NetworkModel::cell(RoutePolicy::Deterministic),
+        );
+        w.enable_tracing(1 << 14);
+        let bytes = [256usize, 4096][rng.below(2) as usize];
+        let first = exanest::mpi::collectives::allreduce(&mut w, bytes);
+        w.fabric.sample_telemetry(w.max_clock());
+        let recs_before = w.trace_records();
+        prop_assert!(!recs_before.is_empty(), "traced run records spans");
+        prop_assert!(w.fabric.telemetry().len() > 0, "sampled run has a telemetry window");
+        w.reset();
+        prop_assert!(w.tracing_enabled(), "reset must keep the recorder enabled");
+        prop_assert!(w.trace_records().is_empty(), "reset must clear recorded spans");
+        prop_assert!(w.trace_dropped() == 0, "reset must clear the eviction count");
+        prop_assert!(w.fabric.telemetry().is_empty(), "reset must clear telemetry windows");
+        let second = exanest::mpi::collectives::allreduce(&mut w, bytes);
+        prop_assert!(first == second, "reset world re-times differently: {second:?} vs {first:?}");
+        let recs_after = w.trace_records();
+        prop_assert!(
+            recs_after == recs_before,
+            "post-reset trace diverges: {} vs {} spans",
+            recs_after.len(),
+            recs_before.len()
+        );
+        Ok(())
+    });
+}
+
+/// Reference event-queue model for the timing-wheel proptest: a flat
+/// list popped by minimum (time, seq) — the semantics of the original
+/// `BinaryHeap` engine.
+mod refqueue {
+    pub type Entry = (u64, u64, u32); // (at, seq, id)
+
+    pub fn peek(q: &[Entry]) -> Option<Entry> {
+        q.iter().copied().min_by_key(|&(at, seq, _)| (at, seq))
+    }
+
+    pub fn pop(q: &mut Vec<Entry>) -> Option<Entry> {
+        let min = peek(q)?;
+        let idx = q.iter().position(|&e| e == min).unwrap();
+        Some(q.remove(idx))
+    }
+}
+
+#[test]
+fn prop_timing_wheel_is_a_drop_in_for_the_heap() {
+    // The engine scheduler contract: the hierarchical timing wheel must
+    // pop in exactly the (time, seq) order of the old global heap under
+    // random interleavings of schedule / post-into-the-past / next /
+    // run_until / peek / clear — including same-tick FIFO ties, wheel
+    // rollover (timestamps many horizons out) and far-future
+    // overflow-bucket migration.
+    const HORIZON: u64 = 1 << 26; // NUM_SLOTS * SLOT_PS = 1024 * 2^16 ps
+    forall("timing wheel == reference heap", 120, |rng| {
+        let mut e: Engine<u32> = Engine::new();
+        let mut model: Vec<refqueue::Entry> = Vec::new();
+        let mut mseq = 0u64;
+        let mut mnow = 0u64;
+        let mut next_id = 0u32;
+        for step in 0..80 {
+            match rng.below(10) {
+                0..=4 => {
+                    // schedule at now + delta, deltas spanning same-slot,
+                    // in-wheel, multi-lap and far-overflow distances
+                    let delta = match rng.below(4) {
+                        0 => rng.below(1 << 16),
+                        1 => rng.below(HORIZON),
+                        2 => rng.below(3 * HORIZON),
+                        _ => rng.below(1 << 40),
+                    };
+                    let at = mnow + delta;
+                    e.schedule(SimTime(at), next_id);
+                    model.push((at, mseq, next_id));
+                    mseq += 1;
+                    next_id += 1;
+                }
+                5 => {
+                    // rank-local post, possibly into the past
+                    let at = rng.below(mnow + 1);
+                    e.post(SimTime(at), next_id);
+                    model.push((at, mseq, next_id));
+                    mseq += 1;
+                    next_id += 1;
+                }
+                6..=7 => {
+                    let got = e.next();
+                    let want = refqueue::pop(&mut model);
+                    if let Some((at, _, _)) = want {
+                        mnow = mnow.max(at);
+                    }
+                    prop_assert!(
+                        got.map(|(t, i)| (t.0, i)) == want.map(|(at, _, id)| (at, id)),
+                        "step {step}: next {got:?} vs {want:?}"
+                    );
+                    prop_assert!(e.now().0 == mnow, "step {step}: now {:?} vs {mnow}", e.now());
+                }
+                8 => {
+                    let deadline = mnow + rng.below(2 * HORIZON);
+                    let mut got: Vec<(u64, u32)> = Vec::new();
+                    e.run_until(&mut got, SimTime(deadline), |g, _, t, i| g.push((t.0, i)));
+                    let mut want: Vec<(u64, u32)> = Vec::new();
+                    while let Some((at, _, _)) = refqueue::peek(&model) {
+                        if at > deadline {
+                            break;
+                        }
+                        let (at, _, id) = refqueue::pop(&mut model).unwrap();
+                        mnow = mnow.max(at);
+                        want.push((at, id));
+                    }
+                    mnow = mnow.max(deadline);
+                    prop_assert!(got == want, "step {step}: run_until {got:?} vs {want:?}");
+                    prop_assert!(e.now().0 == mnow, "step {step}: now after run_until");
+                }
+                _ => {
+                    if rng.below(6) == 0 {
+                        e.clear();
+                        model.clear();
+                        mnow = 0;
+                    } else {
+                        let want = refqueue::peek(&model).map(|(at, _, _)| at);
+                        prop_assert!(
+                            e.peek_time().map(|t| t.0) == want,
+                            "step {step}: peek {:?} vs {want:?}",
+                            e.peek_time()
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                e.pending() == model.len(),
+                "step {step}: pending {} vs {}",
+                e.pending(),
+                model.len()
+            );
+        }
+        // drain fully in lockstep
+        loop {
+            let got = e.next();
+            let want = refqueue::pop(&mut model);
+            prop_assert!(
+                got.map(|(t, i)| (t.0, i)) == want.map(|(at, _, id)| (at, id)),
+                "drain: {got:?} vs {want:?}"
+            );
+            if got.is_none() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_hotspot_is_ps_exact() {
+    // full-rack cell-level hotspot traffic (the congestion scenario):
+    // per-pair and aggregate bandwidths identical at 1, 2 and 4 workers
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    forall("hotspot: workers 1 == 2 == 4 (ps exact)", 4, |rng| {
+        let bytes = [64 * 1024usize, 256 * 1024][rng.below(2) as usize];
+        let window = 1 + rng.below(2) as usize;
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let base = osu::osu_mbw_hotspot(&with_workers(&cfg, 1), policy, bytes, window);
+        for workers in [2usize, 4] {
+            let par =
+                osu::osu_mbw_hotspot(&with_workers(&cfg, workers), policy, bytes, window);
+            prop_assert!(
+                par.aggregate_gbps == base.aggregate_gbps
+                    && par.per_pair_gbps == base.per_pair_gbps,
+                "{policy:?} {bytes} B x{window}: {workers} workers diverged \
+                 ({:?} vs {:?} Gb/s)",
+                par.per_pair_gbps,
+                base.per_pair_gbps
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_link_fault_incast_is_ps_exact() {
+    // a torus link failure makes reroutes leave the minimal partition
+    // box, so the runtime serializes every window (full mask) — results
+    // must still be bit-identical across worker counts
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    forall("incast failover: workers 1 == 4 under link faults", 3, |rng| {
+        let bytes = 64 * 1024 * (1 + rng.below(3) as usize);
+        let nsenders = 2 + rng.below(2) as usize;
+        let (t1, g1) = osu::osu_incast_failover(&with_workers(&cfg, 1), nsenders, bytes);
+        let (t4, g4) = osu::osu_incast_failover(&with_workers(&cfg, 4), nsenders, bytes);
+        prop_assert!(
+            t1 == t4 && g1 == g4,
+            "{nsenders} senders x {bytes} B: workers 4 diverged \
+             ({:?}/{g4} vs {:?}/{g1})",
+            t4,
+            t1
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_rack_allreduce_is_ps_exact() {
+    // the acceptance scenario's family: cell-level software allreduce on
+    // the full rack, identical latency at 1, 2 and 4 workers
+    use exanest::apps::osu;
+    let cfg = SystemConfig::rack();
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    forall("rack allreduce: workers 1 == 2 == 4 (ps exact)", 3, |rng| {
+        let n = [64usize, 256][rng.below(2) as usize];
+        let bytes = [1024usize, 4096][rng.below(2) as usize];
+        let base = osu::osu_allreduce_model(
+            &with_workers(&cfg, 1),
+            &model,
+            n,
+            bytes,
+            1,
+            Placement::PerCore,
+        );
+        for workers in [2usize, 4] {
+            let t = osu::osu_allreduce_model(
+                &with_workers(&cfg, workers),
+                &model,
+                n,
+                bytes,
+                1,
+                Placement::PerCore,
+            );
+            prop_assert!(
+                t == base,
+                "{n} ranks x {bytes} B: {workers} workers gave {:?} vs {:?}",
+                t,
+                base
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_world_reset_reruns_identically() {
+    // Engine/runtime reset regression: after World::reset a multi-worker
+    // world replays the same random traffic to identical clocks, and the
+    // synchronizer counters restart from zero
+    let base = SystemConfig::rack();
+    forall("parallel world reset replays ps-exactly", 5, |rng| {
+        let cfg = with_workers(&base, 4);
+        let n = 32usize;
+        let mut w = World::with_model(cfg, n, Placement::PerCore, NetworkModel::Flow);
+        let ops: Vec<(usize, usize, usize)> = (0..12)
+            .map(|_| {
+                let src = rng.below(n as u64) as usize;
+                let dst = (src + 1 + rng.below(n as u64 - 1) as usize) % n;
+                (src, dst, 1 + rng.below(1 << 16) as usize)
+            })
+            .collect();
+        let run = |w: &mut World| {
+            let mut reqs = Vec::new();
+            for &(src, dst, bytes) in &ops {
+                reqs.push(progress::isend(w, src, dst, bytes));
+                reqs.push(progress::irecv(w, dst, src, bytes));
+            }
+            progress::wait_all(w, &reqs);
+            w.clocks.clone()
+        };
+        let first = run(&mut w);
+        let stats = w.par_stats().expect("parallel runtime attached");
+        prop_assert!(stats.ops > 0, "traffic must exercise the ledger");
+        w.reset();
+        let zeroed = w.par_stats().expect("parallel runtime attached");
+        prop_assert!(
+            zeroed.ops == 0 && zeroed.windows == 0,
+            "reset must zero the synchronizer counters: {zeroed:?}"
+        );
+        let second = run(&mut w);
+        prop_assert!(first == second, "replay diverged after reset");
+        Ok(())
+    });
+}

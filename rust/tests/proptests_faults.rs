@@ -1,0 +1,187 @@
+//! Property tests over fault tolerance (DESIGN.md §14): transient
+//! faults and the reliable transport must never lose or duplicate a
+//! message, and fault plans must not perturb anything they don't touch.
+//! Shared harness: `exanest::testing`.
+
+use exanest::mpi::{pt2pt, Placement, World};
+use exanest::network::{FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
+use exanest::prop_assert;
+use exanest::sim::{SimDuration, SimTime};
+use exanest::testing::{forall, with_workers};
+use exanest::topology::{Dir, MpsocId, QfdbId, SystemConfig, Topology};
+
+#[test]
+fn prop_flap_around_train_boundary_is_ps_exact_and_lossless() {
+    // A link flap whose window lands on / inside / just after a cell
+    // train must time identically on the batched fast path and the
+    // per-cell event path (the mesh falls back to events near fault
+    // transitions), and a flap alone never corrupts a cell — the mesh
+    // reroutes around the down window, it does not drop.
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("flap at train boundary: batched == events, zero loss", 20, |rng| {
+        let nq = cfg.num_qfdbs() as u64;
+        let victim = QfdbId(rng.below(nq) as u32);
+        let dir = [Dir::XPlus, Dir::YMinus, Dir::ZPlus][rng.below(3) as usize];
+        // windows from sub-cell widths to multi-train widths, placed
+        // around the first block's injection time (t=0)
+        let down = SimTime(rng.below(20_000_000)); // within the first ~20 us
+        let up = down + SimDuration(1 + rng.below(30_000_000));
+        let faults = FaultPlan::none().flap_torus(victim, dir, down, up);
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let mut fast = RouterMesh::new(topo.clone(), policy, faults.clone());
+        let mut slow = RouterMesh::new(topo.clone(), policy, faults);
+        slow.set_batching(false);
+        let n = cfg.num_mpsocs() as u64;
+        let mut at = SimTime::ZERO;
+        for k in 0..6 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            if a == b {
+                continue;
+            }
+            let bytes = [256usize, 4096, 64 * 1024][rng.below(3) as usize];
+            let f = fast.block(a, b, at, bytes, false);
+            let s = slow.block(a, b, at, bytes, false);
+            prop_assert!(
+                f == s,
+                "call {k}: {a:?}->{b:?} {bytes} B at {at} across flap [{down}, {up}): \
+                 batched {f:?} vs events {s:?}"
+            );
+            if rng.below(2) == 0 {
+                at = f.0; // chain the next block into the flap window
+            } else {
+                at = at + SimDuration(rng.below(10_000_000));
+            }
+        }
+        prop_assert!(
+            fast.cells_corrupted() == 0 && slow.cells_corrupted() == 0,
+            "a flap-only plan corrupted cells ({} batched / {} events)",
+            fast.cells_corrupted(),
+            slow.cells_corrupted()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossy_transport_is_live_exactly_once_and_never_faster() {
+    // Seeded bit errors can hit any transport stage — eager payloads,
+    // the RTS/CTS handshake, RDMA trains.  Every message must still be
+    // delivered exactly once (waits return, the sequence check never
+    // fires under timer-on-corruption, every corrupted launch is paid
+    // for by exactly one retransmission), and retransmission can only
+    // cost time: the lossy run is never faster than the clean one, and
+    // ps-identical to it when no draw corrupted anything.
+    let cfg = SystemConfig::two_blades();
+    forall("BER transport: live, exactly-once, never faster", 12, |rng| {
+        let ber = [1e-6, 1e-5, 1e-4][rng.below(3) as usize];
+        let seed = rng.below(1 << 20);
+        let n = 8usize;
+        let mut clean = World::with_model(
+            cfg.clone(),
+            n,
+            Placement::PerMpsoc,
+            NetworkModel::cell(RoutePolicy::Deterministic),
+        );
+        let mut lossy = World::with_model(
+            cfg.clone(),
+            n,
+            Placement::PerMpsoc,
+            NetworkModel::cell_with_faults(
+                RoutePolicy::Deterministic,
+                FaultPlan::none().with_ber(ber, seed),
+            ),
+        );
+        for k in 0..6 {
+            let a = rng.below(n as u64) as usize;
+            let mut b = rng.below(n as u64) as usize;
+            if a == b {
+                b = (b + 1) % n;
+            }
+            // eager (8/64), rendez-vous handshake + RDMA (4 KB, 64 KB)
+            let bytes = [8usize, 64, 4096, 64 * 1024][rng.below(4) as usize];
+            let c = pt2pt::send_recv(&mut clean, a, b, bytes);
+            let l = pt2pt::send_recv(&mut lossy, a, b, bytes);
+            prop_assert!(
+                l.recv_done >= c.recv_done && l.send_done >= c.send_done,
+                "msg {k} {a}->{b} {bytes} B: lossy ({:?}, {:?}) beat clean ({:?}, {:?})",
+                l.send_done,
+                l.recv_done,
+                c.send_done,
+                c.recv_done
+            );
+        }
+        let (retx, drops, dups) = (
+            lossy.progress.retransmissions(),
+            lossy.progress.corrupt_drops(),
+            lossy.progress.dup_drops(),
+        );
+        prop_assert!(
+            dups == 0,
+            "timer-on-corruption never duplicates, yet the sequence check dropped {dups}"
+        );
+        prop_assert!(
+            retx == drops,
+            "at quiescence every corrupted launch is retried exactly once: \
+             {retx} retransmissions vs {drops} corrupted launches"
+        );
+        if drops == 0 {
+            prop_assert!(
+                lossy.clocks == clean.clocks && lossy.fabric.cells_corrupted() == 0,
+                "zero corruption must leave the lossy run ps-identical"
+            );
+        } else {
+            prop_assert!(
+                lossy.fabric.cells_corrupted() > 0,
+                "transport saw {drops} corrupted launches but the mesh corrupted no cell"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossy_run_is_worker_invariant() {
+    // Fault scenarios must report identical results at every `--workers`
+    // count.  BER plans disable the parallel runtime (the corruption
+    // draw is crossing-ordered), so a multi-worker config must fall back
+    // to the reference path bit-for-bit.
+    let base = SystemConfig::two_blades();
+    forall("BER allreduce: workers 1 == 2 == 4", 6, |rng| {
+        let bytes = [1024usize, 4096][rng.below(2) as usize];
+        let n = [8usize, 16][rng.below(2) as usize];
+        let seed = rng.below(1 << 20);
+        let model = NetworkModel::cell_with_faults(
+            RoutePolicy::Deterministic,
+            FaultPlan::none().with_ber(1e-5, seed),
+        );
+        let mut runs = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let mut w = World::with_model(
+                with_workers(&base, workers),
+                n,
+                Placement::PerMpsoc,
+                model.clone(),
+            );
+            let lat = exanest::mpi::collectives::allreduce(&mut w, bytes);
+            prop_assert!(
+                w.par_stats().is_none(),
+                "w={workers}: lossy model must disable the parallel runtime"
+            );
+            runs.push((lat, w.clocks.clone(), w.progress.retransmissions()));
+        }
+        prop_assert!(
+            runs[0] == runs[1] && runs[1] == runs[2],
+            "lossy allreduce diverged across workers: {:?} / {:?} / {:?}",
+            runs[0].0,
+            runs[1].0,
+            runs[2].0
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,305 @@
+//! Property tests over routing and the cell-level router mesh:
+//! dimension-order tables, the dense route cache, zero-load parity with
+//! the closed-form oracle, adaptive-policy degeneration, and cell-train
+//! batching.  Shared harness: `exanest::testing`.
+
+use exanest::mpi::{pt2pt, Placement, World};
+use exanest::network::{Fabric, FaultPlan, NetworkModel, RoutePolicy, RouterMesh};
+use exanest::prop_assert;
+use exanest::sim::{SimDuration, SimTime};
+use exanest::testing::forall;
+use exanest::topology::{route, Dir, MpsocId, QfdbId, SystemConfig, Topology};
+
+#[test]
+fn prop_route_reaches_and_matches_distance() {
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("DOR route reaches dst with torus distance", 300, |rng| {
+        let n = topo.cfg.num_qfdbs() as u64;
+        let a = QfdbId(rng.below(n) as u32);
+        let b = QfdbId(rng.below(n) as u32);
+        let dirs = topo.qfdb_route(a, b);
+        let mut cur = a;
+        for d in &dirs {
+            cur = topo.qfdb_neighbor(cur, *d);
+        }
+        prop_assert!(cur == b, "route {a:?}->{b:?} ended at {cur:?}");
+        prop_assert!(
+            dirs.len() == topo.qfdb_distance(a, b),
+            "route len {} != distance {}",
+            dirs.len(),
+            topo.qfdb_distance(a, b)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_is_dimension_ordered() {
+    // deadlock freedom rests on X-then-Y-then-Z ordering
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("routes are dimension ordered", 300, |rng| {
+        let n = topo.cfg.num_qfdbs() as u64;
+        let a = QfdbId(rng.below(n) as u32);
+        let b = QfdbId(rng.below(n) as u32);
+        let dirs = topo.qfdb_route(a, b);
+        let phase = |d: &exanest::topology::Dir| match d {
+            exanest::topology::Dir::XPlus | exanest::topology::Dir::XMinus => 0,
+            exanest::topology::Dir::YPlus | exanest::topology::Dir::YMinus => 1,
+            _ => 2,
+        };
+        let phases: Vec<i32> = dirs.iter().map(phase).collect();
+        let mut sorted = phases.clone();
+        sorted.sort();
+        prop_assert!(phases == sorted, "not dimension ordered: {phases:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_path_hops_and_routers_consistent() {
+    let topo = Topology::new(SystemConfig::prototype());
+    forall("path router count = torus hops + 1 (when any)", 300, |rng| {
+        let n = topo.cfg.num_mpsocs() as u64;
+        let a = exanest::topology::MpsocId(rng.below(n) as u32);
+        let b = exanest::topology::MpsocId(rng.below(n) as u32);
+        let p = route(&topo, a, b);
+        let torus_hops = p.hops().iter().filter(|h| h.link.is_torus()).count();
+        if torus_hops > 0 {
+            prop_assert!(
+                p.routers == torus_hops + 1,
+                "{a:?}->{b:?}: {} routers for {torus_hops} torus hops",
+                p.routers
+            );
+        } else {
+            prop_assert!(p.routers == 0, "intra-QFDB path has routers");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_cached_equals_route() {
+    // Refactor seam: the dense route cache must be exact for every
+    // endpoint pair, including repeated (cache-hit) queries.
+    let cfg = SystemConfig::prototype();
+    forall("Fabric::route_cached == route", 150, |rng| {
+        let mut fab = Fabric::new(cfg.clone());
+        let n = cfg.num_mpsocs() as u64;
+        for _ in 0..4 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            let fresh = fab.route(a, b);
+            for query in 0..2 {
+                let cached = fab.route_cached(a, b);
+                prop_assert!(
+                    cached.src == fresh.src
+                        && cached.dst == fresh.dst
+                        && cached.hops() == fresh.hops()
+                        && cached.routers == fresh.routers
+                        && cached.switches == fresh.switches,
+                    "{a:?}->{b:?} query {query}: cached {cached:?} != fresh {fresh:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cell_level_zero_load_matches_oracle() {
+    // The router-mesh seam: at zero load, cell-level deterministic
+    // routing must reproduce the closed-form `pt2pt::message` oracle —
+    // exactly (< 1%) for eager messages on any path and for rendez-vous
+    // on single-link paths; multi-link rendez-vous may only be *faster*
+    // (cells genuinely cut through intermediate routers, where the flow
+    // model store-and-forwards whole blocks per hop).
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("cell-level zero load == oracle", 25, |rng| {
+        let n = cfg.num_mpsocs();
+        let a = rng.below(n as u64) as usize;
+        let b = rng.below(n as u64) as usize;
+        if a == b {
+            return Ok(());
+        }
+        let p = route(&topo, MpsocId(a as u32), MpsocId(b as u32));
+        let single_link = p.hops().len() <= 1;
+        let mut sizes: Vec<usize> = vec![0, 8, 32];
+        if single_link {
+            sizes.extend([64, 4096, 64 * 1024]);
+        }
+        for bytes in sizes {
+            let mut flow = World::new(cfg.clone(), n, Placement::PerMpsoc);
+            let mut cell = World::with_model(
+                cfg.clone(),
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            let f = pt2pt::message(&mut flow, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let c = pt2pt::message(&mut cell, a, b, bytes, SimTime::ZERO, SimTime::ZERO);
+            let rel = (c.recv_done.ns() - f.recv_done.ns()).abs() / f.recv_done.ns();
+            prop_assert!(
+                rel < 0.01,
+                "{a}->{b} {bytes} B: cell {:?} vs oracle {:?} ({rel:.4} off)",
+                c.recv_done,
+                f.recv_done
+            );
+        }
+        // multi-link rendez-vous: cut-through must never be slower
+        if !single_link {
+            let mut flow = World::new(cfg.clone(), n, Placement::PerMpsoc);
+            let mut cell = World::with_model(
+                cfg.clone(),
+                n,
+                Placement::PerMpsoc,
+                NetworkModel::cell(RoutePolicy::Deterministic),
+            );
+            let f = pt2pt::message(&mut flow, a, b, 64 * 1024, SimTime::ZERO, SimTime::ZERO);
+            let c = pt2pt::message(&mut cell, a, b, 64 * 1024, SimTime::ZERO, SimTime::ZERO);
+            prop_assert!(
+                c.recv_done <= f.recv_done + SimDuration::from_ns(1.0),
+                "{a}->{b}: cut-through {:?} slower than store-and-forward {:?}",
+                c.recv_done,
+                f.recv_done
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_degenerates_to_dimension_order_when_idle() {
+    // On an idle healthy mesh the adaptive policy's congestion signals
+    // are all ties, so it must route and time exactly like the static
+    // dimension-order tables.
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("idle adaptive == dimension order", 60, |rng| {
+        let nq = cfg.num_qfdbs() as u64;
+        let qa = QfdbId(rng.below(nq) as u32);
+        let qb = QfdbId(rng.below(nq) as u32);
+        let det = RouterMesh::new(topo.clone(), RoutePolicy::Deterministic, FaultPlan::none());
+        let ada = RouterMesh::new(topo.clone(), RoutePolicy::Adaptive, FaultPlan::none());
+        prop_assert!(
+            ada.probe_route(qa, qb, SimTime::ZERO) == det.probe_route(qa, qb, SimTime::ZERO),
+            "{qa:?}->{qb:?}: adaptive route diverges on an idle mesh"
+        );
+        prop_assert!(
+            det.probe_route(qa, qb, SimTime::ZERO) == topo.qfdb_route(qa, qb),
+            "{qa:?}->{qb:?}: deterministic mesh route != static DOR table"
+        );
+        if qa != qb {
+            let a = topo.network_mpsoc(qa);
+            let b = topo.network_mpsoc(qb);
+            let mut det = det;
+            let mut ada = ada;
+            let bytes = [256usize, 4096, 16 * 1024][rng.below(3) as usize];
+            let d = det.block(a, b, SimTime::ZERO, bytes, false);
+            let m = ada.block(a, b, SimTime::ZERO, bytes, false);
+            prop_assert!(m == d, "{qa:?}->{qb:?} {bytes} B: adaptive {m:?} != DOR {d:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_cached_valid_after_reset() {
+    // Satellite regression: `Fabric::reset` keeps the route cache, which
+    // must therefore stay exact after arbitrary traffic + reset cycles.
+    let cfg = SystemConfig::prototype();
+    forall("route cache exact across reset", 40, |rng| {
+        let mut fab = Fabric::new(cfg.clone());
+        let n = cfg.num_mpsocs() as u64;
+        let mut pairs = Vec::new();
+        for _ in 0..4 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            let p = fab.route_cached(a, b);
+            if a != b {
+                fab.small_cell(&p, SimTime::ZERO, 64);
+                fab.rdma_block(&p, SimTime::ZERO, 4096, true);
+            }
+            pairs.push((a, b));
+        }
+        fab.reset();
+        for (a, b) in pairs {
+            let cached = fab.route_cached(a, b);
+            let fresh = fab.route(a, b);
+            prop_assert!(
+                cached.hops() == fresh.hops()
+                    && cached.routers == fresh.routers
+                    && cached.switches == fresh.switches,
+                "{a:?}->{b:?}: cache corrupted across reset"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_train_batching_matches_event_path() {
+    // The batching parity contract: cell-train batching must be
+    // ps-identical to per-cell event simulation under random traffic —
+    // idle meshes, hotspot chains (blocks issued back-to-back into still-
+    // busy wires), both policies, and fault plans (already-down links
+    // batch onto the detour route; future fault times force both meshes
+    // onto the event path).
+    let cfg = SystemConfig::prototype();
+    let topo = Topology::new(cfg.clone());
+    forall("batched trains == per-cell events (ps exact)", 30, |rng| {
+        let policy = if rng.below(2) == 0 {
+            RoutePolicy::Deterministic
+        } else {
+            RoutePolicy::Adaptive
+        };
+        let nq = cfg.num_qfdbs() as u64;
+        let faults = match rng.below(3) {
+            0 => FaultPlan::none(),
+            1 => FaultPlan::none().fail_torus(
+                QfdbId(rng.below(nq) as u32),
+                Dir::XPlus,
+                SimTime::ZERO,
+            ),
+            _ => FaultPlan::none().fail_torus(
+                QfdbId(rng.below(nq) as u32),
+                Dir::YMinus,
+                SimTime::from_us(30.0),
+            ),
+        };
+        let mut fast = RouterMesh::new(topo.clone(), policy, faults.clone());
+        let mut slow = RouterMesh::new(topo.clone(), policy, faults);
+        slow.set_batching(false);
+        let n = cfg.num_mpsocs() as u64;
+        let mut at = SimTime::ZERO;
+        for k in 0..8 {
+            let a = MpsocId(rng.below(n) as u32);
+            let b = MpsocId(rng.below(n) as u32);
+            if a == b {
+                continue;
+            }
+            if rng.below(4) == 0 {
+                let payload = [0usize, 8, 32, 256][rng.below(4) as usize];
+                let f = fast.small_cell(a, b, at, payload);
+                let s = slow.small_cell(a, b, at, payload);
+                prop_assert!(f == s, "call {k}: small_cell {a:?}->{b:?} {f:?} vs {s:?}");
+            } else {
+                let bytes = [1usize, 300, 4096, 16 * 1024][rng.below(4) as usize];
+                let pipelined = rng.below(2) == 0;
+                let f = fast.block(a, b, at, bytes, pipelined);
+                let s = slow.block(a, b, at, bytes, pipelined);
+                prop_assert!(
+                    f == s,
+                    "call {k}: block {a:?}->{b:?} {bytes} B at {at} — batched {f:?} vs events {s:?}"
+                );
+                if rng.below(2) == 0 {
+                    at = f.0; // chain into the still-busy injection window
+                }
+            }
+            if rng.below(3) == 0 {
+                at = at + SimDuration::from_us(rng.below(40) as f64);
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,254 @@
+//! Property tests over the scheduler and the proxy apps: allocator
+//! injectivity, isolated-job parity with the legacy world, slowdown
+//! bounds under contention, and multi-job worker invariance.
+//! Shared harness: `exanest::testing`.
+
+use exanest::mpi::{Placement, World};
+use exanest::network::{NetworkModel, RoutePolicy};
+use exanest::prop_assert;
+use exanest::sim::SimTime;
+use exanest::testing::{forall, with_workers};
+use exanest::topology::SystemConfig;
+
+#[test]
+fn prop_proxy_overlap_is_bounded_and_all_faces_never_slower() {
+    // the proxy engine's overlap accounting stays in [0, 1) and the
+    // all-faces halo schedule never loses to the dim-staged barriers
+    use exanest::apps::scaling::{run_point, AppParams, HaloSchedule, Mode, ProxyConfig};
+    let cfg = SystemConfig::two_blades();
+    forall("proxy overlap bounded; all-faces <= dim-staged", 6, |rng| {
+        let ranks = [8usize, 16, 27][rng.below(3) as usize];
+        let mut app = AppParams::minife();
+        app.iters = 2;
+        let staged = run_point(&cfg, &app, ranks, Mode::Weak, &ProxyConfig::default());
+        let all = run_point(
+            &cfg,
+            &app,
+            ranks,
+            Mode::Weak,
+            &ProxyConfig { halo: HaloSchedule::AllFaces, ..ProxyConfig::default() },
+        );
+        prop_assert!(
+            (0.0..1.0).contains(&staged.overlap_fraction),
+            "staged overlap {}",
+            staged.overlap_fraction
+        );
+        prop_assert!(
+            (0.0..1.0).contains(&all.overlap_fraction),
+            "all-faces overlap {}",
+            all.overlap_fraction
+        );
+        prop_assert!(
+            all.time_s <= staged.time_s * 1.001,
+            "ranks={ranks}: all-faces {} slower than dim-staged {}",
+            all.time_s,
+            staged.time_s
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_placements_injective_and_in_capacity() {
+    // any placement the allocator produces — random job sizes, random
+    // policies, random admission order with releases — is injective and
+    // stays within the rack, as validated by RankMap::from_slots
+    use exanest::mpi::RankMap;
+    use exanest::sched::{Allocation, Policy, RackAlloc};
+    let cfg = SystemConfig::prototype();
+    forall("allocator placements are injective and in capacity", 60, |rng| {
+        let mut rack = RackAlloc::new(&cfg);
+        let mut live: Vec<(Allocation, usize, Placement)> = Vec::new();
+        let mut all_slots = Vec::new();
+        for _ in 0..12 {
+            // occasionally release a live allocation (job finished)
+            if !live.is_empty() && rng.below(3) == 0 {
+                let i = rng.below(live.len() as u64) as usize;
+                let (a, _, _) = live.swap_remove(i);
+                rack.release(&a);
+            }
+            let policy =
+                [Policy::Compact, Policy::BestFit, Policy::Scattered][rng.below(3) as usize];
+            let placement =
+                [Placement::PerCore, Placement::PerMpsoc][rng.below(2) as usize];
+            let ranks = rng.range(1, 65) as usize;
+            if let Some(a) = rack.allocate(ranks, placement, policy) {
+                let slots = a.slots(&cfg, ranks, placement);
+                prop_assert!(slots.len() == ranks, "one slot per rank");
+                live.push((a, ranks, placement));
+            }
+            // the union of all live placements must form a valid RankMap
+            all_slots.clear();
+            for (a, ranks, placement) in &live {
+                all_slots.extend(a.slots(&cfg, *ranks, *placement));
+            }
+            prop_assert!(
+                RankMap::from_slots(&cfg, all_slots.clone()).is_ok(),
+                "live placements collide or leave the machine: {} jobs",
+                live.len()
+            );
+            let frag = rack.fragmentation();
+            prop_assert!((0.0..=1.0).contains(&frag), "fragmentation {frag}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_compact_job_matches_legacy_world_ps_exactly() {
+    // Isolated-job parity: a lone job submitted through the scheduler
+    // with Compact placement at offset 0 gets the legacy contiguous
+    // RankMap, so its wall time must equal the direct contiguous-World
+    // run to the picosecond — on both network models.
+    use exanest::apps::scaling::{
+        dims3, iteration_params, proxy_iteration, AppParams, HaloSchedule, Mode, ProxyAccum,
+    };
+    use exanest::mpi::collectives::Backend;
+    use exanest::sched::{run_schedule, JobSpec, Policy, SchedConfig, Workload};
+    let cfg = SystemConfig::two_blades();
+    forall("single scheduled job == direct contiguous run (ps)", 6, |rng| {
+        let ranks = [8usize, 12, 16][rng.below(3) as usize];
+        let iters = 2usize;
+        let model = if rng.below(2) == 0 {
+            NetworkModel::Flow
+        } else {
+            NetworkModel::cell(RoutePolicy::Deterministic)
+        };
+        let app = AppParams::hpcg();
+        let spec = JobSpec {
+            name: "solo".to_string(),
+            ranks,
+            arrival: SimTime::ZERO,
+            placement: Placement::PerCore,
+            workload: Workload::Proxy { app: app.clone(), mode: Mode::Weak, iters },
+            class: 0,
+        };
+        let sc = SchedConfig::new(Policy::Compact, model.clone());
+        let out = run_schedule(&cfg, &[spec], &sc).map_err(|e| e.to_string())?;
+        prop_assert!(out.jobs.len() == 1, "one job scheduled");
+        let sched_dur = out.jobs[0].finish - out.jobs[0].start;
+
+        // direct run: the same iteration loop on a legacy contiguous world
+        let mut w = World::with_model(cfg.clone(), ranks, Placement::PerCore, model);
+        let group: Vec<usize> = (0..ranks).collect();
+        let colocated = w.colocated(0).min(ranks);
+        let (compute, face_bytes) = iteration_params(&app, Mode::Weak, ranks, colocated);
+        let mut acc = ProxyAccum::default();
+        let start = w.max_clock();
+        for _ in 0..iters {
+            proxy_iteration(
+                &mut w,
+                &group,
+                dims3(ranks),
+                compute,
+                face_bytes,
+                app.allreduces_per_iter,
+                HaloSchedule::DimStaged,
+                Backend::Software,
+                &mut acc,
+            );
+        }
+        let direct_dur = w.max_clock() - start;
+        prop_assert!(
+            sched_dur == direct_dur,
+            "ranks={ranks}: scheduled {} ps != direct {} ps",
+            sched_dur.0,
+            direct_dur.0
+        );
+        // and the slowdown of a lone job is exactly 1
+        prop_assert!(
+            (out.jobs[0].slowdown - 1.0).abs() < 1e-12,
+            "solo slowdown {}",
+            out.jobs[0].slowdown
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_concurrent_job_slowdown_at_least_one() {
+    // occupancy-only contention can delay but never accelerate a job:
+    // every job of a random two-job trace has slowdown >= 1 on both
+    // network models
+    use exanest::sched::{run_schedule, JobSpec, Policy, SchedConfig, Workload};
+    let cfg = SystemConfig::two_blades();
+    forall("concurrent jobs: slowdown >= 1", 6, |rng| {
+        let policy =
+            [Policy::Compact, Policy::BestFit, Policy::Scattered][rng.below(3) as usize];
+        let model = if rng.below(2) == 0 {
+            NetworkModel::Flow
+        } else {
+            NetworkModel::cell(RoutePolicy::Deterministic)
+        };
+        let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64| JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement: Placement::PerCore,
+            workload: Workload::by_spec(spec).expect("valid spec"),
+            class: 0,
+        };
+        let specs = [
+            mk("a", "halo:hpcg:2", 16, 0.0),
+            mk("b", "halo:minife:2", [8usize, 16][rng.below(2) as usize], 0.0),
+        ];
+        let sc = SchedConfig::new(policy, model);
+        let out = run_schedule(&cfg, &specs, &sc).map_err(|e| e.to_string())?;
+        for j in &out.jobs {
+            prop_assert!(
+                j.slowdown >= 1.0 - 1e-12,
+                "{} under {:?}: slowdown {}",
+                j.name,
+                policy,
+                j.slowdown
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_sched_multi_job_is_ps_exact() {
+    // `repro sched` traffic: concurrent jobs on one shared fabric — the
+    // per-job interference numbers and the makespan are bit-identical
+    // across worker counts
+    use exanest::sched::{run_schedule, JobSpec, Policy, SchedConfig, Workload};
+    let cfg = SystemConfig::two_blades();
+    forall("sched multi-job: workers 1 == 2 (ps exact)", 3, |rng| {
+        let policy =
+            [Policy::Compact, Policy::BestFit, Policy::Scattered][rng.below(3) as usize];
+        let mk = |name: &str, spec: &str, ranks: usize, arrival_us: f64| JobSpec {
+            name: name.to_string(),
+            ranks,
+            arrival: SimTime::from_us(arrival_us),
+            placement: Placement::PerCore,
+            workload: Workload::by_spec(spec).expect("valid spec"),
+            class: 0,
+        };
+        let specs = [
+            mk("halo", "halo:hpcg:2", 16, 0.0),
+            mk("ar", "allreduce:1024x3", [8usize, 16][rng.below(2) as usize], 5.0),
+        ];
+        let sc1 = SchedConfig::new(policy, NetworkModel::Flow);
+        let seq = run_schedule(&with_workers(&cfg, 1), &specs, &sc1).map_err(|e| e.to_string())?;
+        let par = run_schedule(&with_workers(&cfg, 2), &specs, &sc1).map_err(|e| e.to_string())?;
+        prop_assert!(
+            seq.makespan_s == par.makespan_s,
+            "{policy:?}: makespan {} vs {}",
+            par.makespan_s,
+            seq.makespan_s
+        );
+        for (a, b) in seq.jobs.iter().zip(&par.jobs) {
+            prop_assert!(
+                a.duration_s == b.duration_s && a.slowdown == b.slowdown,
+                "{policy:?} job {}: {}s/{} vs {}s/{}",
+                a.name,
+                b.duration_s,
+                b.slowdown,
+                a.duration_s,
+                a.slowdown
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,80 @@
+//! Table-2 golden-fixture test: the paper's per-path one-way latencies
+//! and the 81.9% link-utilisation headline live in
+//! `tests/fixtures/table2.json`, and both network models must land
+//! inside the fixture's tolerances.  Changing the fixture is an explicit
+//! act — a timing regression cannot silently re-baseline itself.
+
+use exanest::apps::osu::{self, OsuPath};
+use exanest::network::{NetworkModel, RoutePolicy};
+use exanest::topology::SystemConfig;
+
+const FIXTURE: &str = include_str!("fixtures/table2.json");
+
+/// Extract `"key": <number>` from the fixture (no JSON dependency in the
+/// offline vendor set — the fixture is flat, so field scraping is exact).
+fn field(key: &str) -> f64 {
+    let tag = format!("\"{key}\":");
+    let rest = FIXTURE.split(&tag).nth(1).unwrap_or_else(|| panic!("fixture lacks {key}"));
+    let end = rest.find(&[',', '\n', '}'][..]).unwrap();
+    rest[..end].trim().parse().unwrap_or_else(|e| panic!("bad number for {key}: {e}"))
+}
+
+/// Extract the `"paths_us": [...]` anchor array.
+fn paths_us() -> Vec<f64> {
+    let rest = FIXTURE.split("\"paths_us\":").nth(1).expect("fixture lacks paths_us");
+    let open = rest.find('[').unwrap();
+    let close = rest.find(']').unwrap();
+    rest[open + 1..close]
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad anchor"))
+        .collect()
+}
+
+#[test]
+fn fixture_is_well_formed() {
+    let anchors = paths_us();
+    assert_eq!(anchors.len(), OsuPath::ALL.len(), "one anchor per Table-2 path class");
+    assert!(anchors.windows(2).all(|w| w[0] < w[1]), "anchors must grow with path length");
+    assert!(field("latency_tolerance_frac") > 0.0);
+    assert!((0.0..1.0).contains(&field("util_frac")));
+}
+
+#[test]
+fn table2_latencies_match_the_fixture_on_both_models() {
+    let cfg = SystemConfig::prototype();
+    let anchors = paths_us();
+    let tol = field("latency_tolerance_frac");
+    let models = [
+        ("flow", NetworkModel::Flow),
+        ("cell", NetworkModel::cell(RoutePolicy::Deterministic)),
+    ];
+    for (label, model) in models {
+        for (path, want) in OsuPath::ALL.iter().zip(&anchors) {
+            let got = osu::osu_latency_model(&cfg, &model, *path, 0, 50).us();
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel <= tol,
+                "{label} {}: {got:.3} us vs golden {want:.3} us ({:.1}% off, tol {:.0}%)",
+                path.label(),
+                rel * 100.0,
+                tol * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn link_utilisation_matches_the_fixture() {
+    // The 82%-of-16-Gb/s headline at 4 MiB with a 64-message window on
+    // the flow model (`network_models_agree_on_table2_at_zero_load` in
+    // `integration.rs` pins the cell model to the flow model separately).
+    let cfg = SystemConfig::prototype();
+    let util =
+        osu::osu_bw_model(&cfg, &NetworkModel::Flow, OsuPath::IntraQfdbSh, 4 << 20, 64) / 16.0;
+    let want = field("util_frac");
+    let tol = field("util_tolerance_abs");
+    assert!(
+        (util - want).abs() <= tol,
+        "intra-QFDB utilisation {util:.4} vs golden {want:.4} (tol ±{tol}))"
+    );
+}
