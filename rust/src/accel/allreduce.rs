@@ -45,6 +45,10 @@ impl AccelOp {
 
 /// Vector block size the hardware operates on (one ExaNet cell payload).
 pub const BLOCK_BYTES: usize = 256;
+/// Trace-flow base for accelerator spans: QFDB `q` traces as flow
+/// `ACCEL_FLOW_BASE + q`, keeping accelerator flows disjoint from the
+/// MPI progress engine's message serials in a mixed trace.
+pub const ACCEL_FLOW_BASE: u64 = 1 << 48;
 /// Maximum ranks supported by the accelerator.
 pub const MAX_RANKS: usize = 1024;
 
@@ -64,12 +68,16 @@ enum AccelEvent {
     /// to the server module on the Network FPGA, which reduces them.
     ClientPush { qfdb: usize },
     /// The server's level-`level` partial is ready: inject one cell
-    /// toward the XOR-partner server.
-    Send { qfdb: usize, level: usize },
+    /// toward the XOR-partner server.  `parent` is the QFDB whose
+    /// arriving partial enabled this send (`None` when the local
+    /// client push alone did) — it becomes the span's causality link
+    /// so the blame engine can walk the exchange tree (DESIGN.md §16).
+    Send { qfdb: usize, level: usize, parent: Option<u64> },
     /// A partner's level-`level` partial landed at this server.
     Arrive { qfdb: usize, level: usize },
-    /// The server broadcasts the finished block back to its clients.
-    Broadcast { qfdb: usize },
+    /// The server broadcasts the finished block back to its clients;
+    /// `parent` as for `Send`.
+    Broadcast { qfdb: usize, parent: Option<u64> },
 }
 
 impl AccelAllreduce {
@@ -169,6 +177,41 @@ impl AccelAllreduce {
         t
     }
 
+    /// One accel phase span on the server's rank track, flow = its
+    /// QFDB, parent-linked to the enabling QFDB's flow when the phase
+    /// was gated on a partner's partial.
+    #[allow(clippy::too_many_arguments)]
+    fn accel_span(
+        world: &mut World,
+        server: MpsocId,
+        qfdb: usize,
+        t0: SimTime,
+        t1: SimTime,
+        aux: u64,
+        parent: Option<u64>,
+    ) {
+        let flow = ACCEL_FLOW_BASE + qfdb as u64;
+        match parent {
+            Some(p) => world.progress.record_span_linked(
+                Track::Rank(server.0),
+                SpanKind::Accel,
+                flow,
+                ACCEL_FLOW_BASE + p,
+                t0,
+                t1,
+                aux,
+            ),
+            None => world.progress.record_span(
+                Track::Rank(server.0),
+                SpanKind::Accel,
+                flow,
+                t0,
+                t1,
+                aux,
+            ),
+        }
+    }
+
     /// Event-driven latency of one accelerated allreduce of `bytes`: the
     /// client→server→exchange→broadcast phases of every QFDB run as
     /// events on the DES core (`AccelEvent`), charging each QFDB's own
@@ -221,42 +264,37 @@ impl AccelAllreduce {
                         // vectors into its own.
                         let t0 = t + calib.accel_init + calib.accel_client_dma;
                         let p = world.fabric.route_cached(clients[qfdb], servers[qfdb]);
-                        world.fabric.set_trace_flow(qfdb as u64);
+                        world.fabric.set_trace_flow(ACCEL_FLOW_BASE + qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t0, BLOCK_BYTES);
                         let r = arr + SimDuration(calib.accel_reduce_per_level.0 * 3);
                         ready[qfdb] = r;
                         // accel span: client push + server-side reduce of
                         // the QFDB's four vectors (aux = block bytes)
-                        world.progress.record_span(
-                            Track::Rank(servers[qfdb].0),
-                            SpanKind::Accel,
-                            qfdb as u64,
+                        Self::accel_span(
+                            world,
+                            servers[qfdb],
+                            qfdb,
                             t,
                             r,
                             BLOCK_BYTES as u64,
+                            None,
                         );
                         if levels == 0 {
-                            engine.post(r, AccelEvent::Broadcast { qfdb });
+                            engine.post(r, AccelEvent::Broadcast { qfdb, parent: None });
                         } else {
-                            engine.post(r, AccelEvent::Send { qfdb, level: 0 });
+                            engine.post(r, AccelEvent::Send { qfdb, level: 0, parent: None });
                         }
                     }
-                    AccelEvent::Send { qfdb, level } => {
+                    AccelEvent::Send { qfdb, level, parent } => {
                         let partner = qfdb ^ (1usize << level);
                         let p = world.fabric.route_cached(servers[qfdb], servers[partner]);
-                        world.fabric.set_trace_flow(qfdb as u64);
+                        world.fabric.set_trace_flow(ACCEL_FLOW_BASE + qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
                         engine.post(arr, AccelEvent::Arrive { qfdb: partner, level });
                         // accel span: one level's partial on the wire to
-                        // the XOR partner (aux = level)
-                        world.progress.record_span(
-                            Track::Rank(servers[qfdb].0),
-                            SpanKind::Accel,
-                            qfdb as u64,
-                            t,
-                            arr,
-                            level as u64,
-                        );
+                        // the XOR partner (aux = level); parent-linked to
+                        // the QFDB whose arrival enabled it
+                        Self::accel_span(world, servers[qfdb], qfdb, t, arr, level as u64, parent);
                     }
                     AccelEvent::Arrive { qfdb, level } => {
                         if level != next_level[qfdb] {
@@ -267,16 +305,27 @@ impl AccelAllreduce {
                         // became in-order
                         let mut at = t;
                         loop {
+                            // the partial just absorbed came from this
+                            // level's XOR partner — the causal parent of
+                            // whatever the server does next
+                            let from = (qfdb ^ (1usize << next_level[qfdb])) as u64;
                             let r = at.max(ready[qfdb]) + calib.accel_reduce_per_level;
                             ready[qfdb] = r;
                             next_level[qfdb] += 1;
                             if next_level[qfdb] == levels {
-                                engine.post(r, AccelEvent::Broadcast { qfdb });
+                                engine.post(
+                                    r,
+                                    AccelEvent::Broadcast { qfdb, parent: Some(from) },
+                                );
                                 break;
                             }
                             engine.post(
                                 r,
-                                AccelEvent::Send { qfdb, level: next_level[qfdb] },
+                                AccelEvent::Send {
+                                    qfdb,
+                                    level: next_level[qfdb],
+                                    parent: Some(from),
+                                },
                             );
                             let want = next_level[qfdb];
                             match held[qfdb].iter().position(|&(l, _)| l == want) {
@@ -285,20 +334,21 @@ impl AccelAllreduce {
                             }
                         }
                     }
-                    AccelEvent::Broadcast { qfdb } => {
+                    AccelEvent::Broadcast { qfdb, parent } => {
                         let p = world.fabric.route_cached(servers[qfdb], clients[qfdb]);
-                        world.fabric.set_trace_flow(qfdb as u64);
+                        world.fabric.set_trace_flow(ACCEL_FLOW_BASE + qfdb as u64);
                         let arr = world.fabric.small_cell(&p, t, BLOCK_BYTES);
                         done[qfdb] = arr + calib.accel_client_dma + calib.accel_finish;
                         // accel span: result broadcast + client memory
                         // update / software notify
-                        world.progress.record_span(
-                            Track::Rank(servers[qfdb].0),
-                            SpanKind::Accel,
-                            qfdb as u64,
+                        Self::accel_span(
+                            world,
+                            servers[qfdb],
+                            qfdb,
                             t,
                             done[qfdb],
                             BLOCK_BYTES as u64,
+                            parent,
                         );
                     }
                 }

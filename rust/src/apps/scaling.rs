@@ -507,9 +507,28 @@ pub fn run_point(
     mode: Mode,
     proxy: &ProxyConfig,
 ) -> RunMetrics {
+    run_point_traced(cfg, app, ranks, mode, proxy, 0).0
+}
+
+/// [`run_point`] with the flight recorder armed (`trace_cap` spans;
+/// 0 = untraced).  Returns the finished [`World`] alongside the metrics
+/// so callers can export the trace, the windowed link telemetry and the
+/// blame/critical-path analyses of the exact run that produced the
+/// numbers.
+pub fn run_point_traced(
+    cfg: &SystemConfig,
+    app: &AppParams,
+    ranks: usize,
+    mode: Mode,
+    proxy: &ProxyConfig,
+    trace_cap: usize,
+) -> (RunMetrics, World) {
     assert!(ranks >= 1, "a scaling point needs at least one rank");
     let placement = placement_for(cfg, ranks, proxy.backend);
     let mut world = World::with_model(cfg.clone(), ranks, placement, proxy.model.clone());
+    if trace_cap > 0 {
+        world.enable_tracing(trace_cap);
+    }
     let dims = dims3(ranks);
     let group: Vec<usize> = (0..ranks).collect();
     // Per-iteration compute, with memory-channel contention.
@@ -532,7 +551,12 @@ pub fn run_point(
         );
     }
     let total = (world.max_clock() - start).secs();
-    RunMetrics {
+    if trace_cap > 0 {
+        // close the (single) telemetry window at the simulated end time
+        let end = world.max_clock();
+        world.fabric.sample_telemetry(end);
+    }
+    let metrics = RunMetrics {
         time_s: total,
         comm_fraction: if total > 0.0 { acc.comm_time / total } else { 0.0 },
         allreduce_fraction: if total > 0.0 { acc.allreduce_time / total } else { 0.0 },
@@ -542,7 +566,8 @@ pub fn run_point(
             0.0
         },
         backend: acc.backend_used,
-    }
+    };
+    (metrics, world)
 }
 
 /// A weak/strong scaling sweep that caches the single-rank reference per

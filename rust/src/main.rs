@@ -134,6 +134,44 @@ fn export_observability(
     }
 }
 
+/// Post-run analysis of a traced command (DESIGN.md §16): print the
+/// per-message blame decomposition and the extracted critical path,
+/// append the critical-path lane to the spans so the exported Perfetto
+/// trace carries it as its own process, then write the artefacts.
+fn export_analyzed(
+    trace: &TraceOpts,
+    mut records: Vec<SpanRec>,
+    dropped: u64,
+    series: &LinkSeries,
+    heatmap: &str,
+) {
+    let report = telemetry::BlameReport::analyze(&records);
+    if !report.messages.is_empty() {
+        print!("{}", report.render());
+    }
+    if let Some(path) = telemetry::CriticalPath::extract(&records) {
+        print!("{}", path.render());
+        records.extend(path.to_spans());
+        // re-establish the exporter's monotone-ts promise after the
+        // critical-path lane lands at arbitrary start times
+        records.sort_unstable();
+    }
+    println!();
+    export_observability(trace, &records, dropped, series, heatmap);
+}
+
+/// Derive a per-scenario trace file from the user's `--trace` path:
+/// `t.json` + `bit-errors` → `t.bit-errors.json` (extension-preserving
+/// so Perfetto still recognises the file), anything else gets the
+/// scenario name appended.
+fn scenario_trace(trace: &TraceOpts, name: &str) -> TraceOpts {
+    let path = trace.path.as_ref().map(|p| match p.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.{name}.json"),
+        None => format!("{p}.{name}"),
+    });
+    TraceOpts { path, telemetry: trace.telemetry }
+}
+
 /// Parse a torus direction token of the fault-injection flags.
 fn parse_dir(s: &str) -> Result<Dir, String> {
     Ok(match s {
@@ -318,7 +356,7 @@ fn main() {
         // (Inter-mezz(3,1,2) paths, 512-rank collectives).  `scaling`
         // and `sched` adapt their rank lists to the machine, so they
         // smoke at any size.
-        const SMALL_OK: [&str; 10] = [
+        const SMALL_OK: [&str; 11] = [
             "hw-pingpong",
             "osu-mbw",
             "osu-incast",
@@ -329,6 +367,7 @@ fn main() {
             "qos",
             "scaling",
             "sched",
+            "blame",
         ];
         if !SMALL_OK.contains(&cmd) {
             eprintln!(
@@ -363,7 +402,7 @@ fn main() {
     // a usage error, not a silent no-op.
     let trace = TraceOpts { path: args.value("--trace"), telemetry: args.flag("--telemetry") };
     if trace.active() {
-        const TRACE_OK: [&str; 2] = ["osu-allreduce", "sched"];
+        const TRACE_OK: [&str; 6] = ["osu-allreduce", "sched", "qos", "faults", "scaling", "blame"];
         if !TRACE_OK.contains(&cmd) {
             eprintln!("--trace/--telemetry apply to: {}", TRACE_OK.join(", "));
             std::process::exit(2);
@@ -424,7 +463,7 @@ fn main() {
     // Commands that actually thread the model through; anything else
     // would silently print flow-level numbers under a cell-model flag.
     if !matches!(model, NetworkModel::Flow) {
-        const MODEL_OK: [&str; 7] = [
+        const MODEL_OK: [&str; 8] = [
             "osu-latency",
             "osu-bw",
             "osu-mbw",
@@ -432,6 +471,7 @@ fn main() {
             "osu-allreduce",
             "scaling",
             "sched",
+            "blame",
         ];
         if !MODEL_OK.contains(&cmd) {
             eprintln!(
@@ -486,11 +526,15 @@ fn main() {
         }
         "faults" => {
             args.finish(cmd);
-            faults_cmd(&cfg);
+            faults_cmd(&cfg, &trace);
         }
         "qos" => {
             args.finish(cmd);
-            qos_cmd(&cfg, qos_flagged);
+            qos_cmd(&cfg, qos_flagged, &trace);
+        }
+        "blame" => {
+            args.finish(cmd);
+            blame_cmd(&cfg, &model, &trace);
         }
         "bcast-model" => {
             args.finish(cmd);
@@ -517,7 +561,7 @@ fn main() {
                 }),
             };
             args.finish(cmd);
-            scaling_cmd(&cfg, &app, &model, backend, halo);
+            scaling_cmd(&cfg, &app, &model, backend, halo, &trace);
         }
         "sched" => {
             let policy = match args.value("--policy") {
@@ -552,12 +596,20 @@ fn main() {
             osu_incast(&cfg, &model);
             osu_overlap(&cfg);
             router_hotspot(&cfg);
-            faults_cmd(&cfg);
-            qos_cmd(&cfg, qos_flagged);
+            faults_cmd(&cfg, &trace);
+            qos_cmd(&cfg, qos_flagged, &trace);
+            blame_cmd(&cfg, &model, &trace);
             bcast_model(&cfg);
             allreduce_accel(&cfg);
             ip_overlay(&cfg);
-            scaling_cmd(&cfg, "all", &model, Backend::Software, scaling::HaloSchedule::DimStaged);
+            scaling_cmd(
+                &cfg,
+                "all",
+                &model,
+                Backend::Software,
+                scaling::HaloSchedule::DimStaged,
+                &trace,
+            );
             sched_cmd(&cfg, &model, Policy::Compact, "synthetic", &trace);
             matmul_accel();
         }
@@ -580,6 +632,10 @@ fn main() {
                  \tqos              adversarial-tenant isolation suite: incast/alltoall bullies vs\n\
                  \t                 victims with and without per-tenant QoS (WRR arbitration + ECN\n\
                  \t                 injection throttling); victim slowdown, Jain fairness index\n\
+                 \tblame            critical-path blame engine: run a traced allreduce, decompose\n\
+                 \t                 every message's latency ps-exact (lib / NI / queueing / wire /\n\
+                 \t                 stalls / backoff), extract the critical path + straggler\n\
+                 \t                 (§6.1.1 anchor: ~0.47 us lib+NI hand-off share)\n\
                  \tbcast-model      Fig 18: Eq.1 expected vs observed broadcast\n\
                  \tallreduce-accel  Fig 19: HW vs SW allreduce\n\
                  \tip-overlay       Fig 13 + §5.3: IP-over-ExaNet vs 10GbE\n\
@@ -615,7 +671,10 @@ fn main() {
                  \t--qos-window     <bytes> per-tenant injection window (0 = arbitration only)\n\
                  \t--qos-mark       <n> ECN mark threshold in full-cell serialization times\n\
                  \t--trace          <path> write a Chrome/Perfetto trace of the run (plus\n\
-                 \t                 <path>.series.csv link telemetry) — osu-allreduce, sched\n\
+                 \t                 <path>.series.csv link telemetry, plus a critical-path lane) —\n\
+                 \t                 osu-allreduce, sched, qos, faults, scaling, blame; the\n\
+                 \t                 multi-scenario commands write one file per scenario\n\
+                 \t                 (t.json -> t.<scenario>.json)\n\
                  \t--telemetry      print windowed link utilisation + torus heatmap for the\n\
                  \t                 same commands; tracing is off by default and the untraced\n\
                  \t                 path records nothing\n\
@@ -796,14 +855,95 @@ fn osu_allreduce(cfg: &SystemConfig, model: &NetworkModel, trace: &TraceOpts) {
         }
         if trace.active() {
             let heat = telemetry::torus_heatmap(&w.fabric, SimDuration(w.max_clock().0));
-            export_observability(
+            export_analyzed(
                 trace,
-                &w.trace_records(),
+                w.trace_records(),
                 w.trace_dropped(),
                 w.fabric.telemetry(),
                 &heat,
             );
         }
+    }
+}
+
+/// `repro blame`: the critical-path blame engine run end to end
+/// (DESIGN.md §16).  Executes a small-message software allreduce with
+/// the flight recorder armed, decomposes every message's end-to-end
+/// latency into ps-exact component shares, extracts the critical path
+/// through the span-causality graph and names the straggler.  The
+/// paper's §6.1.1 anchor falls out directly: the sender-side library +
+/// NI hand-off share of each small message is ~0.47 us (420 ns MPI
+/// processing + ~50 ns packetizer hand-off).  `--trace` additionally
+/// writes the Perfetto trace with the critical-path lane appended;
+/// stamps BENCH_blame.json (including the `blame/*` shares) either way.
+fn blame_cmd(cfg: &SystemConfig, model: &NetworkModel, trace: &TraceOpts) {
+    let n = 16.min(cfg.num_cores());
+    // 32 B is the eager/rendez-vous switch point: every step's exchange
+    // takes the eager path, so the decomposition shows the full
+    // lib → ni → wire → recv-lib pipeline of §6.1.1.
+    let bytes = 32usize;
+    println!(
+        "## Critical-path blame — {n}-rank {bytes} B software allreduce ({})\n",
+        model.label()
+    );
+    let mut w = World::with_model(cfg.clone(), n, Placement::PerCore, model.clone());
+    w.enable_tracing(TraceOpts::CAP);
+    let (lat, _) = collectives::allreduce_via(&mut w, bytes, Backend::Software);
+    w.fabric.sample_telemetry(w.max_clock());
+    let mut recs = w.trace_records();
+    let report = telemetry::BlameReport::analyze(&recs);
+    print!("{}", report.render());
+    // The partition property is structural; make its violation loud
+    // rather than silently reporting shares that do not sum.
+    for m in &report.messages {
+        assert_eq!(
+            m.blame.total(),
+            m.latency_ps(),
+            "blame components must partition the message window ps-exact (flow {})",
+            m.flow
+        );
+    }
+    println!();
+    let path = telemetry::CriticalPath::extract(&recs);
+    match &path {
+        Some(p) => print!("{}", p.render()),
+        None => println!("(no critical path: the trace holds no protocol spans)"),
+    }
+    let lib_ni_us = report.mean_lib_ni_ps() / 1e6;
+    println!(
+        "\nallreduce latency {:.3} us; mean sender lib+NI hand-off {:.3} us per message \
+         (paper §6.1.1: ~0.47 us)\n",
+        lat.us(),
+        lib_ni_us
+    );
+    let mut suite = Suite::new("blame");
+    suite.stamp(cfg);
+    suite.metric("ranks", n as f64, "count");
+    suite.metric("bytes", bytes as f64, "B");
+    suite.metric("latency_us", lat.us(), "us");
+    suite.metric("lib_ni_us", lib_ni_us, "us");
+    if let Some(p) = &path {
+        suite.metric("critical_path_us", p.total_ps() as f64 / 1e6, "us");
+        suite.metric("critical_path_edges", p.edges.len() as f64, "edges");
+        if let Some(s) = p.straggler() {
+            suite.metric(
+                "straggler_share",
+                s.contribution_ps as f64 / p.total_ps().max(1) as f64,
+                "fraction",
+            );
+        }
+    }
+    Summary::collect(&w).stamp(&mut suite);
+    if let Err(e) = suite.write_json() {
+        eprintln!("could not write BENCH_blame.json: {e}");
+    }
+    if trace.active() {
+        if let Some(p) = &path {
+            recs.extend(p.to_spans());
+            recs.sort_unstable();
+        }
+        let heat = telemetry::torus_heatmap(&w.fabric, SimDuration(w.max_clock().0));
+        export_observability(trace, &recs, w.trace_dropped(), w.fabric.telemetry(), &heat);
     }
 }
 
@@ -973,6 +1113,7 @@ fn scaling_cmd(
     model: &NetworkModel,
     backend: Backend,
     halo: scaling::HaloSchedule,
+    trace: &TraceOpts,
 ) {
     let apps: Vec<scaling::AppParams> = match which {
         "all" => vec![
@@ -1107,6 +1248,28 @@ fn scaling_cmd(
         println!("## Table 3 — parallel efficiency summary\n");
         println!("{}", table3.render());
     }
+    // Traced representative point: re-run the first app's largest
+    // weak-scaling point with the flight recorder armed — the sweep
+    // itself stays untraced (tens of points; tracing them all would
+    // thrash the ring and the disk) but the corner that dominates the
+    // efficiency story gets the full blame/critical-path treatment.
+    if trace.active() {
+        let app = &apps[0];
+        println!(
+            "### traced point: {} weak @ {last} ranks — blame + critical path\n",
+            app.name
+        );
+        let (_, w) = scaling::run_point_traced(
+            cfg,
+            app,
+            last,
+            scaling::Mode::Weak,
+            &proxy,
+            TraceOpts::CAP,
+        );
+        let heat = telemetry::torus_heatmap(&w.fabric, SimDuration(w.max_clock().0));
+        export_analyzed(trace, w.trace_records(), w.trace_dropped(), w.fabric.telemetry(), &heat);
+    }
 }
 
 /// Side-by-side dot-product allreduce latencies, software vs the in-NI
@@ -1235,7 +1398,7 @@ fn sched_cmd(
         eprintln!("could not write BENCH_sched.json: {e}");
     }
     if trace.active() {
-        export_observability(trace, &out.trace_records, out.trace_dropped, &out.series, "");
+        export_analyzed(trace, out.trace_records, out.trace_dropped, &out.series, "");
     }
 }
 
@@ -1245,7 +1408,11 @@ fn sched_cmd(
 /// the scheduler kills/re-queues jobs whose placement a partition cuts
 /// in half — so the interesting output is the *cost*: retransmissions,
 /// recoveries and goodput degradation (makespan vs the fault-free run).
-fn faults_cmd(cfg: &SystemConfig) {
+/// Under `--trace <t.json>` each scenario writes its own
+/// `t.<scenario>.json` with blame decomposition and critical path, so
+/// the retransmission/backoff shares of the faulty runs are directly
+/// comparable against the fault-free baseline.
+fn faults_cmd(cfg: &SystemConfig, trace: &TraceOpts) {
     let specs = [
         sched::JobSpec {
             name: "span".to_string(),
@@ -1296,7 +1463,10 @@ fn faults_cmd(cfg: &SystemConfig) {
     let mut baseline_makespan = 0.0f64;
     for (name, plan) in scenarios {
         let model = NetworkModel::cell_with_faults(RoutePolicy::Deterministic, plan);
-        let sc = sched::SchedConfig::new(Policy::Scattered, model);
+        let mut sc = sched::SchedConfig::new(Policy::Scattered, model);
+        if trace.active() {
+            sc.trace_cap = TraceOpts::CAP;
+        }
         let out = sched::run_schedule(cfg, &specs, &sc).unwrap_or_else(|e| {
             eprintln!("faults scenario {name} failed: {e}");
             std::process::exit(1);
@@ -1345,6 +1515,16 @@ fn faults_cmd(cfg: &SystemConfig) {
             "retries",
         );
         suite.metric(&format!("scenario/{name}/goodput_degradation"), degradation, "x");
+        if trace.active() {
+            println!("\n### {name}: blame + critical path\n");
+            export_analyzed(
+                &scenario_trace(trace, name),
+                out.trace_records,
+                out.trace_dropped,
+                &out.series,
+                "",
+            );
+        }
     }
     println!();
     println!("{}", t.render());
@@ -1359,7 +1539,10 @@ fn faults_cmd(cfg: &SystemConfig) {
 /// and the Jain fairness index.  `qos_flagged` = the user set `--qos*`
 /// flags: use `cfg.qos` as given; otherwise run the suite's default
 /// profile (victim-weighted WRR + throttling).  Stamps BENCH_qos.json.
-fn qos_cmd(cfg: &SystemConfig, qos_flagged: bool) {
+/// Under `--trace <t.json>` the QoS-**on** run of each scenario writes
+/// its own `t.<scenario>.json` with blame decomposition (the throttle
+/// component shows the ECN parking directly) and critical path.
+fn qos_cmd(cfg: &SystemConfig, qos_flagged: bool, trace: &TraceOpts) {
     let qos = if qos_flagged { cfg.qos.clone() } else { sched::suite_profile() };
     println!(
         "## Per-tenant QoS — adversarial-tenant isolation (weights {:?}, window {} KiB, \
@@ -1382,8 +1565,9 @@ fn qos_cmd(cfg: &SystemConfig, qos_flagged: bool) {
     ]);
     let mut suite = Suite::new("qos");
     suite.stamp(cfg);
+    let trace_cap = if trace.active() { TraceOpts::CAP } else { 0 };
     for s in sched::QosScenario::all() {
-        let r = sched::qos_report(cfg, s, &qos).unwrap_or_else(|e| {
+        let (r, on) = sched::qos_report_traced(cfg, s, &qos, trace_cap).unwrap_or_else(|e| {
             eprintln!("qos scenario {} failed: {e}", s.name());
             std::process::exit(1);
         });
@@ -1418,6 +1602,16 @@ fn qos_cmd(cfg: &SystemConfig, qos_flagged: bool) {
             r.throttle_parks as f64,
             "sends",
         );
+        if trace.active() {
+            println!("### {}: blame + critical path (QoS on)\n", r.scenario);
+            export_analyzed(
+                &scenario_trace(trace, r.scenario),
+                on.trace_records,
+                on.trace_dropped,
+                &on.series,
+                "",
+            );
+        }
     }
     println!("{}", t.render());
     if let Err(e) = suite.write_json() {

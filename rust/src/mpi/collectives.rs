@@ -69,16 +69,10 @@ fn span_collective(world: &mut World, start: SimTime, bytes: usize) {
     if !world.tracing_enabled() {
         return;
     }
+    let parent = world.progress.phase_parent(start.0);
     for r in 0..world.nranks() {
         let end = world.clocks[r];
-        world.progress.record_span(
-            Track::Rank(r as u32),
-            SpanKind::Collective,
-            start.0,
-            start,
-            end,
-            bytes as u64,
-        );
+        emit_phase_span(world, r, start, end, bytes, parent);
     }
 }
 
@@ -87,16 +81,43 @@ fn span_collective_group(world: &mut World, group: &[usize], start: SimTime, byt
     if !world.tracing_enabled() {
         return;
     }
+    let parent = world.progress.phase_parent(start.0);
     for &r in group {
         let end = world.clocks[r];
-        world.progress.record_span(
+        emit_phase_span(world, r, start, end, bytes, parent);
+    }
+}
+
+/// One rank's lane of a collective-phase span, parent-linked to the
+/// previous phase on the same timeline when there is one (DESIGN.md
+/// §16).  Two calls sharing a start instant (zero-duration phase) are
+/// left unlinked rather than self-parented.
+fn emit_phase_span(
+    world: &mut World,
+    r: usize,
+    start: SimTime,
+    end: SimTime,
+    bytes: usize,
+    parent: Option<u64>,
+) {
+    match parent {
+        Some(p) if p != start.0 => world.progress.record_span_linked(
+            Track::Rank(r as u32),
+            SpanKind::Collective,
+            start.0,
+            p,
+            start,
+            end,
+            bytes as u64,
+        ),
+        _ => world.progress.record_span(
             Track::Rank(r as u32),
             SpanKind::Collective,
             start.0,
             start,
             end,
             bytes as u64,
-        );
+        ),
     }
 }
 

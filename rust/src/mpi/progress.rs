@@ -132,6 +132,15 @@ struct ReqState {
     /// The fabric's ECN rule marked at least one cell of this request's
     /// traffic (the NI echo): the sender's window halves on completion.
     marked: bool,
+    /// When the injection throttle first parked this send (earliest park
+    /// across re-parks); cleared into a [`SpanKind::ThrottlePark`] span
+    /// the moment the gate finally admits it.
+    parked_at: Option<SimTime>,
+    /// Globally unique message serial, used as the span `flow` id.  The
+    /// request *index* is reused after [`Progress::recycle`], which
+    /// would alias unrelated messages in a trace; the serial never is,
+    /// so the blame engine can group spans by flow unambiguously.
+    serial: u64,
 }
 
 /// Injection-throttle parameters, copied from
@@ -193,6 +202,13 @@ pub struct Progress {
     window_halvings: u64,
     /// Times a send found its class window full and had to park.
     throttle_parks: u64,
+    /// Flow id of the most recent collective-phase span
+    /// ([`crate::mpi::collectives`]); lets consecutive phases chain via
+    /// parent links so the blame engine can walk phase → phase.
+    last_phase: Option<u64>,
+    /// Next request serial (survives [`Progress::recycle`], so span
+    /// flow ids stay unique across the whole run).
+    next_serial: u64,
 }
 
 fn pop_front(
@@ -261,16 +277,33 @@ impl Progress {
     /// the class has nothing in flight (liveness: a send larger than the
     /// window must still go) or when it fits; otherwise the send parks
     /// FIFO and is relaunched as in-flight bytes drain.
-    fn try_admit(&mut self, id: usize) -> bool {
+    fn try_admit(&mut self, id: usize, t: SimTime) -> bool {
         let c = self.reqs[id].class as usize % NUM_CLASSES;
         let bytes = self.reqs[id].bytes as u64;
         let w = self.windows[c];
         if w.outstanding > 0 && w.outstanding + bytes > w.window {
             self.throttle_parks += 1;
+            // keep the *earliest* park across wake/re-park races — the
+            // blame span covers the whole time the send sat at the gate
+            if self.reqs[id].parked_at.is_none() {
+                self.reqs[id].parked_at = Some(t);
+            }
             self.parked[c].push_back(id);
             return false;
         }
         self.windows[c].outstanding += bytes;
+        if let Some(p0) = self.reqs[id].parked_at.take() {
+            let (rank, class) = (self.reqs[id].rank, self.reqs[id].class);
+            let flow = self.sflow(id);
+            self.engine.trace.span(
+                Track::Rank(rank as u32),
+                SpanKind::ThrottlePark,
+                flow,
+                p0,
+                t,
+                class as u64,
+            );
+        }
         true
     }
 
@@ -311,7 +344,7 @@ impl Progress {
     /// `id` and snapshot the mesh's mark counter; every launch site pairs
     /// this with [`Progress::echo_marks`] after the NI primitive.
     fn launch_prologue(&mut self, fab: &mut Fabric, id: usize) -> u64 {
-        fab.set_trace_flow(id as u64);
+        fab.set_trace_flow(self.sflow(id));
         fab.set_qos_class(self.reqs[id].class);
         fab.cells_marked()
     }
@@ -355,6 +388,30 @@ impl Progress {
         self.engine.trace.span(track, kind, flow, t0, t1, aux);
     }
 
+    /// Like [`Progress::record_span`] with a causality link:
+    /// `parent_flow` identifies the span whose completion enabled this
+    /// one (DESIGN.md §16).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_span_linked(
+        &mut self,
+        track: Track,
+        kind: SpanKind,
+        flow: u64,
+        parent_flow: u64,
+        t0: SimTime,
+        t1: SimTime,
+        aux: u64,
+    ) {
+        self.engine.trace.span_linked(track, kind, flow, parent_flow, t0, t1, aux);
+    }
+
+    /// Chain collective phases: returns the previous phase's flow (if
+    /// any) and records `flow` as the newest.  Consecutive collective
+    /// spans on one timeline thereby form a parent-linked chain.
+    pub fn phase_parent(&mut self, flow: u64) -> Option<u64> {
+        self.last_phase.replace(flow)
+    }
+
     /// Requests posted but not yet completed.
     pub fn outstanding(&self) -> usize {
         self.reqs.iter().filter(|r| r.done.is_none()).count()
@@ -378,6 +435,12 @@ impl Progress {
             self.unmatched_recvs.clear();
             self.gen += 1;
         }
+    }
+
+    /// The span `flow` id of request `id` (its globally unique serial).
+    #[inline]
+    fn sflow(&self, id: usize) -> u64 {
+        self.reqs[id].serial
     }
 
     fn state(&self, req: Request) -> &ReqState {
@@ -407,14 +470,19 @@ impl Progress {
                 DirKind::Recv => SpanKind::RecvOp,
                 DirKind::Compute => SpanKind::Compute,
             };
-            self.engine.trace.span(
-                Track::Rank(r.rank as u32),
-                kind,
-                req.id as u64,
-                r.posted_at,
-                done,
-                r.bytes as u64,
-            );
+            // Receive ops carry the matched send as their causality
+            // parent: the critical-path walk crosses ranks on this link.
+            let (track, flow) = (Track::Rank(r.rank as u32), r.serial);
+            let (posted_at, bytes) = (r.posted_at, r.bytes as u64);
+            match (r.dir, r.partner) {
+                (DirKind::Recv, Some(sid)) => {
+                    let parent = self.sflow(sid);
+                    self.engine.trace.span_linked(
+                        track, kind, flow, parent, posted_at, done, bytes,
+                    )
+                }
+                _ => self.engine.trace.span(track, kind, flow, posted_at, done, bytes),
+            }
         }
     }
 
@@ -435,6 +503,8 @@ impl Progress {
         class: u8,
     ) -> Request {
         let id = self.reqs.len();
+        let serial = self.next_serial;
+        self.next_serial += 1;
         self.reqs.push(ReqState {
             rank: src,
             peer: dst,
@@ -452,6 +522,8 @@ impl Progress {
             seen: 0,
             class,
             marked: false,
+            parked_at: None,
+            serial,
         });
         if let Some(rid) = pop_front(&mut self.unmatched_recvs, (src, dst)) {
             self.reqs[id].partner = Some(rid);
@@ -472,6 +544,8 @@ impl Progress {
         mpi_sw: SimDuration,
     ) -> Request {
         let id = self.reqs.len();
+        let serial = self.next_serial;
+        self.next_serial += 1;
         self.reqs.push(ReqState {
             rank: dst,
             peer: src,
@@ -489,6 +563,8 @@ impl Progress {
             seen: 0,
             class: 0, // stages are stamped with the *send* request's class
             marked: false,
+            parked_at: None,
+            serial,
         });
         if let Some(sid) = pop_front(&mut self.unmatched_sends, (src, dst)) {
             self.reqs[id].partner = Some(sid);
@@ -498,10 +574,12 @@ impl Progress {
             if let Some(arr) = self.reqs[sid].eager_arrival {
                 let start = arr.max(at);
                 self.reqs[id].done = Some(start + mpi_sw);
-                self.engine.trace.span(
+                let (flow, parent) = (self.sflow(id), self.sflow(sid));
+                self.engine.trace.span_linked(
                     Track::Rank(dst as u32),
                     SpanKind::RecvLib,
-                    id as u64,
+                    flow,
+                    parent,
                     start,
                     start + mpi_sw,
                     bytes as u64,
@@ -517,6 +595,8 @@ impl Progress {
 
     fn post_compute(&mut self, rank: usize, at: SimTime, dur: SimDuration) -> Request {
         let id = self.reqs.len();
+        let serial = self.next_serial;
+        self.next_serial += 1;
         self.reqs.push(ReqState {
             rank,
             peer: rank,
@@ -534,6 +614,8 @@ impl Progress {
             seen: 0,
             class: 0,
             marked: false,
+            parked_at: None,
+            serial,
         });
         self.engine.post(at + dur, MpiEvent::ComputeDone(id));
         Request { id, gen: self.gen }
@@ -621,39 +703,63 @@ impl Progress {
     /// NI hand-off + wire spans of one eager transfer.  Called with the
     /// same `(hw_start, cpu_free, visible)` triple from the inline arm
     /// and from [`Progress::flush`], so traces are identical at any
-    /// worker count.
+    /// worker count.  The NI span covers only the doorbell/descriptor
+    /// hand-off ([`crate::topology::Calib::pktz_doorbell`]); the rest of
+    /// the PS->PL copy is PL pipeline work and belongs to the wire span,
+    /// so the traced `lib + ni` share reproduces the paper's §6.1.1
+    /// ~0.47 us NI+library figure.  `cpu_free` (the sender-side
+    /// completion instant) is untouched — span boundaries are
+    /// observational only.
     fn span_eager(
         &mut self,
+        fab: &Fabric,
         rank: usize,
         id: usize,
         hw_start: SimTime,
-        cpu_free: SimTime,
         visible: SimTime,
         bytes: usize,
     ) {
         let track = Track::Rank(rank as u32);
-        self.engine.trace.span(track, SpanKind::Ni, id as u64, hw_start, cpu_free, bytes as u64);
+        let flow = self.sflow(id);
+        let handoff = (hw_start + fab.calib().pktz_doorbell).min(visible);
+        self.engine.trace.span(track, SpanKind::Ni, flow, hw_start, handoff, bytes as u64);
         self.engine.trace.span(
             track,
             SpanKind::EagerWire,
-            id as u64,
-            cpu_free,
+            flow,
+            handoff,
             visible,
             bytes as u64,
         );
     }
 
-    /// Receiver-side library completion span of request `rid`.
+    /// Receiver-side library completion span of request `rid`, causally
+    /// linked to the matched send (the arrival that enabled it).
     fn span_recv_lib(&mut self, rid: usize, start: SimTime, done: SimTime) {
         let (rank, bytes) = (self.reqs[rid].rank, self.reqs[rid].bytes);
-        self.engine.trace.span(
-            Track::Rank(rank as u32),
-            SpanKind::RecvLib,
-            rid as u64,
-            start,
-            done,
-            bytes as u64,
-        );
+        let flow = self.sflow(rid);
+        match self.reqs[rid].partner {
+            Some(sid) => {
+                let parent = self.sflow(sid);
+                self.engine.trace.span_linked(
+                    Track::Rank(rank as u32),
+                    SpanKind::RecvLib,
+                    flow,
+                    parent,
+                    start,
+                    done,
+                    bytes as u64,
+                )
+            }
+            None => self.engine.trace.span(
+                Track::Rank(rank as u32),
+                SpanKind::RecvLib,
+                flow,
+                start,
+                done,
+                bytes as u64,
+            ),
+        }
     }
 
     /// Commit the parallel runtime's open window: execute every deferred
@@ -676,14 +782,15 @@ impl Progress {
                     self.reqs[op.req].done = Some(cpu_free);
                     self.engine.post_at_seq(visible, op.seq, MpiEvent::EagerArrive(op.req));
                     let rank = self.reqs[op.req].rank;
-                    self.span_eager(rank, op.req, op.at, cpu_free, visible, op.bytes);
+                    self.span_eager(fab, rank, op.req, op.at, visible, op.bytes);
                 }
                 (OpKind::Rts, OpResult::Arrival(arr)) => {
                     self.engine.post_at_seq(arr, op.seq, MpiEvent::RtsArrive(op.req));
+                    let flow = self.sflow(op.req);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[op.req].rank as u32),
                         SpanKind::Rts,
-                        op.req as u64,
+                        flow,
                         op.at,
                         arr,
                         op.bytes as u64,
@@ -691,10 +798,11 @@ impl Progress {
                 }
                 (OpKind::Cts, OpResult::Arrival(arr)) => {
                     self.engine.post_at_seq(arr, op.seq, MpiEvent::CtsArrive(op.req));
+                    let flow = self.sflow(op.req);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[op.req].peer as u32),
                         SpanKind::Cts,
-                        op.req as u64,
+                        flow,
                         op.at,
                         arr,
                         op.bytes as u64,
@@ -707,10 +815,11 @@ impl Progress {
                         op.seq,
                         MpiEvent::DataDelivered(op.req),
                     );
+                    let flow = self.sflow(op.req);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[op.req].rank as u32),
                         SpanKind::Rdma,
-                        op.req as u64,
+                        flow,
                         op.at,
                         notif_visible,
                         op.bytes as u64,
@@ -802,7 +911,7 @@ impl Progress {
                 if fab.cells_corrupted() == before {
                     self.reqs[id].done = Some(e.cpu_free);
                     self.engine.post(e.visible, MpiEvent::EagerArrive(id));
-                    self.span_eager(rank, id, at, e.cpu_free, e.visible, bytes);
+                    self.span_eager(fab, rank, id, at, e.visible, bytes);
                     self.throttle_complete(id, e.cpu_free);
                     return;
                 }
@@ -813,10 +922,11 @@ impl Progress {
                 self.echo_marks(fab, id, marks_before);
                 if fab.cells_corrupted() == before {
                     self.engine.post(arr, MpiEvent::RtsArrive(id));
+                    let flow = self.sflow(id);
                     self.engine.trace.span(
                         Track::Rank(rank as u32),
                         SpanKind::Rts,
-                        id as u64,
+                        flow,
                         at,
                         arr,
                         rdma::HANDSHAKE_BYTES as u64,
@@ -831,10 +941,11 @@ impl Progress {
                 if fab.cells_corrupted() == before {
                     self.engine.post(arr, MpiEvent::CtsArrive(id));
                     // the CTS runs on the receiver's timeline
+                    let flow = self.sflow(id);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[id].peer as u32),
                         SpanKind::Cts,
-                        id as u64,
+                        flow,
                         at,
                         arr,
                         rdma::HANDSHAKE_BYTES as u64,
@@ -849,10 +960,11 @@ impl Progress {
                 if fab.cells_corrupted() == before {
                     self.reqs[id].done = Some(c.src_done);
                     self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                    let flow = self.sflow(id);
                     self.engine.trace.span(
                         Track::Rank(rank as u32),
                         SpanKind::Rdma,
-                        id as u64,
+                        flow,
                         at,
                         c.notif_visible,
                         bytes as u64,
@@ -867,6 +979,19 @@ impl Progress {
         // loss and relaunches the stage with the next backoff step.
         self.corrupt_drops += 1;
         let wait = Self::backoff(fab.calib().pktz_timeout, attempt);
+        // The backoff window is blame-visible dead time: launch → timer
+        // fire (the corrupted wire crossing overlaps its head; the blame
+        // partition ranks wire spans above backoff, so only the idle
+        // tail is charged here).
+        let flow = self.sflow(id);
+        self.engine.trace.span(
+            Track::Rank(self.stage_owner(id, stg)),
+            SpanKind::Backoff,
+            flow,
+            at,
+            at + wait,
+            attempt as u64,
+        );
         self.engine.schedule(at + wait, MpiEvent::AckTimer(id, stg, attempt));
     }
 
@@ -905,7 +1030,7 @@ impl Progress {
                 // Injection gate (armed worlds only): a send that does
                 // not fit its class window parks here, before any
                 // library processing, and relaunches when space drains.
-                if self.throttle.is_some() && !self.try_admit(id) {
+                if self.throttle.is_some() && !self.try_admit(id, t) {
                     return;
                 }
                 let (fwd, bytes, protocol, rank) = {
@@ -915,10 +1040,11 @@ impl Progress {
                 let mpi_sw = fab.calib().mpi_sw;
                 // The library-processing span is path-independent: record
                 // it here whether the fabric op runs inline or deferred.
+                let flow = self.sflow(id);
                 self.engine.trace.span(
                     Track::Rank(rank as u32),
                     SpanKind::Lib,
-                    id as u64,
+                    flow,
                     t,
                     t + mpi_sw,
                     bytes as u64,
@@ -937,7 +1063,7 @@ impl Progress {
                             self.echo_marks(fab, id, marks);
                             self.reqs[id].done = Some(e.cpu_free);
                             self.engine.post(e.visible, MpiEvent::EagerArrive(id));
-                            self.span_eager(rank, id, t + mpi_sw, e.cpu_free, e.visible, bytes);
+                            self.span_eager(fab, rank, id, t + mpi_sw, e.visible, bytes);
                             self.throttle_complete(id, e.cpu_free);
                         }
                     }
@@ -969,7 +1095,7 @@ impl Progress {
                             self.engine.trace.span(
                                 Track::Rank(rank as u32),
                                 SpanKind::Rts,
-                                id as u64,
+                                flow,
                                 t + mpi_sw,
                                 arr,
                                 rdma::HANDSHAKE_BYTES as u64,
@@ -1022,10 +1148,11 @@ impl Progress {
                     self.echo_marks(fab, id, marks);
                     self.engine.post(arr, MpiEvent::CtsArrive(id));
                     // the CTS runs on the receiver's timeline
+                    let flow = self.sflow(id);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[id].peer as u32),
                         SpanKind::Cts,
-                        id as u64,
+                        flow,
                         t + cts_sw,
                         arr,
                         rdma::HANDSHAKE_BYTES as u64,
@@ -1052,10 +1179,11 @@ impl Progress {
                     // E2E ACK overlaps with the next operation).
                     self.reqs[id].done = Some(c.src_done);
                     self.engine.post(c.notif_visible, MpiEvent::DataDelivered(id));
+                    let flow = self.sflow(id);
                     self.engine.trace.span(
                         Track::Rank(self.reqs[id].rank as u32),
                         SpanKind::Rdma,
-                        id as u64,
+                        flow,
                         t,
                         c.notif_visible,
                         bytes as u64,
@@ -1084,10 +1212,11 @@ impl Progress {
                     return; // stale: the stage landed after all
                 }
                 self.retransmissions += 1;
+                let flow = self.sflow(id);
                 self.engine.trace.instant(
                     Track::Rank(self.stage_owner(id, stg)),
                     SpanKind::Retransmit,
-                    id as u64,
+                    flow,
                     t,
                     (attempt + 1) as u64,
                 );

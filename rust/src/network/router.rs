@@ -910,6 +910,16 @@ impl RouterMesh {
             let pre = self.pre_latency(is_torus, cell.first_hop);
             let flat = link.flat(&self.topo.cfg);
             let (start, ser) = self.links[flat].grant_ctrl(t + pre, wire_bytes, full_cell);
+            if start > t + pre {
+                self.engine.trace.span(
+                    Track::Link(flat as u32),
+                    SpanKind::HopQueue,
+                    self.trace_flow,
+                    t + pre,
+                    start,
+                    wire_bytes,
+                );
+            }
             self.engine.trace.span(
                 Track::Link(flat as u32),
                 SpanKind::Hop,
@@ -1097,6 +1107,14 @@ impl RouterMesh {
                     if rel > ready {
                         self.credit_stalls += 1;
                         self.stall_time += rel.since(ready);
+                        self.engine.trace.span(
+                            Track::Link(hop.link as u32),
+                            SpanKind::CreditStall,
+                            self.trace_flow,
+                            ready,
+                            rel,
+                            wire_bytes,
+                        );
                     }
                     ready = ready.max(rel);
                 }
@@ -1115,6 +1133,16 @@ impl RouterMesh {
                     self.links[hop.link].grant_bulk(ready, wire_bytes)
                 };
                 self.class_bytes[self.cur_class as usize % NUM_CLASSES] += wire_bytes;
+                if s > ready {
+                    self.engine.trace.span(
+                        Track::Link(hop.link as u32),
+                        SpanKind::HopQueue,
+                        self.trace_flow,
+                        ready,
+                        s,
+                        wire_bytes,
+                    );
+                }
                 self.engine.trace.span(
                     Track::Link(hop.link as u32),
                     SpanKind::Hop,
@@ -1249,6 +1277,17 @@ impl RouterMesh {
             let ready = p.ready.max(t);
             // telemetry: time this cell sat blocked on a credit
             self.stall_time += t.since(p.ready);
+            if t > p.ready {
+                let wire_bytes = (self.cells[id].payload + self.cell_overhead) as u64;
+                self.engine.trace.span(
+                    Track::Link(p.link as u32),
+                    SpanKind::CreditStall,
+                    self.trace_flow,
+                    p.ready,
+                    t,
+                    wire_bytes,
+                );
+            }
             if self.links[p.link].is_up(ready) {
                 self.start_on(id, p.link, ready, p.is_torus, p.next_loc);
                 return;
@@ -1433,6 +1472,16 @@ impl RouterMesh {
             self.class_bytes[self.cells[id].class as usize % NUM_CLASSES] += wire_bytes;
             self.links[link].grant_bulk(ready, wire_bytes)
         };
+        if start > ready {
+            self.engine.trace.span(
+                Track::Link(link as u32),
+                SpanKind::HopQueue,
+                self.trace_flow,
+                ready,
+                start,
+                wire_bytes,
+            );
+        }
         self.engine.trace.span(
             Track::Link(link as u32),
             SpanKind::Hop,

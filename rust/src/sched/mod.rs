@@ -38,7 +38,7 @@ pub mod trace;
 
 pub use alloc::{mpsocs_needed, Allocation, Policy, RackAlloc};
 pub use job::{JobResult, JobRun, JobSpec, Workload, DEFAULT_JOB_ITERS};
-pub use qos::{jain_index, qos_report, suite_profile, QosReport, QosScenario};
+pub use qos::{jain_index, qos_report, qos_report_traced, suite_profile, QosReport, QosScenario};
 pub use recovery::{FaultEpochs, Recovery};
 pub use trace::{parse_trace, synthetic_jobs};
 

@@ -177,6 +177,20 @@ pub fn qos_report(
     scenario: QosScenario,
     qos: &QosConfig,
 ) -> Result<QosReport> {
+    qos_report_traced(cfg, scenario, qos, 0).map(|(r, _)| r)
+}
+
+/// [`qos_report`] with the flight recorder armed on the QoS-**on** run
+/// (`trace_cap` spans; 0 = untraced).  Returns the ON run's full
+/// [`SchedOutcome`] alongside the report so callers can export its
+/// spans, link telemetry and blame decomposition — the QoS-off run
+/// stays untraced (its only job is the baseline slowdown).
+pub fn qos_report_traced(
+    cfg: &SystemConfig,
+    scenario: QosScenario,
+    qos: &QosConfig,
+    trace_cap: usize,
+) -> Result<(QosReport, SchedOutcome)> {
     let specs = scenario.specs(cfg);
     let mut qos_on = qos.clone();
     qos_on.enabled = true;
@@ -189,13 +203,15 @@ pub fn qos_report(
     cfg_on.qos = qos_on;
     let model = NetworkModel::cell(RoutePolicy::Deterministic);
     let sc = SchedConfig::new(Policy::Scattered, model);
+    let mut sc_on = sc.clone();
+    sc_on.trace_cap = trace_cap;
     let off = run_schedule(&cfg_off, &specs, &sc)?;
-    let on = run_schedule(&cfg_on, &specs, &sc)?;
+    let on = run_schedule(&cfg_on, &specs, &sc_on)?;
     debug_assert_eq!(off.summary.cells_marked, 0, "QoS off never marks");
     let victim = scenario.victim();
     let slowdown_off = victim_slowdown(&off, victim);
     let slowdown_on = victim_slowdown(&on, victim);
-    Ok(QosReport {
+    let report = QosReport {
         scenario: scenario.name(),
         victim: victim.map(|i| specs[i].name.clone()),
         slowdown_off,
@@ -209,7 +225,8 @@ pub fn qos_report(
         ecn_echoes: on.summary.ecn_echoes,
         window_halvings: on.summary.window_halvings,
         throttle_parks: on.summary.throttle_parks,
-    })
+    };
+    Ok((report, on))
 }
 
 #[cfg(test)]

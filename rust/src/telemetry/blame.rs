@@ -1,0 +1,510 @@
+//! Per-message latency decomposition ("blame"): a post-run analysis
+//! that consumes the flight recorder's spans and charges every
+//! picosecond of a message's end-to-end window to exactly one component
+//! (DESIGN.md §16).
+//!
+//! The decomposition is an *interval partition*: for each message the
+//! window `[first span start, last span end]` is swept once, and every
+//! elementary segment is charged to the highest-priority span kind
+//! covering it.  Because the sweep partitions the window, the component
+//! sums are ps-exact against the measured latency **by construction** —
+//! there is no rounding path, no float, no residual fudge term
+//! (property-tested on both network models).
+//!
+//! Priority order, highest first (a segment covered by several spans is
+//! charged once, to the top one):
+//!
+//! | component       | spans                         | meaning |
+//! |-----------------|-------------------------------|---------|
+//! | `lib`           | [`SpanKind::Lib`]             | sender-side MPI library processing (`mpi_sw`) |
+//! | `recv_lib`      | [`SpanKind::RecvLib`]         | receiver-side completion processing |
+//! | `throttle`      | [`SpanKind::ThrottlePark`]    | ECN injection-gate parking (QoS AIMD window full) |
+//! | `ni`            | [`SpanKind::Ni`]              | NI hand-off (packetizer/RDMA engine takes over) |
+//! | `queueing`      | [`SpanKind::HopQueue`]        | router arbitration queueing (waiting for the wire grant) |
+//! | `credit_stall`  | [`SpanKind::CreditStall`]     | credit backpressure (downstream buffer full) |
+//! | `serialization` | [`SpanKind::Hop`]             | wire occupancy of the cells themselves |
+//! | `propagation`   | eager/RTS/CTS/RDMA stage span | per-hop crossing latency left after the above; on the flow model (no per-hop spans) this is the whole wire share |
+//! | `backoff`       | [`SpanKind::Backoff`]         | retransmission dead time (ACK-timer wait) |
+//! | `other`         | nothing                       | uncovered window time (e.g. receiver not yet posted, CTS build) |
+//!
+//! Message identity is the sender request's globally unique serial (the
+//! span `flow` id); receive-side spans attach through their causality
+//! `parent` link, and the router's per-hop spans share the sender's
+//! flow, so one grouping pass reassembles each message across all three
+//! recorders' timelines.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::sim::SimTime;
+
+use super::recorder::{SpanKind, SpanRec, Track};
+
+/// One message's (or an aggregate's) blame shares, ps each.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Blame {
+    pub lib: u64,
+    pub recv_lib: u64,
+    pub throttle: u64,
+    pub ni: u64,
+    pub queueing: u64,
+    pub credit_stall: u64,
+    pub serialization: u64,
+    pub propagation: u64,
+    pub backoff: u64,
+    pub other: u64,
+}
+
+/// The components in priority order; index = the sweep priority.
+pub const COMPONENTS: [&str; 10] = [
+    "lib",
+    "recv_lib",
+    "throttle",
+    "ni",
+    "queueing",
+    "credit_stall",
+    "serialization",
+    "propagation",
+    "backoff",
+    "other",
+];
+
+impl Blame {
+    /// The components as `(name, ps)` pairs, priority order.
+    pub fn parts(&self) -> [(&'static str, u64); 10] {
+        [
+            ("lib", self.lib),
+            ("recv_lib", self.recv_lib),
+            ("throttle", self.throttle),
+            ("ni", self.ni),
+            ("queueing", self.queueing),
+            ("credit_stall", self.credit_stall),
+            ("serialization", self.serialization),
+            ("propagation", self.propagation),
+            ("backoff", self.backoff),
+            ("other", self.other),
+        ]
+    }
+
+    fn slot(&mut self, priority: usize) -> &mut u64 {
+        match priority {
+            0 => &mut self.lib,
+            1 => &mut self.recv_lib,
+            2 => &mut self.throttle,
+            3 => &mut self.ni,
+            4 => &mut self.queueing,
+            5 => &mut self.credit_stall,
+            6 => &mut self.serialization,
+            7 => &mut self.propagation,
+            8 => &mut self.backoff,
+            _ => &mut self.other,
+        }
+    }
+
+    /// Sum of all components — per message this equals the measured
+    /// end-to-end latency exactly (the sweep partitions the window).
+    pub fn total(&self) -> u64 {
+        self.parts().iter().map(|(_, v)| v).sum()
+    }
+
+    /// The paper's §6.1.1 "NI + user-space library" share: sender-side
+    /// library processing plus NI hand-off.
+    pub fn lib_ni(&self) -> u64 {
+        self.lib + self.ni
+    }
+
+    pub fn accumulate(&mut self, o: &Blame) {
+        for (i, (_, v)) in o.parts().iter().enumerate() {
+            *self.slot(i) += v;
+        }
+    }
+}
+
+/// The sweep priority of a span kind, `None` for kinds that are not
+/// blame intervals (envelopes like [`SpanKind::SendOp`], instants,
+/// collective/job umbrellas).
+fn priority(kind: SpanKind) -> Option<usize> {
+    Some(match kind {
+        SpanKind::Lib => 0,
+        SpanKind::RecvLib => 1,
+        SpanKind::ThrottlePark => 2,
+        SpanKind::Ni => 3,
+        SpanKind::HopQueue => 4,
+        SpanKind::CreditStall => 5,
+        SpanKind::Hop => 6,
+        SpanKind::EagerWire | SpanKind::Rts | SpanKind::Cts | SpanKind::Rdma => 7,
+        SpanKind::Backoff => 8,
+        _ => return None,
+    })
+}
+
+/// Spans that bound a message's end-to-end window: every blame interval
+/// plus the send envelope (whose `t0` is the post instant).  The
+/// receive envelope is excluded — its `t0` is the *receive* post time,
+/// which can long predate the message.
+fn in_window(kind: SpanKind) -> bool {
+    priority(kind).is_some() || kind == SpanKind::SendOp
+}
+
+/// One reassembled message and its decomposition.
+#[derive(Debug, Clone)]
+pub struct MessageBlame {
+    /// The sender request's serial (span `flow` id).
+    pub flow: u64,
+    pub src: u32,
+    /// Receiver rank, when the matched receive's spans are in the trace.
+    pub dst: Option<u32>,
+    pub bytes: u64,
+    /// End-to-end window: send post → last completion processing.
+    pub t0: SimTime,
+    pub t1: SimTime,
+    pub blame: Blame,
+    /// The link (by flat index) carrying the most per-hop busy time for
+    /// this message, with that time in ps — the congestion suspect.
+    pub dominant_link: Option<(u32, u64)>,
+}
+
+impl MessageBlame {
+    /// Measured end-to-end latency (ps); equals `blame.total()`.
+    pub fn latency_ps(&self) -> u64 {
+        self.t1.0 - self.t0.0
+    }
+}
+
+/// The whole trace's decomposition.
+#[derive(Debug, Clone, Default)]
+pub struct BlameReport {
+    /// Per-message decompositions, ordered by window start.
+    pub messages: Vec<MessageBlame>,
+    /// Component sums across all messages.
+    pub total: Blame,
+    /// Spans that belong to no reassembled message (their send root was
+    /// evicted by the ring, or they are non-message spans).
+    pub unattributed: usize,
+}
+
+impl BlameReport {
+    /// Decompose every message found in `recs`.
+    pub fn analyze(recs: &[SpanRec]) -> BlameReport {
+        // Group by flow; receive-side groups attach to their parent.
+        let mut by_flow: HashMap<u64, Vec<&SpanRec>> = HashMap::new();
+        for r in recs {
+            by_flow.entry(r.flow).or_default().push(r);
+        }
+        // A send root owns a Lib / SendOp / Ni / first-stage span.
+        let is_send_root = |spans: &[&SpanRec]| {
+            spans.iter().any(|s| {
+                matches!(
+                    s.kind,
+                    SpanKind::Lib | SpanKind::SendOp | SpanKind::Ni | SpanKind::EagerWire
+                        | SpanKind::Rts
+                )
+            })
+        };
+        let mut send_flows: Vec<u64> =
+            by_flow.iter().filter(|(_, v)| is_send_root(v)).map(|(f, _)| *f).collect();
+        send_flows.sort_unstable();
+        let send_set: std::collections::HashSet<u64> = send_flows.iter().copied().collect();
+        // Receive-side spans keyed by the matched send's flow.
+        let mut recv_of: HashMap<u64, Vec<&SpanRec>> = HashMap::new();
+        let mut attributed = 0usize;
+        for r in recs {
+            if matches!(r.kind, SpanKind::RecvLib | SpanKind::RecvOp) {
+                if let Some(p) = r.parent_flow() {
+                    if send_set.contains(&p) {
+                        recv_of.entry(p).or_default().push(r);
+                        attributed += 1;
+                    }
+                }
+            }
+        }
+        let mut messages = Vec::with_capacity(send_flows.len());
+        for flow in send_flows {
+            let own = &by_flow[&flow];
+            attributed += own.len();
+            let recv = recv_of.get(&flow).map(Vec::as_slice).unwrap_or(&[]);
+            if let Some(m) = Self::decompose(flow, own, recv) {
+                messages.push(m);
+            }
+        }
+        messages.sort_by_key(|m| (m.t0, m.flow));
+        let mut total = Blame::default();
+        for m in &messages {
+            total.accumulate(&m.blame);
+        }
+        BlameReport { messages, total, unattributed: recs.len() - attributed }
+    }
+
+    /// Partition one message's window across the components.
+    fn decompose(flow: u64, own: &[&SpanRec], recv: &[&SpanRec]) -> Option<MessageBlame> {
+        // Blame intervals: the message's own spans plus the receiver's
+        // library processing (both priority-mapped).
+        let mut ivals: Vec<(u64, u64, usize)> = Vec::with_capacity(own.len() + recv.len());
+        let mut w: Option<(u64, u64)> = None;
+        let mut widen = |t0: u64, t1: u64| {
+            w = Some(match w {
+                None => (t0, t1),
+                Some((a, b)) => (a.min(t0), b.max(t1)),
+            });
+        };
+        for s in own.iter().chain(recv.iter().filter(|s| s.kind == SpanKind::RecvLib)) {
+            if let Some(p) = priority(s.kind) {
+                ivals.push((s.t0.0, s.t1.0, p));
+            }
+            if in_window(s.kind) {
+                widen(s.t0.0, s.t1.0);
+            }
+        }
+        let (w0, w1) = w?;
+        // Sweep: at every boundary the covering set changes; charge each
+        // elementary segment to its highest-priority cover.
+        let mut cuts: Vec<u64> = Vec::with_capacity(ivals.len() * 2 + 2);
+        cuts.push(w0);
+        cuts.push(w1);
+        for &(a, b, _) in &ivals {
+            cuts.push(a.clamp(w0, w1));
+            cuts.push(b.clamp(w0, w1));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut blame = Blame::default();
+        for seg in cuts.windows(2) {
+            let (a, b) = (seg[0], seg[1]);
+            if a == b {
+                continue;
+            }
+            let top = ivals
+                .iter()
+                .filter(|(i0, i1, _)| *i0 <= a && *i1 >= b)
+                .map(|(_, _, p)| *p)
+                .min()
+                .unwrap_or(COMPONENTS.len() - 1); // uncovered → other
+            *blame.slot(top) += b - a;
+        }
+        // Metadata: sender rank + bytes from the library/envelope span,
+        // receiver rank from the completion span, dominant link from the
+        // per-hop spans.
+        let meta = own
+            .iter()
+            .find(|s| matches!(s.kind, SpanKind::Lib | SpanKind::SendOp))
+            .or_else(|| own.first())?;
+        let src = meta.track.tid();
+        let bytes = meta.aux;
+        let dst = recv
+            .iter()
+            .find(|s| s.kind == SpanKind::RecvLib)
+            .map(|s| s.track.tid());
+        let mut per_link: HashMap<u32, u64> = HashMap::new();
+        for s in own {
+            if let Track::Link(l) = s.track {
+                if matches!(s.kind, SpanKind::Hop | SpanKind::HopQueue | SpanKind::CreditStall) {
+                    *per_link.entry(l).or_default() += s.t1.0 - s.t0.0;
+                }
+            }
+        }
+        let dominant_link = per_link.into_iter().max_by_key(|&(l, busy)| (busy, l));
+        Some(MessageBlame {
+            flow,
+            src,
+            dst,
+            bytes,
+            t0: SimTime(w0),
+            t1: SimTime(w1),
+            blame,
+            dominant_link,
+        })
+    }
+
+    /// Mean sender-side `lib + ni` share over all messages, ps — the
+    /// quantity REPRODUCING.md checks against the paper's 0.47 µs.
+    pub fn mean_lib_ni_ps(&self) -> f64 {
+        if self.messages.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = self.messages.iter().map(|m| m.blame.lib_ni()).sum();
+        sum as f64 / self.messages.len() as f64
+    }
+
+    /// Human summary: aggregate shares plus the worst messages.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let n = self.messages.len();
+        let total = self.total.total();
+        let _ = writeln!(
+            out,
+            "blame decomposition: {n} message(s), {} unattributed span(s)",
+            self.unattributed
+        );
+        if n == 0 {
+            out.push_str("  (no messages in trace — was the run traced?)\n");
+            return out;
+        }
+        let mean_lat: f64 = self
+            .messages
+            .iter()
+            .map(|m| m.latency_ps() as f64)
+            .sum::<f64>()
+            / n as f64;
+        let _ = writeln!(
+            out,
+            "  mean end-to-end latency {:.3} us, mean lib+ni share {:.3} us",
+            mean_lat / 1e6,
+            self.mean_lib_ni_ps() / 1e6
+        );
+        let _ = writeln!(out, "  {:<14} {:>12} {:>8} {:>12}", "component", "total us", "share", "per-msg us");
+        for (name, ps) in self.total.parts() {
+            if ps == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>12.3} {:>7.1}% {:>12.4}",
+                name,
+                ps as f64 / 1e6,
+                100.0 * ps as f64 / total.max(1) as f64,
+                ps as f64 / n as f64 / 1e6
+            );
+        }
+        // The slowest message, fully decomposed — the straggler headline.
+        if let Some(worst) = self.messages.iter().max_by_key(|m| m.latency_ps()) {
+            let _ = writeln!(
+                out,
+                "  slowest message: flow {} rank {} -> {} ({} B), {:.3} us",
+                worst.flow,
+                worst.src,
+                worst.dst.map_or("?".into(), |d| d.to_string()),
+                worst.bytes,
+                worst.latency_ps() as f64 / 1e6
+            );
+            for (name, ps) in worst.blame.parts() {
+                if ps == 0 {
+                    continue;
+                }
+                let _ = writeln!(
+                    out,
+                    "    {:<14} {:>10.4} us {:>6.1}%",
+                    name,
+                    ps as f64 / 1e6,
+                    100.0 * ps as f64 / worst.latency_ps().max(1) as f64
+                );
+            }
+            if let Some((l, busy)) = worst.dominant_link {
+                let _ = writeln!(
+                    out,
+                    "    dominant link: lane {} ({:.4} us busy)",
+                    l,
+                    busy as f64 / 1e6
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Recorder;
+
+    fn span(
+        r: &mut Recorder,
+        track: Track,
+        kind: SpanKind,
+        flow: u64,
+        t0: u64,
+        t1: u64,
+        aux: u64,
+    ) {
+        r.span(track, kind, flow, SimTime(t0), SimTime(t1), aux);
+    }
+
+    /// Hand-built eager message: lib 420 ns, ni 50 ns, wire 300 ns with
+    /// one hop split 100 ns queueing / 120 ns serialization, recv-lib
+    /// 420 ns.  Every component must land exactly and sum to the window.
+    #[test]
+    fn decomposition_is_ps_exact_and_component_correct() {
+        let mut r = Recorder::disabled();
+        r.enable(64);
+        let f = 7u64;
+        span(&mut r, Track::Rank(0), SpanKind::SendOp, f, 0, 770_000, 64);
+        span(&mut r, Track::Rank(0), SpanKind::Lib, f, 0, 420_000, 64);
+        span(&mut r, Track::Rank(0), SpanKind::Ni, f, 420_000, 470_000, 64);
+        span(&mut r, Track::Rank(0), SpanKind::EagerWire, f, 470_000, 770_000, 64);
+        span(&mut r, Track::Link(3), SpanKind::HopQueue, f, 470_000, 570_000, 64);
+        span(&mut r, Track::Link(3), SpanKind::Hop, f, 570_000, 690_000, 64);
+        r.span_linked(
+            Track::Rank(1),
+            SpanKind::RecvLib,
+            f + 1,
+            f,
+            SimTime(770_000),
+            SimTime(1_190_000),
+            64,
+        );
+        let rep = BlameReport::analyze(&r.take_records());
+        assert_eq!(rep.messages.len(), 1);
+        let m = &rep.messages[0];
+        assert_eq!(m.latency_ps(), 1_190_000);
+        assert_eq!(m.blame.total(), m.latency_ps(), "partition must be ps-exact");
+        assert_eq!(m.blame.lib, 420_000);
+        assert_eq!(m.blame.ni, 50_000);
+        assert_eq!(m.blame.queueing, 100_000);
+        assert_eq!(m.blame.serialization, 120_000);
+        assert_eq!(m.blame.propagation, 300_000 - 100_000 - 120_000);
+        assert_eq!(m.blame.recv_lib, 420_000);
+        assert_eq!(m.blame.other, 0);
+        assert_eq!(m.blame.lib_ni(), 470_000, "the paper's 0.47 us NI+library share");
+        assert_eq!((m.src, m.dst, m.bytes), (0, Some(1), 64));
+        assert_eq!(m.dominant_link, Some((3, 220_000)));
+    }
+
+    /// A gap the spans do not cover (receiver posted late) lands in
+    /// `other`, keeping the sum exact instead of silently shrinking.
+    #[test]
+    fn uncovered_time_is_charged_to_other() {
+        let mut r = Recorder::disabled();
+        r.enable(16);
+        span(&mut r, Track::Rank(0), SpanKind::Lib, 1, 0, 100, 8);
+        // 50 ps of nothing, then the wire
+        span(&mut r, Track::Rank(0), SpanKind::EagerWire, 1, 150, 300, 8);
+        let rep = BlameReport::analyze(&r.take_records());
+        let m = &rep.messages[0];
+        assert_eq!(m.blame.other, 50);
+        assert_eq!(m.blame.total(), 300);
+    }
+
+    /// Overlapping spans charge each ps once, to the higher priority:
+    /// backoff under a wire span only gets the uncovered tail.
+    #[test]
+    fn overlap_charges_the_higher_priority_component() {
+        let mut r = Recorder::disabled();
+        r.enable(16);
+        span(&mut r, Track::Rank(0), SpanKind::Lib, 1, 0, 100, 8);
+        span(&mut r, Track::Rank(0), SpanKind::EagerWire, 1, 100, 300, 8);
+        span(&mut r, Track::Rank(0), SpanKind::Backoff, 1, 100, 500, 0);
+        let rep = BlameReport::analyze(&r.take_records());
+        let m = &rep.messages[0];
+        assert_eq!(m.blame.propagation, 200, "wire keeps its overlap");
+        assert_eq!(m.blame.backoff, 200, "backoff gets only the idle tail");
+        assert_eq!(m.blame.total(), 500);
+    }
+
+    #[test]
+    fn orphaned_recv_spans_count_as_unattributed() {
+        let mut r = Recorder::disabled();
+        r.enable(16);
+        // recv whose send root was evicted from the ring
+        r.span_linked(
+            Track::Rank(1),
+            SpanKind::RecvLib,
+            5,
+            99,
+            SimTime(0),
+            SimTime(100),
+            8,
+        );
+        let rep = BlameReport::analyze(&r.take_records());
+        assert!(rep.messages.is_empty());
+        assert_eq!(rep.unattributed, 1);
+    }
+}

@@ -1,0 +1,378 @@
+//! Critical-path extraction over the span-causality graph (DESIGN.md
+//! §16): which chain of spans actually gated the end of a traced run,
+//! which rank/hop/link is the straggler, and what fraction of the total
+//! each edge contributes.
+//!
+//! The graph is implicit in the recorded spans.  A span `s` can be
+//! *enabled* by:
+//!
+//! * its causality parent — spans whose `flow` equals `s.parent_flow()`
+//!   (the matched send for receive-side spans, the arriving exchange
+//!   partner for accelerator phases, the previous phase for collective
+//!   spans);
+//! * an earlier span of the same `flow` (the previous protocol stage or
+//!   the previous hop of the same message);
+//! * an earlier span on the same track (the rank or link was busy with
+//!   something else first).
+//!
+//! The walk starts at the last-finishing protocol span and repeatedly
+//! moves to the *binding* predecessor: among all candidates that finish
+//! at or before the current span starts, the one finishing **last** —
+//! the constraint that actually gated the start.  Each edge contributes
+//! `cur.t1 − pred.t1`, so the contributions telescope: they sum exactly
+//! to `end − start` of the extracted path, again ps-exact with no
+//! residual.
+//!
+//! [`CriticalPath::to_spans`] re-emits the path as [`SpanKind::CritEdge`]
+//! spans on [`Track::Crit`], giving Perfetto a dedicated
+//! "critical-path" process whose single lane tiles the whole run.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+
+use crate::sim::SimTime;
+
+use super::recorder::{SpanKind, SpanRec, Track};
+
+/// One edge of the extracted path: the span that was binding over
+/// `(prev end, t1]`.
+#[derive(Debug, Clone)]
+pub struct PathEdge {
+    pub track: Track,
+    pub kind: SpanKind,
+    pub flow: u64,
+    /// The span's own extent.
+    pub t0: SimTime,
+    pub t1: SimTime,
+    /// This edge's share of the end-to-end path: `t1 − previous edge's
+    /// t1` (the span's full duration for the root edge).
+    pub contribution_ps: u64,
+    /// For message edges: the link whose per-hop spans carried the most
+    /// busy time for this flow inside the edge's extent.
+    pub dominant_link: Option<u32>,
+}
+
+/// The extracted path, earliest edge first.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    pub edges: Vec<PathEdge>,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Kinds that may appear as path nodes: real activity, not envelopes
+/// ([`SpanKind::SendOp`]/[`SpanKind::RecvOp`] double-count their inner
+/// stages), not umbrellas ([`SpanKind::Collective`] covers the whole
+/// call), not analysis output.
+fn is_node(kind: SpanKind) -> bool {
+    matches!(
+        kind,
+        SpanKind::Lib
+            | SpanKind::Ni
+            | SpanKind::EagerWire
+            | SpanKind::Rts
+            | SpanKind::Cts
+            | SpanKind::Rdma
+            | SpanKind::RecvLib
+            | SpanKind::Compute
+            | SpanKind::Hop
+            | SpanKind::HopQueue
+            | SpanKind::CreditStall
+            | SpanKind::Backoff
+            | SpanKind::ThrottlePark
+            | SpanKind::Accel
+    )
+}
+
+impl CriticalPath {
+    /// Extract the critical path ending at the last-finishing protocol
+    /// span.  `None` when the trace holds no path nodes.
+    pub fn extract(recs: &[SpanRec]) -> Option<CriticalPath> {
+        let nodes: Vec<usize> =
+            (0..recs.len()).filter(|&i| is_node(recs[i].kind)).collect();
+        if nodes.is_empty() {
+            return None;
+        }
+        // Indexes for candidate lookup, each sorted by t1 so the best
+        // (latest-finishing ≤ bound) candidate is a binary search away.
+        let mut by_flow: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut by_track: HashMap<Track, Vec<usize>> = HashMap::new();
+        for &i in &nodes {
+            by_flow.entry(recs[i].flow).or_default().push(i);
+            by_track.entry(recs[i].track).or_default().push(i);
+        }
+        let key = |i: usize| (recs[i].t1, recs[i].t0, i);
+        for v in by_flow.values_mut() {
+            v.sort_by_key(|&i| key(i));
+        }
+        for v in by_track.values_mut() {
+            v.sort_by_key(|&i| key(i));
+        }
+        // Latest-finishing candidate in `v` with t1 ≤ bound, preferring
+        // tighter (later-starting) spans on t1 ties.
+        let best_before = |v: &[usize], bound: SimTime, skip: &HashSet<usize>| {
+            v.iter()
+                .rev()
+                .filter(|&&i| recs[i].t1 <= bound && !skip.contains(&i))
+                .max_by_key(|&&i| key(i))
+                .copied()
+        };
+        // Target: the last-finishing node (ties broken toward the
+        // tighter span, matching the walk's own preference).
+        let target = nodes.iter().copied().max_by_key(|&i| key(i))?;
+        let mut visited: HashSet<usize> = HashSet::new();
+        let mut rev: Vec<(usize, Option<usize>)> = Vec::new(); // (span, pred)
+        let mut cur = target;
+        for _ in 0..=recs.len() {
+            visited.insert(cur);
+            let s = &recs[cur];
+            let mut cand: Option<usize> = None;
+            let mut consider = |c: Option<usize>| {
+                if let Some(i) = c {
+                    cand = Some(match cand {
+                        Some(j) if key(j) >= key(i) => j,
+                        _ => i,
+                    });
+                }
+            };
+            if let Some(p) = s.parent_flow() {
+                if let Some(v) = by_flow.get(&p) {
+                    consider(best_before(v, s.t0, &visited));
+                }
+            }
+            if let Some(v) = by_flow.get(&s.flow) {
+                consider(best_before(v, s.t0, &visited));
+            }
+            if let Some(v) = by_track.get(&s.track) {
+                consider(best_before(v, s.t0, &visited));
+            }
+            rev.push((cur, cand));
+            match cand {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        // Build edges front-to-back; contributions telescope.
+        let mut edges: Vec<PathEdge> = Vec::with_capacity(rev.len());
+        let start = recs[rev.last().expect("walk visited the target").0].t0;
+        for &(i, pred) in rev.iter().rev() {
+            let s = &recs[i];
+            let from = match pred {
+                Some(p) => recs[p].t1,
+                None => s.t0,
+            };
+            edges.push(PathEdge {
+                track: s.track,
+                kind: s.kind,
+                flow: s.flow,
+                t0: s.t0,
+                t1: s.t1,
+                contribution_ps: s.t1.0 - from.0,
+                dominant_link: dominant_link(recs, s),
+            });
+        }
+        let end = recs[target].t1;
+        Some(CriticalPath { edges, start, end })
+    }
+
+    /// Path length (ps); the edge contributions sum to this exactly.
+    pub fn total_ps(&self) -> u64 {
+        self.end.0 - self.start.0
+    }
+
+    /// The edge with the largest contribution — the straggler.
+    pub fn straggler(&self) -> Option<&PathEdge> {
+        self.edges.iter().max_by_key(|e| e.contribution_ps)
+    }
+
+    /// Re-emit the path as a contiguous run of [`SpanKind::CritEdge`]
+    /// spans on [`Track::Crit`] lane 0: edge `k` covers
+    /// `[end_{k-1}, end_k]`, so the lane tiles `[start, end]` with no
+    /// gaps and each span's extent *is* its contribution (also stored
+    /// in `aux`; `flow` keeps the underlying span's flow so clicking an
+    /// edge groups it with the spans it blames).
+    pub fn to_spans(&self) -> Vec<SpanRec> {
+        let mut out = Vec::with_capacity(self.edges.len());
+        let mut at = self.start;
+        for e in &self.edges {
+            let next = SimTime(at.0 + e.contribution_ps);
+            out.push(SpanRec {
+                t0: at,
+                t1: next,
+                track: Track::Crit(0),
+                kind: SpanKind::CritEdge,
+                flow: e.flow,
+                aux: e.contribution_ps,
+                parent: 0,
+            });
+            at = next;
+        }
+        out
+    }
+
+    /// Human summary: the path, largest contributors first.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let total = self.total_ps();
+        let _ = writeln!(
+            out,
+            "critical path: {} edge(s), {:.3} us end-to-end",
+            self.edges.len(),
+            total as f64 / 1e6
+        );
+        let mut ranked: Vec<&PathEdge> = self.edges.iter().collect();
+        ranked.sort_by_key(|e| std::cmp::Reverse(e.contribution_ps));
+        for e in ranked.iter().take(12) {
+            let loc = match e.track {
+                Track::Rank(r) => format!("rank {r}"),
+                Track::Link(l) => format!("link {l}"),
+                Track::Job(j) => format!("job {j}"),
+                Track::Par => "par".into(),
+                Track::Crit(_) => "crit".into(),
+            };
+            let link = match e.dominant_link {
+                Some(l) => format!(" via link {l}"),
+                None => String::new(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<12} {:<9} flow {:<6} {:>9.4} us {:>5.1}%{}",
+                e.kind.label(),
+                loc,
+                e.flow,
+                e.contribution_ps as f64 / 1e6,
+                100.0 * e.contribution_ps as f64 / total.max(1) as f64,
+                link
+            );
+        }
+        if let Some(s) = self.straggler() {
+            let loc = match s.track {
+                Track::Rank(r) => format!("rank {r}"),
+                Track::Link(l) => format!("link {l}"),
+                _ => format!("{:?}", s.track),
+            };
+            let _ = writeln!(
+                out,
+                "  straggler: {} ({}, flow {}) — {:.1}% of the path",
+                s.kind.label(),
+                loc,
+                s.flow,
+                100.0 * s.contribution_ps as f64 / total.max(1) as f64
+            );
+        }
+        out
+    }
+}
+
+/// For a message-carrying span, the link whose per-hop spans (same
+/// flow, overlapping extent) carried the most busy time.
+fn dominant_link(recs: &[SpanRec], s: &SpanRec) -> Option<u32> {
+    if let Track::Link(l) = s.track {
+        return Some(l);
+    }
+    // Receive-side spans blame the sender's flow (their parent).
+    let flow = match s.kind {
+        SpanKind::RecvLib | SpanKind::RecvOp => s.parent_flow()?,
+        _ => s.flow,
+    };
+    let mut per_link: HashMap<u32, u64> = HashMap::new();
+    for r in recs {
+        if r.flow != flow {
+            continue;
+        }
+        if let Track::Link(l) = r.track {
+            if matches!(r.kind, SpanKind::Hop | SpanKind::HopQueue | SpanKind::CreditStall) {
+                *per_link.entry(l).or_default() += r.t1.0 - r.t0.0;
+            }
+        }
+    }
+    per_link.into_iter().max_by_key(|&(l, busy)| (busy, l)).map(|(l, _)| l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Recorder;
+
+    /// Two senders into one receiver; sender B's wire is slow.  The walk
+    /// must route through B's message and blame B's link.
+    #[test]
+    fn straggler_rank_and_link_are_attributed() {
+        let mut r = Recorder::disabled();
+        r.enable(64);
+        let us = |x: u64| SimTime(x * 1_000_000);
+        // fast message A: rank 0 -> rank 2, flow 10
+        r.span(Track::Rank(0), SpanKind::Lib, 10, us(0), us(1), 64);
+        r.span(Track::Rank(0), SpanKind::EagerWire, 10, us(1), us(2), 64);
+        r.span(Track::Link(5), SpanKind::Hop, 10, us(1), us(2), 64);
+        // slow message B: rank 1 -> rank 2, flow 20, 8 us on link 9
+        r.span(Track::Rank(1), SpanKind::Lib, 20, us(0), us(1), 64);
+        r.span(Track::Rank(1), SpanKind::EagerWire, 20, us(1), us(9), 64);
+        r.span(Track::Link(9), SpanKind::Hop, 20, us(1), us(9), 64);
+        // the receiver completes both; B's completion is last
+        r.span_linked(Track::Rank(2), SpanKind::RecvLib, 11, 10, us(2), us(3), 64);
+        r.span_linked(Track::Rank(2), SpanKind::RecvLib, 21, 20, us(9), us(10), 64);
+        let recs = r.take_records();
+        let path = CriticalPath::extract(&recs).expect("trace has nodes");
+        assert_eq!(path.end, us(10));
+        assert_eq!(path.start, us(0));
+        assert_eq!(
+            path.edges.iter().map(|e| e.contribution_ps).sum::<u64>(),
+            path.total_ps(),
+            "edge contributions must telescope exactly"
+        );
+        // the path runs through B, not A
+        assert!(path.edges.iter().any(|e| e.flow == 20), "{path:?}");
+        assert!(!path.edges.iter().any(|e| e.flow == 10), "fast message is off-path");
+        let s = path.straggler().unwrap();
+        assert_eq!(s.dominant_link, Some(9), "slow link must be blamed");
+        assert!(
+            s.contribution_ps >= 7_000_000,
+            "the 8 us wire dominates: {s:?}"
+        );
+    }
+
+    #[test]
+    fn to_spans_tiles_the_path_contiguously() {
+        let mut r = Recorder::disabled();
+        r.enable(16);
+        r.span(Track::Rank(0), SpanKind::Lib, 1, SimTime(0), SimTime(100), 8);
+        r.span(Track::Rank(0), SpanKind::Ni, 1, SimTime(100), SimTime(150), 8);
+        r.span(Track::Rank(0), SpanKind::EagerWire, 1, SimTime(150), SimTime(400), 8);
+        let recs = r.take_records();
+        let path = CriticalPath::extract(&recs).unwrap();
+        let spans = path.to_spans();
+        assert_eq!(spans.len(), path.edges.len());
+        assert_eq!(spans.first().unwrap().t0, path.start);
+        assert_eq!(spans.last().unwrap().t1, path.end);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].t1, w[1].t0, "crit lane must tile with no gaps");
+        }
+        for s in &spans {
+            assert_eq!(s.track, Track::Crit(0));
+            assert_eq!(s.kind, SpanKind::CritEdge);
+            assert_eq!(s.aux, s.t1.0 - s.t0.0);
+        }
+    }
+
+    #[test]
+    fn empty_or_umbrella_only_traces_yield_no_path() {
+        assert!(CriticalPath::extract(&[]).is_none());
+        let mut r = Recorder::disabled();
+        r.enable(4);
+        r.span(Track::Rank(0), SpanKind::Collective, 0, SimTime(0), SimTime(10), 8);
+        assert!(CriticalPath::extract(&r.take_records()).is_none());
+    }
+
+    /// Same-instant spans must not loop the walk forever.
+    #[test]
+    fn zero_duration_ties_terminate() {
+        let mut r = Recorder::disabled();
+        r.enable(8);
+        for f in 0..4u64 {
+            r.span(Track::Rank(0), SpanKind::Compute, f, SimTime(5), SimTime(5), 0);
+        }
+        let path = CriticalPath::extract(&r.take_records()).unwrap();
+        assert!(path.edges.len() <= 4);
+    }
+}

@@ -24,7 +24,16 @@ fn us(ps: u64) -> String {
 /// Render spans as Chrome trace-event JSON.  `dropped` is the ring's
 /// eviction count, surfaced in `otherData` so a wrapped trace is never
 /// mistaken for a complete one.
+///
+/// Truncation hardening: drop-oldest eviction can strand a span whose
+/// causality parent left the ring.  An orphaned span — `parent` set but
+/// no retained span carries that flow — is emitted as a zero-duration
+/// instant at its end time with `"truncated": true` in its args, so the
+/// JSON stays well-formed and the dangling link is visible instead of
+/// silently pointing nowhere.  `scripts/trace_check.py` enforces exactly
+/// this invariant (flow-id continuity).
 pub fn chrome_trace_json(recs: &[SpanRec], dropped: u64) -> String {
+    let flows: std::collections::HashSet<u64> = recs.iter().map(|r| r.flow).collect();
     let mut out = String::with_capacity(64 + recs.len() * 120);
     out.push_str("{\n\"displayTimeUnit\": \"ns\",\n");
     let _ = write!(
@@ -34,9 +43,13 @@ pub fn chrome_trace_json(recs: &[SpanRec], dropped: u64) -> String {
         dropped
     );
     out.push_str("\"traceEvents\": [\n");
-    for (pid, name) in
-        [(1, "mpi-ranks"), (2, "router-lanes"), (3, "sched-jobs"), (4, "par-runtime")]
-    {
+    for (pid, name) in [
+        (1, "mpi-ranks"),
+        (2, "router-lanes"),
+        (3, "sched-jobs"),
+        (4, "par-runtime"),
+        (5, "critical-path"),
+    ] {
         let _ = write!(
             out,
             "{{\"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \"name\": \"process_name\", \
@@ -44,18 +57,33 @@ pub fn chrome_trace_json(recs: &[SpanRec], dropped: u64) -> String {
         );
     }
     for (i, r) in recs.iter().enumerate() {
+        let orphaned = match r.parent_flow() {
+            Some(p) => !flows.contains(&p),
+            None => false,
+        };
+        // An orphan collapses to an instant at its start time (keeping
+        // the exported ts order monotone) — the truncated history is
+        // everything before it, so the duration is no longer trustworthy.
+        let (ts, dur) = if orphaned {
+            (us(r.t0.0), us(0))
+        } else {
+            (us(r.t0.0), us(r.t1.0 - r.t0.0))
+        };
+        let mut args = format!("\"flow\": {}, \"aux\": {}", r.flow, r.aux);
+        if let Some(p) = r.parent_flow() {
+            let _ = write!(args, ", \"parent\": {p}");
+        }
+        if orphaned {
+            args.push_str(", \"truncated\": true");
+        }
         let _ = write!(
             out,
-            "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
-             \"pid\": {}, \"tid\": {}, \"args\": {{\"flow\": {}, \"aux\": {}}}}}{}\n",
+            "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {ts}, \"dur\": {dur}, \
+             \"pid\": {}, \"tid\": {}, \"args\": {{{args}}}}}{}\n",
             r.kind.label(),
             r.kind.category(),
-            us(r.t0.0),
-            us(r.t1.0 - r.t0.0),
             r.track.pid(),
             r.track.tid(),
-            r.flow,
-            r.aux,
             if i + 1 == recs.len() { "" } else { "," }
         );
     }
@@ -179,6 +207,31 @@ mod tests {
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         // no trailing comma before the closing bracket
         assert!(!json.contains(",\n]"));
+    }
+
+    #[test]
+    fn linked_spans_export_parent_and_orphans_collapse_to_truncated_instants() {
+        let mut r = Recorder::disabled();
+        r.enable(8);
+        r.span(Track::Rank(0), SpanKind::SendOp, 7, SimTime(0), SimTime(100_000), 64);
+        // resolvable link: parent flow 7 is retained above
+        r.span_linked(Track::Rank(1), SpanKind::RecvOp, 8, 7, SimTime(50_000), SimTime(200_000), 64);
+        // orphaned link: flow 99 was evicted — must become a truncated instant
+        r.span_linked(Track::Rank(2), SpanKind::RecvOp, 9, 99, SimTime(60_000), SimTime(300_000), 64);
+        let json = chrome_trace_json(&r.take_records(), 1);
+        assert!(json.contains("\"parent\": 7"), "{json}");
+        assert!(json.contains("\"parent\": 99, \"truncated\": true"), "{json}");
+        // the orphan's duration collapses to zero at its start time
+        assert!(json.contains("\"ts\": 0.060000, \"dur\": 0.000000"), "{json}");
+        // the resolvable link keeps its real extent
+        assert!(json.contains("\"ts\": 0.050000, \"dur\": 0.150000"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn chrome_trace_names_the_critical_path_process() {
+        let json = chrome_trace_json(&[], 0);
+        assert!(json.contains("\"name\": \"critical-path\""));
     }
 
     #[test]

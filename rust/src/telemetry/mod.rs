@@ -29,12 +29,23 @@
 //! scattered counters (progress-engine events, mesh routing/stall
 //! counters, parallel-runtime window statistics) and is stamped into
 //! every `BENCH_*.json`.
+//!
+//! On top of the raw spans sit two post-run analyses (DESIGN.md §16):
+//! [`blame`] decomposes every message's end-to-end latency into
+//! ps-exact component shares, and [`critical`] extracts the critical
+//! path through the span-causality graph, naming the straggler
+//! rank/hop/link.  Both are pure functions of the recorded spans —
+//! they run after the simulation and cannot perturb it.
 
+pub mod blame;
+pub mod critical;
 pub mod export;
 pub mod recorder;
 pub mod series;
 pub mod summary;
 
+pub use blame::{Blame, BlameReport, MessageBlame};
+pub use critical::{CriticalPath, PathEdge};
 pub use export::{chrome_trace_json, series_csv, torus_heatmap, write_chrome_trace};
 pub use recorder::{Recorder, SpanKind, SpanRec, Track};
 pub use series::{LinkSeries, RouteCounters, WindowRow};

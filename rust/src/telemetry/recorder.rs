@@ -24,6 +24,11 @@ pub enum Track {
     Job(u32),
     /// The parallel DES runtime's coordinator (pid 4).
     Par,
+    /// A synthetic analysis track: the extracted critical path of a
+    /// traced run (pid 5, tid = path index).  Never recorded by the
+    /// simulation itself — [`crate::telemetry::critical`] emits these
+    /// after the fact so Perfetto shows the blame chain as its own lane.
+    Crit(u32),
 }
 
 impl Track {
@@ -33,12 +38,13 @@ impl Track {
             Track::Link(_) => 2,
             Track::Job(_) => 3,
             Track::Par => 4,
+            Track::Crit(_) => 5,
         }
     }
 
     pub fn tid(self) -> u32 {
         match self {
-            Track::Rank(i) | Track::Link(i) | Track::Job(i) => i,
+            Track::Rank(i) | Track::Link(i) | Track::Job(i) | Track::Crit(i) => i,
             Track::Par => 0,
         }
     }
@@ -71,6 +77,14 @@ pub enum SpanKind {
     RecvLib,
     /// One cell (or cell train) occupying one link hop.
     Hop,
+    /// Time a cell sat at a link waiting for its wire grant (arbitration
+    /// queueing: the serializer was busy with earlier traffic).  Emitted
+    /// only when the wait is non-zero, so `hop` spans stay pure
+    /// serialization and the queueing/serialization split is exact.
+    HopQueue,
+    /// Time a cell sat blocked on a downstream buffer credit before it
+    /// could even contend for the wire.
+    CreditStall,
     /// A cell corrupted on a torus link (bit-error process): the cell
     /// still occupied the wire, but the destination NI's CRC will reject
     /// the transfer it belongs to.
@@ -79,6 +93,13 @@ pub enum SpanKind {
     /// fired and the stage relaunches, on the owning rank's timeline
     /// (aux = the attempt number being launched).
     Retransmit,
+    /// Dead time between a corrupted attempt's launch and the ACK-timer
+    /// relaunch (the capped-exponential retransmission backoff window;
+    /// aux = the attempt number that failed).
+    Backoff,
+    /// An ECN-throttled send parked at the injection gate: park →
+    /// window re-admission (aux = the sender's traffic class).
+    ThrottlePark,
     /// A collective call on one rank (call → rank clock at return).
     Collective,
     /// An allreduce-accelerator pipeline phase.
@@ -89,6 +110,9 @@ pub enum SpanKind {
     JobRun,
     /// One committed parallel-DES window (instant; aux = deferred ops).
     ParWindow,
+    /// One edge of the extracted critical path (analysis output, on
+    /// [`Track::Crit`]; aux = the edge's contribution in ps).
+    CritEdge,
 }
 
 impl SpanKind {
@@ -105,13 +129,18 @@ impl SpanKind {
             SpanKind::Rdma => "rdma",
             SpanKind::RecvLib => "recv-lib",
             SpanKind::Hop => "hop",
+            SpanKind::HopQueue => "hop-queue",
+            SpanKind::CreditStall => "credit-stall",
             SpanKind::Drop => "drop",
             SpanKind::Retransmit => "retransmit",
+            SpanKind::Backoff => "backoff",
+            SpanKind::ThrottlePark => "throttle-park",
             SpanKind::Collective => "collective",
             SpanKind::Accel => "accel",
             SpanKind::JobQueued => "queued",
             SpanKind::JobRun => "running",
             SpanKind::ParWindow => "window",
+            SpanKind::CritEdge => "crit-edge",
         }
     }
 
@@ -125,11 +154,13 @@ impl SpanKind {
             | SpanKind::RecvLib
             | SpanKind::Collective => "mpi",
             SpanKind::Ni | SpanKind::EagerWire | SpanKind::Rts | SpanKind::Cts
-            | SpanKind::Rdma | SpanKind::Retransmit => "ni",
-            SpanKind::Hop | SpanKind::Drop => "net",
+            | SpanKind::Rdma | SpanKind::Retransmit | SpanKind::Backoff => "ni",
+            SpanKind::Hop | SpanKind::HopQueue | SpanKind::CreditStall | SpanKind::Drop => "net",
+            SpanKind::ThrottlePark => "qos",
             SpanKind::Accel => "accel",
             SpanKind::JobQueued | SpanKind::JobRun => "sched",
             SpanKind::ParWindow => "par",
+            SpanKind::CritEdge => "blame",
         }
     }
 }
@@ -137,7 +168,12 @@ impl SpanKind {
 /// One complete span.  `flow` threads a request/transfer identity across
 /// layers (MPI request id for protocol stages and the hops they cause);
 /// `aux` is a kind-specific payload (bytes for transfers, counts for
-/// instants).
+/// instants).  `parent` is the span-causality link (DESIGN.md §16): the
+/// `flow` id of the span whose completion *enabled* this one — the
+/// matched send request for receive-side spans, the arriving exchange
+/// partner for accelerator phases — or 0 for roots.  Because real flow
+/// ids can be 0, linked sites store `id + 1` and readers subtract; see
+/// [`SpanRec::parent_flow`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct SpanRec {
     pub t0: SimTime,
@@ -146,6 +182,20 @@ pub struct SpanRec {
     pub kind: SpanKind,
     pub flow: u64,
     pub aux: u64,
+    pub parent: u64,
+}
+
+impl SpanRec {
+    /// The decoded causality link: the flow id of the enabling span, or
+    /// `None` for a root span.
+    pub fn parent_flow(&self) -> Option<u64> {
+        self.parent.checked_sub(1)
+    }
+
+    /// Encode a flow id into the `parent` field (`id + 1`; 0 = no link).
+    pub fn encode_parent(flow: u64) -> u64 {
+        flow + 1
+    }
 }
 
 /// The ring buffer.  Disabled (the default) it owns no allocation and
@@ -200,7 +250,35 @@ impl Recorder {
         if !self.enabled {
             return;
         }
-        self.push(SpanRec { t0, t1, track, kind, flow, aux });
+        self.push(SpanRec { t0, t1, track, kind, flow, aux, parent: 0 });
+    }
+
+    /// Record a complete span with a causality link: `parent_flow` is
+    /// the flow id of the span whose completion enabled this one.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_linked(
+        &mut self,
+        track: Track,
+        kind: SpanKind,
+        flow: u64,
+        parent_flow: u64,
+        t0: SimTime,
+        t1: SimTime,
+        aux: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(SpanRec {
+            t0,
+            t1,
+            track,
+            kind,
+            flow,
+            aux,
+            parent: SpanRec::encode_parent(parent_flow),
+        });
     }
 
     /// Record an instant (a zero-duration span).
@@ -318,6 +396,18 @@ mod tests {
         assert!(r.is_enabled());
         assert_eq!(r.capacity(), 4);
         assert_eq!((r.len(), r.dropped()), (0, 0));
+    }
+
+    #[test]
+    fn parent_links_round_trip_including_flow_zero() {
+        let mut r = Recorder::disabled();
+        r.enable(8);
+        let (a, b) = rec(0);
+        r.span(Track::Rank(0), SpanKind::SendOp, 0, a, b, 0);
+        r.span_linked(Track::Rank(1), SpanKind::RecvOp, 1, 0, a, b, 0);
+        let recs: Vec<SpanRec> = r.records().copied().collect();
+        assert_eq!(recs[0].parent_flow(), None, "unlinked span is a root");
+        assert_eq!(recs[1].parent_flow(), Some(0), "flow id 0 must survive the encoding");
     }
 
     #[test]

@@ -47,6 +47,11 @@ pub struct Summary {
     pub window_halvings: u64,
     /// Sends parked at the per-tenant injection gate.
     pub throttle_parks: u64,
+    /// Aggregate blame decomposition over every message in the trace
+    /// (`None` untraced or no messages retained) and the message count
+    /// it covers — every traced BENCH_*.json carries `blame/*` shares.
+    pub blame: Option<super::blame::Blame>,
+    pub blame_messages: usize,
 }
 
 impl Summary {
@@ -63,6 +68,16 @@ impl Summary {
                 p.len() + mesh_trace.map_or(0, |t| t.len()),
                 p.dropped() + mesh_trace.map_or(0, |t| t.dropped()),
             )
+        };
+        let (blame, blame_messages) = if trace_records > 0 {
+            let rep = super::blame::BlameReport::analyze(&w.trace_records());
+            if rep.messages.is_empty() {
+                (None, 0)
+            } else {
+                (Some(rep.total), rep.messages.len())
+            }
+        } else {
+            (None, 0)
         };
         Summary {
             events: w.progress.events_processed(),
@@ -82,6 +97,8 @@ impl Summary {
             ecn_echoes: w.progress.ecn_echoes(),
             window_halvings: w.progress.window_halvings(),
             throttle_parks: w.progress.throttle_parks(),
+            blame,
+            blame_messages,
         }
     }
 
@@ -130,6 +147,21 @@ impl Summary {
         for (c, b) in self.route.class_bytes.iter().enumerate() {
             suite.metric(&format!("qos/class{c}_bytes"), *b as f64, "bytes");
         }
+        // Blame shares (traced runs only): component totals in us plus
+        // the message count, so BENCH trajectories can gate on where
+        // latency went, not just how much there was.
+        if let Some(b) = &self.blame {
+            suite.metric("blame/messages", self.blame_messages as f64, "msgs");
+            let total = b.total().max(1) as f64;
+            for (name, ps) in b.parts() {
+                suite.metric(&format!("blame/{name}_us"), ps as f64 / 1e6, "us");
+                suite.metric(
+                    &format!("blame/{name}_share"),
+                    ps as f64 / total,
+                    "fraction",
+                );
+            }
+        }
     }
 }
 
@@ -144,14 +176,39 @@ mod tests {
     fn collect_snapshots_progress_and_trace_counters() {
         let mut w = World::new(SystemConfig::prototype(), 8, Placement::PerCore);
         w.enable_tracing(1024);
-        let s = progress::isend(&mut w, 0, 4, 64);
-        let r = progress::irecv(&mut w, 4, 0, 64);
+        // 32 B = eager: the decomposition must see both Lib and Ni spans
+        let s = progress::isend(&mut w, 0, 4, 32);
+        let r = progress::irecv(&mut w, 4, 0, 32);
         progress::wait_all(&mut w, &[s, r]);
         let sum = Summary::collect(&w);
         assert!(sum.events > 0);
         assert!(sum.trace_records > 0, "traced run must retain spans");
         assert_eq!(sum.trace_dropped, 0);
         assert!(sum.par.is_none(), "single-threaded world has no par stats");
+        // the traced message decomposes, ps-exact
+        let b = sum.blame.expect("traced run with a message has blame");
+        assert_eq!(sum.blame_messages, 1);
+        assert!(b.lib > 0 && b.ni > 0, "{b:?}");
+    }
+
+    #[test]
+    fn stamp_writes_blame_metrics_for_traced_runs() {
+        let mut w = World::new(SystemConfig::prototype(), 4, Placement::PerCore);
+        w.enable_tracing(1024);
+        let s = progress::isend(&mut w, 0, 2, 64);
+        let r = progress::irecv(&mut w, 2, 0, 64);
+        progress::wait_all(&mut w, &[s, r]);
+        let sum = Summary::collect(&w);
+        let dir = std::env::temp_dir().join("exanest_blame_stamp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut suite = Suite::new("blame_selftest");
+        sum.stamp(&mut suite);
+        let path = suite.write_json_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"name\":\"blame/messages\""));
+        assert!(text.contains("\"name\":\"blame/lib_us\""));
+        assert!(text.contains("\"name\":\"blame/propagation_share\""));
+        std::fs::remove_file(path).unwrap();
     }
 
     #[test]

@@ -202,6 +202,14 @@ pub struct Calib {
     pub switch_latency: SimDuration,
     /// PS<->PL copy of a small message (packetizer store / mailbox read).
     pub ps_pl_copy: SimDuration,
+    /// Sender-side doorbell/descriptor write that hands a message to the
+    /// packetizer.  Purely observational: it splits the [`ps_pl_copy`]
+    /// window for the flight recorder's NI span (the remainder of the
+    /// copy is PL pipeline work, charged to the wire), so the traced
+    /// `lib + ni` share reproduces the paper's §6.1.1 ~0.47 us
+    /// NI+library hand-off (420 ns `mpi_sw` + this).  Timing-invisible:
+    /// `cpu_free` still uses the full copy.
+    pub pktz_doorbell: SimDuration,
     /// Packetizer engine packet-formation time.
     pub pktz_init: SimDuration,
     /// ExaNet-MPI software processing per side for the eager path
@@ -271,6 +279,7 @@ impl Default for Calib {
             router_latency: SimDuration::from_ns(145.0),
             switch_latency: SimDuration::from_ns(13.3),
             ps_pl_copy: SimDuration::from_ns(110.0),
+            pktz_doorbell: SimDuration::from_ns(50.0),
             pktz_init: SimDuration::from_ns(100.0),
             mpi_sw: SimDuration::from_ns(420.0),
             cts_sw: SimDuration::from_ns(300.0),

@@ -57,6 +57,7 @@ fn unknown_flag_is_rejected_by_every_subcommand() {
         "router-hotspot",
         "faults",
         "qos",
+        "blame",
         "bcast-model",
         "allreduce-accel",
         "scaling",
@@ -154,6 +155,60 @@ fn run_to_dir(args: &[&str], tag: &str) -> PathBuf {
         String::from_utf8_lossy(&out.stderr)
     );
     dir
+}
+
+#[test]
+fn blame_cmd_prints_decomposition_and_critical_path() {
+    // The blame engine's CLI surface: a traced two-blade allreduce must
+    // decompose (the command itself asserts the ps-exact partition per
+    // message and aborts on violation), extract a critical path, and
+    // report the §6.1.1 lib+NI hand-off share near the paper's 0.47 us.
+    let dir = std::env::temp_dir().join("exanest_cli_blame");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("blame_trace.json");
+    let out = repro_bench(
+        &["blame", "--small", "--trace", trace.to_str().unwrap()],
+        &dir,
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "`repro blame --small` failed: {}\n{stdout}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("blame decomposition"), "missing decomposition:\n{stdout}");
+    assert!(stdout.contains("critical path"), "missing critical path:\n{stdout}");
+    assert!(stdout.contains("straggler"), "missing straggler line:\n{stdout}");
+    // the lib+NI anchor, parsed from the summary line
+    let share = stdout
+        .lines()
+        .find(|l| l.contains("mean sender lib+NI hand-off"))
+        .and_then(|l| l.split("hand-off ").nth(1))
+        .and_then(|rest| rest.split(" us").next())
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or_else(|| panic!("no lib+NI summary line:\n{stdout}"));
+    assert!(
+        (share - 0.47).abs() <= 0.04,
+        "lib+NI hand-off share {share} us is not within 40 ns of the paper's 0.47 us"
+    );
+    // the exported trace carries the critical-path lane
+    let json = std::fs::read_to_string(&trace).expect("trace written");
+    assert!(json.contains("critical-path"), "trace lacks the critical-path process");
+    assert!(json.contains("crit-edge"), "trace lacks CritEdge spans");
+    // BENCH_blame.json carries the blame shares
+    let bench = std::fs::read_to_string(dir.join("BENCH_blame.json")).expect("bench written");
+    assert!(bench.contains("\"name\":\"blame/lib_us\""), "bench lacks blame metrics");
+    assert!(bench.contains("\"name\":\"lib_ni_us\""));
+}
+
+#[test]
+fn blame_bench_json_is_deterministic_across_runs() {
+    let a = run_to_dir(&["blame", "--small"], "blame_det_a");
+    let b = run_to_dir(&["blame", "--small"], "blame_det_b");
+    let ma = metrics_of(&a.join("BENCH_blame.json"));
+    let mb = metrics_of(&b.join("BENCH_blame.json"));
+    assert!(ma.contains("lib_ni_us"), "metrics missing: {ma}");
+    assert_eq!(ma, mb, "repro blame --small is not run-to-run deterministic");
 }
 
 #[test]

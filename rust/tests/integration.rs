@@ -281,17 +281,18 @@ fn traced_allreduce_covers_the_run_and_exports_valid_chrome_json() {
 
 #[test]
 fn ni_plus_library_spans_sum_to_the_paper_0_47_us() {
-    // REPRODUCING.md's span-query check: for one eager message, the
-    // sender-side library span (mpi_sw) plus the NI hand-off span
-    // (packetizer payload copy) reproduce the paper's ~0.47 us
-    // NI+library share of the single-hop latency.
+    // REPRODUCING.md's span-query check: for one eager message (32 B is
+    // the eager/rendez-vous switch point), the sender-side library span
+    // (mpi_sw) plus the NI hand-off span (doorbell/descriptor write)
+    // reproduce the paper's ~0.47 us NI+library share of the single-hop
+    // latency.
     use exanest::mpi::progress;
     use exanest::telemetry::SpanKind;
     let c = SystemConfig::two_blades();
     let mut w = World::new(c, 2, Placement::PerCore);
     w.enable_tracing(1024);
-    let s = progress::isend(&mut w, 0, 1, 64);
-    let r = progress::irecv(&mut w, 1, 0, 64);
+    let s = progress::isend(&mut w, 0, 1, 32);
+    let r = progress::irecv(&mut w, 1, 0, 32);
     progress::wait_all(&mut w, &[s, r]);
     let recs = w.trace_records();
     let dur = |k: SpanKind| -> u64 {

@@ -1,0 +1,224 @@
+//! Property tests over the critical-path blame engine (DESIGN.md §16):
+//! the per-message decomposition must partition every traced window
+//! ps-exact on both network models, an incast hotspot must charge its
+//! wait to router queueing on the congested link, and the critical-path
+//! walk must name the straggler behind an injected slow (lossy) link.
+//! Shared harness: `exanest::testing`.
+
+use exanest::mpi::collectives::{self, Backend};
+use exanest::mpi::{progress, pt2pt, Placement, World};
+use exanest::network::{FaultPlan, NetworkModel, RoutePolicy};
+use exanest::prop_assert;
+use exanest::telemetry::{BlameReport, CriticalPath};
+use exanest::testing::forall;
+use exanest::topology::SystemConfig;
+
+/// Analyze a traced world and check the partition property on every
+/// reassembled message: component sums equal the measured end-to-end
+/// window with no residual, in integer picoseconds.
+fn assert_ps_exact(w: &World, what: &str) -> Result<BlameReport, String> {
+    let recs = w.trace_records();
+    let rep = BlameReport::analyze(&recs);
+    prop_assert!(!rep.messages.is_empty(), "{what}: trace reassembled no messages");
+    for m in &rep.messages {
+        prop_assert!(
+            m.blame.total() == m.latency_ps(),
+            "{what}: flow {} decomposition {} ps != window {} ps ({:?})",
+            m.flow,
+            m.blame.total(),
+            m.latency_ps(),
+            m.blame
+        );
+    }
+    Ok(rep)
+}
+
+#[test]
+fn prop_blame_partitions_single_message_ps_exact_on_both_models() {
+    let cfg = SystemConfig::two_blades();
+    forall("single message blame sums ps-exact (flow + cell)", 40, |rng| {
+        let model = if rng.below(2) == 0 {
+            NetworkModel::Flow
+        } else {
+            NetworkModel::cell(RoutePolicy::Deterministic)
+        };
+        let n = 8usize;
+        let a = rng.below(n as u64) as usize;
+        let mut b = rng.below(n as u64) as usize;
+        if a == b {
+            b = (b + 1) % n;
+        }
+        // eager (8/32) and rendez-vous handshake + RDMA (4 KB, 64 KB)
+        let bytes = [8usize, 32, 4096, 64 * 1024][rng.below(4) as usize];
+        let mut w = World::with_model(cfg.clone(), n, Placement::PerMpsoc, model);
+        w.enable_tracing(1 << 16);
+        pt2pt::send_recv(&mut w, a, b, bytes);
+        let rep = assert_ps_exact(&w, &format!("{a}->{b} {bytes} B"))?;
+        prop_assert!(
+            rep.messages.iter().any(|m| m.bytes == bytes as u64),
+            "{a}->{b}: no reassembled message carries the sent {bytes} B"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blame_partitions_256_rank_allreduce_ps_exact_flow_model() {
+    let cfg = SystemConfig::rack();
+    forall("256-rank allreduce blame sums ps-exact (flow)", 4, |rng| {
+        let bytes = [8usize, 32, 4096][rng.below(3) as usize];
+        let mut w = World::with_model(cfg.clone(), 256, Placement::PerMpsoc, NetworkModel::Flow);
+        w.enable_tracing(1 << 18);
+        collectives::allreduce_via(&mut w, bytes, Backend::Software);
+        let rep = assert_ps_exact(&w, &format!("256-rank {bytes} B allreduce"))?;
+        // recursive doubling: every rank sends every step, so the trace
+        // reassembles a full collective's worth of messages
+        prop_assert!(
+            rep.messages.len() >= 256,
+            "only {} messages from a 256-rank collective",
+            rep.messages.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn blame_partitions_256_rank_allreduce_ps_exact_cell_model() {
+    let cfg = SystemConfig::rack();
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    let mut w = World::with_model(cfg, 256, Placement::PerMpsoc, model);
+    w.enable_tracing(1 << 18);
+    collectives::allreduce_via(&mut w, 32, Backend::Software);
+    let recs = w.trace_records();
+    let rep = BlameReport::analyze(&recs);
+    assert!(rep.messages.len() >= 256, "only {} messages", rep.messages.len());
+    for m in &rep.messages {
+        assert_eq!(
+            m.blame.total(),
+            m.latency_ps(),
+            "flow {} must decompose ps-exact on the cell model: {:?}",
+            m.flow,
+            m.blame
+        );
+    }
+    // the cell model's per-hop spans must actually feed the split: the
+    // collective as a whole crossed wires, so serialization shows up
+    assert!(rep.total.serialization > 0, "no Hop time attributed: {:?}", rep.total);
+}
+
+/// Seven senders, one per remote QFDB, all bursting 64 KiB into rank 0
+/// at once on the cell mesh: the incast hotspot.  Messages serialize on
+/// the shared path into rank 0's QFDB, so the k-th served message spends
+/// about (k-1) transfer times waiting for wire grants — which the
+/// decomposition must charge to `queueing` (HopQueue), and the blamed
+/// dominant link of the slow messages must agree on where the hotspot
+/// is.
+#[test]
+fn incast_hotspot_attributes_dominant_blame_to_queueing() {
+    let cfg = SystemConfig::two_blades();
+    let n = cfg.num_mpsocs(); // PerMpsoc: rank r lives on MPSoC r
+    let model = NetworkModel::cell(RoutePolicy::Deterministic);
+    let mut w = World::with_model(cfg, n, Placement::PerMpsoc, model);
+    w.enable_tracing(1 << 20);
+    let bytes = 64 * 1024usize;
+    let senders: Vec<usize> = (1..8).map(|q| q * 4).collect(); // one rank per other QFDB
+    let mut reqs = Vec::new();
+    for &s in &senders {
+        reqs.push(progress::irecv(&mut w, 0, s, bytes));
+        reqs.push(progress::isend(&mut w, s, 0, bytes));
+    }
+    progress::wait_all(&mut w, &reqs);
+    let recs = w.trace_records();
+    let rep = BlameReport::analyze(&recs);
+    assert_eq!(rep.messages.len(), senders.len());
+    for m in &rep.messages {
+        assert_eq!(m.blame.total(), m.latency_ps(), "flow {} not ps-exact", m.flow);
+    }
+    // queueing is the single largest aggregate component
+    let t = &rep.total;
+    for (name, ps) in t.parts() {
+        if name != "queueing" {
+            assert!(
+                t.queueing > ps,
+                "queueing ({} ps) must dominate {name} ({ps} ps) in an incast: {t:?}",
+                t.queueing
+            );
+        }
+    }
+    // the slowest message mostly waited, and the slow messages agree on
+    // which link the hotspot is
+    let mut by_lat: Vec<&exanest::telemetry::MessageBlame> = rep.messages.iter().collect();
+    by_lat.sort_by_key(|m| std::cmp::Reverse(m.latency_ps()));
+    let worst = by_lat[0];
+    assert!(
+        worst.blame.queueing as f64 >= 0.4 * worst.latency_ps() as f64,
+        "slowest incast message should be mostly queueing: {:?}",
+        worst.blame
+    );
+    let hot = worst.dominant_link.expect("congested message has per-hop spans").0;
+    for m in &by_lat[1..3] {
+        assert_eq!(
+            m.dominant_link.map(|(l, _)| l),
+            Some(hot),
+            "slow messages disagree on the congested link"
+        );
+    }
+}
+
+/// A seeded bit-error process makes the wire between two ranks lossy —
+/// the "injected slow link".  The victim's 64 KiB transfer is all but
+/// guaranteed a corrupted cell, so the reliable transport retransmits
+/// and the message completes late.  The critical path must run through
+/// the victim message and its straggler edge must carry more time than
+/// the whole fast control message took.
+#[test]
+fn critical_path_names_the_straggler_behind_an_injected_slow_link() {
+    let cfg = SystemConfig::two_blades();
+    let model = NetworkModel::cell_with_faults(
+        RoutePolicy::Deterministic,
+        FaultPlan::none().with_ber(1e-4, 7),
+    );
+    let mut w = World::with_model(cfg, 8, Placement::PerMpsoc, model);
+    w.enable_tracing(1 << 20);
+    // fast control message, untouched by the loss process with high
+    // probability (64 bits at BER 1e-4)
+    pt2pt::send_recv(&mut w, 2, 3, 8);
+    // victim: 64 KiB = ~0.5 M bits, corruption is effectively certain
+    pt2pt::send_recv(&mut w, 0, 1, 64 * 1024);
+    assert!(
+        w.progress.retransmissions() > 0,
+        "the injected lossy link never fired — victim too small or BER too low?"
+    );
+    let recs = w.trace_records();
+    let rep = BlameReport::analyze(&recs);
+    let victim = rep
+        .messages
+        .iter()
+        .find(|m| m.bytes == 64 * 1024)
+        .expect("victim message reassembled");
+    assert_eq!(victim.blame.total(), victim.latency_ps());
+    assert!(
+        victim.blame.backoff > 0,
+        "retransmission dead time must be blamed on backoff: {:?}",
+        victim.blame
+    );
+    let path = CriticalPath::extract(&recs).expect("traced run has a critical path");
+    assert_eq!(
+        path.edges.iter().map(|e| e.contribution_ps).sum::<u64>(),
+        path.total_ps(),
+        "edge contributions must telescope exactly"
+    );
+    assert!(
+        path.edges.iter().any(|e| e.flow == victim.flow),
+        "critical path must run through the victim message"
+    );
+    let control = rep.messages.iter().find(|m| m.bytes == 8).expect("control message");
+    let s = path.straggler().expect("non-empty path has a straggler");
+    assert!(
+        s.contribution_ps > control.latency_ps(),
+        "straggler edge ({} ps, {:?}) should dwarf the whole control message ({} ps)",
+        s.contribution_ps,
+        s.kind,
+        control.latency_ps()
+    );
+}

@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Diff two directories of BENCH_*.json suites and gate on regressions.
+
+The bench regression gate of DESIGN.md §16: CI runs the candidate
+commit's suites into one directory, fetches the baseline's into another,
+and this script compares them metric-by-metric with per-metric
+tolerances.  Simulated quantities (latencies in simulated time,
+efficiencies, blame shares) are deterministic, so they get tight gates;
+wall-clock quantities (wall_s, events_per_sec, ns/iter benchmark
+medians) are runner-noisy, so they get loose ones.  Anything without a
+matching rule is reported as informational drift but never fails the
+gate.
+
+Output is a markdown table (stdout, plus $GITHUB_STEP_SUMMARY when set,
+plus --markdown FILE), one row per compared value.  Exit codes: 0 ok,
+1 regression, 2 usage/IO error.
+
+Bootstrap mode: if the baseline directory is missing or holds no
+BENCH_*.json, the gate prints a notice and exits 0 so the first run of a
+new pipeline (or a new suite) can seed the baseline instead of failing.
+Suites or metrics present on only one side are reported but do not fail
+the gate either — adding a bench must not require a two-step dance.
+
+Stdlib only — no pip installs.
+
+Usage: bench_diff.py <baseline_dir> <candidate_dir> [--markdown FILE]
+"""
+
+import fnmatch
+import json
+import os
+import sys
+
+# (metric-name pattern, direction, relative tolerance).  First match
+# wins.  direction "lower" = smaller is better, "higher" = bigger is
+# better, "exact" = any change beyond the tolerance regresses in either
+# direction (deterministic simulated quantities that simply must not
+# drift).  Patterns are fnmatch globs against "suite/metric".
+RULES = [
+    # Wall-clock: runner-dependent, loose gates.
+    ("*/wall_s", "lower", 0.50),
+    ("*/events_per_sec", "higher", 0.40),
+    ("*/eps_*", "higher", 0.40),
+    # Simulated time and derived quality metrics: deterministic given
+    # one config fingerprint, so a small tolerance only absorbs honest
+    # recalibration, not noise.
+    ("*/latency_us", "lower", 0.02),
+    ("*/critical_path_us", "lower", 0.02),
+    ("*/lib_ni_us", "exact", 0.02),
+    ("*/efficiency*", "higher", 0.02),
+    ("*/jain*", "higher", 0.02),
+    ("*/blame/*_share", "exact", 0.05),
+    ("*/scenario/*", "exact", 0.02),
+    # ns/iter timing benchmarks (median): wall-clock again.
+    ("bench:*", "lower", 0.50),
+]
+
+INFO = ("info", 0.0)  # no matching rule: report, never gate
+
+
+def fail(msg):
+    print(f"bench_diff: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def load_suites(d):
+    """{suite name: parsed json} for every BENCH_*.json in d."""
+    suites = {}
+    if not os.path.isdir(d):
+        return suites
+    for name in sorted(os.listdir(d)):
+        if not (name.startswith("BENCH_") and name.endswith(".json")):
+            continue
+        path = os.path.join(d, name)
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            fail(f"cannot parse {path}: {e}")
+        suites[doc.get("suite", name[len("BENCH_"):-len(".json")])] = doc
+    return suites
+
+
+def flatten(doc):
+    """{comparison key: value} for one suite document.
+
+    Scalar metrics become "suite/name"; timing benchmarks become
+    "bench:suite/name" keyed on their median so the rule table can gate
+    wall-clock entries separately from simulated ones.
+    """
+    suite = doc.get("suite", "?")
+    out = {}
+    for m in doc.get("metrics", []):
+        if isinstance(m.get("value"), (int, float)):
+            out[f"{suite}/{m['name']}"] = float(m["value"])
+    for b in doc.get("benchmarks", []):
+        if isinstance(b.get("median_ns"), (int, float)):
+            out[f"bench:{suite}/{b['name']}"] = float(b["median_ns"])
+    return out
+
+
+def rule_for(key):
+    for pat, direction, tol in RULES:
+        if fnmatch.fnmatch(key, pat):
+            return direction, tol
+    return INFO
+
+
+def verdict(key, base, cand):
+    """(status, delta) where status is ok/regressed/improved/info."""
+    direction, tol = rule_for(key)
+    if base == 0.0:
+        delta = 0.0 if cand == 0.0 else float("inf")
+    else:
+        delta = (cand - base) / abs(base)
+    if direction == "info":
+        return "info", delta
+    worse = (
+        delta > tol
+        if direction == "lower"
+        else -delta > tol
+        if direction == "higher"
+        else abs(delta) > tol
+    )
+    if worse:
+        return "regressed", delta
+    better = (
+        delta < -tol
+        if direction == "lower"
+        else delta > tol
+        if direction == "higher"
+        else False
+    )
+    return ("improved" if better else "ok"), delta
+
+
+def fmt(v):
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def main(argv):
+    md_file = None
+    args = []
+    it = iter(argv)
+    for a in it:
+        if a == "--markdown":
+            md_file = next(it, None)
+            if md_file is None:
+                fail("--markdown needs a file argument")
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+
+    base_dir, cand_dir = args
+    base = load_suites(base_dir)
+    cand = load_suites(cand_dir)
+    if not cand:
+        fail(f"candidate directory {cand_dir} holds no BENCH_*.json")
+    if not base:
+        print(
+            f"bench_diff: BOOTSTRAP: no baseline in {base_dir}; "
+            f"candidate ({len(cand)} suites) becomes the new baseline"
+        )
+        return 0
+
+    lines = ["| metric | baseline | candidate | Δ | verdict |",
+             "|---|---:|---:|---:|---|"]
+    regressions = []
+    compared = 0
+    for suite in sorted(set(base) | set(cand)):
+        if suite not in base or suite not in cand:
+            side = "baseline" if suite in base else "candidate"
+            lines.append(f"| {suite} (suite only in {side}) | | | | skipped |")
+            continue
+        b_doc, c_doc = base[suite], cand[suite]
+        if b_doc.get("config_hash") not in (None, "unstamped") and b_doc.get(
+            "config_hash"
+        ) != c_doc.get("config_hash"):
+            lines.append(
+                f"| {suite} (config_hash "
+                f"{b_doc['config_hash']} → {c_doc.get('config_hash')}) "
+                f"| | | | skipped: different machine model |"
+            )
+            continue
+        b_vals, c_vals = flatten(b_doc), flatten(c_doc)
+        for key in sorted(set(b_vals) | set(c_vals)):
+            if key not in b_vals or key not in c_vals:
+                side = "baseline" if key in b_vals else "candidate"
+                lines.append(f"| {key} | | | | only in {side} |")
+                continue
+            bv, cv = b_vals[key], c_vals[key]
+            status, delta = verdict(key, bv, cv)
+            compared += 1
+            if status == "regressed":
+                regressions.append((key, bv, cv, delta))
+            mark = {
+                "ok": "ok",
+                "info": "drift (not gated)" if bv != cv else "ok (not gated)",
+                "improved": "**improved**",
+                "regressed": "**REGRESSED**",
+            }[status]
+            pct = "n/a" if delta == float("inf") else f"{delta:+.1%}"
+            lines.append(f"| {key} | {fmt(bv)} | {fmt(cv)} | {pct} | {mark} |")
+
+    header = (
+        f"### bench_diff: {compared} values compared, "
+        f"{len(regressions)} regression(s)\n"
+    )
+    table = header + "\n".join(lines) + "\n"
+    print(table)
+    for dest in filter(None, [md_file, os.environ.get("GITHUB_STEP_SUMMARY")]):
+        try:
+            with open(dest, "a", encoding="utf-8") as f:
+                f.write(table)
+        except OSError as e:
+            fail(f"cannot write {dest}: {e}")
+
+    if regressions:
+        for key, bv, cv, delta in regressions:
+            print(
+                f"bench_diff: REGRESSED: {key}: {fmt(bv)} -> {fmt(cv)} "
+                f"({delta:+.1%})",
+                file=sys.stderr,
+            )
+        return 1
+    print(f"bench_diff: OK: no regressions across {compared} compared values")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

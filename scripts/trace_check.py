@@ -2,10 +2,18 @@
 """Validate a `repro --trace` export against the Chrome trace-event schema.
 
 The flight recorder (DESIGN.md §13) exports complete-span ("X") events
-plus process_name ("M") metadata for the four fixed tracks.  This check
-is what CI runs on the perf-smoke trace artifact before uploading it:
-it guarantees the file is Perfetto-loadable and internally consistent
-without needing Perfetto itself.  Stdlib only — no pip installs.
+plus process_name ("M") metadata for the five fixed tracks (the fifth,
+"critical-path", appears when a blame/critical-path analysis ran —
+DESIGN.md §16).  This check is what CI runs on the perf-smoke trace
+artifact before uploading it: it guarantees the file is
+Perfetto-loadable and internally consistent without needing Perfetto
+itself.  Stdlib only — no pip installs.
+
+Beyond field shapes it enforces flow continuity: a span whose args carry
+a "parent" flow id must either resolve to a retained span with that flow
+or be explicitly flagged `"truncated": true` (ring eviction stranded its
+history, and the exporter collapses it to a zero-duration instant).  A
+dangling parent without the flag means the exporter broke its promise.
 
 Usage: trace_check.py <trace.json>
 """
@@ -13,12 +21,13 @@ Usage: trace_check.py <trace.json>
 import json
 import sys
 
-# Track -> pid mapping fixed by telemetry::export (DESIGN.md §13).
+# Track -> pid mapping fixed by telemetry::export (DESIGN.md §13, §16).
 REQUIRED_PROCESSES = {
     1: "mpi-ranks",
     2: "router-lanes",
     3: "sched-jobs",
     4: "par-runtime",
+    5: "critical-path",
 }
 
 SPAN_FIELDS = ("name", "cat", "ph", "ts", "dur", "pid", "tid")
@@ -69,7 +78,16 @@ def check(path):
     if other["records"] != len(spans):
         fail(f"otherData.records = {other['records']} but {len(spans)} X events")
 
+    flows = set()
+    for e in spans:
+        args = e.get("args")
+        if isinstance(args, dict) and "flow" in args:
+            flows.add(args["flow"])
+
     last_ts = {}
+    crit_spans = 0
+    parented = 0
+    truncated = 0
     for i, e in enumerate(spans):
         for key in SPAN_FIELDS:
             if key not in e:
@@ -82,17 +100,43 @@ def check(path):
             fail(f"span {i} has negative dur {e['dur']!r}")
         if e["pid"] not in REQUIRED_PROCESSES:
             fail(f"span {i} pid {e['pid']!r} has no process_name metadata")
+        if e["pid"] == 5:
+            crit_spans += 1
         args = e.get("args")
         if not isinstance(args, dict) or "flow" not in args:
             fail(f"span {i} args missing the flow id")
+        for key in args:
+            if key not in ("flow", "aux", "parent", "truncated"):
+                fail(f"span {i} has unexpected args key {key!r}")
+        # Flow continuity (DESIGN.md §13): a causality link either
+        # resolves or is flagged as truncated by ring eviction.
+        if "parent" in args:
+            parented += 1
+            if not isinstance(args["parent"], int):
+                fail(f"span {i} parent {args['parent']!r} is not an integer")
+            if args["parent"] not in flows:
+                if args.get("truncated") is not True:
+                    fail(
+                        f"span {i} parent flow {args['parent']} resolves to "
+                        f"no retained span and is not flagged truncated"
+                    )
+                if e["dur"] != 0:
+                    fail(f"span {i} is truncated but keeps dur {e['dur']!r}")
+                truncated += 1
+            elif args.get("truncated") is True:
+                fail(f"span {i} flagged truncated but parent {args['parent']} resolves")
+        elif args.get("truncated") is True:
+            fail(f"span {i} flagged truncated without a parent link")
         # Export sorts records; Perfetto tolerates disorder but the
         # exporter promises per-file monotone start times.
         if e["ts"] < last_ts.get("all", 0):
             fail(f"span {i} ts {e['ts']} not monotone non-decreasing")
         last_ts["all"] = e["ts"]
 
+    crit = f", {crit_spans} critical-path" if crit_spans else ""
     print(
-        f"trace_check: OK: {len(spans)} spans on {len(named)} tracks, "
+        f"trace_check: OK: {len(spans)} spans on {len(named)} tracks{crit}, "
+        f"{parented} linked ({truncated} truncated), "
         f"{other['dropped']} dropped ({path})"
     )
 
